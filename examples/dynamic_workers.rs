@@ -1,0 +1,58 @@
+//! Preemptible-instance provisioning (Sec. V / Fig. 5).
+//!
+//! Plans the optimal static (J*, n*) via Theorem 4, the dynamic
+//! n_j = ceil(n0 eta^{j-1}) schedule via Theorem 5 + problem (20)-(23),
+//! then simulates both (plus the paper's baselines) and reports
+//! accuracy-per-dollar.
+//!
+//! ```bash
+//! cargo run --release --example dynamic_workers
+//! ```
+
+use anyhow::Result;
+
+use volatile_sgd::exp::fig5::{self, Fig5Params};
+use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+use volatile_sgd::theory::workers::WorkerProblem;
+
+fn main() -> Result<()> {
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+
+    // --- Theorem 4: static co-optimisation of J and n
+    let wp = WorkerProblem {
+        bound,
+        d: 1.0,
+        chi: 1.0,
+        eps: 0.1,
+        theta_iters: 40_000,
+    };
+    let static_plan = wp.optimal_static()?;
+    println!(
+        "Theorem 4: J* = {}, n* = {} (cost proxy J*n = {})",
+        static_plan.j, static_plan.n, static_plan.cost_proxy
+    );
+
+    // --- Theorem 5: the dynamic schedule needs exponentially fewer
+    // iterations for the same error bound
+    for eta in [1.0004, 1.001, 1.01] {
+        let jd = wp.dynamic_iterations(eta, 10_000);
+        println!(
+            "Theorem 5: eta = {eta:<7} -> J' = {jd:>6} (static J = 10000), \
+             err bound {:.4}",
+            wp.dynamic_error(1, eta, jd)
+        );
+    }
+
+    // --- problem (20)-(23): optimise eta under error + deadline
+    let plan = wp.optimize_eta(2, 10.0, 0.5, 2_000_000.0, 40_000)?;
+    println!(
+        "optimized: eta* = {:.6}, J = {}, cost proxy = {:.1}, \
+         err bound = {:.4}",
+        plan.eta, plan.j, plan.cost_proxy, plan.err_bound
+    );
+
+    // --- Fig. 5 simulation: accuracy-per-dollar comparisons
+    let out = fig5::run(&Fig5Params::default())?;
+    fig5::print_summary(&out);
+    Ok(())
+}

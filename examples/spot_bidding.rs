@@ -1,0 +1,70 @@
+//! Spot-market bidding walkthrough (Sec. IV / Fig. 3).
+//!
+//! Computes Theorem 2 / Theorem 3 optimal bids for both of the paper's
+//! synthetic price distributions, runs all four strategies through the
+//! simulator, and prints the Fig. 3 comparison (cost overhead at the
+//! target accuracy relative to the Dynamic strategy).
+//!
+//! ```bash
+//! cargo run --release --example spot_bidding [J]
+//! ```
+
+use anyhow::Result;
+
+use volatile_sgd::exp::fig3::{self, Fig3Params};
+use volatile_sgd::market::PriceModel;
+use volatile_sgd::theory::bids::BidProblem;
+use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+use volatile_sgd::theory::runtime_model::RuntimeModel;
+
+fn main() -> Result<()> {
+    let j: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+
+    // First: show the closed-form plans a user would compute before
+    // submitting the job.
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
+    let theta = 2.0 * j as f64 * runtime.expected(8);
+    for (dist, name) in [
+        (PriceModel::uniform_paper(), "uniform[0.2,1]"),
+        (PriceModel::gaussian_paper(), "gaussian(0.6,0.175)"),
+    ] {
+        let pb = BidProblem {
+            bound,
+            price: dist,
+            runtime,
+            n: 8,
+            eps: 0.35,
+            theta,
+        };
+        let one = pb.optimal_one_bid()?;
+        let two = pb.cooptimize_j_two_bids(4)?;
+        println!("--- {name}");
+        println!("  Theorem 2: b*={:.4} (J={})", one.b, one.j);
+        println!(
+            "  Theorem 3: b1*={:.4} b2*={:.4} gamma={:.3} (J={})",
+            two.b1, two.b2, two.gamma, two.j
+        );
+        println!(
+            "  predicted E[C]: one-bid {:.0}, two-bids {:.0} ({:+.1}%)",
+            one.expected_cost,
+            two.expected_cost,
+            100.0 * (two.expected_cost - one.expected_cost)
+                / one.expected_cost
+        );
+    }
+
+    // Then: the full Fig. 3 simulation under both distributions.
+    let p = Fig3Params { j, ..Default::default() };
+    for (dist, name) in [
+        (PriceModel::uniform_paper(), "uniform"),
+        (PriceModel::gaussian_paper(), "gaussian"),
+    ] {
+        let out = fig3::run(dist, name, &p)?;
+        fig3::print_summary(&out);
+    }
+    Ok(())
+}

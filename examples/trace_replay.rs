@@ -1,0 +1,47 @@
+//! Trace replay (Sec. VI / Fig. 4): estimate F from a historical spot
+//! price trace, compute optimal bids from the estimate, replay the real
+//! path, and report cost savings vs the No-interruptions baseline.
+//!
+//! ```bash
+//! cargo run --release --example trace_replay              # generated trace
+//! cargo run --release --example trace_replay my_trace.csv # your own
+//! ```
+//!
+//! Accepts any CSV of `timestamp,price` rows (the shape of
+//! `aws ec2 describe-spot-price-history` output after a one-line jq).
+
+use anyhow::Result;
+
+use volatile_sgd::exp::fig4::{self, Fig4Params};
+use volatile_sgd::market::SpotTrace;
+
+fn main() -> Result<()> {
+    let trace = match std::env::args().nth(1) {
+        Some(path) => {
+            println!("loading trace {path}");
+            SpotTrace::load(&path)?
+        }
+        None => {
+            println!("no trace given; generating the default c5.xlarge-style trace");
+            fig4::default_trace(7)
+        }
+    };
+    println!(
+        "trace: {} revisions over {:.0} h, price range [{:.4}, {:.4}] $/h",
+        trace.prices.len(),
+        trace.horizon(),
+        trace.prices.iter().cloned().fold(f64::INFINITY, f64::min),
+        trace.prices.iter().cloned().fold(0.0, f64::max),
+    );
+
+    let out = fig4::run(&trace, &Fig4Params::default())?;
+    fig4::print_summary(&out);
+
+    std::fs::create_dir_all("out")?;
+    for o in &out.outcomes {
+        let path = format!("out/trace_replay_{}.csv", o.name);
+        o.series.table().write(&path)?;
+        println!("series -> {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT compile path: lower L2 models (with L1 Pallas kernels inlined) to
+HLO **text** artifacts + a manifest the rust runtime parses.
+
+Interchange format is HLO text, NOT `HloModuleProto.serialize()`: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model this emits:
+  artifacts/<name>_grad.hlo.txt    (theta, x, y) -> (grad, loss, correct)
+  artifacts/<name>_eval.hlo.txt    (theta, x, y) -> (loss, correct)
+  artifacts/<name>_apply.hlo.txt   (theta, grad, lr) -> theta'   [Pallas]
+  artifacts/<name>_theta0.f32      raw little-endian f32 initial parameters
+and appends a block to artifacts/manifest.txt.
+
+Python runs exactly once (`make artifacts`); the rust binary is then
+self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.sgd_update import sgd_update
+from .model import get_bundle
+
+DEFAULT_MODELS = ["cnn", "lm_tiny"]
+SEED = 20200410  # INFOCOM 2020 vintage
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(name: str, outdir: str, manifest: List[str]) -> None:
+    bundle = get_bundle(name)
+    d = bundle.packer.size
+    in_dtype = jnp.float32 if bundle.input_dtype == "f32" else jnp.int32
+
+    theta_s = _spec((d,), jnp.float32)
+    x_s = _spec(bundle.input_shape, in_dtype)
+    y_s = _spec(bundle.label_shape, jnp.int32)
+
+    paths = {}
+    lowerings = {
+        "grad": jax.jit(bundle.grad_step).lower(theta_s, x_s, y_s),
+        "eval": jax.jit(bundle.eval_step).lower(theta_s, x_s, y_s),
+        "apply": jax.jit(sgd_update).lower(
+            theta_s, theta_s, _spec((), jnp.float32)
+        ),
+    }
+    for kind, lowered in lowerings.items():
+        text = to_hlo_text(lowered)
+        rel = f"{bundle.name}_{kind}.hlo.txt"
+        with open(os.path.join(outdir, rel), "w") as f:
+            f.write(text)
+        paths[kind] = rel
+        print(f"  {rel}: {len(text)} chars")
+
+    rng = np.random.default_rng(SEED)
+    theta0 = bundle.init_theta(rng)
+    assert theta0.shape == (d,) and theta0.dtype == np.float32
+    theta_rel = f"{bundle.name}_theta0.f32"
+    theta0.tofile(os.path.join(outdir, theta_rel))
+    digest = hashlib.sha256(theta0.tobytes()).hexdigest()[:16]
+    print(f"  {theta_rel}: {d} params, sha256[:16]={digest}")
+
+    manifest.append(f"model {bundle.name}")
+    manifest.append(f"d {d}")
+    manifest.append(
+        "input_shape {}".format(",".join(map(str, bundle.input_shape)))
+    )
+    manifest.append(f"input_dtype {bundle.input_dtype}")
+    manifest.append(
+        "label_shape {}".format(",".join(map(str, bundle.label_shape)))
+    )
+    for k, v in sorted(bundle.meta.items()):
+        manifest.append(f"meta {k} {v}")
+    for kind, rel in paths.items():
+        manifest.append(f"artifact {kind} {rel}")
+    manifest.append(f"theta0 {theta_rel} {digest}")
+    manifest.extend(bundle.packer.manifest_lines())
+    manifest.append("end")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS),
+                    help="comma-separated model names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest: List[str] = ["version 1"]
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"exporting {name} ...")
+        export_model(name, args.out, manifest)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

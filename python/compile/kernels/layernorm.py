@@ -1,0 +1,132 @@
+"""Fused LayerNorm Pallas kernels (forward + backward) with custom VJP.
+
+Forward fuses both row reductions (mean, variance) and the affine transform
+into a single pass over the row block; it also emits (xhat, rstd) as VJP
+residuals so backward never recomputes statistics.
+
+Backward uses the standard fused form:
+
+    dx = rstd/D * (D * g*gamma - sum(g*gamma) - xhat * sum(g*gamma * xhat))
+    dgamma = sum_rows(g * xhat),   dbeta = sum_rows(g)
+
+dx and the per-row partials are one Pallas kernel; the [B,D] -> [D] batch
+reductions for dgamma/dbeta are left to XLA (a single fusable reduce).
+
+Rows are blocked (BLOCK_ROWS x D tiles): D is the model width (128-768 here),
+so a tile is at most 768*4*BLOCK_ROWS bytes — comfortably VMEM-resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+# Same single-block policy as matmul.py (see VMEM_BUDGET_BYTES there):
+# LN touches ~4 row-blocks of [rows, d] f32; below this budget the whole
+# batch is one VMEM block, which also lowers to straight fused HLO under
+# interpret=True instead of a while-loop grid.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _rows_block(b: int, d: int) -> int:
+    """Row-block height: the whole (padded) batch when it fits VMEM."""
+    if 4 * 4 * b * d <= VMEM_BUDGET_BYTES:
+        return _round_up(b, 8)
+    return min(BLOCK_ROWS, _round_up(b, 8))
+
+
+def _fwd_kernel(x_ref, gamma_ref, beta_ref, y_ref, xhat_ref, rstd_ref,
+                *, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * rstd
+    xhat_ref[...] = xhat
+    rstd_ref[...] = rstd[:, 0]
+    y_ref[...] = xhat * gamma_ref[...] + beta_ref[...]
+
+
+def _bwd_kernel(xhat_ref, rstd_ref, gamma_ref, g_ref, dx_ref):
+    xhat = xhat_ref[...]
+    g = g_ref[...]
+    ggam = g * gamma_ref[...]
+    d = xhat.shape[-1]
+    s1 = jnp.sum(ggam, axis=-1, keepdims=True)
+    s2 = jnp.sum(ggam * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (rstd_ref[...][:, None] / d) * (d * ggam - s1 - xhat * s2)
+
+
+def _fwd_pallas(x, gamma, beta, eps):
+    b, d = x.shape
+    br = _rows_block(b, d)
+    bp = _round_up(b, br)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    y, xhat, rstd = pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(bp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bp, d), jnp.float32),
+            jax.ShapeDtypeStruct((bp, d), jnp.float32),
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+        ),
+        interpret=True,
+    )(xp, gamma, beta)
+    return y[:b], xhat[:b], rstd[:b]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    """Row-wise LayerNorm: [B,D] -> [B,D] with learned [D] gamma/beta."""
+    y, _, _ = _fwd_pallas(x, gamma, beta, eps)
+    return y
+
+
+def _ln_fwd(x, gamma, beta, eps):
+    y, xhat, rstd = _fwd_pallas(x, gamma, beta, eps)
+    return y, (xhat, rstd, gamma)
+
+
+def _ln_bwd(eps, res, g):
+    xhat, rstd, gamma = res
+    b, d = xhat.shape
+    br = _rows_block(b, d)
+    bp = _round_up(b, br)
+    pad = ((0, bp - b), (0, 0))
+    dx = pl.pallas_call(
+        _bwd_kernel,
+        grid=(bp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), jnp.float32),
+        interpret=True,
+    )(jnp.pad(xhat, pad), jnp.pad(rstd, pad[0]), gamma, jnp.pad(g, pad))[:b]
+    dgamma = jnp.sum(g * xhat, axis=0)
+    dbeta = jnp.sum(g, axis=0)
+    return dx, dgamma, dbeta
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

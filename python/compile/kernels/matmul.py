@@ -1,0 +1,131 @@
+"""Blocked Pallas matmul with a custom VJP (L1 hot-spot kernel).
+
+TPU mapping of the paper's GPU hot-spot (dense matmul in conv-via-im2col and
+FC layers): the kernel tiles for VMEM with ``BlockSpec`` — block sizes default
+to 128x128x128 fp32 (3 x 64 KiB live blocks, well under the ~16 MiB VMEM
+budget) and the inner dims align with the 128x128 MXU systolic array. The
+HBM<->VMEM schedule the paper's GPU code expressed with threadblocks is the
+``(M/bm, N/bn, K/bk)`` grid here, with the K axis innermost so the output
+block stays resident in VMEM while partial products accumulate into it.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for the AOT artifacts. Real
+TPU perf is an estimate recorded in DESIGN.md §6.
+
+The backward pass is two more Pallas matmuls (dx = g @ w^T, dw = x^T @ g) via
+``jax.custom_vjp`` so autodiff never differentiates through the kernel body.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default square block edge: one MXU tile of fp32.
+BLOCK = 128
+
+# Single-block threshold: if x, w and o together fit in this many bytes,
+# schedule the whole matmul as ONE VMEM block (grid-free pallas_call).
+# Rationale (perf pass, EXPERIMENTS.md §Perf): (i) on a real TPU, operands
+# this small SHOULD be a single VMEM-resident block — a K-loop grid only
+# adds revisit overhead below ~12 MiB of the 16 MiB VMEM; (ii) under
+# interpret=True the K-grid lowers to while-loop + dynamic-update-slice
+# HLO that the pinned xla_extension 0.5.1 CPU backend cannot fuse (62x
+# slower than the equivalent fused dot: 868 ms -> 14 ms per CNN grad).
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(dim: int, target: int = BLOCK) -> int:
+    """Block edge for a dimension: full MXU tile if the dim is big enough,
+    otherwise the dim rounded up to the 8-sublane granule."""
+    if dim >= target:
+        return target
+    return _round_up(dim, 8)
+
+
+def _matmul_single_kernel(x_ref, w_ref, o_ref):
+    """Whole-array block: one fused MXU matmul in VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """Grid point (i, j, k): o[i,j] += x[i,k] @ w[k,j], zeroed at k==0.
+
+    The K axis is the innermost grid dim, so o_ref's block is revisited and
+    acts as the VMEM-resident accumulator (fp32 accumulation on the MXU).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_pallas(x: jax.Array, w: jax.Array,
+                   bm: int = 0, bn: int = 0, bk: int = 0) -> jax.Array:
+    """Raw blocked pallas matmul; pads every dim up to a block multiple.
+
+    Zero-padding K is exact for matmul; padded M/N rows/cols are sliced off.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    # single-block fast path when everything fits in the VMEM budget and
+    # no explicit blocking was requested (tests force the grid path by
+    # passing bm/bn/bk)
+    footprint = 4 * (m * k + k * n + m * n)
+    if footprint <= VMEM_BUDGET_BYTES and not (bm or bn or bk):
+        return pl.pallas_call(
+            _matmul_single_kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x, w)
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[M,K] @ [K,N] -> [M,N] fp32, forward and backward on Pallas."""
+    return _matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = _matmul_pallas(g, w.T)      # [M,N] @ [N,K] -> [M,K]
+    dw = _matmul_pallas(x.T, g)      # [K,M] @ [M,N] -> [K,N]
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,51 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+Each function here is the mathematical definition the corresponding Pallas
+kernel must match (pytest + hypothesis assert allclose). Keep these free of
+pallas imports: they are the ground truth, not the implementation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain fp32 matmul: [M,K] @ [K,N] -> [M,N]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean negative log-likelihood over the batch.
+
+    logits: [B, C] f32, labels: [B] i32. Returns a scalar f32.
+    """
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def softmax_xent_grad(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """d(mean NLL)/d(logits) = (softmax(logits) - onehot(labels)) / B."""
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return (p - onehot) / logits.shape[0]
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    """Row-wise layer normalisation: [B, D] -> [B, D]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def layernorm_grads(x, gamma, beta, dy, eps: float = 1e-5):
+    """(dx, dgamma, dbeta) for layernorm, via jax autodiff on the oracle."""
+    _, vjp = jax.vjp(lambda x_, g_, b_: layernorm(x_, g_, b_, eps),
+                     x, gamma, beta)
+    return vjp(dy)
+
+
+def sgd_update(theta: jax.Array, grad: jax.Array, lr: jax.Array) -> jax.Array:
+    """theta <- theta - lr * grad (lr is a scalar)."""
+    return theta - lr * grad

@@ -1,0 +1,53 @@
+"""Elementwise SGD update Pallas kernel: theta <- theta - lr * grad.
+
+One-dimensional grid over 64Ki-element blocks (256 KiB fp32 per operand —
+three live operands stay far inside VMEM and the kernel is purely
+bandwidth-bound, which is the best a pointwise update can do on any
+backend). Used by the `{model}_apply` AOT artifact; the rust coordinator
+also has a native fused update for its own hot path, benchmarked against
+this artifact in `cargo bench --bench hotpath`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+# Single-block policy (see matmul.VMEM_BUDGET_BYTES): theta, grad and the
+# output together fit VMEM for every model we ship, so the update is one
+# block — a plain fused subtract under interpret=True.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _update_kernel(theta_ref, grad_ref, lr_ref, out_ref):
+    out_ref[...] = theta_ref[...] - lr_ref[0] * grad_ref[...]
+
+
+@jax.jit
+def sgd_update(theta: jax.Array, grad: jax.Array, lr: jax.Array) -> jax.Array:
+    """theta, grad: [D] f32; lr: scalar f32. Returns updated theta."""
+    (d,) = theta.shape
+    block = _round_up(d, 8) if 3 * 4 * d <= VMEM_BUDGET_BYTES \
+        else min(BLOCK, _round_up(d, 8))
+    dp = _round_up(d, block)
+    pad = (0, dp - d)
+    out = pl.pallas_call(
+        _update_kernel,
+        grid=(dp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=True,
+    )(jnp.pad(theta, pad), jnp.pad(grad, pad), jnp.reshape(lr, (1,)))
+    return out[:d]

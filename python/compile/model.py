@@ -1,0 +1,30 @@
+"""L2 registry: name -> ModelBundle factory.
+
+`get_bundle("cnn")`, `get_bundle("lm_tiny")`, ... — the single entry point
+used by aot.py and the python tests.
+"""
+
+from __future__ import annotations
+
+from .models import ModelBundle
+from .models import cnn as _cnn
+from .models import transformer as _transformer
+
+
+def get_bundle(name: str, batch: int = 0) -> ModelBundle:
+    """Build a model bundle by name ("cnn" or "lm_<preset>")."""
+    if name == "cnn":
+        return _cnn.build(batch=batch or 32)
+    if name.startswith("lm_"):
+        preset = name[len("lm_"):]
+        if preset not in _transformer.PRESETS:
+            raise ValueError(
+                f"unknown lm preset {preset!r}; "
+                f"have {sorted(_transformer.PRESETS)}"
+            )
+        return _transformer.build(preset=preset, batch=batch)
+    raise ValueError(f"unknown model {name!r}")
+
+
+def available_models() -> list:
+    return ["cnn"] + [f"lm_{p}" for p in _transformer.PRESETS]

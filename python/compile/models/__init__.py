@@ -1,0 +1,29 @@
+"""L2 model zoo: the paper's small-CNN workload + a transformer LM.
+
+Each model module exposes `build(...) -> ModelBundle` with:
+  packer     — flat-theta layout (compile.packing.Packer)
+  forward    — forward(theta, x) -> logits
+  grad_step  — (theta, x, y) -> (grad, loss, correct)   [the worker artifact]
+  eval_step  — (theta, x, y) -> (loss, correct)
+  init_theta — numpy rng -> flat theta0 (f32)
+  meta       — manifest key/values (batch, shapes, dtypes, ...)
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+from ..packing import Packer
+
+
+@dataclass
+class ModelBundle:
+    name: str
+    packer: Packer
+    forward: Callable
+    grad_step: Callable
+    eval_step: Callable
+    init_theta: Callable
+    input_shape: Tuple[int, ...]
+    input_dtype: str           # "f32" | "i32"
+    label_shape: Tuple[int, ...]
+    meta: Dict[str, str] = field(default_factory=dict)

@@ -1,0 +1,127 @@
+"""The paper's small-CNN workload (Sec. VI): 2 conv + 3 FC on CIFAR-shaped
+inputs, with every matmul-shaped op routed through the Pallas MXU kernel.
+
+Convolutions are im2col -> Pallas matmul: on a TPU the systolic array is the
+only high-FLOP unit, so conv and FC share the same 128x128-block kernel
+(DESIGN.md §Hardware-Adaptation). im2col is built from 9 static shifted
+slices (pad=1, 3x3), which XLA fuses into cheap gathers at trace time.
+
+Architecture (CIFAR-10-shaped, x: [B,3,32,32] fed flat as [B,3072]):
+  conv1 3->16 (3x3, pad 1) + ReLU + maxpool2   -> [B,16,16,16]
+  conv2 16->32 (3x3, pad 1) + ReLU + maxpool2  -> [B,32,8,8]
+  fc1 2048->256 + ReLU, fc2 256->64 + ReLU, fc3 64->10
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels.matmul import matmul
+from ..kernels.softmax_xent import softmax_xent
+from ..packing import Packer, glorot_init, he_init
+from . import ModelBundle
+
+IMG_C, IMG_H, IMG_W = 3, 32, 32
+IN_DIM = IMG_C * IMG_H * IMG_W
+N_CLASSES = 10
+
+
+def _im2col3x3(x: jax.Array) -> jax.Array:
+    """[B,C,H,W] -> [B*H*W, C*9] patches for a 3x3, pad-1, stride-1 conv.
+
+    Feature order is (c, di, dj) — matching w.reshape(Cout, Cin*9).
+    """
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    cols = jnp.stack(
+        [xp[:, :, i:i + h, j:j + w] for i in range(3) for j in range(3)],
+        axis=2,
+    )  # [B, C, 9, H, W]
+    return cols.transpose(0, 3, 4, 1, 2).reshape(b * h * w, c * 9)
+
+
+def _conv3x3(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """3x3 same conv via im2col + Pallas matmul. w: [Cout, Cin, 3, 3]."""
+    b, c, h, wd = x.shape
+    cout = w.shape[0]
+    cols = _im2col3x3(x)                            # [B*H*W, C*9]
+    wmat = w.reshape(cout, c * 9).T                 # [C*9, Cout]
+    out = matmul(cols, wmat) + bias                 # [B*H*W, Cout]
+    return out.reshape(b, h, wd, cout).transpose(0, 3, 1, 2)
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def build(batch: int = 32) -> ModelBundle:
+    specs = [
+        ("conv1_w", (16, IMG_C, 3, 3)), ("conv1_b", (16,)),
+        ("conv2_w", (32, 16, 3, 3)), ("conv2_b", (32,)),
+        ("fc1_w", (32 * 8 * 8, 256)), ("fc1_b", (256,)),
+        ("fc2_w", (256, 64)), ("fc2_b", (64,)),
+        ("fc3_w", (64, N_CLASSES)), ("fc3_b", (N_CLASSES,)),
+    ]
+    packer = Packer(specs)
+
+    def forward(theta: jax.Array, x_flat: jax.Array) -> jax.Array:
+        p = packer.unpack(theta)
+        x = x_flat.reshape(-1, IMG_C, IMG_H, IMG_W)
+        x = _maxpool2(jax.nn.relu(_conv3x3(x, p["conv1_w"], p["conv1_b"])))
+        x = _maxpool2(jax.nn.relu(_conv3x3(x, p["conv2_w"], p["conv2_b"])))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(matmul(x, p["fc1_w"]) + p["fc1_b"])
+        x = jax.nn.relu(matmul(x, p["fc2_w"]) + p["fc2_b"])
+        return matmul(x, p["fc3_w"]) + p["fc3_b"]
+
+    def loss_fn(theta, x, y):
+        logits = forward(theta, x)
+        loss = softmax_xent(logits, y)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        )
+        return loss, correct
+
+    def grad_step(theta, x, y):
+        (loss, correct), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta, x, y
+        )
+        return grad, loss, correct
+
+    def eval_step(theta, x, y):
+        loss, correct = loss_fn(theta, x, y)
+        return loss, correct
+
+    def init_theta(rng: np.random.Generator) -> np.ndarray:
+        params = {
+            "conv1_w": he_init(rng, (16, IMG_C, 3, 3), IMG_C * 9),
+            "conv1_b": np.zeros((16,), np.float32),
+            "conv2_w": he_init(rng, (32, 16, 3, 3), 16 * 9),
+            "conv2_b": np.zeros((32,), np.float32),
+            "fc1_w": he_init(rng, (32 * 8 * 8, 256), 32 * 8 * 8),
+            "fc1_b": np.zeros((256,), np.float32),
+            "fc2_w": he_init(rng, (256, 64), 256),
+            "fc2_b": np.zeros((64,), np.float32),
+            "fc3_w": glorot_init(rng, (64, N_CLASSES), 64, N_CLASSES),
+            "fc3_b": np.zeros((N_CLASSES,), np.float32),
+        }
+        return packer.pack(params)
+
+    return ModelBundle(
+        name="cnn",
+        packer=packer,
+        forward=forward,
+        grad_step=grad_step,
+        eval_step=eval_step,
+        init_theta=init_theta,
+        input_shape=(batch, IN_DIM),
+        input_dtype="f32",
+        label_shape=(batch,),
+        meta={
+            "classes": str(N_CLASSES),
+            "arch": "conv16-conv32-fc256-fc64-fc10",
+        },
+    )

@@ -1,0 +1,153 @@
+"""Decoder-only transformer LM for the end-to-end training example.
+
+Pre-LN blocks; projections route through the Pallas matmul kernel and every
+LayerNorm through the fused Pallas LN kernel (custom-VJP, so the AOT grad
+artifact contains only kernel-authored fwd/bwd HLO for those ops). Attention
+score/softmax math stays in jnp: with T<=128 heads are tiny and XLA fuses it;
+the MXU-bound work is the projections.
+
+Presets (vocab 256 = byte-level unless noted):
+  tiny  : d=128, L=4, h=4, ff=512, T=64   (~0.9M params; default e2e)
+  small : d=256, L=6, h=8, ff=1024, T=128 (~5.5M params)
+  base  : d=512, L=8, h=8, ff=2048, T=128 (~26M params)
+  100m  : d=768, L=12, h=12, ff=3072, T=256 (~96M params; compile-only
+          preset — a CPU-PJRT step at this size is minutes, documented in
+          EXPERIMENTS.md rather than run in CI)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels.layernorm import layernorm
+from ..kernels.matmul import matmul
+from ..kernels.softmax_xent import softmax_xent
+from ..packing import Packer, glorot_init
+from . import ModelBundle
+
+PRESETS: Dict[str, Dict[str, int]] = {
+    "tiny": dict(d=128, layers=4, heads=4, ff=512, seq=64, vocab=256, batch=8),
+    "small": dict(d=256, layers=6, heads=8, ff=1024, seq=128, vocab=256,
+                  batch=8),
+    "base": dict(d=512, layers=8, heads=8, ff=2048, seq=128, vocab=256,
+                 batch=8),
+    "100m": dict(d=768, layers=12, heads=12, ff=3072, seq=256, vocab=32768,
+                 batch=4),
+}
+
+
+def build(preset: str = "tiny", batch: int = 0) -> ModelBundle:
+    cfg = dict(PRESETS[preset])
+    if batch:
+        cfg["batch"] = batch
+    d, layers, heads = cfg["d"], cfg["layers"], cfg["heads"]
+    ff, seq, vocab, b = cfg["ff"], cfg["seq"], cfg["vocab"], cfg["batch"]
+    dh = d // heads
+
+    specs = [("embed", (vocab, d)), ("pos", (seq, d))]
+    for i in range(layers):
+        specs += [
+            (f"l{i}_ln1_g", (d,)), (f"l{i}_ln1_b", (d,)),
+            (f"l{i}_wqkv", (d, 3 * d)), (f"l{i}_wo", (d, d)),
+            (f"l{i}_ln2_g", (d,)), (f"l{i}_ln2_b", (d,)),
+            (f"l{i}_w1", (d, ff)), (f"l{i}_b1", (ff,)),
+            (f"l{i}_w2", (ff, d)), (f"l{i}_b2", (d,)),
+        ]
+    specs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    packer = Packer(specs)  # unembedding is tied to `embed`
+
+    neg_inf = jnp.float32(-1e9)
+
+    def _attn(x2d: jax.Array, wqkv: jax.Array, wo: jax.Array) -> jax.Array:
+        """x2d: [B*T, d] -> [B*T, d] causal multi-head attention."""
+        qkv = matmul(x2d, wqkv).reshape(b, seq, 3, heads, dh)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3)   # [B,h,T,dh]
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        scores = jnp.where(mask[None, None], scores, neg_inf)
+        att = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b * seq, d)
+        return matmul(out, wo)
+
+    def forward(theta: jax.Array, tokens: jax.Array) -> jax.Array:
+        """tokens: [B,T] i32 -> logits [B*T, V]."""
+        p = packer.unpack(theta)
+        x = p["embed"][tokens] + p["pos"][None, :, :]
+        x = x.reshape(b * seq, d)
+        for i in range(layers):
+            h1 = layernorm(x, p[f"l{i}_ln1_g"], p[f"l{i}_ln1_b"])
+            x = x + _attn(h1, p[f"l{i}_wqkv"], p[f"l{i}_wo"])
+            h2 = layernorm(x, p[f"l{i}_ln2_g"], p[f"l{i}_ln2_b"])
+            h2 = jax.nn.gelu(matmul(h2, p[f"l{i}_w1"]) + p[f"l{i}_b1"])
+            x = x + matmul(h2, p[f"l{i}_w2"]) + p[f"l{i}_b2"]
+        x = layernorm(x, p["lnf_g"], p["lnf_b"])
+        return matmul(x, p["embed"].T)             # tied unembedding
+
+    def loss_fn(theta, tokens, targets):
+        logits = forward(theta, tokens)
+        y = targets.reshape(-1)
+        loss = softmax_xent(logits, y)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        )
+        return loss, correct
+
+    def grad_step(theta, x, y):
+        (loss, correct), grad = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta, x, y
+        )
+        return grad, loss, correct
+
+    def eval_step(theta, x, y):
+        loss, correct = loss_fn(theta, x, y)
+        return loss, correct
+
+    def init_theta(rng: np.random.Generator) -> np.ndarray:
+        params: Dict[str, np.ndarray] = {
+            "embed": (rng.normal(0, 0.02, (vocab, d))).astype(np.float32),
+            "pos": (rng.normal(0, 0.01, (seq, d))).astype(np.float32),
+            "lnf_g": np.ones((d,), np.float32),
+            "lnf_b": np.zeros((d,), np.float32),
+        }
+        for i in range(layers):
+            params[f"l{i}_ln1_g"] = np.ones((d,), np.float32)
+            params[f"l{i}_ln1_b"] = np.zeros((d,), np.float32)
+            params[f"l{i}_ln2_g"] = np.ones((d,), np.float32)
+            params[f"l{i}_ln2_b"] = np.zeros((d,), np.float32)
+            params[f"l{i}_wqkv"] = glorot_init(rng, (d, 3 * d), d, 3 * d)
+            # residual-branch outputs scaled down by depth (GPT-2 style)
+            params[f"l{i}_wo"] = (
+                glorot_init(rng, (d, d), d, d) / math.sqrt(2 * layers)
+            )
+            params[f"l{i}_w1"] = glorot_init(rng, (d, ff), d, ff)
+            params[f"l{i}_b1"] = np.zeros((ff,), np.float32)
+            params[f"l{i}_w2"] = (
+                glorot_init(rng, (ff, d), ff, d) / math.sqrt(2 * layers)
+            )
+            params[f"l{i}_b2"] = np.zeros((d,), np.float32)
+        return packer.pack(params)
+
+    return ModelBundle(
+        name=f"lm_{preset}",
+        packer=packer,
+        forward=forward,
+        grad_step=grad_step,
+        eval_step=eval_step,
+        init_theta=init_theta,
+        input_shape=(b, seq),
+        input_dtype="i32",
+        label_shape=(b, seq),
+        meta={
+            "classes": str(vocab),
+            "arch": f"gpt-d{d}-L{layers}-h{heads}-ff{ff}-T{seq}-V{vocab}",
+            "preset": preset,
+        },
+    )

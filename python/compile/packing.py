@@ -1,0 +1,85 @@
+"""Flat-theta packing: the rust<->HLO parameter interchange format.
+
+All model parameters live in ONE f32[D] vector crossing the PJRT boundary.
+This keeps the AOT call surface fixed-shape while the number of *active
+workers* varies per iteration (the paper's y_j): every worker runs the same
+`grad(theta, x, y)` executable and the rust parameter server owns theta.
+
+A `Packer` records (name, shape, offset) specs; `unpack` slices a flat theta
+into named arrays inside the jitted model so jax.grad w.r.t. theta comes
+back flat for free. The same specs are emitted into artifacts/manifest.txt
+so the rust side knows D and every layer's extent.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Packer:
+    """Orders named parameter tensors into a single flat f32 vector."""
+
+    def __init__(self, specs: Sequence[Tuple[str, Tuple[int, ...]]]):
+        self.specs: List[Tuple[str, Tuple[int, ...]]] = [
+            (name, tuple(shape)) for name, shape in specs
+        ]
+        self.offsets: Dict[str, int] = {}
+        off = 0
+        for name, shape in self.specs:
+            if name in self.offsets:
+                raise ValueError(f"duplicate parameter name {name!r}")
+            self.offsets[name] = off
+            off += math.prod(shape)
+        self.size = off
+
+    def unpack(self, theta: jax.Array) -> Dict[str, jax.Array]:
+        """Slice flat theta into the named parameter dict (static slices)."""
+        if theta.shape != (self.size,):
+            raise ValueError(f"theta shape {theta.shape} != ({self.size},)")
+        out = {}
+        for name, shape in self.specs:
+            off = self.offsets[name]
+            out[name] = theta[off:off + math.prod(shape)].reshape(shape)
+        return out
+
+    def pack(self, params: Dict[str, np.ndarray]) -> np.ndarray:
+        """Concatenate a named parameter dict back into flat theta."""
+        parts = []
+        for name, shape in self.specs:
+            arr = np.asarray(params[name], dtype=np.float32)
+            if arr.shape != shape:
+                raise ValueError(f"{name}: shape {arr.shape} != {shape}")
+            parts.append(arr.reshape(-1))
+        return np.concatenate(parts)
+
+    def manifest_lines(self) -> List[str]:
+        """`layer <name> <offset> <numel> <d0,d1,...>` lines for manifest.txt."""
+        lines = []
+        for name, shape in self.specs:
+            lines.append(
+                "layer {} {} {} {}".format(
+                    name, self.offsets[name], math.prod(shape),
+                    ",".join(str(d) for d in shape),
+                )
+            )
+        return lines
+
+
+def he_init(rng: np.random.Generator, shape: Tuple[int, ...],
+            fan_in: int) -> np.ndarray:
+    """He-normal init (used for ReLU layers)."""
+    return rng.normal(0.0, math.sqrt(2.0 / fan_in), size=shape).astype(
+        np.float32
+    )
+
+
+def glorot_init(rng: np.random.Generator, shape: Tuple[int, ...],
+                fan_in: int, fan_out: int) -> np.ndarray:
+    """Glorot-normal init (used for linear/attention projections)."""
+    std = math.sqrt(2.0 / (fan_in + fan_out))
+    return rng.normal(0.0, std, size=shape).astype(np.float32)

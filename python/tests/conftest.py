@@ -1,0 +1,19 @@
+"""Shared pytest fixtures/settings for the L1/L2 test suite."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest is run from the repo root too.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings, HealthCheck
+
+# Pallas interpret-mode is slow; keep hypothesis sweeps bounded and disable
+# the wall-clock deadline (first jit compile of a shape can take seconds).
+settings.register_profile(
+    "pallas",
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("pallas")

@@ -1,0 +1,79 @@
+"""AOT export path: artifacts + manifest round-trip."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import get_bundle
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = ["version 1"]
+    aot.export_model("cnn", str(out), manifest)
+    (out / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    return out, manifest
+
+
+def test_artifact_files_exist(exported):
+    out, _ = exported
+    for kind in ("grad", "eval", "apply"):
+        p = out / f"cnn_{kind}.hlo.txt"
+        assert p.exists() and p.stat().st_size > 1000
+
+
+def test_hlo_text_is_parseable_header(exported):
+    out, _ = exported
+    text = (out / "cnn_grad.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    # tuple return with 3 outputs: (grad, loss, correct)
+    assert "ROOT" in text
+
+
+def test_theta0_matches_manifest_digest(exported):
+    import hashlib
+
+    out, manifest = exported
+    line = [l for l in manifest if l.startswith("theta0 ")][0]
+    _, rel, digest = line.split()
+    raw = (out / rel).read_bytes()
+    d = get_bundle("cnn").packer.size
+    assert len(raw) == 4 * d
+    assert hashlib.sha256(raw).hexdigest()[:16] == digest
+    theta = np.frombuffer(raw, dtype=np.float32)
+    assert np.isfinite(theta).all()
+    assert 0 < np.abs(theta).max() < 10
+
+
+def test_manifest_block_structure(exported):
+    _, manifest = exported
+    assert manifest[0] == "version 1"
+    assert "model cnn" in manifest
+    assert manifest[-1] == "end"
+    dline = [l for l in manifest if l.startswith("d ")][0]
+    assert int(dline.split()[1]) == get_bundle("cnn").packer.size
+    layers = [l for l in manifest if l.startswith("layer ")]
+    assert len(layers) == 10  # 5 weight+bias pairs
+    # layer extents tile [0, d) exactly
+    spans = sorted(
+        (int(l.split()[2]), int(l.split()[3])) for l in layers
+    )
+    pos = 0
+    for off, numel in spans:
+        assert off == pos
+        pos += numel
+    assert pos == get_bundle("cnn").packer.size
+
+
+def test_hlo_is_deterministic(tmp_path):
+    """Same model exports byte-identical HLO (AOT cache no-op safety)."""
+    m1, m2 = ["version 1"], ["version 1"]
+    aot.export_model("cnn", str(tmp_path), m1)
+    first = (tmp_path / "cnn_grad.hlo.txt").read_text()
+    aot.export_model("cnn", str(tmp_path), m2)
+    second = (tmp_path / "cnn_grad.hlo.txt").read_text()
+    assert first == second
+    assert m1 == m2

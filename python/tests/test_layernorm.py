@@ -1,0 +1,71 @@
+"""Fused LayerNorm Pallas kernels vs oracle (fwd + full VJP)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.layernorm import layernorm
+
+
+def _case(b, d, seed):
+    k = jax.random.PRNGKey
+    x = jax.random.normal(k(seed), (b, d), jnp.float32)
+    gamma = jax.random.normal(k(seed + 1), (d,), jnp.float32)
+    beta = jax.random.normal(k(seed + 2), (d,), jnp.float32)
+    return x, gamma, beta
+
+
+@given(b=st.integers(1, 300), d=st.integers(2, 256),
+       seed=st.integers(0, 2**16))
+def test_fwd_matches_ref(b, d, seed):
+    x, gamma, beta = _case(b, d, seed)
+    np.testing.assert_allclose(
+        layernorm(x, gamma, beta), ref.layernorm(x, gamma, beta),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@given(b=st.integers(1, 64), d=st.integers(2, 128),
+       seed=st.integers(0, 2**16))
+def test_vjp_matches_ref(b, d, seed):
+    x, gamma, beta = _case(b, d, seed)
+    ct = jax.random.normal(jax.random.PRNGKey(seed + 3), (b, d), jnp.float32)
+
+    def run(f):
+        _, vjp = jax.vjp(lambda a, g, bb: f(a, g, bb), x, gamma, beta)
+        return vjp(ct)
+
+    got = run(layernorm)
+    want = run(ref.layernorm)
+    for g_, w_, name in zip(got, want, ("dx", "dgamma", "dbeta")):
+        np.testing.assert_allclose(
+            g_, w_, rtol=2e-4, atol=2e-4, err_msg=name
+        )
+
+
+def test_output_row_statistics():
+    # With gamma=1, beta=0 each output row is ~zero-mean unit-variance.
+    x = jax.random.normal(jax.random.PRNGKey(0), (17, 96), jnp.float32) * 5 + 3
+    y = np.asarray(layernorm(x, jnp.ones(96), jnp.zeros(96)))
+    np.testing.assert_allclose(y.mean(axis=1), np.zeros(17), atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=1), np.ones(17), rtol=1e-2)
+
+
+def test_row_block_boundary_shapes():
+    # Rows straddling the 256-row block edge must be handled via padding.
+    for b in (255, 256, 257, 513):
+        x, gamma, beta = _case(b, 32, b)
+        np.testing.assert_allclose(
+            layernorm(x, gamma, beta), ref.layernorm(x, gamma, beta),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_scale_invariance_of_xhat():
+    # layernorm(a*x) == layernorm(x) for a>0 (mean/std normalise scale out).
+    x, gamma, beta = _case(9, 40, 3)
+    y1 = layernorm(x, gamma, beta)
+    y2 = layernorm(3.7 * x, gamma, beta)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)

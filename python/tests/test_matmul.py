@@ -1,0 +1,121 @@
+"""Pallas matmul kernel vs pure-jnp oracle (fwd + custom VJP)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+def test_fwd_matches_ref_hypothesis(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    got = mm.matmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),          # degenerate
+        (128, 128, 128),    # exactly one MXU block
+        (129, 257, 130),    # every dim straddles a block boundary
+        (32, 3072, 256),    # the CNN fc1 shape
+        (8, 2048, 10),      # small-N head
+        (512, 128, 512),    # multi-block M and N
+    ],
+)
+def test_fwd_matches_ref_block_edges(m, k, n):
+    x = _rand(m * 7 + n, (m, k))
+    w = _rand(k * 5 + 3, (k, n))
+    # tolerance grows with K: blocked accumulation reassociates the sum
+    tol = 3e-5 * max(1.0, (k / 128.0) ** 0.5)
+    np.testing.assert_allclose(
+        mm.matmul(x, w), ref.matmul(x, w), rtol=10 * tol, atol=tol
+    )
+
+
+@given(
+    m=st.integers(2, 64),
+    k=st.integers(2, 96),
+    n=st.integers(2, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_vjp_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    ct = _rand(seed + 2, (m, n))
+
+    def f_pallas(x_, w_):
+        return jnp.vdot(mm.matmul(x_, w_), ct)
+
+    def f_ref(x_, w_):
+        return jnp.vdot(ref.matmul(x_, w_), ct)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gp[0], gr[0], rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(gp[1], gr[1], rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (128, 128, 128)])
+def test_blocked_grid_path_matches_ref(bm, bn, bk):
+    """Explicit block sizes force the K-grid path (the single-block VMEM
+    fast path is bypassed) — keeps the revisit-accumulate schedule tested."""
+    x = _rand(1, (100, 300))
+    w = _rand(2, (300, 70))
+    got = mm._matmul_pallas(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(x, w), rtol=3e-4, atol=3e-5)
+
+
+def test_single_block_threshold_dispatch():
+    """Below the VMEM budget the kernel must not pad (single block);
+    above it the grid path engages. Both must agree with the oracle."""
+    small = (_rand(3, (64, 64)), _rand(4, (64, 64)))
+    np.testing.assert_allclose(
+        mm.matmul(*small), ref.matmul(*small), rtol=3e-5, atol=3e-5
+    )
+    # a shape over the 12 MiB budget: 1024x1024 @ 1024x1024 fp32 = 12.6 MiB
+    big = (_rand(5, (1024, 1024)), _rand(6, (1024, 1024)))
+    tol = 3e-4
+    np.testing.assert_allclose(
+        mm.matmul(*big), ref.matmul(*big), rtol=10 * tol, atol=tol
+    )
+
+
+def test_block_picker_properties():
+    for d in range(1, 300):
+        b = mm._pick_block(d)
+        assert b >= 1
+        assert b <= 128
+        if d >= 128:
+            assert b == 128
+        else:
+            assert b % 8 == 0 and b >= d
+
+
+def test_fp32_accumulation_precision():
+    # K large enough that fp16-style accumulation would visibly drift.
+    x = jnp.ones((8, 4096), jnp.float32) * 0.1
+    w = jnp.ones((4096, 8), jnp.float32) * 0.1
+    got = mm.matmul(x, w)
+    np.testing.assert_allclose(got, jnp.full((8, 8), 40.96), rtol=5e-5)
+
+
+def test_rejects_contraction_mismatch():
+    with pytest.raises(AssertionError):
+        mm.matmul(jnp.zeros((4, 5)), jnp.zeros((6, 3)))

@@ -1,0 +1,185 @@
+"""L2 model contract tests: CNN and transformer LM."""
+
+import numpy as np
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import available_models, get_bundle
+from compile.models.cnn import _conv3x3, _im2col3x3, _maxpool2
+
+
+# ---------------------------------------------------------------- CNN ops
+
+def test_conv3x3_matches_lax_conv():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (2, 3, 8, 8), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (5, 3, 3, 3), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (5,), jnp.float32)
+    want = lax.conv_general_dilated(x, w, (1, 1), ((1, 1), (1, 1)))
+    want = want + b[None, :, None, None]
+    np.testing.assert_allclose(_conv3x3(x, w, b), want, rtol=2e-4, atol=2e-4)
+
+
+def test_im2col_shape_and_center_column():
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 6, 6), jnp.float32)
+    cols = _im2col3x3(x)
+    assert cols.shape == (2 * 6 * 6, 3 * 9)
+    # feature index (c, di=1, dj=1) is the center tap == original pixel
+    center = np.asarray(cols).reshape(2, 6, 6, 3, 9)[:, :, :, :, 4]
+    np.testing.assert_array_equal(
+        center, np.asarray(x).transpose(0, 2, 3, 1)
+    )
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 1, 4, 4)
+    got = _maxpool2(x)
+    want = np.array([[[[5.0, 7.0], [13.0, 15.0]]]])
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- bundles
+
+@pytest.fixture(scope="module")
+def cnn():
+    return get_bundle("cnn")
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return get_bundle("lm_tiny")
+
+
+def _batch(bundle, seed=0):
+    k1, k2 = jax.random.PRNGKey(seed), jax.random.PRNGKey(seed + 1)
+    classes = int(bundle.meta["classes"])
+    if bundle.input_dtype == "f32":
+        x = jax.random.normal(k1, bundle.input_shape, jnp.float32)
+    else:
+        x = jax.random.randint(k1, bundle.input_shape, 0, classes)
+    y = jax.random.randint(k2, bundle.label_shape, 0, classes)
+    return x, y
+
+
+def test_registry_lists_models():
+    names = available_models()
+    assert "cnn" in names and "lm_tiny" in names and "lm_100m" in names
+    with pytest.raises(ValueError):
+        get_bundle("nope")
+    with pytest.raises(ValueError):
+        get_bundle("lm_nope")
+
+
+@pytest.mark.parametrize("name", ["cnn", "lm_tiny"])
+def test_grad_step_contract(name):
+    bundle = get_bundle(name)
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(bundle.init_theta(rng))
+    assert theta.shape == (bundle.packer.size,)
+    x, y = _batch(bundle)
+    grad, loss, correct = jax.jit(bundle.grad_step)(theta, x, y)
+    assert grad.shape == theta.shape
+    assert loss.shape == () and correct.shape == ()
+    assert np.isfinite(float(loss))
+    n_preds = int(np.prod(bundle.label_shape))
+    assert 0.0 <= float(correct) <= n_preds
+    # initial loss of a calibrated init is O(ln C) (He-init conv logits on
+    # unit-normal inputs can start a couple of nats above ln C)
+    c = int(bundle.meta["classes"])
+    assert np.log(c) / 2 < float(loss) < 3 * np.log(c) + 2
+
+
+def test_eval_matches_grad_aux(cnn):
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(cnn.init_theta(rng))
+    x, y = _batch(cnn, 5)
+    _, loss_g, corr_g = jax.jit(cnn.grad_step)(theta, x, y)
+    loss_e, corr_e = jax.jit(cnn.eval_step)(theta, x, y)
+    np.testing.assert_allclose(loss_g, loss_e, rtol=1e-5)
+    np.testing.assert_array_equal(corr_g, corr_e)
+
+
+def test_cnn_loss_decreases_under_sgd(cnn):
+    rng = np.random.default_rng(2)
+    theta = jnp.asarray(cnn.init_theta(rng))
+    x, y = _batch(cnn, 9)
+    step = jax.jit(cnn.grad_step)
+    g, loss0, _ = step(theta, x, y)
+    for _ in range(8):
+        g, loss, _ = step(theta, x, y)
+        theta = theta - 0.05 * g
+    assert float(loss) < float(loss0) - 0.5
+
+
+def test_grad_matches_ref_autodiff(cnn):
+    """Custom-VJP pallas model grad == pure-jnp autodiff on small batch."""
+    bundle = get_bundle("cnn", batch=4)
+    rng = np.random.default_rng(3)
+    theta = jnp.asarray(bundle.init_theta(rng))
+    x, y = _batch(bundle, 11)
+
+    from compile.kernels import ref
+
+    def ref_loss(t):
+        logits = _ref_forward(bundle, t, x)
+        return ref.softmax_xent(logits, y)
+
+    def _ref_forward(b_, t, x_):
+        p = b_.packer.unpack(t)
+        xx = x_.reshape(-1, 3, 32, 32)
+        for wname, bname in (("conv1_w", "conv1_b"), ("conv2_w", "conv2_b")):
+            w = p[wname]
+            out = lax.conv_general_dilated(xx, w, (1, 1), ((1, 1), (1, 1)))
+            xx = _maxpool2(jax.nn.relu(out + p[bname][None, :, None, None]))
+        xx = xx.reshape(xx.shape[0], -1)
+        xx = jax.nn.relu(xx @ p["fc1_w"] + p["fc1_b"])
+        xx = jax.nn.relu(xx @ p["fc2_w"] + p["fc2_b"])
+        return xx @ p["fc3_w"] + p["fc3_b"]
+
+    g_ref = jax.grad(ref_loss)(theta)
+    g_pallas, _, _ = bundle.grad_step(theta, x, y)
+    np.testing.assert_allclose(g_pallas, g_ref, rtol=5e-3, atol=2e-4)
+
+
+def test_lm_causality(lm):
+    """Changing a future token must not change past-position logits."""
+    rng = np.random.default_rng(4)
+    theta = jnp.asarray(lm.init_theta(rng))
+    x, _ = _batch(lm, 13)
+    b, t = lm.input_shape
+    logits1 = lm.forward(theta, x).reshape(b, t, -1)
+    x2 = x.at[:, t - 1].set((x[:, t - 1] + 1) % 256)
+    logits2 = lm.forward(theta, x2).reshape(b, t, -1)
+    np.testing.assert_allclose(
+        logits1[:, : t - 1], logits2[:, : t - 1], atol=2e-4
+    )
+    assert not np.allclose(logits1[:, t - 1], logits2[:, t - 1], atol=1e-3)
+
+
+def test_lm_loss_decreases_under_sgd(lm):
+    rng = np.random.default_rng(5)
+    theta = jnp.asarray(lm.init_theta(rng))
+    x, y = _batch(lm, 17)
+    step = jax.jit(lm.grad_step)
+    _, loss0, _ = step(theta, x, y)
+    for _ in range(6):
+        g, loss, _ = step(theta, x, y)
+        theta = theta - 0.5 * g
+    assert float(loss) < float(loss0)
+
+
+def test_lm_preset_table_sizes():
+    from compile.models.transformer import PRESETS, build
+
+    assert set(PRESETS) == {"tiny", "small", "base", "100m"}
+    tiny = build("tiny")
+    assert 0.5e6 < tiny.packer.size < 1.5e6
+    # 100m preset must be ~100M params (compile-only; never instantiated)
+    from compile.packing import Packer
+
+    cfg = PRESETS["100m"]
+    d, L, ff, V, T = cfg["d"], cfg["layers"], cfg["ff"], cfg["vocab"], cfg["seq"]
+    approx = V * d + T * d + L * (4 * d * d + 2 * d * ff)
+    assert 80e6 < approx < 130e6

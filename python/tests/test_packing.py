@@ -1,0 +1,65 @@
+"""Flat-theta Packer contract tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.packing import Packer, glorot_init, he_init
+
+
+def test_roundtrip_pack_unpack():
+    specs = [("a", (3, 4)), ("b", (5,)), ("c", (2, 2, 2))]
+    p = Packer(specs)
+    assert p.size == 12 + 5 + 8
+    rng = np.random.default_rng(0)
+    params = {n: rng.normal(size=s).astype(np.float32) for n, s in specs}
+    theta = p.pack(params)
+    out = p.unpack(jnp.asarray(theta))
+    for n, s in specs:
+        np.testing.assert_array_equal(np.asarray(out[n]), params[n])
+
+
+def test_offsets_are_contiguous_and_ordered():
+    p = Packer([("x", (7,)), ("y", (2, 3)), ("z", (1,))])
+    assert p.offsets == {"x": 0, "y": 7, "z": 13}
+
+
+def test_duplicate_name_rejected():
+    with pytest.raises(ValueError):
+        Packer([("w", (2,)), ("w", (3,))])
+
+
+def test_wrong_theta_shape_rejected():
+    p = Packer([("w", (4,))])
+    with pytest.raises(ValueError):
+        p.unpack(jnp.zeros(5))
+
+
+def test_wrong_param_shape_rejected():
+    p = Packer([("w", (2, 2))])
+    with pytest.raises(ValueError):
+        p.pack({"w": np.zeros((4,), np.float32)})
+
+
+def test_manifest_lines_format():
+    p = Packer([("conv_w", (2, 3, 3))])
+    (line,) = p.manifest_lines()
+    assert line == "layer conv_w 0 18 2,3,3"
+
+
+@given(shapes=st.lists(
+    st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1, max_size=6,
+))
+def test_size_is_sum_of_numels(shapes):
+    specs = [(f"p{i}", s) for i, s in enumerate(shapes)]
+    p = Packer(specs)
+    assert p.size == sum(a * b for a, b in shapes)
+
+
+def test_init_statistics():
+    rng = np.random.default_rng(42)
+    w = he_init(rng, (200, 300), fan_in=200)
+    assert abs(w.std() - np.sqrt(2.0 / 200)) < 0.01
+    g = glorot_init(rng, (200, 300), 200, 300)
+    assert abs(g.std() - np.sqrt(2.0 / 500)) < 0.01

@@ -1,0 +1,38 @@
+"""Elementwise SGD-update Pallas kernel vs oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sgd_update import sgd_update
+
+
+@given(
+    d=st.one_of(st.integers(1, 2000), st.sampled_from([65535, 65536, 65537])),
+    lr=st.floats(0.0, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref(d, lr, seed):
+    theta = jax.random.normal(jax.random.PRNGKey(seed), (d,), jnp.float32)
+    grad = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,), jnp.float32)
+    got = sgd_update(theta, grad, jnp.float32(lr))
+    want = ref.sgd_update(theta, grad, jnp.float32(lr))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=5e-7)
+
+
+def test_zero_lr_is_identity():
+    theta = jnp.arange(1000, dtype=jnp.float32)
+    grad = jnp.ones(1000, jnp.float32) * 1e9
+    np.testing.assert_array_equal(
+        sgd_update(theta, grad, jnp.float32(0.0)), theta
+    )
+
+
+def test_update_is_linear_in_lr():
+    theta = jax.random.normal(jax.random.PRNGKey(0), (513,), jnp.float32)
+    grad = jax.random.normal(jax.random.PRNGKey(1), (513,), jnp.float32)
+    d1 = theta - sgd_update(theta, grad, jnp.float32(0.1))
+    d2 = theta - sgd_update(theta, grad, jnp.float32(0.2))
+    np.testing.assert_allclose(2 * d1, d2, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,71 @@
+"""Fused softmax-xent Pallas kernel vs oracle + finite differences."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.softmax_xent import softmax_xent
+
+
+def _case(b, c, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (b, c), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, c)
+    return logits, labels
+
+
+@given(b=st.integers(1, 64), c=st.integers(2, 300), seed=st.integers(0, 2**16))
+def test_fwd_matches_ref(b, c, seed):
+    logits, labels = _case(b, c, seed)
+    got = softmax_xent(logits, labels)
+    want = ref.softmax_xent(logits, labels)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(b=st.integers(1, 32), c=st.integers(2, 64), seed=st.integers(0, 2**16))
+def test_bwd_matches_ref(b, c, seed):
+    logits, labels = _case(b, c, seed)
+    got = jax.grad(softmax_xent)(logits, labels)
+    want = ref.softmax_xent_grad(logits, labels)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_rows_sum_to_zero():
+    # softmax gradient rows always sum to 0 (prob simplex tangent).
+    logits, labels = _case(16, 10, 7)
+    g = jax.grad(softmax_xent)(logits, labels)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), np.zeros(16), atol=1e-7)
+
+
+def test_numerical_stability_large_logits():
+    logits = jnp.array([[1000.0, -1000.0], [-1000.0, 1000.0]], jnp.float32)
+    labels = jnp.array([0, 1], jnp.int32)
+    loss = softmax_xent(logits, labels)
+    assert np.isfinite(float(loss))
+    np.testing.assert_allclose(loss, 0.0, atol=1e-6)
+
+
+def test_finite_difference():
+    logits, labels = _case(4, 6, 11)
+    g = np.asarray(jax.grad(softmax_xent)(logits, labels))
+    eps = 1e-3
+    base = np.asarray(logits)
+    for (i, j) in [(0, 0), (1, 3), (3, 5)]:
+        up, dn = base.copy(), base.copy()
+        up[i, j] += eps
+        dn[i, j] -= eps
+        fd = (
+            float(softmax_xent(jnp.asarray(up), labels))
+            - float(softmax_xent(jnp.asarray(dn), labels))
+        ) / (2 * eps)
+        np.testing.assert_allclose(g[i, j], fd, rtol=5e-3, atol=1e-5)
+
+
+def test_uniform_logits_loss_is_log_c():
+    for c in (2, 10, 256):
+        logits = jnp.zeros((8, c), jnp.float32)
+        labels = jnp.arange(8, dtype=jnp.int32) % c
+        np.testing.assert_allclose(
+            softmax_xent(logits, labels), np.log(c), rtol=1e-6
+        )

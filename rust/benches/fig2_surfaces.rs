@@ -1,0 +1,35 @@
+//! Bench target for Fig. 1 + Fig. 2: regenerates the analytic surfaces
+//! (error/cost/time vs F(b1) and gamma) and the Fig. 1 error/cost-vs-time
+//! schematic, writes CSVs under out/, and checks the monotonicities the
+//! figure demonstrates.
+//!
+//! Run: `cargo bench --bench fig2_surfaces`
+
+mod bench_util;
+
+use volatile_sgd::exp::fig2;
+
+fn main() {
+    println!("=== Fig. 1 + Fig. 2: analytic surfaces ===");
+    let t0 = std::time::Instant::now();
+    let out = fig2::run(5_000, 8, 4).expect("fig2 harness");
+    out.surfaces
+        .write("out/fig2_surfaces.csv")
+        .expect("write fig2 csv");
+    out.fig1.write("out/fig1_series.csv").expect("write fig1 csv");
+    println!(
+        "fig2: {} grid points, monotonicities {}, fig1 series len {} \
+         [{:.2}s]",
+        out.surfaces.rows.len(),
+        if out.monotone_ok { "OK" } else { "VIOLATED" },
+        out.fig1.rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(out.monotone_ok, "Fig. 2 monotonicities must hold");
+
+    // micro: surface evaluation rate (the fig-sweep inner loop)
+    bench_util::bench("fig2_full_grid_25x25", 1, 5, || {
+        bench_util::black_box(fig2::run(2_000, 8, 4).unwrap());
+    });
+    println!("CSV -> out/fig2_surfaces.csv, out/fig1_series.csv");
+}

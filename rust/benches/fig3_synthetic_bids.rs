@@ -1,0 +1,78 @@
+//! Bench target for Fig. 3: the four bidding strategies under the
+//! paper's two synthetic spot-price distributions, full J = 10^4
+//! iterations on the Theorem-1 backend. Prints the paper-style summary
+//! (cost overhead at target accuracy vs the Dynamic strategy; the paper
+//! reports +134%/+82%/+46% under uniform and +103%/+101%/+43% under
+//! Gaussian) and writes all trajectories to out/.
+//!
+//! Run: `cargo bench --bench fig3_synthetic_bids`
+
+mod bench_util;
+
+use volatile_sgd::exp::fig3::{self, Fig3Params};
+use volatile_sgd::market::PriceModel;
+
+fn main() {
+    println!("=== Fig. 3: bidding strategies, synthetic prices ===");
+    let p = Fig3Params::default();
+    let mut paper = std::collections::HashMap::new();
+    paper.insert("uniform", [134.0, 82.0, 46.0]);
+    paper.insert("gaussian", [103.0, 101.0, 43.0]);
+
+    for (dist, name) in [
+        (PriceModel::uniform_paper(), "uniform"),
+        (PriceModel::gaussian_paper(), "gaussian"),
+    ] {
+        let t0 = std::time::Instant::now();
+        let out = fig3::run(dist, name, &p).expect("fig3 harness");
+        fig3::print_summary(&out);
+        println!(
+            "  paper reference overheads (no_int/one/two): {:?}",
+            paper[name]
+        );
+        for o in &out.outcomes {
+            o.series
+                .table()
+                .write(format!("out/fig3_{name}_{}.csv", o.name))
+                .expect("write series");
+        }
+        println!("  [{:.2}s]", t0.elapsed().as_secs_f64());
+
+        // shape assertions (the reproduction target)
+        let cost = |n: &str| {
+            out.outcomes
+                .iter()
+                .find(|o| o.name == n)
+                .and_then(|o| o.cost_at_target)
+        };
+        let (d, tw, ob, ni) = (
+            cost("dynamic"),
+            cost("two_bids"),
+            cost("one_bid"),
+            cost("no_interruptions"),
+        );
+        if let (Some(d), Some(tw), Some(ob), Some(ni)) = (d, tw, ob, ni) {
+            assert!(
+                d <= tw && tw <= ob && ob <= ni,
+                "{name}: ordering violated: dyn={d:.0} two={tw:.0} \
+                 one={ob:.0} noint={ni:.0}"
+            );
+            println!(
+                "  ordering OK: dynamic {d:.0} < two {tw:.0} < one {ob:.0} \
+                 < no-int {ni:.0}"
+            );
+        } else {
+            println!("  WARNING: some strategy missed the target accuracy");
+        }
+    }
+    println!("CSV -> out/fig3_*.csv");
+
+    // throughput micro: simulated iterations/second of the fig3 stack
+    // (full default-J run: 4 strategies x ~10^4 iterations each)
+    bench_util::bench("fig3_full_run_4strategies_J10k", 1, 5, || {
+        let p = Fig3Params::default();
+        bench_util::black_box(
+            fig3::run(PriceModel::uniform_paper(), "uniform", &p).unwrap(),
+        );
+    });
+}

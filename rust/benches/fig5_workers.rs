@@ -1,0 +1,65 @@
+//! Bench target for Fig. 5: preemptible-instance provisioning.
+//! (a) Theorem-4 n* vs random n at q = 0.5 (accuracy per dollar);
+//! (b) static n = 1, J = 10^4 vs the Theorem-5 dynamic schedule
+//!     (eta = 1.0004, chi = 1).
+//!
+//! Run: `cargo bench --bench fig5_workers`
+
+mod bench_util;
+
+use volatile_sgd::exp::fig5::{self, Fig5Params};
+use volatile_sgd::util::csv::Table;
+
+fn main() {
+    println!("=== Fig. 5: provisioning on preemptible instances ===");
+    let t0 = std::time::Instant::now();
+    let out = fig5::run(&Fig5Params::default()).expect("fig5 harness");
+    fig5::print_summary(&out);
+    println!("  [{:.2}s]", t0.elapsed().as_secs_f64());
+
+    let mut t = Table::new(&[
+        "n_or_eta", "iters", "cost", "error", "accuracy", "acc_per_dollar",
+    ]);
+    for o in out.panel_a.iter().chain(&out.panel_b) {
+        t.push(vec![
+            o.n_or_eta,
+            o.iters as f64,
+            o.cost,
+            o.final_error,
+            o.final_accuracy,
+            o.accuracy_per_dollar,
+        ]);
+    }
+    t.write("out/fig5_outcomes.csv").expect("write fig5 csv");
+
+    // shape assertions
+    let star = out
+        .panel_a
+        .iter()
+        .find(|o| o.label.contains("_star"))
+        .expect("n* run present");
+    let over = out
+        .panel_a
+        .iter()
+        .find(|o| o.label.contains("n16"))
+        .expect("n16 run");
+    assert!(
+        star.accuracy_per_dollar > over.accuracy_per_dollar,
+        "Theorem-4 pick must beat over-provisioning on accuracy/$"
+    );
+    let stat = &out.panel_b[0];
+    let dynm = &out.panel_b[1];
+    assert!(
+        dynm.accuracy_per_dollar > stat.accuracy_per_dollar,
+        "Theorem-5 dynamic must beat static n=1 on accuracy/$"
+    );
+    println!(
+        "shape OK: n*={} acc/$ {:.6} > n16 {:.6}; dynamic {:.6} > static {:.6}",
+        out.n_star,
+        star.accuracy_per_dollar,
+        over.accuracy_per_dollar,
+        dynm.accuracy_per_dollar,
+        stat.accuracy_per_dollar
+    );
+    println!("CSV -> out/fig5_outcomes.csv");
+}

@@ -1,0 +1,132 @@
+//! Hot-path microbenchmarks (§Perf deliverable):
+//!
+//! * gradient aggregation: add + fused apply at the CNN's D = 546,730
+//!   (GB/s — should sit near memory bandwidth);
+//! * scheduler throughput on the synthetic backend (simulated iters/s);
+//! * PJRT step latency: grad/eval/apply artifact execution (per-step ms),
+//!   plus the native fused update for comparison — run only when
+//!   artifacts/ exists.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use volatile_sgd::coordinator::strategy::FixedBids;
+use volatile_sgd::coordinator::GradAccumulator;
+use volatile_sgd::data::CifarLike;
+use volatile_sgd::exp::run_synthetic;
+use volatile_sgd::manifest::Manifest;
+use volatile_sgd::market::{BidVector, PriceModel};
+use volatile_sgd::runtime::{BatchInput, ModelRuntime, PjrtEngine};
+use volatile_sgd::sim::PriceSource;
+use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+use volatile_sgd::theory::runtime_model::RuntimeModel;
+use volatile_sgd::util::rng::Rng;
+
+const D: usize = 546_730; // CNN parameter count
+
+fn bench_aggregation() {
+    println!("--- aggregation (D = {D}) ---");
+    let mut rng = Rng::new(1);
+    let grads: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..D).map(|_| rng.gaussian() as f32).collect())
+        .collect();
+    let mut acc = GradAccumulator::new(D);
+    let mut theta = vec![0.1f32; D];
+
+    let r = bench("aggregate_add_8_workers", 3, 50, || {
+        acc.reset();
+        for g in &grads {
+            acc.add(black_box(g));
+        }
+    });
+    let bytes = 8.0 * D as f64 * 4.0 * 2.0; // read grad + rmw sum
+    println!(
+        "    -> {:.2} GB/s effective",
+        bytes / (r.mean_ns / 1e9) / 1e9
+    );
+
+    for g in &grads {
+        acc.add(g);
+    }
+    let r = bench("apply_fused_update", 3, 50, || {
+        black_box(acc.apply_into(&mut theta, 1e-4));
+    });
+    let bytes = D as f64 * 4.0 * 3.0; // read sum + rmw theta
+    println!(
+        "    -> {:.2} GB/s effective",
+        bytes / (r.mean_ns / 1e9) / 1e9
+    );
+}
+
+fn bench_scheduler() {
+    println!("--- scheduler throughput (synthetic backend) ---");
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    let prices = PriceSource::Iid(PriceModel::uniform_paper());
+    let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
+    let j = 100_000u64;
+    let r = bench("scheduler_100k_iters_two_bids", 1, 5, || {
+        let mut s = FixedBids::new(
+            "bench",
+            BidVector::two_group(8, 4, 0.8, 0.4),
+            j,
+        );
+        black_box(
+            run_synthetic(&mut s, bound, &prices, runtime, f64::INFINITY, 9)
+                .unwrap(),
+        );
+    });
+    println!(
+        "    -> {:.2} M simulated iters/s",
+        j as f64 / (r.mean_ns / 1e9) / 1e6
+    );
+}
+
+fn bench_pjrt() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("--- PJRT step latency: skipped (run `make artifacts`) ---");
+        return;
+    };
+    println!("--- PJRT step latency (cnn artifacts) ---");
+    let engine = PjrtEngine::cpu().expect("pjrt cpu");
+    let mm = manifest.model("cnn").expect("cnn in manifest");
+    let rt = ModelRuntime::load(&engine, mm).expect("compile artifacts");
+    let theta = mm.load_theta0().expect("theta0");
+    let mut rng = Rng::new(2);
+    let data = CifarLike::generate(256, 1.0, &mut rng);
+    let batch = mm.batch();
+    let idx: Vec<usize> = (0..batch).collect();
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    data.gather(&idx, &mut xs, &mut ys);
+    let mut grad = vec![0f32; mm.d];
+
+    bench("pjrt_grad_step_b32", 3, 30, || {
+        black_box(
+            rt.grad_step(&theta, BatchInput::F32(&xs), &ys, &mut grad)
+                .unwrap(),
+        );
+    });
+    bench("pjrt_eval_step_b32", 3, 30, || {
+        black_box(
+            rt.eval_step(&theta, BatchInput::F32(&xs), &ys).unwrap(),
+        );
+    });
+    let mut th = theta.clone();
+    bench("pjrt_apply_artifact(546k)", 3, 30, || {
+        rt.apply_step(&mut th, &grad, 1e-4).unwrap();
+    });
+    // native comparison: the coordinator's fused update
+    let mut acc = GradAccumulator::new(mm.d);
+    acc.add(&grad);
+    bench("native_fused_update(546k)", 3, 30, || {
+        black_box(acc.apply_into(&mut th, 1e-4));
+    });
+}
+
+fn main() {
+    println!("=== hot-path microbenches ===");
+    bench_aggregation();
+    bench_scheduler();
+    bench_pjrt();
+}

@@ -1,0 +1,118 @@
+//! Clap-less argument parsing: `--key value` / `--flag` pairs after a
+//! subcommand. Small on purpose — the config file carries anything
+//! complex; flags override it.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand + flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with("--") {
+                bail!("expected a subcommand before flags, got {cmd}");
+            }
+            args.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("expected --flag, got '{tok}'");
+            };
+            // boolean flag if next token is absent or another flag
+            let val = match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    it.next().unwrap().clone()
+                }
+                _ => "true".to_string(),
+            };
+            if args.flags.insert(key.to_string(), val).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| {
+                    anyhow::anyhow!("--{key} expects a number, got '{v}'")
+                })
+            }
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--{key} expects an integer, got '{v}'")
+            }),
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64(key, default as u64)? as usize)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&sv(&[
+            "simulate", "--n", "8", "--eps", "0.35", "--real",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.usize("n", 0).unwrap(), 8);
+        assert_eq!(a.f64("eps", 0.0).unwrap(), 0.35);
+        assert!(a.bool("real"));
+        assert!(!a.bool("missing"));
+        assert_eq!(a.str("model", "cnn"), "cnn");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(&sv(&["--nocmd"])).is_err());
+        assert!(Args::parse(&sv(&["run", "bare"])).is_err());
+        assert!(Args::parse(&sv(&["run", "--x", "1", "--x", "2"])).is_err());
+        assert!(
+            Args::parse(&sv(&["run", "--n", "abc"]))
+                .unwrap()
+                .u64("n", 0)
+                .is_err()
+        );
+    }
+}

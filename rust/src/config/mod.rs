@@ -1,0 +1,7 @@
+//! Configuration substrate: TOML-subset parser + typed experiment schema.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ExperimentConfig, StrategyKind};
+pub use toml::{Doc, Value};

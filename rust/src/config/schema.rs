@@ -1,0 +1,282 @@
+//! Typed experiment configuration assembled from a [`Doc`].
+//!
+//! One config file fully describes a run: model + artifacts, price model,
+//! runtime model, SGD bound constants, the job constraints (eps, theta)
+//! and the strategy. Example (`examples/configs/fig3_uniform.toml`-style):
+//!
+//! ```toml
+//! seed = 42
+//! model = "cnn"
+//! artifacts = "artifacts"
+//!
+//! [market]
+//! kind = "uniform"      # uniform | gaussian | trace
+//! lo = 0.2
+//! hi = 1.0
+//!
+//! [runtime]
+//! kind = "exp"          # exp | deterministic
+//! lambda = 0.25
+//! delta = 0.5
+//!
+//! [job]
+//! n = 8
+//! eps = 0.35
+//! theta = 200000.0
+//!
+//! [strategy]
+//! kind = "two_bids"     # no_interruption | one_bid | two_bids | dynamic
+//! n1 = 4
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::market::{PriceModel, SpotTrace};
+use crate::theory::bounds::{ErrorBound, SgdHyper};
+use crate::theory::runtime_model::RuntimeModel;
+
+use super::toml::Doc;
+
+/// Which coordination strategy drives the job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrategyKind {
+    /// bid the support max (Sharma et al. baseline)
+    NoInterruption,
+    /// Theorem 2
+    OneBid,
+    /// Theorem 3 with a fixed group split
+    TwoBids { n1: usize },
+    /// Sec. VI dynamic strategy: staged growth + re-optimised bids
+    DynamicBids { n1: usize, stage_iters: u64 },
+    /// Sec. V static provisioning (Theorem 4)
+    StaticWorkers,
+    /// Sec. V dynamic n_j = ceil(n0 eta^{j-1}) (Theorem 5)
+    DynamicWorkers { eta: f64 },
+}
+
+/// Fully-resolved experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    pub model: String,
+    pub artifacts_dir: PathBuf,
+    pub price: PriceModel,
+    /// raw trace when kind = "trace" (price is its empirical CDF)
+    pub trace: Option<SpotTrace>,
+    pub runtime: RuntimeModel,
+    pub bound: ErrorBound,
+    pub n: usize,
+    pub eps: f64,
+    pub theta: f64,
+    pub j_fixed: Option<u64>,
+    pub strategy: StrategyKind,
+    /// preemption probability for Sec. V experiments
+    pub preempt_q: f64,
+    pub out_dir: PathBuf,
+}
+
+impl ExperimentConfig {
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let seed = doc.i64_or("seed", 42) as u64;
+        let model = doc.str_or("model", "cnn").to_string();
+        let artifacts_dir =
+            PathBuf::from(doc.str_or("artifacts", "artifacts"));
+        let out_dir = PathBuf::from(doc.str_or("out", "out"));
+
+        // ------------------------------------------------------ market
+        let mut trace = None;
+        let price = match doc.str_or("market.kind", "uniform") {
+            "uniform" => PriceModel::Uniform {
+                lo: doc.f64_or("market.lo", 0.2),
+                hi: doc.f64_or("market.hi", 1.0),
+            },
+            "gaussian" => PriceModel::TruncGaussian {
+                mean: doc.f64_or("market.mean", 0.6),
+                std: doc.f64_or("market.std", 0.175),
+                lo: doc.f64_or("market.lo", 0.2),
+                hi: doc.f64_or("market.hi", 1.0),
+            },
+            "trace" => {
+                let path = doc.require_str("market.path")?;
+                let tr = SpotTrace::load(path)?;
+                let cdf = tr.empirical_cdf(doc.f64_or(
+                    "market.cdf_resolution",
+                    60.0,
+                ));
+                trace = Some(tr);
+                PriceModel::Empirical(cdf)
+            }
+            other => bail!("unknown market.kind '{other}'"),
+        };
+
+        // ----------------------------------------------------- runtime
+        let runtime = match doc.str_or("runtime.kind", "exp") {
+            "exp" => RuntimeModel::ExpStragglers {
+                lambda: doc.f64_or("runtime.lambda", 0.25),
+                delta: doc.f64_or("runtime.delta", 0.5),
+            },
+            "deterministic" => RuntimeModel::Deterministic {
+                r: doc.f64_or("runtime.r", 10.0),
+            },
+            other => bail!("unknown runtime.kind '{other}'"),
+        };
+
+        // ------------------------------------------------------- bound
+        let defaults = SgdHyper::paper_cnn();
+        let hyper = SgdHyper {
+            alpha: doc.f64_or("sgd.alpha", defaults.alpha),
+            c: doc.f64_or("sgd.c", defaults.c),
+            mu: doc.f64_or("sgd.mu", defaults.mu),
+            l: doc.f64_or("sgd.l", defaults.l),
+            m: doc.f64_or("sgd.m", defaults.m),
+            a0: doc.f64_or("sgd.a0", defaults.a0),
+        };
+        hyper.validate().map_err(|e| anyhow::anyhow!(e))?;
+
+        // --------------------------------------------------------- job
+        let n = doc.i64_or("job.n", 8) as usize;
+        if n == 0 {
+            bail!("job.n must be positive");
+        }
+        let eps = doc.f64_or("job.eps", 0.35);
+        let theta = doc.f64_or("job.theta", 200_000.0);
+        let j_fixed = doc.get("job.j").and_then(|v| v.as_int()).map(|j| j as u64);
+
+        // ---------------------------------------------------- strategy
+        let strategy = match doc.str_or("strategy.kind", "one_bid") {
+            "no_interruption" => StrategyKind::NoInterruption,
+            "one_bid" => StrategyKind::OneBid,
+            "two_bids" => StrategyKind::TwoBids {
+                n1: doc.i64_or("strategy.n1", (n / 2).max(1) as i64)
+                    as usize,
+            },
+            "dynamic" => StrategyKind::DynamicBids {
+                n1: doc.i64_or("strategy.n1", (n / 2).max(1) as i64)
+                    as usize,
+                stage_iters: doc.i64_or("strategy.stage_iters", 4_000)
+                    as u64,
+            },
+            "static_workers" => StrategyKind::StaticWorkers,
+            "dynamic_workers" => StrategyKind::DynamicWorkers {
+                eta: doc.f64_or("strategy.eta", 1.0004),
+            },
+            other => bail!("unknown strategy.kind '{other}'"),
+        };
+        if let StrategyKind::TwoBids { n1 }
+        | StrategyKind::DynamicBids { n1, .. } = &strategy
+        {
+            if *n1 == 0 || *n1 >= n {
+                bail!("strategy.n1 must satisfy 0 < n1 < n");
+            }
+        }
+
+        Ok(ExperimentConfig {
+            seed,
+            model,
+            artifacts_dir,
+            price,
+            trace,
+            runtime,
+            bound: ErrorBound::new(hyper),
+            n,
+            eps,
+            theta,
+            j_fixed,
+            strategy,
+            preempt_q: doc.f64_or("job.preempt_q", 0.5),
+            out_dir,
+        })
+    }
+
+    pub fn from_str(text: &str) -> Result<Self> {
+        Self::from_doc(&Doc::parse(text)?)
+    }
+
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build() {
+        let c = ExperimentConfig::from_str("").unwrap();
+        assert_eq!(c.model, "cnn");
+        assert_eq!(c.n, 8);
+        assert_eq!(c.strategy, StrategyKind::OneBid);
+        assert!(c.trace.is_none());
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let c = ExperimentConfig::from_str(
+            r#"
+seed = 7
+model = "lm_tiny"
+
+[market]
+kind = "gaussian"
+mean = 0.6
+std = 0.175
+
+[runtime]
+kind = "deterministic"
+r = 12.0
+
+[job]
+n = 4
+eps = 0.4
+theta = 100.0
+j = 500
+
+[strategy]
+kind = "two_bids"
+n1 = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.seed, 7);
+        assert!(matches!(c.price, PriceModel::TruncGaussian { .. }));
+        assert!(matches!(
+            c.runtime,
+            RuntimeModel::Deterministic { r } if r == 12.0
+        ));
+        assert_eq!(c.j_fixed, Some(500));
+        assert_eq!(c.strategy, StrategyKind::TwoBids { n1: 2 });
+    }
+
+    #[test]
+    fn rejects_bad_strategy_split() {
+        let bad = r#"
+[job]
+n = 4
+[strategy]
+kind = "two_bids"
+n1 = 4
+"#;
+        assert!(ExperimentConfig::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kinds() {
+        assert!(ExperimentConfig::from_str("[market]\nkind = \"zzz\"\n")
+            .is_err());
+        assert!(ExperimentConfig::from_str("[runtime]\nkind = \"zzz\"\n")
+            .is_err());
+        assert!(ExperimentConfig::from_str("[strategy]\nkind = \"zzz\"\n")
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_unstable_sgd() {
+        assert!(
+            ExperimentConfig::from_str("[sgd]\nalpha = 100.0\n").is_err()
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! Minimal TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with string
+//! ("..."), bool, integer, float, and flat arrays of those; `#` comments.
+//! Keys are flattened to dotted paths: `[market] kind = "uniform"` becomes
+//! `market.kind`. That covers every experiment config in this repo; the
+//! parser rejects anything outside the subset loudly rather than guessing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too.
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Flattened dotted-path -> value document.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let at = || format!("config line {}", lineno + 1);
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("{}: unterminated section header", at());
+                }
+                prefix = line[1..line.len() - 1].trim().to_string();
+                if prefix.is_empty() {
+                    bail!("{}: empty section name", at());
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("{}: expected key = value", at()))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("{}: empty key", at());
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| at())?;
+            let path = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            if entries.insert(path.clone(), val).is_some() {
+                bail!("{}: duplicate key '{path}'", at());
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Required typed accessors.
+    pub fn require_f64(&self, path: &str) -> Result<f64> {
+        self.get(path)
+            .and_then(Value::as_float)
+            .with_context(|| format!("missing required float '{path}'"))
+    }
+
+    pub fn require_str(&self, path: &str) -> Result<&str> {
+        self.get(path)
+            .and_then(Value::as_str)
+            .with_context(|| format!("missing required string '{path}'"))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let end = stripped
+            .find('"')
+            .context("unterminated string literal")?;
+        if !stripped[end + 1..].trim().is_empty() {
+            bail!("trailing junk after string literal");
+        }
+        return Ok(Value::Str(stripped[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                let v = parse_value(part)?;
+                if matches!(v, Value::Array(_)) {
+                    bail!("nested arrays unsupported");
+                }
+                items.push(v);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{s}' (bare strings need quotes)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = Doc::parse(
+            r#"
+# experiment
+seed = 42
+name = "fig3"         # inline comment
+
+[market]
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+
+[strategy.two_bids]
+n1 = 4
+enabled = true
+weights = [1, 2.5, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64_or("seed", 0), 42);
+        assert_eq!(doc.require_str("name").unwrap(), "fig3");
+        assert_eq!(doc.require_str("market.kind").unwrap(), "uniform");
+        assert_eq!(doc.require_f64("market.lo").unwrap(), 0.2);
+        assert_eq!(doc.i64_or("strategy.two_bids.n1", 0), 4);
+        assert!(doc.bool_or("strategy.two_bids.enabled", false));
+        let w = doc.get("strategy.two_bids.weights").unwrap();
+        assert_eq!(w.as_array().unwrap().len(), 3);
+        assert_eq!(w.as_array().unwrap()[1].as_float(), Some(2.5));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("x = 3\n").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 3.0);
+        assert_eq!(doc.i64_or("x", 0), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Doc::parse("[unclosed\n").is_err());
+        assert!(Doc::parse("= 3\n").is_err());
+        assert!(Doc::parse("x = \n").is_err());
+        assert!(Doc::parse("x = bareword\n").is_err());
+        assert!(Doc::parse("x = \"unterminated\n").is_err());
+        assert!(Doc::parse("x = [1, [2]]\n").is_err());
+        assert!(Doc::parse("x = 1\nx = 2\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.require_str("x").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let doc = Doc::parse("x = 1\n").unwrap();
+        assert!(doc.require_f64("y").is_err());
+        assert!(doc.require_str("x").is_err()); // wrong type
+    }
+}

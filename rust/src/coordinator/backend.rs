@@ -1,0 +1,240 @@
+//! What a "gradient step" means to the scheduler.
+//!
+//! [`RealBackend`] runs the AOT artifacts over PJRT: genuine SGD on the
+//! synthetic CIFAR-like dataset, with the parameter server doing the
+//! aggregation. The error signal is the measured training loss.
+//!
+//! [`SyntheticBackend`] advances Theorem 1's recursion
+//! `err <- beta err + (alpha^2 L M / 2) / y` instead of touching floats.
+//! It makes full-J (10^4-iteration) strategy sweeps run in microseconds,
+//! which the figure benches need; the real backend validates the same
+//! orderings at reduced J (see EXPERIMENTS.md). Its "accuracy" is the
+//! monotone proxy `1 - err / A` (documented in DESIGN.md §2).
+
+use anyhow::Result;
+
+use crate::data::{Batcher, CifarLike};
+use crate::runtime::{BatchInput, ModelRuntime, WorkerPool};
+use crate::theory::bounds::ErrorBound;
+use crate::util::rng::Rng;
+
+use super::server::ParameterServer;
+
+/// Per-iteration training signal handed to the scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    /// error measure: training loss (real) or Theorem-1 bound (synthetic)
+    pub error: f64,
+    /// accuracy in [0,1]: batch train accuracy (real) or 1 - err/A proxy
+    pub accuracy: f64,
+}
+
+/// One synchronous-SGD iteration with `y` active workers.
+pub trait TrainingBackend {
+    fn step(&mut self, y: usize, rng: &mut Rng) -> Result<StepStats>;
+    /// Current error estimate without stepping.
+    fn error(&self) -> f64;
+}
+
+// ------------------------------------------------------------- synthetic
+
+/// Theorem-1 recursion backend.
+#[derive(Clone, Debug)]
+pub struct SyntheticBackend {
+    bound: ErrorBound,
+    err: f64,
+}
+
+impl SyntheticBackend {
+    pub fn new(bound: ErrorBound) -> Self {
+        let err = bound.hyper.a0;
+        SyntheticBackend { bound, err }
+    }
+
+    fn acc(&self) -> f64 {
+        (1.0 - self.err / self.bound.hyper.a0).clamp(0.0, 1.0)
+    }
+}
+
+impl TrainingBackend for SyntheticBackend {
+    fn step(&mut self, y: usize, _rng: &mut Rng) -> Result<StepStats> {
+        assert!(y > 0, "synthetic step with zero workers");
+        self.err = self.bound.step(self.err, y);
+        Ok(StepStats { error: self.err, accuracy: self.acc() })
+    }
+
+    fn error(&self) -> f64 {
+        self.err
+    }
+}
+
+// ------------------------------------------------------------------ real
+
+/// PJRT-backed backend: real gradients on the CIFAR-like dataset.
+pub struct RealBackend<'rt> {
+    rt: &'rt ModelRuntime,
+    pub server: ParameterServer,
+    pool: WorkerPool,
+    data: CifarLike,
+    batcher: Batcher,
+    /// scratch batch buffers
+    xb: Vec<f32>,
+    yb: Vec<i32>,
+    /// smoothed loss (EMA) as the error estimate
+    err_ema: f64,
+    acc_ema: f64,
+    ema_beta: f64,
+    batch: usize,
+}
+
+impl<'rt> RealBackend<'rt> {
+    pub fn new(
+        rt: &'rt ModelRuntime,
+        theta0: Vec<f32>,
+        lr: f32,
+        data: CifarLike,
+        max_workers: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let batch = rt.manifest.batch();
+        let batcher = Batcher::new(data.n, batch, rng);
+        let d = rt.d();
+        RealBackend {
+            rt,
+            server: ParameterServer::new(theta0, lr),
+            pool: WorkerPool::new(max_workers, d),
+            data,
+            batcher,
+            xb: Vec::new(),
+            yb: Vec::new(),
+            err_ema: f64::NAN,
+            acc_ema: 0.0,
+            ema_beta: 0.05,
+            batch,
+        }
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        self.server.theta()
+    }
+
+    /// Full-dataset (first `cap` samples) evaluation via the eval artifact.
+    pub fn evaluate(&mut self, cap: usize) -> Result<StepStats> {
+        let nb = (self.data.n.min(cap)) / self.batch;
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let preds = self.rt.manifest.preds_per_batch() as f64;
+        for b in 0..nb.max(1) {
+            let idx: Vec<usize> =
+                (b * self.batch..(b + 1) * self.batch).collect();
+            self.data.gather(&idx, &mut self.xb, &mut self.yb);
+            let s = self.rt.eval_step(
+                self.server.theta(),
+                BatchInput::F32(&self.xb),
+                &self.yb,
+            )?;
+            loss_sum += s.loss as f64;
+            correct += s.correct as f64;
+        }
+        Ok(StepStats {
+            error: loss_sum / nb.max(1) as f64,
+            accuracy: correct / (nb.max(1) as f64 * preds),
+        })
+    }
+}
+
+impl TrainingBackend for RealBackend<'_> {
+    fn step(&mut self, y: usize, rng: &mut Rng) -> Result<StepStats> {
+        assert!(y > 0, "real step with zero workers");
+        assert!(y <= self.pool.max_workers());
+        // deal one disjoint mini-batch per active worker
+        let mut flat_x: Vec<f32> = Vec::new();
+        let mut flat_y: Vec<i32> = Vec::new();
+        for _ in 0..y {
+            let idx = self.batcher.next(rng).to_vec();
+            self.data.gather(&idx, &mut self.xb, &mut self.yb);
+            flat_x.extend_from_slice(&self.xb);
+            flat_y.extend_from_slice(&self.yb);
+        }
+        let xin = self.batch * crate::data::cifar_like::DIM;
+        let batches: Vec<(BatchInput<'_>, &[i32])> = (0..y)
+            .map(|w| {
+                (
+                    BatchInput::F32(&flat_x[w * xin..(w + 1) * xin]),
+                    &flat_y[w * self.batch..(w + 1) * self.batch],
+                )
+            })
+            .collect();
+        self.server.begin_iteration();
+        let (theta, acc) = self.server.split_mut();
+        let stats = self.pool.run_iteration(
+            self.rt,
+            theta,
+            &batches,
+            |_slot, grad, _s| acc.add(grad),
+        )?;
+        self.server.finish_iteration();
+        let preds = self.rt.manifest.preds_per_batch() as f64;
+        let acc = stats.correct as f64 / preds;
+        if self.err_ema.is_nan() {
+            self.err_ema = stats.loss as f64;
+            self.acc_ema = acc;
+        } else {
+            self.err_ema = (1.0 - self.ema_beta) * self.err_ema
+                + self.ema_beta * stats.loss as f64;
+            self.acc_ema =
+                (1.0 - self.ema_beta) * self.acc_ema + self.ema_beta * acc;
+        }
+        Ok(StepStats { error: self.err_ema, accuracy: self.acc_ema })
+    }
+
+    fn error(&self) -> f64 {
+        if self.err_ema.is_nan() {
+            f64::INFINITY
+        } else {
+            self.err_ema
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::bounds::SgdHyper;
+
+    #[test]
+    fn synthetic_matches_phi_seq() {
+        let bound = ErrorBound::new(SgdHyper::paper_cnn());
+        let mut b = SyntheticBackend::new(bound);
+        let mut rng = Rng::new(1);
+        let ys = [4usize, 8, 2, 8, 1];
+        for &y in &ys {
+            b.step(y, &mut rng).unwrap();
+        }
+        let rs: Vec<f64> = ys.iter().map(|&y| 1.0 / y as f64).collect();
+        assert!((b.error() - bound.phi_seq(&rs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthetic_accuracy_monotone() {
+        let bound = ErrorBound::new(SgdHyper::paper_cnn());
+        let mut b = SyntheticBackend::new(bound);
+        let mut rng = Rng::new(2);
+        let mut prev = -1.0;
+        for _ in 0..200 {
+            let s = b.step(8, &mut rng).unwrap();
+            assert!(s.accuracy >= prev - 1e-12);
+            prev = s.accuracy;
+        }
+        assert!(prev > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn synthetic_zero_workers_panics() {
+        let bound = ErrorBound::new(SgdHyper::paper_cnn());
+        let mut b = SyntheticBackend::new(bound);
+        let mut rng = Rng::new(3);
+        let _ = b.step(0, &mut rng);
+    }
+}

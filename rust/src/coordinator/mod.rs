@@ -1,0 +1,26 @@
+//! The Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`aggregate`] — the gradient-sum/update hot path (zero-alloc,
+//!   unrolled; benchmarked in `hotpath`);
+//! * [`server`] — the parameter server owning flat theta (eq. 5 with
+//!   n -> y_j), with checkpoint/restore for preemption recovery;
+//! * [`backend`] — what a "gradient step" means: real PJRT execution of
+//!   the AOT artifacts, or the Theorem-1 synthetic recursion for fast
+//!   full-J figure sweeps;
+//! * [`strategy`] — the bidding / provisioning policies of Secs. IV–VI
+//!   (No-interruptions, Optimal-one-bid, Optimal-two-bids, Dynamic
+//!   rebidding, static-n, dynamic-n_j);
+//! * [`scheduler`] — the virtual-clock training loop tying market,
+//!   preemption, runtime model, backend and strategy together.
+
+pub mod aggregate;
+pub mod backend;
+pub mod scheduler;
+pub mod server;
+pub mod strategy;
+
+pub use aggregate::GradAccumulator;
+pub use backend::{RealBackend, StepStats, SyntheticBackend, TrainingBackend};
+pub use scheduler::{RunResult, Scheduler, SchedulerParams};
+pub use server::ParameterServer;
+pub use strategy::{Strategy, StrategyState};

@@ -1,0 +1,291 @@
+//! The virtual-clock training loop: market/preemption -> active set ->
+//! gradient step -> cost/time accounting (Secs. III–VI end to end).
+//!
+//! Semantics (matching the paper's model exactly):
+//! * a *slot* begins by reading the price in effect at the current clock;
+//! * the strategy resolves the active set; an empty set is **not** an SGD
+//!   iteration — the clock advances by `idle_step` (the paper re-draws
+//!   the price "every 4 seconds after the job is interrupted") and the
+//!   wait is accounted as idle time;
+//! * a non-empty set runs one synchronous iteration: duration sampled
+//!   from the runtime model R(y) = max_k r_k + Delta, each active worker
+//!   billed at the slot's price for the duration (prices assumed constant
+//!   within an iteration, Sec. IV-B);
+//! * the loop ends at the strategy's target iteration count, the deadline
+//!   `theta_cap`, or a hard slot cap (runaway guard).
+
+use anyhow::Result;
+
+use crate::metrics::{Point, Series};
+use crate::sim::{CostMeter, PriceSource};
+use crate::theory::runtime_model::RuntimeModel;
+use crate::util::rng::Rng;
+
+use super::backend::TrainingBackend;
+use super::strategy::{Strategy, StrategyState};
+
+/// Loop parameters.
+pub struct SchedulerParams {
+    pub runtime: RuntimeModel,
+    /// idle re-check interval when no workers are active (paper: 4 s)
+    pub idle_step: f64,
+    /// hard wall-clock cap (usually the deadline theta, or a multiple)
+    pub theta_cap: f64,
+    /// record a series point every `stride` iterations
+    pub stride: u64,
+    /// runaway guard on total slots (idle + busy)
+    pub max_slots: u64,
+}
+
+impl Default for SchedulerParams {
+    fn default() -> Self {
+        SchedulerParams {
+            runtime: RuntimeModel::paper_default(),
+            idle_step: 4.0,
+            theta_cap: f64::INFINITY,
+            stride: 10,
+            max_slots: 50_000_000,
+        }
+    }
+}
+
+/// Outcome of a run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub series: Series,
+    pub iters: u64,
+    pub cost: f64,
+    pub elapsed: f64,
+    pub idle_time: f64,
+    pub final_error: f64,
+    pub final_accuracy: f64,
+    /// true if the run hit theta_cap/max_slots before finishing J iters
+    pub truncated: bool,
+}
+
+/// Drives one training run.
+pub struct Scheduler {
+    pub params: SchedulerParams,
+}
+
+impl Scheduler {
+    pub fn new(params: SchedulerParams) -> Self {
+        Scheduler { params }
+    }
+
+    pub fn run(
+        &self,
+        strategy: &mut dyn Strategy,
+        backend: &mut dyn TrainingBackend,
+        prices: &PriceSource,
+        rng: &mut Rng,
+    ) -> Result<RunResult> {
+        let mut meter = CostMeter::new();
+        let mut series = Series::default();
+        let mut iter = 0u64;
+        let mut slots = 0u64;
+        let mut last = (backend.error(), 0.0f64);
+        let target = strategy.target_iters();
+        let mut truncated = false;
+
+        while iter < target {
+            slots += 1;
+            if slots > self.params.max_slots
+                || meter.elapsed() >= self.params.theta_cap
+            {
+                truncated = true;
+                break;
+            }
+            let price = prices.price_at(meter.elapsed(), rng);
+            let decision = strategy.decide(price, rng);
+            let y = decision.active.len();
+            if y == 0 {
+                meter.idle(self.params.idle_step);
+                continue;
+            }
+            let dur = self.params.runtime.sample(y, rng);
+            let stats = backend.step(y, rng)?;
+            meter.charge(y, decision.price, dur);
+            iter += 1;
+            last = (stats.error, stats.accuracy);
+            strategy.on_iteration(&StrategyState {
+                iter,
+                clock: meter.elapsed(),
+                cost: meter.cost(),
+                error: stats.error,
+            })?;
+            if iter % self.params.stride == 0 || iter == target {
+                series.push(Point {
+                    clock: meter.elapsed(),
+                    iter,
+                    cost: meter.cost(),
+                    error: stats.error,
+                    accuracy: stats.accuracy,
+                    active: y,
+                });
+            }
+        }
+
+        Ok(RunResult {
+            series,
+            iters: iter,
+            cost: meter.cost(),
+            elapsed: meter.elapsed(),
+            idle_time: meter.idle_time(),
+            final_error: last.0,
+            final_accuracy: last.1,
+            truncated,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SyntheticBackend;
+    use crate::coordinator::strategy::FixedBids;
+    use crate::market::{BidVector, PriceModel};
+    use crate::preempt::PreemptionModel;
+    use crate::theory::bounds::{ErrorBound, SgdHyper};
+
+    fn bound() -> ErrorBound {
+        ErrorBound::new(SgdHyper::paper_cnn())
+    }
+
+    fn sched(theta_cap: f64) -> Scheduler {
+        Scheduler::new(SchedulerParams {
+            runtime: RuntimeModel::Deterministic { r: 10.0 },
+            idle_step: 4.0,
+            theta_cap,
+            stride: 50,
+            max_slots: 10_000_000,
+        })
+    }
+
+    #[test]
+    fn high_bid_never_idles() {
+        let mut s = FixedBids::new("noint", BidVector::uniform(4, 1.0), 500);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(1);
+        let res = sched(f64::INFINITY)
+            .run(
+                &mut s,
+                &mut b,
+                &PriceSource::Iid(PriceModel::uniform_paper()),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(res.iters, 500);
+        assert_eq!(res.idle_time, 0.0);
+        assert!(!res.truncated);
+        // deterministic runtime: elapsed = 500 * 10
+        assert!((res.elapsed - 5_000.0).abs() < 1e-9);
+        // cost = sum over iterations of 4 * price * 10, price ~ U[0.2, 1]
+        assert!(res.cost > 4.0 * 0.2 * 5_000.0);
+        assert!(res.cost < 4.0 * 1.0 * 5_000.0);
+    }
+
+    #[test]
+    fn low_bid_accumulates_idle_time() {
+        // bid at the 10th percentile: ~90% of slots idle
+        let mut s = FixedBids::new("low", BidVector::uniform(4, 0.28), 100);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(2);
+        let res = sched(f64::INFINITY)
+            .run(
+                &mut s,
+                &mut b,
+                &PriceSource::Iid(PriceModel::uniform_paper()),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(res.iters, 100);
+        assert!(res.idle_time > 0.0);
+        // expected idle slots ~ 100 * 0.9/0.1 = 900, each 4 s
+        assert!(res.idle_time > 1_000.0, "idle={}", res.idle_time);
+        // paid only while running: mean price <= bid
+        assert!(res.cost <= 4.0 * 0.28 * 100.0 * 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn deadline_cap_truncates() {
+        let mut s = FixedBids::new("noint", BidVector::uniform(2, 1.0), 10_000);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(3);
+        let res = sched(500.0)
+            .run(
+                &mut s,
+                &mut b,
+                &PriceSource::Iid(PriceModel::uniform_paper()),
+                &mut rng,
+            )
+            .unwrap();
+        assert!(res.truncated);
+        assert!(res.iters < 10_000);
+        assert!(res.elapsed <= 500.0 + 10.0 + 1e-9);
+    }
+
+    #[test]
+    fn error_matches_theorem1_with_constant_workers() {
+        let j = 400u64;
+        let mut s = FixedBids::new("noint", BidVector::uniform(8, 1.0), j);
+        let b0 = bound();
+        let mut b = SyntheticBackend::new(b0);
+        let mut rng = Rng::new(4);
+        let res = sched(f64::INFINITY)
+            .run(
+                &mut s,
+                &mut b,
+                &PriceSource::Iid(PriceModel::uniform_paper()),
+                &mut rng,
+            )
+            .unwrap();
+        let want = b0.phi_const(j, 1.0 / 8.0);
+        assert!(
+            (res.final_error - want).abs() < 1e-9,
+            "{} vs {}",
+            res.final_error,
+            want
+        );
+    }
+
+    #[test]
+    fn preemptible_fixed_price_cost_accounting() {
+        use crate::coordinator::strategy::StaticWorkers;
+        let mut s = StaticWorkers {
+            n: 4,
+            j: 200,
+            model: PreemptionModel::None,
+            unit_price: 0.1,
+        };
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(5);
+        let res = sched(f64::INFINITY)
+            .run(&mut s, &mut b, &PriceSource::Fixed(999.0), &mut rng)
+            .unwrap();
+        // spot price source is ignored by preemptible strategies:
+        // cost = 4 workers * 0.1 * 10 s * 200 iters
+        assert!((res.cost - 4.0 * 0.1 * 10.0 * 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_records_stride_points() {
+        let mut s = FixedBids::new("noint", BidVector::uniform(2, 1.0), 200);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(6);
+        let res = sched(f64::INFINITY)
+            .run(
+                &mut s,
+                &mut b,
+                &PriceSource::Iid(PriceModel::uniform_paper()),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(res.series.len(), 4); // every 50 of 200
+        assert_eq!(res.series.last().unwrap().iter, 200);
+        // cost series is nondecreasing
+        let costs: Vec<f64> =
+            res.series.points.iter().map(|p| p.cost).collect();
+        assert!(costs.windows(2).all(|w| w[1] >= w[0]));
+    }
+}

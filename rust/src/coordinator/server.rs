@@ -1,0 +1,231 @@
+//! The parameter server: owns flat theta, applies eq. (5) with the
+//! iteration's actual active count y_j, survives preemptions via
+//! checkpoints.
+//!
+//! Deployed per the paper: the PS lives on a reliable (on-demand)
+//! instance, so its state never disappears — but *workers* do, and the
+//! checkpoint/restore path is what lets a fresh worker VM rejoin without
+//! a handshake beyond fetching theta (persistent spot requests resume
+//! exactly this way).
+
+use crate::coordinator::aggregate::GradAccumulator;
+
+/// Synchronous-SGD parameter server state.
+///
+/// Optionally applies heavy-ball momentum (`v <- m v + mean_grad;
+/// theta <- theta - lr v`). The paper's analysis is plain SGD (momentum
+/// 0, the default); the transformer e2e example needs momentum to make
+/// progress at CPU-feasible step counts.
+#[derive(Clone, Debug)]
+pub struct ParameterServer {
+    theta: Vec<f32>,
+    acc: GradAccumulator,
+    lr: f32,
+    momentum: f32,
+    velocity: Vec<f32>,
+    iter: u64,
+}
+
+/// A point-in-time checkpoint (theta + iteration counter).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub theta: Vec<f32>,
+    pub iter: u64,
+}
+
+impl ParameterServer {
+    pub fn new(theta0: Vec<f32>, lr: f32) -> Self {
+        let d = theta0.len();
+        ParameterServer {
+            theta: theta0,
+            acc: GradAccumulator::new(d),
+            lr,
+            momentum: 0.0,
+            velocity: Vec::new(),
+            iter: 0,
+        }
+    }
+
+    /// Enable heavy-ball momentum (0.0 disables; allocates the velocity
+    /// buffer lazily).
+    pub fn set_momentum(&mut self, momentum: f32) {
+        assert!((0.0..1.0).contains(&momentum), "momentum in [0,1)");
+        self.momentum = momentum;
+        if momentum > 0.0 && self.velocity.is_empty() {
+            self.velocity = vec![0.0; self.theta.len()];
+        }
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    pub fn d(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn iter(&self) -> u64 {
+        self.iter
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    /// Start a new iteration: clear the accumulator.
+    pub fn begin_iteration(&mut self) {
+        self.acc.reset();
+    }
+
+    /// Receive one worker's gradient.
+    pub fn push_gradient(&mut self, grad: &[f32]) {
+        self.acc.add(grad);
+    }
+
+    /// Borrow-split accessor for the gradient fan-in: workers read theta
+    /// while the accumulator collects their gradients (disjoint fields, so
+    /// no aliasing gymnastics in the backend).
+    pub fn split_mut(&mut self) -> (&[f32], &mut GradAccumulator) {
+        (&self.theta, &mut self.acc)
+    }
+
+    /// Aggregate + update. Returns the number of gradients averaged
+    /// (0 = no update happened; the scheduler never calls this with an
+    /// empty active set, but defensive anyway).
+    pub fn finish_iteration(&mut self) -> u32 {
+        let k = self.acc.count();
+        if k == 0 {
+            return 0;
+        }
+        if self.momentum > 0.0 {
+            // v <- m v + mean_grad; theta <- theta - lr v
+            let mean = self.acc.mean();
+            for ((v, g), t) in self
+                .velocity
+                .iter_mut()
+                .zip(&mean)
+                .zip(&mut self.theta)
+            {
+                *v = self.momentum * *v + *g;
+                *t -= self.lr * *v;
+            }
+            self.iter += 1;
+        } else if self.acc.apply_into(&mut self.theta, self.lr) {
+            self.iter += 1;
+        }
+        k
+    }
+
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint { theta: self.theta.clone(), iter: self.iter }
+    }
+
+    pub fn restore(&mut self, ck: &Checkpoint) {
+        assert_eq!(ck.theta.len(), self.theta.len(), "checkpoint width");
+        self.theta.clone_from(&ck.theta);
+        self.iter = ck.iter;
+        self.acc.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad_const(d: usize, v: f32) -> Vec<f32> {
+        vec![v; d]
+    }
+
+    #[test]
+    fn update_averages_active_workers_only() {
+        // eq. (5) with y_j = 2 out of n = 4 provisioned
+        let mut ps = ParameterServer::new(vec![1.0; 4], 0.5);
+        ps.begin_iteration();
+        ps.push_gradient(&grad_const(4, 2.0));
+        ps.push_gradient(&grad_const(4, 4.0));
+        assert_eq!(ps.finish_iteration(), 2);
+        // theta = 1 - 0.5 * mean(2,4) = 1 - 1.5
+        assert_eq!(ps.theta(), &[-0.5; 4]);
+        assert_eq!(ps.iter(), 1);
+    }
+
+    #[test]
+    fn empty_iteration_is_not_counted() {
+        let mut ps = ParameterServer::new(vec![1.0; 2], 0.1);
+        ps.begin_iteration();
+        assert_eq!(ps.finish_iteration(), 0);
+        assert_eq!(ps.iter(), 0);
+        assert_eq!(ps.theta(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let mut ps = ParameterServer::new(vec![0.0; 3], 1.0);
+        ps.begin_iteration();
+        ps.push_gradient(&[1.0, 2.0, 3.0]);
+        ps.finish_iteration();
+        let ck = ps.checkpoint();
+        // diverge
+        ps.begin_iteration();
+        ps.push_gradient(&[9.0, 9.0, 9.0]);
+        ps.finish_iteration();
+        assert_ne!(ps.theta(), ck.theta.as_slice());
+        ps.restore(&ck);
+        assert_eq!(ps.theta(), ck.theta.as_slice());
+        assert_eq!(ps.iter(), 1);
+    }
+
+    #[test]
+    fn momentum_matches_manual_heavy_ball() {
+        let mut ps = ParameterServer::new(vec![1.0f32; 2], 0.1);
+        ps.set_momentum(0.9);
+        let (mut v, mut th) = (vec![0.0f32; 2], vec![1.0f32; 2]);
+        for step in 0..5 {
+            let g = vec![0.5 + step as f32, -1.0];
+            ps.begin_iteration();
+            ps.push_gradient(&g);
+            ps.finish_iteration();
+            for i in 0..2 {
+                v[i] = 0.9 * v[i] + g[i];
+                th[i] -= 0.1 * v[i];
+            }
+        }
+        for i in 0..2 {
+            assert!((ps.theta()[i] - th[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut a = ParameterServer::new(vec![1.0f32; 3], 0.2);
+        let mut b = ParameterServer::new(vec![1.0f32; 3], 0.2);
+        b.set_momentum(0.0);
+        for ps in [&mut a, &mut b] {
+            ps.begin_iteration();
+            ps.push_gradient(&[1.0, 2.0, 3.0]);
+            ps.finish_iteration();
+        }
+        assert_eq!(a.theta(), b.theta());
+    }
+
+    #[test]
+    fn variable_worker_counts_across_iterations() {
+        // y_1 = 1, y_2 = 3: each iteration divides by its own count
+        let mut ps = ParameterServer::new(vec![0.0; 1], 1.0);
+        ps.begin_iteration();
+        ps.push_gradient(&[3.0]);
+        ps.finish_iteration();
+        assert_eq!(ps.theta()[0], -3.0);
+        ps.begin_iteration();
+        ps.push_gradient(&[1.0]);
+        ps.push_gradient(&[2.0]);
+        ps.push_gradient(&[3.0]);
+        ps.finish_iteration();
+        assert_eq!(ps.theta()[0], -5.0);
+        assert_eq!(ps.iter(), 2);
+    }
+}

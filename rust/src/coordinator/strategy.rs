@@ -1,0 +1,412 @@
+//! Coordination strategies: who is active each iteration, and how plans
+//! adapt mid-run (Secs. IV–VI).
+//!
+//! * Spot strategies resolve the active set from the current price via a
+//!   [`BidVector`]; the Dynamic strategy additionally re-optimises its
+//!   bids at a stage boundary after growing the worker group, exactly as
+//!   Sec. VI describes ("add four more workers and re-compute the optimal
+//!   bids by subtracting the consumed time from the original deadline and
+//!   taking J to be the number of remaining iterations").
+//! * Preemptible strategies ignore prices and provision `n_j` workers,
+//!   with the platform preempting each independently (Sec. V); the
+//!   dynamic-n_j variant grows the fleet as `ceil(n0 eta^{j-1})`
+//!   (Theorem 5).
+
+use anyhow::Result;
+
+use crate::market::process::PriceDist;
+use crate::market::BidVector;
+use crate::preempt::PreemptionModel;
+use crate::theory::bids::BidProblem;
+use crate::util::rng::Rng;
+
+/// Observable run state handed to strategies for re-planning.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StrategyState {
+    pub iter: u64,
+    pub clock: f64,
+    pub cost: f64,
+    pub error: f64,
+}
+
+/// How many workers are active this iteration slot, and at what price.
+#[derive(Clone, Debug)]
+pub struct ActiveDecision {
+    /// indices of active workers (empty = idle slot, not an iteration)
+    pub active: Vec<usize>,
+    /// per-worker per-time cost rate actually charged
+    pub price: f64,
+}
+
+/// A coordination policy.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Total SGD iterations this strategy intends to run.
+    fn target_iters(&self) -> u64;
+
+    /// Resolve the active set for the next iteration slot. `price` is the
+    /// prevailing spot price (preemptible strategies may ignore it and
+    /// charge their own fixed rate).
+    fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision;
+
+    /// Called after every completed iteration; strategies may re-plan.
+    fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
+        let _ = state;
+        Ok(())
+    }
+
+    /// Upper bound on concurrently active workers (pool sizing).
+    fn max_workers(&self) -> usize;
+}
+
+// ------------------------------------------------------- spot strategies
+
+/// Fixed bid vector for the whole job: covers No-interruptions (bid the
+/// support max), Optimal-one-bid (Theorem 2) and Optimal-two-bids
+/// (Theorem 3), depending on the vector it is built with.
+pub struct FixedBids {
+    pub label: &'static str,
+    pub bids: BidVector,
+    pub j: u64,
+}
+
+impl FixedBids {
+    pub fn new(label: &'static str, bids: BidVector, j: u64) -> Self {
+        FixedBids { label, bids, j }
+    }
+}
+
+impl Strategy for FixedBids {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn decide(&mut self, price: f64, _rng: &mut Rng) -> ActiveDecision {
+        ActiveDecision { active: self.bids.active_set(price), price }
+    }
+
+    fn max_workers(&self) -> usize {
+        self.bids.n()
+    }
+}
+
+/// Sec. VI Dynamic strategy: stage 1 runs a small two-bid group; at the
+/// stage boundary the fleet doubles and bids are re-optimised for the
+/// remaining error/deadline budget.
+pub struct DynamicBids {
+    problem: BidProblem,
+    stages: Vec<StageSpec>,
+    current: usize,
+    bids: BidVector,
+    j_total: u64,
+    stage_started_at: f64,
+}
+
+/// One stage of the dynamic plan.
+#[derive(Clone, Copy, Debug)]
+pub struct StageSpec {
+    pub n: usize,
+    pub n1: usize,
+    /// iterations to run before advancing to the next stage (last stage
+    /// runs to the job's total J)
+    pub until_iter: u64,
+}
+
+impl DynamicBids {
+    /// `problem` carries the job-level (eps, theta); stage plans target
+    /// what is *achievable* at each stage's fleet size (a 4-worker first
+    /// stage cannot reach a sub-noise-floor final target — it just has to
+    /// make good progress per dollar until the fleet grows).
+    pub fn new(
+        problem: BidProblem,
+        stages: Vec<StageSpec>,
+        j_total: u64,
+    ) -> Result<Self> {
+        assert!(!stages.is_empty());
+        let mut me = DynamicBids {
+            bids: BidVector::uniform(stages[0].n, 1.0), // replaced below
+            problem,
+            stages,
+            current: 0,
+            j_total,
+            stage_started_at: 0.0,
+        };
+        let a0 = me.problem.bound.hyper.a0;
+        me.replan(&StrategyState { iter: 0, clock: 0.0, cost: 0.0, error: a0 })?;
+        Ok(me)
+    }
+
+    /// Re-plan from the observed run state: the generalised Theorem 3
+    /// targets the job eps from the *current* error, with Q clamped into
+    /// the stage's admissible band (Q <= 1/n1 means the target is slack —
+    /// bid low; Q <= 1/n means it is unreachable in the remaining budget —
+    /// run everything and bid deadline-tight, best effort).
+    fn replan(&mut self, state: &StrategyState) -> Result<()> {
+        let stage = self.stages[self.current];
+        let remaining_j = self.j_total.saturating_sub(state.iter).max(1);
+        let remaining_theta = (self.problem.theta - state.clock).max(1.0);
+        let mut p = self.problem.clone();
+        p.n = stage.n;
+        p.theta = remaining_theta;
+        let h = &p.bound.hyper;
+        let bj = h.beta().powf(remaining_j as f64);
+        let q_raw = (p.eps - bj * state.error)
+            / (h.k_noise() * (1.0 - bj));
+        let rn = 1.0 / stage.n as f64;
+        let rn1 = 1.0 / stage.n1 as f64;
+        // clamp into the stage-admissible band (the paper's condition)
+        let q = q_raw.clamp(rn * 1.0001 + 1e-12, rn1);
+        self.stage_started_at = state.clock;
+        match p.two_bids_for_q(q, remaining_j, stage.n1) {
+            Ok(plan) => {
+                self.bids =
+                    BidVector::two_group(stage.n, stage.n1, plan.b1, plan.b2);
+                Ok(())
+            }
+            Err(_) => {
+                // deadline-infeasible at this stage size: run the whole
+                // fleet at a deadline-tight uniform bid (best effort)
+                let u = (remaining_j as f64 * p.runtime.expected(stage.n)
+                    / remaining_theta)
+                    .clamp(1e-6, 1.0);
+                let b = p.price.inv_cdf(u);
+                self.bids = BidVector::uniform(stage.n, b);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Strategy for DynamicBids {
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j_total
+    }
+
+    fn decide(&mut self, price: f64, _rng: &mut Rng) -> ActiveDecision {
+        ActiveDecision { active: self.bids.active_set(price), price }
+    }
+
+    fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
+        if self.current + 1 < self.stages.len()
+            && state.iter >= self.stages[self.current].until_iter
+        {
+            self.current += 1;
+            self.replan(state)?;
+        }
+        Ok(())
+    }
+
+    fn max_workers(&self) -> usize {
+        self.stages.iter().map(|s| s.n).max().unwrap()
+    }
+}
+
+// ------------------------------------------------ preemptible strategies
+
+/// Sec. V static provisioning: n workers at a fixed unit price, preempted
+/// by the platform per the preemption model.
+pub struct StaticWorkers {
+    pub n: usize,
+    pub j: u64,
+    pub model: PreemptionModel,
+    /// fixed $/worker/time (e.g. the GCP preemptible price)
+    pub unit_price: f64,
+}
+
+impl Strategy for StaticWorkers {
+    fn name(&self) -> &'static str {
+        "static_n"
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn decide(&mut self, _price: f64, rng: &mut Rng) -> ActiveDecision {
+        ActiveDecision {
+            active: self.model.draw_active(self.n, rng),
+            price: self.unit_price,
+        }
+    }
+
+    fn max_workers(&self) -> usize {
+        self.n
+    }
+}
+
+/// Theorem 5 dynamic provisioning: n_j = ceil(n0 eta^{j-1}).
+pub struct DynamicWorkers {
+    pub n0: usize,
+    pub eta: f64,
+    pub j: u64,
+    pub model: PreemptionModel,
+    pub unit_price: f64,
+    pub cap: usize,
+    iter: u64,
+}
+
+impl DynamicWorkers {
+    pub fn new(
+        n0: usize,
+        eta: f64,
+        j: u64,
+        model: PreemptionModel,
+        unit_price: f64,
+        cap: usize,
+    ) -> Self {
+        assert!(eta > 1.0, "Theorem 5 requires eta > 1");
+        DynamicWorkers { n0, eta, j, model, unit_price, cap, iter: 0 }
+    }
+
+    /// The provisioned fleet size at (0-based) iteration `j`.
+    pub fn n_at(&self, j: u64) -> usize {
+        ((self.n0 as f64 * self.eta.powf(j as f64)).ceil() as usize)
+            .clamp(1, self.cap)
+    }
+}
+
+impl Strategy for DynamicWorkers {
+    fn name(&self) -> &'static str {
+        "dynamic_n"
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn decide(&mut self, _price: f64, rng: &mut Rng) -> ActiveDecision {
+        let n = self.n_at(self.iter);
+        ActiveDecision {
+            active: self.model.draw_active(n, rng),
+            price: self.unit_price,
+        }
+    }
+
+    fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
+        self.iter = state.iter;
+        Ok(())
+    }
+
+    fn max_workers(&self) -> usize {
+        self.n_at(self.j.saturating_sub(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::PriceModel;
+    use crate::theory::bounds::{ErrorBound, SgdHyper};
+    use crate::theory::runtime_model::RuntimeModel;
+
+    fn problem() -> BidProblem {
+        BidProblem {
+            bound: ErrorBound::new(SgdHyper::paper_cnn()),
+            price: PriceModel::uniform_paper(),
+            runtime: RuntimeModel::Deterministic { r: 10.0 },
+            n: 8,
+            eps: 0.35,
+            theta: 150_000.0,
+        }
+    }
+
+    #[test]
+    fn fixed_bids_resolve_by_price() {
+        let mut s = FixedBids::new(
+            "two",
+            BidVector::two_group(8, 4, 0.8, 0.4),
+            100,
+        );
+        let mut rng = Rng::new(1);
+        assert_eq!(s.decide(0.3, &mut rng).active.len(), 8);
+        assert_eq!(s.decide(0.6, &mut rng).active.len(), 4);
+        assert_eq!(s.decide(0.9, &mut rng).active.len(), 0);
+        assert_eq!(s.max_workers(), 8);
+    }
+
+    #[test]
+    fn dynamic_bids_replan_grows_fleet() {
+        let p = problem();
+        let stages = vec![
+            StageSpec { n: 4, n1: 2, until_iter: 100 },
+            StageSpec { n: 8, n1: 4, until_iter: u64::MAX },
+        ];
+        let mut s = DynamicBids::new(p, stages, 2_000).unwrap();
+        assert_eq!(s.max_workers(), 8);
+        let mut rng = Rng::new(2);
+        // stage 1: at most 4 workers
+        let d = s.decide(0.2, &mut rng);
+        assert!(d.active.len() <= 4);
+        // cross the boundary
+        s.on_iteration(&StrategyState {
+            iter: 100,
+            clock: 5_000.0,
+            cost: 10.0,
+            error: 1.0,
+        })
+        .unwrap();
+        let d2 = s.decide(0.2, &mut rng);
+        assert!(d2.active.len() > 4, "fleet should have grown");
+    }
+
+    #[test]
+    fn dynamic_workers_schedule_monotone() {
+        let s = DynamicWorkers::new(
+            1,
+            1.001,
+            10_000,
+            PreemptionModel::Bernoulli { q: 0.5 },
+            0.1,
+            1_000_000,
+        );
+        let mut prev = 0;
+        for j in (0..10_000).step_by(500) {
+            let n = s.n_at(j);
+            assert!(n >= prev);
+            prev = n;
+        }
+        assert!(prev > 1);
+    }
+
+    #[test]
+    fn dynamic_workers_cap_respected() {
+        let s = DynamicWorkers::new(
+            1,
+            1.01,
+            100_000,
+            PreemptionModel::None,
+            0.1,
+            64,
+        );
+        assert_eq!(s.n_at(99_999), 64);
+        assert_eq!(s.max_workers(), 64);
+    }
+
+    #[test]
+    fn static_workers_bernoulli_draws() {
+        let mut s = StaticWorkers {
+            n: 10,
+            j: 100,
+            model: PreemptionModel::Bernoulli { q: 0.5 },
+            unit_price: 0.2,
+        };
+        let mut rng = Rng::new(3);
+        let mut total = 0usize;
+        for _ in 0..1000 {
+            let d = s.decide(123.0, &mut rng); // price ignored
+            assert_eq!(d.price, 0.2);
+            total += d.active.len();
+        }
+        let mean = total as f64 / 1000.0;
+        assert!((mean - 5.0).abs() < 0.5, "mean active {mean}");
+    }
+}

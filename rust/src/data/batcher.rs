@@ -1,0 +1,89 @@
+//! Per-worker mini-batch assignment.
+//!
+//! Synchronous SGD gives each *active* worker an independent mini-batch
+//! each iteration (paper Sec. III-A). The batcher deals disjoint random
+//! index blocks per epoch (sampling without replacement within an epoch,
+//! reshuffling between epochs), so gradients across workers in one
+//! iteration are computed on disjoint data, like the Ray implementation
+//! the paper used.
+
+use crate::util::rng::Rng;
+
+/// Epoch-shuffled index dealer.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, rng: &mut Rng) -> Self {
+        assert!(n >= batch && batch > 0);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Batcher { n, batch, order, cursor: 0, epoch: 0 }
+    }
+
+    /// Deal the next mini-batch of indices (reshuffles at epoch ends).
+    pub fn next(&mut self, rng: &mut Rng) -> &[usize] {
+        if self.cursor + self.batch > self.n {
+            rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let s = self.cursor;
+        self.cursor += self.batch;
+        &self.order[s..s + self.batch]
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deals_disjoint_batches_within_epoch() {
+        let mut rng = Rng::new(1);
+        let mut b = Batcher::new(100, 10, &mut rng);
+        let mut seen = vec![false; 100];
+        for _ in 0..10 {
+            for &i in b.next(&mut rng).to_vec().iter() {
+                assert!(!seen[i], "index {i} dealt twice in epoch");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(b.epoch(), 0);
+        b.next(&mut rng);
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn uneven_tail_is_dropped_on_reshuffle() {
+        let mut rng = Rng::new(2);
+        let mut b = Batcher::new(25, 10, &mut rng);
+        assert_eq!(b.next(&mut rng).len(), 10);
+        assert_eq!(b.next(&mut rng).len(), 10);
+        // only 5 left -> reshuffle, new epoch
+        assert_eq!(b.next(&mut rng).len(), 10);
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_larger_than_dataset_rejected() {
+        let mut rng = Rng::new(3);
+        Batcher::new(5, 10, &mut rng);
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic datasets (offline stand-ins for CIFAR-10 and a text corpus).
+
+pub mod batcher;
+pub mod cifar_like;
+pub mod corpus;
+
+pub use batcher::Batcher;
+pub use cifar_like::CifarLike;
+pub use corpus::MarkovCorpus;

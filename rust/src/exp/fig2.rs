@@ -1,0 +1,114 @@
+//! Fig. 2 (and Fig. 1): the analytic surfaces behind Theorem 3's proof.
+//!
+//! Fig. 2 plots expected error / cost / completion time against F(b1) and
+//! gamma = F(b2)/F(b1), showing the monotonicities that make the
+//! two-variable optimisation separable. We regenerate all four panels on
+//! a grid (CSV: `fig2_surfaces.csv`) and verify the monotonicities
+//! programmatically. Fig. 1's schematic (error/cost vs time for different
+//! worker counts) is regenerated as two simulated runs.
+
+use anyhow::Result;
+
+use crate::coordinator::strategy::FixedBids;
+use crate::market::{BidVector, PriceModel};
+use crate::market::process::PriceDist;
+use crate::sim::PriceSource;
+use crate::theory::bids::BidProblem;
+use crate::theory::bounds::{ErrorBound, SgdHyper};
+use crate::theory::runtime_model::RuntimeModel;
+use crate::util::csv::Table;
+
+use super::run_synthetic;
+
+pub struct Fig2Output {
+    /// columns: f_b1, gamma, err_bound, exp_cost, exp_time
+    pub surfaces: Table,
+    /// Fig. 1 series: columns time, err_n2, cost_n2, err_n8, cost_n8
+    pub fig1: Table,
+    pub monotone_ok: bool,
+}
+
+pub fn run(j: u64, n: usize, n1: usize) -> Result<Fig2Output> {
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    let pb = BidProblem {
+        bound,
+        price: PriceModel::uniform_paper(),
+        runtime: RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 },
+        n,
+        eps: 0.35,
+        theta: f64::INFINITY,
+    };
+    let mut surfaces =
+        Table::new(&["f_b1", "gamma", "err_bound", "exp_cost", "exp_time"]);
+    let grid = 25usize;
+    let mut monotone_ok = true;
+    let mut prev_cost_along_gamma = vec![0.0; grid + 1];
+    for i in 1..=grid {
+        let f1 = i as f64 / grid as f64;
+        let b1 = pb.price.inv_cdf(f1);
+        let mut prev_err = f64::INFINITY;
+        for g in 0..=grid {
+            let gamma = g as f64 / grid as f64;
+            let b2 = pb.price.inv_cdf(gamma * f1);
+            let r = pb.expected_recip_two(n1, b1, b2);
+            let err = bound.phi_const(j, r);
+            let cost = pb.expected_cost_two(j, n1, b1, b2);
+            let time = pb.expected_time_two(j, n1, b1, b2);
+            surfaces.push(vec![f1, gamma, err, cost, time]);
+            // Fig. 2a: error decreasing in gamma
+            if err > prev_err + 1e-9 {
+                monotone_ok = false;
+            }
+            prev_err = err;
+            // Fig. 2b/2d: cost increasing in gamma and in F(b1)
+            if i > 1 && cost + 1e-9 < prev_cost_along_gamma[g] {
+                monotone_ok = false;
+            }
+            prev_cost_along_gamma[g] = cost;
+        }
+    }
+
+    // ---- Fig. 1: error & cost vs time for n = 2 vs n = 8 (no preemption)
+    let mut fig1 =
+        Table::new(&["time", "err_n2", "cost_n2", "err_n8", "cost_n8"]);
+    let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
+    let prices = PriceSource::Iid(PriceModel::uniform_paper());
+    let run_n = |workers: usize, seed: u64| -> Result<_> {
+        let mut s = FixedBids::new(
+            "fig1",
+            BidVector::uniform(workers, 1.0),
+            j.min(3_000),
+        );
+        run_synthetic(&mut s, bound, &prices, runtime, f64::INFINITY, seed)
+    };
+    let r2 = run_n(2, 11)?;
+    let r8 = run_n(8, 12)?;
+    let len = r2.series.len().min(r8.series.len());
+    for k in 0..len {
+        let p2 = &r2.series.points[k];
+        let p8 = &r8.series.points[k];
+        fig1.push(vec![p2.clock, p2.error, p2.cost, p8.error, p8.cost]);
+    }
+
+    Ok(Fig2Output { surfaces, fig1, monotone_ok })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn surfaces_are_monotone_and_complete() {
+        let out = super::run(5_000, 8, 4).unwrap();
+        assert!(out.monotone_ok, "Fig. 2 monotonicities violated");
+        assert_eq!(out.surfaces.rows.len(), 25 * 26);
+        assert!(!out.fig1.rows.is_empty());
+    }
+
+    #[test]
+    fn fig1_more_workers_less_error_more_cost() {
+        let out = super::run(5_000, 8, 4).unwrap();
+        let last = out.fig1.rows.last().unwrap();
+        let (err2, cost2, err8, cost8) = (last[1], last[2], last[3], last[4]);
+        assert!(err8 < err2, "more workers should give lower error");
+        assert!(cost8 > cost2, "more workers should cost more");
+    }
+}

@@ -1,0 +1,236 @@
+//! Fig. 4: bidding strategies replayed against a c5.xlarge-style spot
+//! price *trace* (auto-correlated prices — the robustness check).
+//!
+//! The paper downloads `DescribeSpotPriceHistory` for us-west-2a; offline
+//! we use the regime-switching generator (DESIGN.md §2 records the
+//! substitution). Methodology matches the paper: estimate F from the
+//! historical trace (time-weighted empirical CDF), compute the optimal
+//! bids from the estimate, then replay the *actual* path. Headlines:
+//! cost reduction of one-bid / two-bids vs No-interruptions (paper:
+//! 26.27% / 65.46%) at >= 96% of its accuracy.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::strategy::FixedBids;
+use crate::market::{BidVector, PriceModel, SpotTrace, TraceGenConfig};
+use crate::sim::PriceSource;
+use crate::theory::bids::BidProblem;
+use crate::theory::bounds::{ErrorBound, SgdHyper};
+use crate::theory::runtime_model::RuntimeModel;
+use crate::util::rng::Rng;
+
+use super::fig3::StrategyOutcome;
+use super::{accuracy_for_error, run_synthetic};
+
+#[derive(Clone, Debug)]
+pub struct Fig4Output {
+    pub outcomes: Vec<StrategyOutcome>,
+    /// percent cost saved vs no-interruptions: [one_bid, two_bids]
+    pub savings_vs_noint: [Option<f64>; 2],
+    /// final accuracy as a fraction of no-interruptions' final accuracy
+    pub accuracy_ratio: [f64; 2],
+    pub trace_mean_price: f64,
+    pub trace_horizon: f64,
+}
+
+pub struct Fig4Params {
+    pub j: u64,
+    pub n: usize,
+    pub n1: usize,
+    pub eps: f64,
+    pub deadline_slack: f64,
+    pub seed: u64,
+}
+
+impl Default for Fig4Params {
+    fn default() -> Self {
+        Fig4Params {
+            j: 10_000,
+            n: 8,
+            n1: 4,
+            // eps sits mid-band between the n=8 and n1=4 noise floors
+            // (0.25, 0.5): Q(eps) ~ 0.21 makes gamma* ~ 1/3, so the
+            // second bid group genuinely idles through expensive periods
+            // (the regime where the paper's two-bid savings come from)
+            eps: 0.45,
+            deadline_slack: 2.0,
+            seed: 2020,
+        }
+    }
+}
+
+/// Generate the default c5.xlarge-style trace used by the bench (hour
+/// units: prices $/h, times h).
+pub fn default_trace(seed: u64) -> SpotTrace {
+    let cfg = TraceGenConfig {
+        horizon: 24.0 * 28.0,      // four weeks
+        revision_interval: 0.5,    // <= hourly revisions
+        floor: 0.068,
+        cap: 0.17,
+        base: 0.085,
+        regime_switch_prob: 0.02,
+        contended_mult: 1.45,
+        spike_prob: 0.004,
+        reversion: 0.15,
+        noise: 0.035,
+    };
+    let mut rng = Rng::new(seed);
+    SpotTrace::generate(&cfg, &mut rng)
+}
+
+pub fn run(trace: &SpotTrace, p: &Fig4Params) -> Result<Fig4Output> {
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    // hour units: mean gradient time 6 s = 1/600 h, server overhead ~1 s
+    let runtime =
+        RuntimeModel::ExpStragglers { lambda: 600.0, delta: 0.0003 };
+    let theta = p.deadline_slack * p.j as f64 * runtime.expected(p.n);
+    // F estimated from history (time-weighted), as the paper does
+    let est = trace.empirical_cdf(0.02);
+    let price_model = PriceModel::Empirical(est);
+    let pb = BidProblem {
+        bound,
+        price: price_model,
+        runtime,
+        n: p.n,
+        eps: p.eps,
+        theta,
+    };
+    let prices = PriceSource::Trace(trace.clone());
+    let target_acc = accuracy_for_error(&bound, p.eps);
+    let cap = trace.horizon();
+
+    let mut outcomes = Vec::new();
+
+    let noint_plan = pb.no_interruption_plan()?;
+    {
+        let mut s = FixedBids::new(
+            "no_interruptions",
+            BidVector::uniform(p.n, 1.0), // above the 0.17 cap
+            noint_plan.j.max(p.j),
+        );
+        let r = run_synthetic(&mut s, bound, &prices, runtime, cap, p.seed)?;
+        outcomes.push(super::fig3::StrategyOutcome {
+            name: "no_interruptions",
+            cost_at_target: r.series.cost_at_accuracy(target_acc),
+            time_at_target: r.series.time_at_accuracy(target_acc),
+            total_cost: r.cost,
+            total_time: r.elapsed,
+            series: r.series,
+        });
+    }
+    {
+        let plan = pb.optimal_one_bid().context("fig4 one-bid")?;
+        let mut s = FixedBids::new(
+            "one_bid",
+            BidVector::uniform(p.n, plan.b),
+            plan.j,
+        );
+        let r =
+            run_synthetic(&mut s, bound, &prices, runtime, cap, p.seed + 1)?;
+        outcomes.push(super::fig3::StrategyOutcome {
+            name: "one_bid",
+            cost_at_target: r.series.cost_at_accuracy(target_acc),
+            time_at_target: r.series.time_at_accuracy(target_acc),
+            total_cost: r.cost,
+            total_time: r.elapsed,
+            series: r.series,
+        });
+    }
+    {
+        let plan = pb.cooptimize_j_two_bids(p.n1).context("fig4 two-bid")?;
+        let mut s = FixedBids::new(
+            "two_bids",
+            BidVector::two_group(p.n, p.n1, plan.b1, plan.b2),
+            plan.j,
+        );
+        let r =
+            run_synthetic(&mut s, bound, &prices, runtime, cap, p.seed + 2)?;
+        outcomes.push(super::fig3::StrategyOutcome {
+            name: "two_bids",
+            cost_at_target: r.series.cost_at_accuracy(target_acc),
+            time_at_target: r.series.time_at_accuracy(target_acc),
+            total_cost: r.cost,
+            total_time: r.elapsed,
+            series: r.series,
+        });
+    }
+
+    let noint = &outcomes[0];
+    let base_acc = noint
+        .series
+        .last()
+        .map(|pt| pt.accuracy)
+        .unwrap_or(0.0)
+        .max(1e-9);
+    let mut savings = [None, None];
+    let mut acc_ratio = [0.0, 0.0];
+    for (i, name) in ["one_bid", "two_bids"].iter().enumerate() {
+        let o = outcomes.iter().find(|o| o.name == *name).unwrap();
+        savings[i] =
+            Some(100.0 * (noint.total_cost - o.total_cost) / noint.total_cost);
+        acc_ratio[i] = o
+            .series
+            .last()
+            .map(|pt| pt.accuracy)
+            .unwrap_or(0.0)
+            / base_acc;
+    }
+
+    let mean_price = {
+        let cdf = trace.empirical_cdf(0.02);
+        cdf.mean()
+    };
+
+    Ok(Fig4Output {
+        outcomes,
+        savings_vs_noint: savings,
+        accuracy_ratio: acc_ratio,
+        trace_mean_price: mean_price,
+        trace_horizon: trace.horizon(),
+    })
+}
+
+pub fn print_summary(out: &Fig4Output) {
+    println!(
+        "== Fig. 4 [trace replay]  horizon={:.0} h, mean price ${:.4}/h",
+        out.trace_horizon, out.trace_mean_price
+    );
+    for o in &out.outcomes {
+        println!(
+            "  {:<18} cost_total={:<9.3} time_total={:<8.1} final_acc={:.4}",
+            o.name,
+            o.total_cost,
+            o.total_time,
+            o.series.last().map(|p| p.accuracy).unwrap_or(0.0),
+        );
+    }
+    for (i, name) in ["one_bid", "two_bids"].iter().enumerate() {
+        if let Some(s) = out.savings_vs_noint[i] {
+            println!(
+                "  {name} saves {s:.2}% of cost vs no-interruptions at \
+                 {:.2}% of its accuracy",
+                100.0 * out.accuracy_ratio[i]
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_replay_savings_ordering() {
+        let trace = default_trace(7);
+        let p = Fig4Params::default();
+        let out = run(&trace, &p).unwrap();
+        let s1 = out.savings_vs_noint[0].unwrap();
+        let s2 = out.savings_vs_noint[1].unwrap();
+        assert!(s1 > 0.0, "one-bid should save vs no-interruptions: {s1}");
+        assert!(s2 > s1, "two-bids should save more: {s2} vs {s1}");
+        // accuracy within ~15% of the no-interruption baseline (the
+        // paper reports ~96-97%; exact ratios depend on the trace path)
+        assert!(out.accuracy_ratio[0] > 0.85, "{:?}", out.accuracy_ratio);
+        assert!(out.accuracy_ratio[1] > 0.85, "{:?}", out.accuracy_ratio);
+    }
+}

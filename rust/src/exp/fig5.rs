@@ -1,0 +1,286 @@
+//! Fig. 5: preemptible instances without bids (Sec. V).
+//!
+//! (a) accuracy-per-dollar across choices of the provisioned count n at
+//!     preemption probability q = 0.5, with the Theorem-4 estimate
+//!     n* ~ n_no-preempt / (1 - q) highlighted against "random" choices,
+//!     plus the paper's No-preemption baseline (2 on-demand workers at
+//!     the higher on-demand price);
+//! (b) static n = 1 for J = 10^4 iterations vs the Theorem-5 dynamic
+//!     schedule n_j = ceil(1.0004^{j-1}) run for the (much smaller) J'
+//!     from Theorem 5 with chi = 1.
+//!
+//! Price model: a fixed preemptible unit price and a 3x on-demand price
+//! (the GCP preemptible discount is ~70%).
+
+use anyhow::Result;
+
+use crate::coordinator::strategy::{DynamicWorkers, StaticWorkers};
+use crate::preempt::PreemptionModel;
+use crate::sim::PriceSource;
+use crate::theory::bounds::{ErrorBound, SgdHyper};
+use crate::theory::runtime_model::RuntimeModel;
+use crate::theory::workers::WorkerProblem;
+
+use super::run_synthetic;
+
+pub const PREEMPTIBLE_PRICE: f64 = 0.1;
+pub const ON_DEMAND_PRICE: f64 = 0.3;
+
+#[derive(Clone, Debug)]
+pub struct ProvisioningOutcome {
+    pub label: String,
+    pub n_or_eta: f64,
+    pub iters: u64,
+    pub cost: f64,
+    pub final_error: f64,
+    pub final_accuracy: f64,
+    pub accuracy_per_dollar: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig5Output {
+    /// panel (a): no-preemption baseline + n sweep at q = 0.5
+    pub panel_a: Vec<ProvisioningOutcome>,
+    /// the n Theorem 4's reasoning selects for panel (a)
+    pub n_star: usize,
+    /// panel (b): static n = 1 vs dynamic eta = 1.0004
+    pub panel_b: Vec<ProvisioningOutcome>,
+    /// Theorem-5 iteration count used by the dynamic run
+    pub j_dynamic: u64,
+}
+
+pub struct Fig5Params {
+    pub j: u64,
+    pub q: f64,
+    pub n_baseline: usize,
+    pub n_sweep: Vec<usize>,
+    pub eta: f64,
+    pub seed: u64,
+}
+
+impl Default for Fig5Params {
+    fn default() -> Self {
+        Fig5Params {
+            j: 10_000,
+            q: 0.5,
+            n_baseline: 2,
+            n_sweep: vec![2, 4, 8, 16],
+            eta: 1.0004,
+            seed: 2020,
+        }
+    }
+}
+
+pub fn run(p: &Fig5Params) -> Result<Fig5Output> {
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    let runtime = RuntimeModel::Deterministic { r: 10.0 };
+    let prices = PriceSource::Fixed(0.0); // strategies carry their price
+
+    let mut panel_a = Vec::new();
+
+    // ---- No-preemption baseline: n_baseline on-demand workers
+    {
+        let mut s = StaticWorkers {
+            n: p.n_baseline,
+            j: p.j,
+            model: PreemptionModel::None,
+            unit_price: ON_DEMAND_PRICE,
+        };
+        let r = run_synthetic(
+            &mut s,
+            bound,
+            &prices,
+            runtime,
+            f64::INFINITY,
+            p.seed,
+        )?;
+        panel_a.push(outcome(
+            format!("no_preemption_n{}", p.n_baseline),
+            p.n_baseline as f64,
+            &r,
+        ));
+    }
+
+    // ---- Theorem 4's scaling: to match the no-preemption baseline's
+    // effective worker count under preemption q, provision
+    // n* = n_baseline / (1 - q) (the paper's Fig. 5a argument).
+    let n_star =
+        ((p.n_baseline as f64) / (1.0 - p.q)).round().max(1.0) as usize;
+
+    // ---- n sweep at q (includes n*)
+    let mut sweep = p.n_sweep.clone();
+    if !sweep.contains(&n_star) {
+        sweep.push(n_star);
+        sweep.sort_unstable();
+    }
+    for (k, n) in sweep.iter().enumerate() {
+        let mut s = StaticWorkers {
+            n: *n,
+            j: p.j,
+            model: PreemptionModel::Bernoulli { q: p.q },
+            unit_price: PREEMPTIBLE_PRICE,
+        };
+        let r = run_synthetic(
+            &mut s,
+            bound,
+            &prices,
+            runtime,
+            f64::INFINITY,
+            p.seed + 10 + k as u64,
+        )?;
+        let label = if *n == n_star {
+            format!("preempt_q{}_n{}_star", p.q, n)
+        } else {
+            format!("preempt_q{}_n{}", p.q, n)
+        };
+        panel_a.push(outcome(label, *n as f64, &r));
+    }
+
+    // ---- panel (b): static n = 1 vs dynamic eta
+    let wp = WorkerProblem {
+        bound,
+        d: 1.0,
+        chi: 1.0,
+        eps: 0.1,
+        theta_iters: p.j * 4,
+    };
+    let j_dynamic = wp.dynamic_iterations(p.eta, p.j);
+    let mut panel_b = Vec::new();
+    {
+        let mut s = StaticWorkers {
+            n: 1,
+            j: p.j,
+            model: PreemptionModel::Bernoulli { q: p.q },
+            unit_price: PREEMPTIBLE_PRICE,
+        };
+        let r = run_synthetic(
+            &mut s,
+            bound,
+            &prices,
+            runtime,
+            f64::INFINITY,
+            p.seed + 50,
+        )?;
+        panel_b.push(outcome("static_n1".to_string(), 1.0, &r));
+    }
+    {
+        let mut s = DynamicWorkers::new(
+            1,
+            p.eta,
+            j_dynamic,
+            PreemptionModel::Bernoulli { q: p.q },
+            PREEMPTIBLE_PRICE,
+            100_000,
+        );
+        let r = run_synthetic(
+            &mut s,
+            bound,
+            &prices,
+            runtime,
+            f64::INFINITY,
+            p.seed + 51,
+        )?;
+        panel_b.push(outcome(
+            format!("dynamic_eta{}", p.eta),
+            p.eta,
+            &r,
+        ));
+    }
+
+    Ok(Fig5Output { panel_a, n_star, panel_b, j_dynamic })
+}
+
+fn outcome(
+    label: String,
+    n_or_eta: f64,
+    r: &crate::coordinator::scheduler::RunResult,
+) -> ProvisioningOutcome {
+    ProvisioningOutcome {
+        label,
+        n_or_eta,
+        iters: r.iters,
+        cost: r.cost,
+        final_error: r.final_error,
+        final_accuracy: r.final_accuracy,
+        accuracy_per_dollar: if r.cost > 0.0 {
+            r.final_accuracy / r.cost
+        } else {
+            0.0
+        },
+    }
+}
+
+pub fn print_summary(out: &Fig5Output) {
+    println!("== Fig. 5a  (q sweep; Theorem-4 pick n* = {})", out.n_star);
+    for o in &out.panel_a {
+        println!(
+            "  {:<24} n={:<5} cost={:<9.1} err={:<8.4} acc={:<7.4} \
+             acc/$ = {:.6}",
+            o.label,
+            o.n_or_eta,
+            o.cost,
+            o.final_error,
+            o.final_accuracy,
+            o.accuracy_per_dollar
+        );
+    }
+    println!("== Fig. 5b  (static vs dynamic; J' = {})", out.j_dynamic);
+    for o in &out.panel_b {
+        println!(
+            "  {:<24} iters={:<6} cost={:<9.1} err={:<8.4} acc={:<7.4} \
+             acc/$ = {:.6}",
+            o.label,
+            o.iters,
+            o.cost,
+            o.final_error,
+            o.final_accuracy,
+            o.accuracy_per_dollar
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theorem4_pick_beats_under_and_over_provisioning() {
+        let p = Fig5Params { j: 6_000, ..Default::default() };
+        let out = run(&p).unwrap();
+        assert_eq!(out.n_star, 4);
+        let get = |needle: &str| {
+            out.panel_a
+                .iter()
+                .find(|o| o.label.contains(needle))
+                .unwrap()
+        };
+        let star = get("n4_star");
+        let big = get("n16");
+        // the Theorem-4 pick has better accuracy-per-dollar than heavy
+        // over-provisioning
+        assert!(
+            star.accuracy_per_dollar > big.accuracy_per_dollar,
+            "star {} vs n16 {}",
+            star.accuracy_per_dollar,
+            big.accuracy_per_dollar
+        );
+        // and reaches (nearly) the no-preemption baseline's error
+        let base = get("no_preemption");
+        assert!(star.final_error < base.final_error * 1.15);
+    }
+
+    #[test]
+    fn dynamic_beats_static_accuracy_per_dollar() {
+        let p = Fig5Params { j: 10_000, ..Default::default() };
+        let out = run(&p).unwrap();
+        let stat = &out.panel_b[0];
+        let dynm = &out.panel_b[1];
+        assert!(out.j_dynamic < p.j);
+        assert!(
+            dynm.accuracy_per_dollar > stat.accuracy_per_dollar,
+            "dynamic {} vs static {}",
+            dynm.accuracy_per_dollar,
+            stat.accuracy_per_dollar
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! Per-figure experiment harnesses.
+//!
+//! Each submodule regenerates one figure of the paper's evaluation with
+//! the same moving parts the paper used (strategies, price models,
+//! J/eps/theta settings), emitting CSV series plus a printed summary of
+//! the headline comparisons. They are invoked by `cargo bench` (one bench
+//! target per figure), by the examples, and by the CLI.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+
+use anyhow::Result;
+
+use crate::coordinator::backend::SyntheticBackend;
+use crate::coordinator::scheduler::{RunResult, Scheduler, SchedulerParams};
+use crate::coordinator::strategy::Strategy;
+use crate::sim::PriceSource;
+use crate::theory::bounds::ErrorBound;
+use crate::theory::runtime_model::RuntimeModel;
+use crate::util::rng::Rng;
+
+/// Run one strategy against the synthetic (Theorem-1) backend.
+pub fn run_synthetic(
+    strategy: &mut dyn Strategy,
+    bound: ErrorBound,
+    prices: &PriceSource,
+    runtime: RuntimeModel,
+    theta_cap: f64,
+    seed: u64,
+) -> Result<RunResult> {
+    let params = SchedulerParams {
+        runtime,
+        idle_step: 4.0,
+        theta_cap,
+        stride: 10,
+        max_slots: 200_000_000,
+    };
+    let mut backend = SyntheticBackend::new(bound);
+    let mut rng = Rng::new(seed);
+    Scheduler::new(params).run(strategy, &mut backend, prices, &mut rng)
+}
+
+/// Accuracy proxy corresponding to an error target (see DESIGN.md §2):
+/// the synthetic backend reports accuracy = 1 - err / A.
+pub fn accuracy_for_error(bound: &ErrorBound, eps: f64) -> f64 {
+    (1.0 - eps / bound.hyper.a0).clamp(0.0, 1.0)
+}
+
+/// Pretty one-line summary for a run.
+pub fn summarize(name: &str, r: &RunResult) -> String {
+    format!(
+        "{name:<18} iters={:<6} cost={:<10.2} time={:<10.1} idle={:<9.1} \
+         err={:.4} acc={:.4}{}",
+        r.iters,
+        r.cost,
+        r.elapsed,
+        r.idle_time,
+        r.final_error,
+        r.final_accuracy,
+        if r.truncated { "  [TRUNCATED]" } else { "" }
+    )
+}

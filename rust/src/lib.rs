@@ -1,0 +1,38 @@
+//! # volatile-sgd
+//!
+//! Reproduction of **"Machine Learning on Volatile Instances"** (Zhang,
+//! Wang, Joshi, Joe-Wong — INFOCOM 2020): cost-optimal distributed
+//! synchronous SGD on spot / preemptible cloud instances.
+//!
+//! The crate is the Layer-3 **rust coordinator** of a three-layer stack:
+//! JAX/Pallas author the model + kernels at build time (`python/compile`),
+//! `make artifacts` lowers them once to HLO-text artifacts, and this crate
+//! loads and executes them via the PJRT C API — Python is never on the
+//! training path.
+//!
+//! Map of the crate (see DESIGN.md for the paper-to-module index):
+//!
+//! * [`market`] — spot-price processes, empirical CDFs, trace replay, bids;
+//! * [`preempt`] — GCP/Azure-style preemption models + exact E[1/y];
+//! * [`theory`] — Theorems 1–5 and Corollary 1 as executable solvers;
+//! * [`coordinator`] — parameter server, gradient aggregation, scheduler,
+//!   strategies;
+//! * [`sim`] — virtual-clock cost/time accounting;
+//! * [`runtime`] — PJRT bridge to the AOT artifacts;
+//! * [`data`] — synthetic CIFAR-like images + Markov corpus;
+//! * [`exp`] — per-figure experiment harnesses (Figs. 1–5);
+//! * [`config`], [`manifest`], [`metrics`], [`util`] — substrates.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod manifest;
+pub mod market;
+pub mod metrics;
+pub mod preempt;
+pub mod runtime;
+pub mod sim;
+pub mod theory;
+pub mod util;

@@ -1,0 +1,428 @@
+//! `volatile-sgd` — the leader binary.
+//!
+//! ```text
+//! volatile-sgd info        [--artifacts DIR]
+//! volatile-sgd train       [--model cnn] [--iters 200] [--workers 4] [--lr 0.05]
+//! volatile-sgd simulate    [--config FILE] [--strategy one_bid|two_bids|...]
+//! volatile-sgd optimal-bid [--market uniform|gaussian] [--n 8] [--n1 4]
+//!                          [--eps 0.35] [--theta 120000] [--two-bids]
+//! volatile-sgd plan-workers [--eps 0.1] [--q 0.5] [--chi 1.0] [--theta-iters 40000]
+//! volatile-sgd fig2|fig3|fig4|fig5  [--out out/]
+//! ```
+//!
+//! Python is never invoked here: `train` runs the AOT artifacts over PJRT.
+
+use anyhow::{bail, Context, Result};
+
+use volatile_sgd::cli::Args;
+use volatile_sgd::config::{ExperimentConfig, StrategyKind};
+use volatile_sgd::coordinator::backend::{RealBackend, TrainingBackend};
+use volatile_sgd::coordinator::strategy::{
+    DynamicBids, FixedBids, StageSpec, StaticWorkers,
+};
+use volatile_sgd::data::CifarLike;
+use volatile_sgd::exp;
+use volatile_sgd::manifest::Manifest;
+use volatile_sgd::market::{BidVector, PriceModel};
+use volatile_sgd::preempt::PreemptionModel;
+use volatile_sgd::runtime::{ModelRuntime, PjrtEngine};
+use volatile_sgd::sim::PriceSource;
+use volatile_sgd::theory::bids::BidProblem;
+use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+use volatile_sgd::theory::runtime_model::RuntimeModel;
+use volatile_sgd::theory::workers::WorkerProblem;
+use volatile_sgd::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "volatile-sgd — distributed SGD on volatile instances \
+         (Zhang et al., INFOCOM 2020 reproduction)\n\n\
+         subcommands:\n  \
+         info          show artifacts / platform\n  \
+         train         real PJRT training on the synthetic dataset\n  \
+         simulate      run one strategy simulation from a config\n  \
+         optimal-bid   Theorem 2 / Theorem 3 bid calculator\n  \
+         plan-workers  Theorem 4 / Theorem 5 provisioning planner\n  \
+         fig2..fig5    regenerate the paper's figures (CSV + summary)\n"
+    );
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "optimal-bid" => cmd_optimal_bid(&args),
+        "plan-workers" => cmd_plan_workers(&args),
+        "fig2" => cmd_fig2(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "fig5" => cmd_fig5(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try 'help')"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str("artifacts", "artifacts");
+    let engine = PjrtEngine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let manifest = Manifest::load(&dir).with_context(|| {
+        format!("loading {dir}/manifest.txt — run `make artifacts`")
+    })?;
+    let mut names: Vec<_> = manifest.models.keys().collect();
+    names.sort();
+    for name in names {
+        let m = &manifest.models[name];
+        println!(
+            "model {name}: d={} input={:?} ({}) labels={:?} layers={}",
+            m.d,
+            m.input_shape,
+            m.input_dtype,
+            m.label_shape,
+            m.layers.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = args.str("artifacts", "artifacts");
+    let model = args.str("model", "cnn");
+    let iters = args.u64("iters", 200)?;
+    let workers = args.usize("workers", 4)?;
+    let lr = args.f64("lr", 0.05)? as f32;
+    let seed = args.u64("seed", 42)?;
+    if model != "cnn" {
+        bail!("`train` drives the CNN workload; use examples/e2e_train for the LM");
+    }
+
+    let manifest = Manifest::load(&dir)?;
+    let mm = manifest.model(&model)?;
+    let engine = PjrtEngine::cpu()?;
+    println!("compiling {model} artifacts on {} ...", engine.platform());
+    let rt = ModelRuntime::load(&engine, mm)?;
+    let theta0 = mm.load_theta0()?;
+
+    let mut rng = Rng::new(seed);
+    let data = CifarLike::generate(4_096, 1.0, &mut rng.split(1));
+    let mut backend =
+        RealBackend::new(&rt, theta0, lr, data, workers, &mut rng);
+    println!(
+        "training: {iters} iters x {workers} workers (batch {})",
+        mm.batch()
+    );
+    let t0 = std::time::Instant::now();
+    for i in 1..=iters {
+        let stats = backend.step(workers, &mut rng)?;
+        if i % 20 == 0 || i == iters {
+            println!(
+                "iter {i:>5}  loss(ema)={:.4}  acc(ema)={:.4}  [{:.1} ms/iter]",
+                stats.error,
+                stats.accuracy,
+                t0.elapsed().as_secs_f64() * 1e3 / i as f64
+            );
+        }
+    }
+    let eval = backend.evaluate(1_024)?;
+    println!(
+        "held-in eval: loss={:.4} accuracy={:.4}",
+        eval.error, eval.accuracy
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::from_str("")?,
+    };
+    let strategy_name = args.str(
+        "strategy",
+        match &cfg.strategy {
+            StrategyKind::NoInterruption => "no_interruption",
+            StrategyKind::OneBid => "one_bid",
+            StrategyKind::TwoBids { .. } => "two_bids",
+            StrategyKind::DynamicBids { .. } => "dynamic",
+            StrategyKind::StaticWorkers => "static_workers",
+            StrategyKind::DynamicWorkers { .. } => "dynamic_workers",
+        },
+    );
+    let n1 = args.usize("n1", (cfg.n / 2).max(1))?;
+    let pb = BidProblem {
+        bound: cfg.bound,
+        price: cfg.price.clone(),
+        runtime: cfg.runtime,
+        n: cfg.n,
+        eps: cfg.eps,
+        theta: cfg.theta,
+    };
+    let prices = match &cfg.trace {
+        Some(t) => PriceSource::Trace(t.clone()),
+        None => PriceSource::Iid(cfg.price.clone()),
+    };
+    let cap = cfg.theta * 4.0;
+    let result = match strategy_name.as_str() {
+        "no_interruption" => {
+            let plan = pb.no_interruption_plan()?;
+            let hi = {
+                use volatile_sgd::market::process::PriceDist;
+                pb.price.support().1
+            };
+            let mut s = FixedBids::new(
+                "no_interruptions",
+                BidVector::uniform(cfg.n, hi),
+                plan.j,
+            );
+            exp::run_synthetic(
+                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
+            )?
+        }
+        "one_bid" => {
+            let plan = pb.optimal_one_bid()?;
+            println!("Theorem 2 bid: b*={:.4}, J={}", plan.b, plan.j);
+            let mut s = FixedBids::new(
+                "one_bid",
+                BidVector::uniform(cfg.n, plan.b),
+                plan.j,
+            );
+            exp::run_synthetic(
+                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
+            )?
+        }
+        "two_bids" => {
+            let plan = pb.cooptimize_j_two_bids(n1)?;
+            println!(
+                "Theorem 3 bids: b1*={:.4} b2*={:.4} gamma={:.3} J={}",
+                plan.b1, plan.b2, plan.gamma, plan.j
+            );
+            let mut s = FixedBids::new(
+                "two_bids",
+                BidVector::two_group(cfg.n, n1, plan.b1, plan.b2),
+                plan.j,
+            );
+            exp::run_synthetic(
+                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
+            )?
+        }
+        "dynamic" => {
+            let j = cfg.j_fixed.unwrap_or(10_000);
+            let stages = vec![
+                StageSpec {
+                    n: (cfg.n / 2).max(2),
+                    n1: (n1 / 2).max(1),
+                    until_iter: j * 2 / 5,
+                },
+                StageSpec { n: cfg.n, n1, until_iter: u64::MAX },
+            ];
+            let mut s = DynamicBids::new(pb.clone(), stages, j)?;
+            exp::run_synthetic(
+                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
+            )?
+        }
+        "static_workers" => {
+            let j = cfg.j_fixed.unwrap_or(10_000);
+            let mut s = StaticWorkers {
+                n: cfg.n,
+                j,
+                model: PreemptionModel::Bernoulli { q: cfg.preempt_q },
+                unit_price: exp::fig5::PREEMPTIBLE_PRICE,
+            };
+            exp::run_synthetic(
+                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
+            )?
+        }
+        other => bail!("unknown --strategy '{other}'"),
+    };
+    println!("{}", exp::summarize(&strategy_name, &result));
+    let out = cfg.out_dir.join(format!("simulate_{strategy_name}.csv"));
+    result.series.table().write(&out)?;
+    println!("series -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_optimal_bid(args: &Args) -> Result<()> {
+    let market = args.str("market", "uniform");
+    let price = match market.as_str() {
+        "uniform" => PriceModel::uniform_paper(),
+        "gaussian" => PriceModel::gaussian_paper(),
+        other => bail!("--market must be uniform|gaussian, got {other}"),
+    };
+    let n = args.usize("n", 8)?;
+    let n1 = args.usize("n1", n / 2)?;
+    let eps = args.f64("eps", 0.35)?;
+    let theta = args.f64("theta", 120_000.0)?;
+    let pb = BidProblem {
+        bound: ErrorBound::new(SgdHyper::paper_cnn()),
+        price,
+        runtime: RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 },
+        n,
+        eps,
+        theta,
+    };
+    let one = pb.optimal_one_bid()?;
+    println!(
+        "Theorem 2 (one bid):  b*={:.4}  J={}  E[C]={:.1}  E[tau]={:.1}",
+        one.b, one.j, one.expected_cost, one.expected_time
+    );
+    if args.bool("two-bids") || args.get("n1").is_some() {
+        let two = pb.cooptimize_j_two_bids(n1)?;
+        println!(
+            "Theorem 3 (two bids): b1*={:.4} b2*={:.4} gamma={:.3} J={} \
+             E[C]={:.1} E[tau]={:.1}",
+            two.b1, two.b2, two.gamma, two.j, two.expected_cost,
+            two.expected_time
+        );
+        println!(
+            "two-bid saving vs one bid: {:.1}%",
+            100.0 * (one.expected_cost - two.expected_cost)
+                / one.expected_cost
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan_workers(args: &Args) -> Result<()> {
+    let wp = WorkerProblem {
+        bound: ErrorBound::new(SgdHyper::paper_cnn()),
+        d: args.f64("d", 1.0)?,
+        chi: args.f64("chi", 1.0)?,
+        eps: args.f64("eps", 0.1)?,
+        theta_iters: args.u64("theta-iters", 40_000)?,
+    };
+    let plan = wp.optimal_static()?;
+    println!(
+        "Theorem 4 (static):  J*={}  n*={}  cost proxy J*n = {}",
+        plan.j, plan.n, plan.cost_proxy
+    );
+    let eta = args.f64("eta", 1.0004)?;
+    let jd = wp.dynamic_iterations(eta, plan.j.max(1));
+    println!(
+        "Theorem 5 (dynamic): eta={eta}  J'={jd}  (vs static J={})",
+        plan.j
+    );
+    let q = args.f64("q", 0.5)?;
+    if let Ok(d) = wp.optimize_eta(
+        args.usize("n0", 2)?,
+        args.f64("r", 10.0)?,
+        q,
+        args.f64("theta", 2_000_000.0)?,
+        args.u64("j-max", 40_000)?,
+    ) {
+        println!(
+            "problem (20)-(23): eta*={:.6}  J={}  cost proxy={:.1}  \
+             err bound={:.4}",
+            d.eta, d.j, d.cost_proxy, d.err_bound
+        );
+    }
+    Ok(())
+}
+
+fn out_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.str("out", "out"))
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let out = exp::fig2::run(5_000, 8, 4)?;
+    let dir = out_dir(args);
+    out.surfaces.write(dir.join("fig2_surfaces.csv"))?;
+    out.fig1.write(dir.join("fig1_series.csv"))?;
+    println!(
+        "fig2: monotonicities {} ({} grid points) -> {}",
+        if out.monotone_ok { "OK" } else { "VIOLATED" },
+        out.surfaces.rows.len(),
+        dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let p = exp::fig3::Fig3Params {
+        j: args.u64("j", 10_000)?,
+        seed: args.u64("seed", 2020)?,
+        ..Default::default()
+    };
+    let dir = out_dir(args);
+    for (dist, name) in [
+        (PriceModel::uniform_paper(), "uniform"),
+        (PriceModel::gaussian_paper(), "gaussian"),
+    ] {
+        let out = exp::fig3::run(dist, name, &p)?;
+        exp::fig3::print_summary(&out);
+        for o in &out.outcomes {
+            o.series
+                .table()
+                .write(dir.join(format!("fig3_{name}_{}.csv", o.name)))?;
+        }
+    }
+    println!("series -> {}", dir.display());
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let trace = match args.get("trace") {
+        Some(path) => volatile_sgd::market::SpotTrace::load(path)?,
+        None => exp::fig4::default_trace(args.u64("trace-seed", 7)?),
+    };
+    let p = exp::fig4::Fig4Params {
+        j: args.u64("j", 10_000)?,
+        seed: args.u64("seed", 2020)?,
+        ..Default::default()
+    };
+    let out = exp::fig4::run(&trace, &p)?;
+    exp::fig4::print_summary(&out);
+    let dir = out_dir(args);
+    for o in &out.outcomes {
+        o.series
+            .table()
+            .write(dir.join(format!("fig4_{}.csv", o.name)))?;
+    }
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("fig4_trace.csv"), trace.to_csv())?;
+    println!("series -> {}", dir.display());
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let p = exp::fig5::Fig5Params {
+        j: args.u64("j", 10_000)?,
+        q: args.f64("q", 0.5)?,
+        seed: args.u64("seed", 2020)?,
+        ..Default::default()
+    };
+    let out = exp::fig5::run(&p)?;
+    exp::fig5::print_summary(&out);
+    let dir = out_dir(args);
+    let mut t = volatile_sgd::util::csv::Table::new(&[
+        "n_or_eta", "iters", "cost", "error", "accuracy", "acc_per_dollar",
+    ]);
+    for o in out.panel_a.iter().chain(&out.panel_b) {
+        t.push(vec![
+            o.n_or_eta,
+            o.iters as f64,
+            o.cost,
+            o.final_error,
+            o.final_accuracy,
+            o.accuracy_per_dollar,
+        ]);
+    }
+    t.write(dir.join("fig5_outcomes.csv"))?;
+    println!("series -> {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,338 @@
+//! Parser for `artifacts/manifest.txt` — the contract between the python
+//! AOT path and the rust runtime.
+//!
+//! Line-oriented format (see python/compile/aot.py):
+//!
+//! ```text
+//! version 1
+//! model cnn
+//! d 546730
+//! input_shape 32,3072
+//! input_dtype f32
+//! label_shape 32
+//! meta classes 10
+//! artifact grad cnn_grad.hlo.txt
+//! theta0 cnn_theta0.f32 <sha16>
+//! layer conv1_w 0 432 16,3,3,3
+//! end
+//! ```
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One named parameter tensor inside the flat theta vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub offset: usize,
+    pub numel: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Everything the runtime needs to drive one model.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    /// flat parameter count
+    pub d: usize,
+    pub input_shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub input_dtype: String,
+    pub label_shape: Vec<usize>,
+    pub meta: HashMap<String, String>,
+    /// kind ("grad"/"eval"/"apply") -> artifact path (absolute)
+    pub artifacts: HashMap<String, PathBuf>,
+    pub theta0_path: PathBuf,
+    pub theta0_digest: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelManifest {
+    pub fn batch(&self) -> usize {
+        self.input_shape[0]
+    }
+
+    pub fn classes(&self) -> Option<usize> {
+        self.meta.get("classes").and_then(|c| c.parse().ok())
+    }
+
+    /// Total prediction slots per batch (CNN: batch; LM: batch*seq).
+    pub fn preds_per_batch(&self) -> usize {
+        self.label_shape.iter().product()
+    }
+
+    /// Load theta0 (raw little-endian f32) and validate the length.
+    pub fn load_theta0(&self) -> Result<Vec<f32>> {
+        let raw = fs::read(&self.theta0_path).with_context(|| {
+            format!("reading {}", self.theta0_path.display())
+        })?;
+        if raw.len() != self.d * 4 {
+            bail!(
+                "theta0 {}: {} bytes, want {}",
+                self.theta0_path.display(),
+                raw.len(),
+                self.d * 4
+            );
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Layer lookup by name.
+    pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    fn validate(&self) -> Result<()> {
+        // layers must tile [0, d) exactly
+        let mut spans: Vec<(usize, usize)> = self
+            .layers
+            .iter()
+            .map(|l| (l.offset, l.numel))
+            .collect();
+        spans.sort();
+        let mut pos = 0;
+        for (off, numel) in &spans {
+            if *off != pos {
+                bail!(
+                    "model {}: layer gap/overlap at offset {off} (expected {pos})",
+                    self.name
+                );
+            }
+            pos += numel;
+        }
+        if pos != self.d {
+            bail!("model {}: layers cover {pos} of d={}", self.name, self.d);
+        }
+        for l in &self.layers {
+            if l.shape.iter().product::<usize>() != l.numel {
+                bail!("layer {}: shape/numel mismatch", l.name);
+            }
+        }
+        for kind in ["grad", "eval", "apply"] {
+            if !self.artifacts.contains_key(kind) {
+                bail!("model {}: missing artifact '{kind}'", self.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The parsed manifest: all models keyed by name.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: HashMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Parse manifest text; `base` is the artifacts directory relative
+    /// paths resolve against.
+    pub fn parse(text: &str, base: &Path) -> Result<Self> {
+        let mut models = HashMap::new();
+        let mut cur: Option<ModelManifest> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            let at = || format!("manifest line {}", lineno + 1);
+            match key {
+                "version" => {
+                    if rest != ["1"] {
+                        bail!("{}: unsupported version {rest:?}", at());
+                    }
+                }
+                "model" => {
+                    if let Some(m) = cur.take() {
+                        bail!(
+                            "{}: model {} not terminated by 'end'",
+                            at(),
+                            m.name
+                        );
+                    }
+                    cur = Some(ModelManifest {
+                        name: rest.first().context("model needs a name")?.to_string(),
+                        d: 0,
+                        input_shape: vec![],
+                        input_dtype: String::new(),
+                        label_shape: vec![],
+                        meta: HashMap::new(),
+                        artifacts: HashMap::new(),
+                        theta0_path: PathBuf::new(),
+                        theta0_digest: String::new(),
+                        layers: vec![],
+                    });
+                }
+                "end" => {
+                    let m = cur.take().with_context(|| {
+                        format!("{}: 'end' with no open model", at())
+                    })?;
+                    m.validate()?;
+                    models.insert(m.name.clone(), m);
+                }
+                _ => {
+                    let m = cur.as_mut().with_context(|| {
+                        format!("{}: '{key}' outside a model block", at())
+                    })?;
+                    match key {
+                        "d" => m.d = rest[0].parse()?,
+                        "input_shape" => {
+                            m.input_shape = parse_dims(rest[0])?;
+                        }
+                        "input_dtype" => {
+                            m.input_dtype = rest[0].to_string();
+                        }
+                        "label_shape" => {
+                            m.label_shape = parse_dims(rest[0])?;
+                        }
+                        "meta" => {
+                            m.meta.insert(
+                                rest[0].to_string(),
+                                rest[1..].join(" "),
+                            );
+                        }
+                        "artifact" => {
+                            m.artifacts.insert(
+                                rest[0].to_string(),
+                                base.join(rest[1]),
+                            );
+                        }
+                        "theta0" => {
+                            m.theta0_path = base.join(rest[0]);
+                            m.theta0_digest = rest
+                                .get(1)
+                                .unwrap_or(&"")
+                                .to_string();
+                        }
+                        "layer" => {
+                            m.layers.push(LayerSpec {
+                                name: rest[0].to_string(),
+                                offset: rest[1].parse()?,
+                                numel: rest[2].parse()?,
+                                shape: parse_dims(rest[3])?,
+                            });
+                        }
+                        other => {
+                            bail!("{}: unknown key '{other}'", at())
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(m) = cur {
+            bail!("model {} not terminated by 'end'", m.name);
+        }
+        if models.is_empty() {
+            bail!("manifest contains no models");
+        }
+        Ok(Manifest { models })
+    }
+
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+version 1
+model toy
+d 6
+input_shape 2,3
+input_dtype f32
+label_shape 2
+meta classes 3
+artifact grad g.hlo.txt
+artifact eval e.hlo.txt
+artifact apply a.hlo.txt
+theta0 t.f32 abcd
+layer w 0 4 2,2
+layer b 4 2 2
+end
+";
+
+    #[test]
+    fn parses_good_manifest() {
+        let m = Manifest::parse(GOOD, Path::new("/art")).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.d, 6);
+        assert_eq!(toy.batch(), 2);
+        assert_eq!(toy.classes(), Some(3));
+        assert_eq!(toy.preds_per_batch(), 2);
+        assert_eq!(
+            toy.artifacts["grad"],
+            PathBuf::from("/art/g.hlo.txt")
+        );
+        assert_eq!(toy.layer("b").unwrap().offset, 4);
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_layer_gap() {
+        let bad = GOOD.replace("layer b 4 2 2", "layer b 5 1 1");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let bad = GOOD.replace("artifact apply a.hlo.txt\n", "");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_model() {
+        let bad = GOOD.replace("end\n", "");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_numel_mismatch() {
+        let bad = GOOD.replace("layer w 0 4 2,2", "layer w 0 4 2,3");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts_if_present() {
+        // integration hook: if `make artifacts` has run, the real manifest
+        // must parse and contain the cnn model.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let cnn = m.model("cnn").unwrap();
+            assert!(cnn.d > 100_000);
+            let theta = cnn.load_theta0().unwrap();
+            assert_eq!(theta.len(), cnn.d);
+        }
+    }
+}

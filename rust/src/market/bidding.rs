@@ -1,0 +1,154 @@
+//! Bid vectors and persistent-request admission semantics.
+//!
+//! Amazon's policy (Sec. IV): a bid is fixed at submission for the job's
+//! lifetime; with *persistent* requests a worker resumes automatically
+//! whenever the spot price falls back below its bid and exits when the job
+//! completes. A worker is active iff `bid >= price`, and while active it
+//! pays the prevailing *spot price*, not its bid.
+
+/// One worker's standing bid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerBid {
+    pub bid: f64,
+}
+
+/// The job's bid vector: `n1` workers at `b1` and `n - n1` at `b2 <= b1`
+/// (the paper's two-group strategy; `n1 == n` degenerates to one bid).
+#[derive(Clone, Debug)]
+pub struct BidVector {
+    bids: Vec<WorkerBid>,
+    pub b1: f64,
+    pub b2: f64,
+    pub n1: usize,
+}
+
+impl BidVector {
+    /// Uniform bid for all `n` workers.
+    pub fn uniform(n: usize, b: f64) -> Self {
+        assert!(n > 0);
+        BidVector {
+            bids: vec![WorkerBid { bid: b }; n],
+            b1: b,
+            b2: b,
+            n1: n,
+        }
+    }
+
+    /// Two-group bids: workers 0..n1 bid `b1`, workers n1..n bid `b2`.
+    pub fn two_group(n: usize, n1: usize, b1: f64, b2: f64) -> Self {
+        assert!(n > 0 && n1 > 0 && n1 <= n, "need 0 < n1 <= n");
+        assert!(
+            b2 <= b1,
+            "second-group bid must not exceed first-group ({b2} > {b1})"
+        );
+        let mut bids = vec![WorkerBid { bid: b1 }; n1];
+        bids.extend(vec![WorkerBid { bid: b2 }; n - n1]);
+        BidVector { bids, b1, b2, n1 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.bids.len()
+    }
+
+    pub fn bids(&self) -> &[WorkerBid] {
+        &self.bids
+    }
+
+    /// Indices of workers active at spot price `p` (persistent requests:
+    /// activity is memoryless in the current price).
+    pub fn active_set(&self, price: f64) -> Vec<usize> {
+        (0..self.bids.len())
+            .filter(|&i| self.bids[i].bid >= price)
+            .collect()
+    }
+
+    /// Number of active workers at price `p` (paper's y(b) for this p).
+    pub fn active_count(&self, price: f64) -> usize {
+        self.bids.iter().filter(|b| b.bid >= price).count()
+    }
+
+    /// Per-time-unit cost when the spot price is `p`: active workers each
+    /// pay the spot price.
+    pub fn cost_rate(&self, price: f64) -> f64 {
+        self.active_count(price) as f64 * price
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_all, Gen};
+
+    #[test]
+    fn uniform_all_or_nothing() {
+        let v = BidVector::uniform(4, 0.5);
+        assert_eq!(v.active_count(0.4), 4);
+        assert_eq!(v.active_count(0.5), 4);
+        assert_eq!(v.active_count(0.51), 0);
+    }
+
+    #[test]
+    fn two_group_thresholds() {
+        let v = BidVector::two_group(8, 3, 0.8, 0.4);
+        assert_eq!(v.active_count(0.3), 8);
+        assert_eq!(v.active_count(0.4), 8);
+        assert_eq!(v.active_count(0.5), 3);
+        assert_eq!(v.active_count(0.8), 3);
+        assert_eq!(v.active_count(0.9), 0);
+        assert_eq!(v.active_set(0.5), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cost_rate_is_count_times_price() {
+        let v = BidVector::two_group(4, 2, 1.0, 0.5);
+        assert_eq!(v.cost_rate(0.6), 2.0 * 0.6);
+        assert_eq!(v.cost_rate(0.2), 4.0 * 0.2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_b2_above_b1() {
+        BidVector::two_group(4, 2, 0.4, 0.8);
+    }
+
+    #[test]
+    fn prop_active_count_monotone_in_price() {
+        for_all("active_count anti-monotone in price", |g: &mut Gen| {
+            let n = g.u64_in(1, 16) as usize;
+            let n1 = g.u64_in(1, n as u64) as usize;
+            let b2 = g.f64_in(0.0, 1.0);
+            let b1 = g.f64_in(b2, 1.0);
+            let v = BidVector::two_group(n, n1, b1, b2);
+            let p = g.f64_in(0.0, 1.2);
+            let q = g.f64_in(p, 1.3);
+            if v.active_count(p) >= v.active_count(q) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "count({p})={} < count({q})={}",
+                    v.active_count(p),
+                    v.active_count(q)
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_active_count_in_set_sizes() {
+        // y(b) in {0, n1, n} only — the paper's three-level structure
+        for_all("two-group y in {0,n1,n}", |g: &mut Gen| {
+            let n = g.u64_in(2, 16) as usize;
+            let n1 = g.u64_in(1, n as u64 - 1) as usize;
+            let b2 = g.f64_in(0.1, 0.5);
+            let b1 = g.f64_in(b2 + 0.01, 1.0);
+            let v = BidVector::two_group(n, n1, b1, b2);
+            let p = g.f64_in(0.0, 1.2);
+            let y = v.active_count(p);
+            if y == 0 || y == n1 || y == n {
+                Ok(())
+            } else {
+                Err(format!("y={y} not in {{0,{n1},{n}}}"))
+            }
+        });
+    }
+}

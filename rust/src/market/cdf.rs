@@ -1,0 +1,130 @@
+//! Empirical CDF with quantile inverse — how a user estimates F(.) from
+//! observed spot-price history before bidding (Sec. VI: "we download the
+//! historical price traces ... to estimate the probability distribution").
+
+/// Empirical CDF over a finite sample (sorted once at construction).
+#[derive(Clone, Debug)]
+pub struct EmpiricalCdf {
+    sorted: Vec<f64>,
+}
+
+impl EmpiricalCdf {
+    pub fn new(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "empirical CDF needs >= 1 sample");
+        assert!(
+            samples.iter().all(|x| x.is_finite()),
+            "non-finite price sample"
+        );
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        EmpiricalCdf { sorted: samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// F(p) = (# samples <= p) / n.
+    pub fn cdf(&self, p: f64) -> f64 {
+        let k = self.sorted.partition_point(|&x| x <= p);
+        k as f64 / self.sorted.len() as f64
+    }
+
+    /// Quantile: smallest sample x with F(x) >= u (inverse CDF, right-
+    /// continuous). u<=0 gives the min, u>=1 the max.
+    pub fn quantile(&self, u: f64) -> f64 {
+        let n = self.sorted.len();
+        if u <= 0.0 {
+            return self.sorted[0];
+        }
+        if u >= 1.0 {
+            return self.sorted[n - 1];
+        }
+        let k = (u * n as f64).ceil() as usize;
+        self.sorted[k.clamp(1, n) - 1]
+    }
+
+    pub fn support(&self) -> (f64, f64) {
+        (self.sorted[0], self.sorted[self.sorted.len() - 1])
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sorted.iter().sum::<f64>() / self.sorted.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_all, Gen};
+
+    #[test]
+    fn cdf_step_values() {
+        let e = EmpiricalCdf::new(vec![3.0, 1.0, 2.0]);
+        assert_eq!(e.cdf(0.5), 0.0);
+        assert!((e.cdf(1.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((e.cdf(2.5) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(e.cdf(3.0), 1.0);
+    }
+
+    #[test]
+    fn quantile_bounds() {
+        let e = EmpiricalCdf::new(vec![5.0, 1.0, 9.0]);
+        assert_eq!(e.quantile(0.0), 1.0);
+        assert_eq!(e.quantile(1.0), 9.0);
+        assert_eq!(e.support(), (1.0, 9.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty() {
+        EmpiricalCdf::new(vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan() {
+        EmpiricalCdf::new(vec![1.0, f64::NAN]);
+    }
+
+    #[test]
+    fn prop_quantile_cdf_galois() {
+        // quantile(u) is the smallest x in the sample with cdf(x) >= u
+        for_all("quantile-cdf galois connection", |g: &mut Gen| {
+            let n = g.u64_in(1, 60) as usize;
+            let xs = g.vec_f64(n, 0.0, 10.0);
+            let e = EmpiricalCdf::new(xs);
+            let u = g.f64_in(0.001, 0.999);
+            let q = e.quantile(u);
+            if e.cdf(q) + 1e-12 < u {
+                return Err(format!("cdf(quantile({u}))={} < u", e.cdf(q)));
+            }
+            // any strictly smaller sample has cdf < u
+            for &x in &e.sorted {
+                if x < q && e.cdf(x) >= u {
+                    return Err(format!("smaller sample {x} already has cdf>=u"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cdf_monotone() {
+        for_all("cdf monotone", |g: &mut Gen| {
+            let n = g.u64_in(1, 40) as usize;
+            let e = EmpiricalCdf::new(g.vec_f64(n, -5.0, 5.0));
+            let a = g.f64_in(-6.0, 6.0);
+            let b = g.f64_in(-6.0, 6.0);
+            let (a, b) = if a <= b { (a, b) } else { (b, a) };
+            if e.cdf(a) <= e.cdf(b) + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("cdf({a})={} > cdf({b})={}", e.cdf(a), e.cdf(b)))
+            }
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! Spot-market substrate: price processes, CDFs, traces, bid admission.
+//!
+//! The paper's Section IV models the EC2 spot market as an i.i.d. price
+//! `p_t` with CDF `F` supported on [p_lo, p_hi]; a worker bidding `b` is
+//! active iff `b >= p_t` and pays the *spot price* (not the bid) per unit
+//! time while active. This module provides:
+//!
+//! * [`PriceDist`] — the distribution interface (`cdf`, `inv_cdf`, `sample`)
+//!   with the paper's two synthetic distributions (uniform, truncated
+//!   Gaussian) plus an empirical CDF built from any sample set;
+//! * [`trace`] — replayable time-stamped price traces in the shape of AWS
+//!   `DescribeSpotPriceHistory` output, plus a regime-switching synthetic
+//!   trace generator (the offline stand-in for real c5.xlarge history);
+//! * [`bidding`] — bid vectors, persistent-request semantics and the
+//!   active-worker-count resolution used by the scheduler.
+
+pub mod bidding;
+pub mod cdf;
+pub mod process;
+pub mod trace;
+
+pub use bidding::{BidVector, WorkerBid};
+pub use cdf::EmpiricalCdf;
+pub use process::{PriceDist, PriceModel};
+pub use trace::{SpotTrace, TraceGenConfig};

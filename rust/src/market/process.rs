@@ -1,0 +1,254 @@
+//! I.i.d. spot-price distributions (the paper's F(.)).
+
+use crate::util::erf::{norm_cdf, norm_ppf};
+use crate::util::rng::Rng;
+
+use super::cdf::EmpiricalCdf;
+
+/// Distribution interface for the spot price p_t.
+pub trait PriceDist {
+    /// F(p) = P[p_t <= p], clamped to [0,1] outside the support.
+    fn cdf(&self, p: f64) -> f64;
+    /// Smallest p with F(p) >= u, u in [0,1].
+    fn inv_cdf(&self, u: f64) -> f64;
+    /// Draw one price.
+    fn sample(&self, rng: &mut Rng) -> f64;
+    /// Support [lo, hi].
+    fn support(&self) -> (f64, f64);
+
+    /// E[p_t | p_t <= b] * F(b): the running-cost integral
+    /// `int_lo^b p f(p) dp`, default by numeric quadrature on the CDF
+    /// (integration by parts: = b F(b) - int_lo^b F(p) dp).
+    fn price_mass_below(&self, b: f64) -> f64 {
+        let (lo, _) = self.support();
+        let b = b.max(lo);
+        const STEPS: usize = 2_000;
+        let h = (b - lo) / STEPS as f64;
+        if h <= 0.0 {
+            return 0.0;
+        }
+        // trapezoid on F
+        let mut int_f = 0.5 * (self.cdf(lo) + self.cdf(b));
+        for i in 1..STEPS {
+            int_f += self.cdf(lo + h * i as f64);
+        }
+        int_f *= h;
+        b * self.cdf(b) - int_f
+    }
+}
+
+/// The concrete price models used in the experiments.
+#[derive(Clone, Debug)]
+pub enum PriceModel {
+    /// Uniform[lo, hi] — the paper's first synthetic distribution
+    /// (Fig. 3a/3c uses Uniform[0.2, 1]).
+    Uniform { lo: f64, hi: f64 },
+    /// Gaussian(mean, std) truncated to [lo, hi] — the paper's second
+    /// synthetic distribution (mean .6, std .175 on [0.2, 1]).
+    TruncGaussian { mean: f64, std: f64, lo: f64, hi: f64 },
+    /// Empirical CDF over samples (e.g. a replayed price trace) — how the
+    /// strategies estimate F from history, as in Fig. 4.
+    Empirical(EmpiricalCdf),
+}
+
+impl PriceModel {
+    pub fn uniform_paper() -> Self {
+        PriceModel::Uniform { lo: 0.2, hi: 1.0 }
+    }
+
+    pub fn gaussian_paper() -> Self {
+        PriceModel::TruncGaussian { mean: 0.6, std: 0.175, lo: 0.2, hi: 1.0 }
+    }
+
+    fn trunc_gauss_z(mean: f64, std: f64, lo: f64, hi: f64) -> (f64, f64) {
+        let a = norm_cdf((lo - mean) / std);
+        let b = norm_cdf((hi - mean) / std);
+        (a, b)
+    }
+}
+
+impl PriceDist for PriceModel {
+    fn cdf(&self, p: f64) -> f64 {
+        match self {
+            PriceModel::Uniform { lo, hi } => {
+                ((p - lo) / (hi - lo)).clamp(0.0, 1.0)
+            }
+            PriceModel::TruncGaussian { mean, std, lo, hi } => {
+                if p <= *lo {
+                    return 0.0;
+                }
+                if p >= *hi {
+                    return 1.0;
+                }
+                let (a, b) = Self::trunc_gauss_z(*mean, *std, *lo, *hi);
+                ((norm_cdf((p - mean) / std) - a) / (b - a)).clamp(0.0, 1.0)
+            }
+            PriceModel::Empirical(e) => e.cdf(p),
+        }
+    }
+
+    fn inv_cdf(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        match self {
+            PriceModel::Uniform { lo, hi } => lo + u * (hi - lo),
+            PriceModel::TruncGaussian { mean, std, lo, hi } => {
+                if u <= 0.0 {
+                    return *lo;
+                }
+                if u >= 1.0 {
+                    return *hi;
+                }
+                let (a, b) = Self::trunc_gauss_z(*mean, *std, *lo, *hi);
+                let p = (a + u * (b - a)).clamp(1e-12, 1.0 - 1e-12);
+                (mean + std * norm_ppf(p)).clamp(*lo, *hi)
+            }
+            PriceModel::Empirical(e) => e.quantile(u),
+        }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.inv_cdf(rng.f64())
+    }
+
+    fn support(&self) -> (f64, f64) {
+        match self {
+            PriceModel::Uniform { lo, hi } => (*lo, *hi),
+            PriceModel::TruncGaussian { lo, hi, .. } => (*lo, *hi),
+            PriceModel::Empirical(e) => e.support(),
+        }
+    }
+
+    fn price_mass_below(&self, b: f64) -> f64 {
+        match self {
+            // closed form for uniform: int_lo^b p/(hi-lo) dp
+            PriceModel::Uniform { lo, hi } => {
+                let b = b.clamp(*lo, *hi);
+                (b * b - lo * lo) / (2.0 * (hi - lo))
+            }
+            _ => {
+                // default quadrature
+                let (lo, hi) = self.support();
+                let b = b.clamp(lo, hi);
+                const STEPS: usize = 2_000;
+                let h = (b - lo) / STEPS as f64;
+                if h <= 0.0 {
+                    return 0.0;
+                }
+                let mut int_f = 0.5 * (self.cdf(lo) + self.cdf(b));
+                for i in 1..STEPS {
+                    int_f += self.cdf(lo + h * i as f64);
+                }
+                int_f *= h;
+                b * self.cdf(b) - int_f
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cdf_inverse_roundtrip() {
+        let m = PriceModel::uniform_paper();
+        for i in 0..=20 {
+            let u = i as f64 / 20.0;
+            let p = m.inv_cdf(u);
+            assert!((m.cdf(p) - u).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gaussian_cdf_monotone_and_bounded() {
+        let m = PriceModel::gaussian_paper();
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let p = 0.2 + 0.8 * i as f64 / 100.0;
+            let c = m.cdf(p);
+            assert!((0.0..=1.0).contains(&c));
+            assert!(c >= prev);
+            prev = c;
+        }
+        assert_eq!(m.cdf(0.1), 0.0);
+        assert_eq!(m.cdf(1.5), 1.0);
+    }
+
+    #[test]
+    fn gaussian_inverse_roundtrip() {
+        let m = PriceModel::gaussian_paper();
+        for &u in &[0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let p = m.inv_cdf(u);
+            assert!(
+                (m.cdf(p) - u).abs() < 1e-5,
+                "u={u} p={p} cdf={}",
+                m.cdf(p)
+            );
+        }
+    }
+
+    #[test]
+    fn sample_matches_cdf() {
+        let m = PriceModel::gaussian_paper();
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let below: usize = (0..n)
+            .filter(|_| m.sample(&mut rng) <= 0.6)
+            .count();
+        let expect = m.cdf(0.6);
+        assert!(
+            (below as f64 / n as f64 - expect).abs() < 0.01,
+            "emp={} cdf={}",
+            below as f64 / n as f64,
+            expect
+        );
+    }
+
+    #[test]
+    fn uniform_price_mass_closed_form_matches_quadrature() {
+        let m = PriceModel::uniform_paper();
+        for &b in &[0.3, 0.5, 0.8, 1.0] {
+            // quadrature via the trait default on a wrapper
+            struct Wrap<'a>(&'a PriceModel);
+            impl PriceDist for Wrap<'_> {
+                fn cdf(&self, p: f64) -> f64 {
+                    self.0.cdf(p)
+                }
+                fn inv_cdf(&self, u: f64) -> f64 {
+                    self.0.inv_cdf(u)
+                }
+                fn sample(&self, rng: &mut Rng) -> f64 {
+                    self.0.sample(rng)
+                }
+                fn support(&self) -> (f64, f64) {
+                    self.0.support()
+                }
+            }
+            let quad = Wrap(&m).price_mass_below(b);
+            let exact = m.price_mass_below(b);
+            assert!((quad - exact).abs() < 1e-5, "b={b}: {quad} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn price_mass_below_is_conditional_mean_times_cdf() {
+        // Monte-Carlo check on the Gaussian model
+        let m = PriceModel::gaussian_paper();
+        let mut rng = Rng::new(3);
+        let b = 0.55;
+        let n = 200_000;
+        let mut mass = 0.0;
+        for _ in 0..n {
+            let p = m.sample(&mut rng);
+            if p <= b {
+                mass += p;
+            }
+        }
+        mass /= n as f64;
+        assert!(
+            (mass - m.price_mass_below(b)).abs() < 2e-3,
+            "mc={mass} quad={}",
+            m.price_mass_below(b)
+        );
+    }
+}

@@ -1,0 +1,282 @@
+//! Time-stamped spot price traces: AWS-format parsing, replay, and a
+//! regime-switching synthetic generator.
+//!
+//! The paper's Fig. 4 replays historical c5.xlarge prices from
+//! `DescribeSpotPriceHistory`. Real AWS history cannot be downloaded in
+//! this offline build, so [`SpotTrace::generate`] synthesises a trace with
+//! the documented qualitative features of 2019-era spot prices: a slowly
+//! wandering base level, discrete price revisions (at most ~hourly — the
+//! paper leans on "the spot price changes at most once per hour"), regime
+//! shifts between calm and contended periods, and occasional demand spikes
+//! toward the on-demand cap. The substitution is recorded in DESIGN.md §2.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::csv::parse_numeric_csv;
+use crate::util::rng::Rng;
+
+use super::cdf::EmpiricalCdf;
+
+/// A piecewise-constant price path: price is `prices[i]` on
+/// `[times[i], times[i+1])`; the last price extends to infinity.
+#[derive(Clone, Debug)]
+pub struct SpotTrace {
+    /// revision timestamps in seconds, strictly increasing, starts at 0
+    pub times: Vec<f64>,
+    pub prices: Vec<f64>,
+}
+
+/// Parameters for the synthetic regime-switching generator.
+#[derive(Clone, Debug)]
+pub struct TraceGenConfig {
+    /// total trace length in seconds
+    pub horizon: f64,
+    /// mean seconds between price revisions (<= 3600 per AWS discipline)
+    pub revision_interval: f64,
+    /// price floor (AWS never goes to 0)
+    pub floor: f64,
+    /// on-demand cap
+    pub cap: f64,
+    /// base (calm-regime) mean price
+    pub base: f64,
+    /// per-revision probability of switching calm <-> contended
+    pub regime_switch_prob: f64,
+    /// contended-regime price multiplier
+    pub contended_mult: f64,
+    /// per-revision probability of a spike to near the cap
+    pub spike_prob: f64,
+    /// OU-style mean reversion strength in [0,1]
+    pub reversion: f64,
+    /// per-revision relative noise std
+    pub noise: f64,
+}
+
+impl Default for TraceGenConfig {
+    fn default() -> Self {
+        TraceGenConfig {
+            horizon: 7.0 * 24.0 * 3600.0,
+            revision_interval: 1800.0,
+            floor: 0.068, // c5.xlarge-ish spot floor ($/h)
+            cap: 0.17,    // c5.xlarge on-demand ($/h)
+            base: 0.085,
+            regime_switch_prob: 0.02,
+            contended_mult: 1.45,
+            spike_prob: 0.004,
+            reversion: 0.15,
+            noise: 0.035,
+        }
+    }
+}
+
+impl SpotTrace {
+    pub fn new(times: Vec<f64>, prices: Vec<f64>) -> Result<Self> {
+        if times.len() != prices.len() || times.is_empty() {
+            bail!(
+                "trace needs equal, non-zero times/prices lengths \
+                 (got {} / {})",
+                times.len(),
+                prices.len()
+            );
+        }
+        if !times.windows(2).all(|w| w[0] < w[1]) {
+            bail!("trace timestamps must be strictly increasing");
+        }
+        if prices.iter().any(|p| !p.is_finite() || *p <= 0.0) {
+            bail!("trace prices must be finite and positive");
+        }
+        Ok(SpotTrace { times, prices })
+    }
+
+    /// Parse a CSV with columns `timestamp,price` (header optional,
+    /// `#` comments allowed) — the shape of `aws ec2
+    /// describe-spot-price-history` output piped through a one-line jq.
+    /// Timestamps are normalised so the trace starts at t=0.
+    pub fn parse_csv(text: &str) -> Result<Self> {
+        let (_, rows) = parse_numeric_csv(text);
+        if rows.is_empty() {
+            bail!("no data rows in trace CSV");
+        }
+        let mut pairs: Vec<(f64, f64)> = rows
+            .iter()
+            .map(|r| {
+                if r.len() < 2 {
+                    bail!("trace row needs >= 2 fields, got {}", r.len())
+                } else {
+                    Ok((r[0], r[1]))
+                }
+            })
+            .collect::<Result<_>>()?;
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pairs.dedup_by(|a, b| a.0 == b.0);
+        let t0 = pairs[0].0;
+        let times: Vec<f64> = pairs.iter().map(|(t, _)| t - t0).collect();
+        let prices: Vec<f64> = pairs.iter().map(|(_, p)| *p).collect();
+        Self::new(times, prices)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = fs::read_to_string(&path).with_context(|| {
+            format!("reading trace {}", path.as_ref().display())
+        })?;
+        Self::parse_csv(&text)
+    }
+
+    /// Price in effect at time `t` (clamped to the trace ends).
+    pub fn price_at(&self, t: f64) -> f64 {
+        if t <= self.times[0] {
+            return self.prices[0];
+        }
+        let i = self.times.partition_point(|&x| x <= t);
+        self.prices[i - 1]
+    }
+
+    pub fn horizon(&self) -> f64 {
+        *self.times.last().unwrap()
+    }
+
+    /// Empirical distribution of prices *weighted by holding time* — the
+    /// right estimate of F for a piecewise-constant path (a price held for
+    /// an hour counts 60x one held for a minute). `resolution` is the
+    /// sampling step in seconds.
+    pub fn empirical_cdf(&self, resolution: f64) -> EmpiricalCdf {
+        assert!(resolution > 0.0);
+        let mut samples = Vec::new();
+        let mut t = 0.0;
+        let end = self.horizon().max(resolution);
+        while t <= end {
+            samples.push(self.price_at(t));
+            t += resolution;
+        }
+        EmpiricalCdf::new(samples)
+    }
+
+    /// Synthetic regime-switching generator (see module docs).
+    pub fn generate(cfg: &TraceGenConfig, rng: &mut Rng) -> Self {
+        let mut times = vec![0.0];
+        let mut prices = Vec::new();
+        let mut level = cfg.base;
+        let mut contended = false;
+        let mut t = 0.0;
+        loop {
+            if rng.bool(cfg.regime_switch_prob) {
+                contended = !contended;
+            }
+            let target = if contended {
+                cfg.base * cfg.contended_mult
+            } else {
+                cfg.base
+            };
+            // mean-reverting multiplicative walk
+            level += cfg.reversion * (target - level);
+            level *= 1.0 + cfg.noise * rng.gaussian();
+            let mut p = level.clamp(cfg.floor, cfg.cap);
+            if rng.bool(cfg.spike_prob) {
+                p = cfg.cap * rng.uniform(0.92, 1.0);
+            }
+            prices.push(p);
+            // next revision (exponential gaps, mean revision_interval)
+            t += rng.exponential(1.0 / cfg.revision_interval);
+            if t >= cfg.horizon {
+                break;
+            }
+            times.push(t);
+        }
+        SpotTrace { times, prices }
+    }
+
+    /// Serialise to the same CSV shape `parse_csv` accepts.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("timestamp,price\n");
+        for (t, p) in self.times.iter().zip(&self.prices) {
+            out.push_str(&format!("{t},{p}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SpotTrace {
+        SpotTrace::new(vec![0.0, 10.0, 20.0], vec![0.5, 0.7, 0.4]).unwrap()
+    }
+
+    #[test]
+    fn price_at_is_piecewise_constant_right_open() {
+        let tr = small();
+        assert_eq!(tr.price_at(-1.0), 0.5);
+        assert_eq!(tr.price_at(0.0), 0.5);
+        assert_eq!(tr.price_at(9.999), 0.5);
+        assert_eq!(tr.price_at(10.0), 0.7);
+        assert_eq!(tr.price_at(19.0), 0.7);
+        assert_eq!(tr.price_at(25.0), 0.4);
+    }
+
+    #[test]
+    fn csv_roundtrip_normalises_t0() {
+        let tr = SpotTrace::parse_csv("timestamp,price\n100,0.5\n110,0.7\n")
+            .unwrap();
+        assert_eq!(tr.times, vec![0.0, 10.0]);
+        assert_eq!(tr.prices, vec![0.5, 0.7]);
+        let again = SpotTrace::parse_csv(&tr.to_csv()).unwrap();
+        assert_eq!(again.times, tr.times);
+    }
+
+    #[test]
+    fn rejects_bad_traces() {
+        assert!(SpotTrace::new(vec![], vec![]).is_err());
+        assert!(SpotTrace::new(vec![0.0, 0.0], vec![1.0, 1.0]).is_err());
+        assert!(SpotTrace::new(vec![0.0, 1.0], vec![1.0, -1.0]).is_err());
+        assert!(SpotTrace::parse_csv("# nothing\n").is_err());
+    }
+
+    #[test]
+    fn generator_respects_bounds_and_horizon() {
+        let cfg = TraceGenConfig::default();
+        let mut rng = Rng::new(42);
+        let tr = SpotTrace::generate(&cfg, &mut rng);
+        assert!(tr.times.len() > 100);
+        assert!(tr.horizon() < cfg.horizon);
+        for &p in &tr.prices {
+            assert!(p >= cfg.floor - 1e-12 && p <= cfg.cap + 1e-12);
+        }
+        // mean revision gap should be near the configured interval
+        let gaps: Vec<f64> =
+            tr.times.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean_gap = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!(
+            (mean_gap - cfg.revision_interval).abs()
+                < 0.15 * cfg.revision_interval,
+            "mean gap {mean_gap}"
+        );
+    }
+
+    #[test]
+    fn generator_visits_both_regimes() {
+        let cfg = TraceGenConfig::default();
+        let mut rng = Rng::new(7);
+        let tr = SpotTrace::generate(&cfg, &mut rng);
+        let lo_frac = tr
+            .prices
+            .iter()
+            .filter(|&&p| p < cfg.base * 1.1)
+            .count() as f64
+            / tr.prices.len() as f64;
+        assert!(lo_frac > 0.2 && lo_frac < 0.98, "lo_frac={lo_frac}");
+    }
+
+    #[test]
+    fn empirical_cdf_weights_by_time() {
+        // price 1.0 held 90s, price 2.0 held 10s -> F(1.5) ~ 0.9
+        let tr =
+            SpotTrace::new(vec![0.0, 90.0], vec![1.0, 2.0]).unwrap();
+        // horizon is 90 (last revision); sample to 90s inclusive
+        let cdf = tr.empirical_cdf(1.0);
+        let f = cdf.cdf(1.5);
+        assert!(f > 0.85 && f <= 1.0, "F(1.5)={f}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Run metrics: time series of (clock, iter, cost, error, accuracy, y)
+//! plus summary extraction used by the figure harnesses.
+
+use crate::util::csv::Table;
+use crate::util::stats::interp;
+
+/// One recorded point along a training run.
+#[derive(Clone, Copy, Debug)]
+pub struct Point {
+    pub clock: f64,
+    pub iter: u64,
+    pub cost: f64,
+    pub error: f64,
+    pub accuracy: f64,
+    pub active: usize,
+}
+
+/// A training-run trajectory (sampled every `stride` iterations).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub points: Vec<Point>,
+}
+
+impl Series {
+    pub fn push(&mut self, p: Point) {
+        self.points.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn last(&self) -> Option<&Point> {
+        self.points.last()
+    }
+
+    /// Cost at which the run first reaches `target_acc` (linear
+    /// interpolation along the trajectory); None if never reached.
+    pub fn cost_at_accuracy(&self, target_acc: f64) -> Option<f64> {
+        let hit = self
+            .points
+            .iter()
+            .position(|p| p.accuracy >= target_acc)?;
+        if hit == 0 {
+            return Some(self.points[0].cost);
+        }
+        let (a, b) = (&self.points[hit - 1], &self.points[hit]);
+        Some(interp(
+            &[a.accuracy, b.accuracy],
+            &[a.cost, b.cost],
+            target_acc,
+        ))
+    }
+
+    /// Clock time at which the run first reaches `target_acc`.
+    pub fn time_at_accuracy(&self, target_acc: f64) -> Option<f64> {
+        let hit = self
+            .points
+            .iter()
+            .position(|p| p.accuracy >= target_acc)?;
+        if hit == 0 {
+            return Some(self.points[0].clock);
+        }
+        let (a, b) = (&self.points[hit - 1], &self.points[hit]);
+        Some(interp(
+            &[a.accuracy, b.accuracy],
+            &[a.clock, b.clock],
+            target_acc,
+        ))
+    }
+
+    /// Cost at which error first drops to `target_err`.
+    pub fn cost_at_error(&self, target_err: f64) -> Option<f64> {
+        let hit = self.points.iter().position(|p| p.error <= target_err)?;
+        Some(self.points[hit].cost)
+    }
+
+    /// Export as a CSV table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "clock", "iter", "cost", "error", "accuracy", "active",
+        ]);
+        for p in &self.points {
+            t.push(vec![
+                p.clock,
+                p.iter as f64,
+                p.cost,
+                p.error,
+                p.accuracy,
+                p.active as f64,
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> Series {
+        let mut s = Series::default();
+        for i in 0..10u64 {
+            s.push(Point {
+                clock: i as f64 * 10.0,
+                iter: i,
+                cost: i as f64 * 2.0,
+                error: 1.0 / (i + 1) as f64,
+                accuracy: i as f64 / 10.0,
+                active: 4,
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn cost_at_accuracy_interpolates() {
+        let s = series();
+        // accuracy 0.45 is halfway between points 4 (0.4) and 5 (0.5):
+        // cost halfway between 8 and 10 = 9
+        assert!((s.cost_at_accuracy(0.45).unwrap() - 9.0).abs() < 1e-9);
+        assert_eq!(s.cost_at_accuracy(0.0).unwrap(), 0.0);
+        assert!(s.cost_at_accuracy(0.95).is_none());
+    }
+
+    #[test]
+    fn time_and_error_lookups() {
+        let s = series();
+        assert!((s.time_at_accuracy(0.45).unwrap() - 45.0).abs() < 1e-9);
+        assert_eq!(s.cost_at_error(0.2).unwrap(), 8.0); // 1/(4+1)=0.2
+        assert!(s.cost_at_error(0.01).is_none());
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let s = series();
+        let t = s.table();
+        assert_eq!(t.rows.len(), 10);
+        assert_eq!(t.column("cost").unwrap()[3], 6.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Preemption models for non-biddable volatile instances (Sec. V):
+//! GCP preemptible VMs / Azure low-priority VMs, where the user controls
+//! only the *provisioned* count n and the platform preempts at will.
+//!
+//! Implements the two Lemma-3 distributions exactly:
+//! * Bernoulli(q): each provisioned worker is independently inactive with
+//!   probability q each iteration, so the active count z ~ Binomial(n, 1-q)
+//!   and the paper's y is z conditioned on z > 0;
+//! * Uniform: y uniform on {1..n}.
+//!
+//! Provides exact `E[1/y]` evaluators (log-space binomial pmf; validated
+//! against the Chao–Strawderman closed form for `E[1/(z+1)]` and against
+//! Monte-Carlo in the tests) plus the Jensen penalty of Remark 1.
+
+use crate::util::rng::Rng;
+use crate::util::{harmonic, ln_binomial};
+
+/// How the active worker count y_j is drawn each iteration.
+#[derive(Clone, Debug)]
+pub enum PreemptionModel {
+    /// No preemption: y_j = n always (on-demand baseline).
+    None,
+    /// Each worker independently inactive w.p. q each iteration
+    /// (Remark 2 / Lemma 3 second case). y_j | y_j > 0.
+    Bernoulli { q: f64 },
+    /// y_j uniform on {1..n} (Lemma 3 first case).
+    Uniform,
+}
+
+impl PreemptionModel {
+    /// Draw the active-worker *subset* out of n provisioned workers.
+    /// May be empty (the scheduler accounts that time as idle).
+    pub fn draw_active(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
+        assert!(n > 0);
+        match self {
+            PreemptionModel::None => (0..n).collect(),
+            PreemptionModel::Bernoulli { q } => (0..n)
+                .filter(|_| !rng.bool(*q))
+                .collect(),
+            PreemptionModel::Uniform => {
+                let y = 1 + rng.below(n as u64) as usize;
+                rng.sample_indices(n, y)
+            }
+        }
+    }
+
+    /// Exact E[1/y_j | y_j > 0] for n provisioned workers.
+    pub fn expected_recip(&self, n: usize) -> f64 {
+        match self {
+            PreemptionModel::None => 1.0 / n as f64,
+            PreemptionModel::Bernoulli { q } => {
+                binomial_expected_recip(n, *q)
+            }
+            PreemptionModel::Uniform => uniform_expected_recip(n),
+        }
+    }
+
+    /// P[y_j = 0] (the dead-time probability per iteration slot).
+    pub fn p_zero(&self, n: usize) -> f64 {
+        match self {
+            PreemptionModel::None => 0.0,
+            PreemptionModel::Bernoulli { q } => q.powi(n as i32),
+            PreemptionModel::Uniform => 0.0,
+        }
+    }
+
+    /// E[y_j | y_j > 0].
+    pub fn expected_active(&self, n: usize) -> f64 {
+        match self {
+            PreemptionModel::None => n as f64,
+            PreemptionModel::Bernoulli { q } => {
+                let p0 = q.powi(n as i32);
+                n as f64 * (1.0 - q) / (1.0 - p0)
+            }
+            PreemptionModel::Uniform => (n as f64 + 1.0) / 2.0,
+        }
+    }
+}
+
+/// Exact E[1/y] for y ~ Binomial(n, 1-q) conditioned on y > 0, evaluated
+/// with log-space pmf terms for stability up to very large n.
+pub fn binomial_expected_recip(n: usize, q: f64) -> f64 {
+    assert!(n > 0);
+    assert!((0.0..1.0).contains(&q), "q must be in [0,1), got {q}");
+    if q == 0.0 {
+        return 1.0 / n as f64;
+    }
+    let a = 1.0 - q; // per-worker active probability
+    let (ln_a, ln_q) = (a.ln(), q.ln());
+    let mut sum = 0.0;
+    for k in 1..=n {
+        let ln_pmf = ln_binomial(n as u64, k as u64)
+            + k as f64 * ln_a
+            + (n - k) as f64 * ln_q;
+        sum += ln_pmf.exp() / k as f64;
+    }
+    let p0 = (n as f64 * ln_q).exp();
+    sum / (1.0 - p0)
+}
+
+/// E[1/(z+1)] for z ~ Binomial(n, 1-q) *unconditioned* — the
+/// Chao–Strawderman (1972) closed form used in the Lemma 3 proof:
+/// (1 - q^{n+1}) / ((n+1)(1-q)).
+pub fn chao_strawderman_recip_plus_one(n: usize, q: f64) -> f64 {
+    assert!((0.0..1.0).contains(&q));
+    (1.0 - q.powi(n as i32 + 1)) / ((n as f64 + 1.0) * (1.0 - q))
+}
+
+/// E[1/y] for y uniform on {1..n}: H_n / n.
+pub fn uniform_expected_recip(n: usize) -> f64 {
+    assert!(n > 0);
+    harmonic(n as u64) / n as f64
+}
+
+/// Remark 1's Jensen penalty: E[1/y] - 1/E[y] >= 0, zero iff y is
+/// deterministic. Quantifies the convergence cost of volatility.
+pub fn jensen_penalty(model: &PreemptionModel, n: usize) -> f64 {
+    model.expected_recip(n) - 1.0 / model.expected_active(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, for_all, Gen};
+
+    #[test]
+    fn no_preemption_is_deterministic() {
+        let m = PreemptionModel::None;
+        assert_eq!(m.expected_recip(8), 1.0 / 8.0);
+        assert_eq!(m.p_zero(8), 0.0);
+        assert_eq!(jensen_penalty(&m, 8), 0.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(m.draw_active(5, &mut rng).len(), 5);
+    }
+
+    #[test]
+    fn bernoulli_recip_matches_monte_carlo() {
+        let n = 8;
+        let q = 0.5;
+        let exact = binomial_expected_recip(n, q);
+        let mut rng = Rng::new(3);
+        let m = PreemptionModel::Bernoulli { q };
+        let mut sum = 0.0;
+        let mut cnt = 0u64;
+        for _ in 0..300_000 {
+            let y = m.draw_active(n, &mut rng).len();
+            if y > 0 {
+                sum += 1.0 / y as f64;
+                cnt += 1;
+            }
+        }
+        let mc = sum / cnt as f64;
+        assert!((mc - exact).abs() < 2e-3, "mc={mc} exact={exact}");
+    }
+
+    #[test]
+    fn bernoulli_recip_validates_against_chao_strawderman() {
+        // E[1/(z+1)] closed form, z ~ Bin(n, 1-q): compare with direct sum
+        for &(n, q) in &[(5usize, 0.3f64), (20, 0.5), (100, 0.8)] {
+            let a = 1.0 - q;
+            let mut direct = 0.0;
+            for k in 0..=n {
+                let ln_pmf = ln_binomial(n as u64, k as u64)
+                    + k as f64 * a.ln()
+                    + (n - k) as f64 * q.ln();
+                direct += ln_pmf.exp() / (k as f64 + 1.0);
+            }
+            let cf = chao_strawderman_recip_plus_one(n, q);
+            assert!((direct - cf).abs() < 1e-10, "n={n} q={q}");
+        }
+    }
+
+    #[test]
+    fn uniform_recip_is_harmonic_over_n() {
+        assert!((uniform_expected_recip(1) - 1.0).abs() < 1e-12);
+        assert!(
+            (uniform_expected_recip(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25) / 4.0)
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn lemma3_uniform_bound() {
+        // E[1/y] <= (ln n + 1)/n <= O(n^{-1/2}) — check the explicit bound
+        for n in 1..200usize {
+            let e = uniform_expected_recip(n);
+            assert!(e <= ((n as f64).ln() + 1.0) / n as f64 + 1e-12);
+            assert!(e <= 2.0 / (n as f64).sqrt());
+        }
+    }
+
+    #[test]
+    fn remark2_recip_increases_with_q() {
+        let n = 10;
+        let mut prev = 0.0;
+        for i in 0..9 {
+            let q = 0.1 * i as f64;
+            let e = binomial_expected_recip(n, q);
+            assert!(e >= prev - 1e-12, "q={q}: {e} < {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn prop_jensen_penalty_nonnegative() {
+        for_all("Jensen penalty >= 0 (Remark 1)", |g: &mut Gen| {
+            let n = g.u64_in(1, 64) as usize;
+            let q = g.f64_in(0.0, 0.95);
+            for m in [
+                PreemptionModel::None,
+                PreemptionModel::Bernoulli { q },
+                PreemptionModel::Uniform,
+            ] {
+                let pen = jensen_penalty(&m, n);
+                if pen < -1e-10 {
+                    return Err(format!("penalty {pen} < 0 for {m:?} n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_expected_recip_decreases_with_n() {
+        for_all("E[1/y] decreasing in n", |g: &mut Gen| {
+            let n = g.u64_in(1, 100) as usize;
+            let q = g.f64_in(0.0, 0.9);
+            let m = PreemptionModel::Bernoulli { q };
+            let a = m.expected_recip(n);
+            let b = m.expected_recip(n + 1);
+            if b <= a + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("E[1/y] rose from {a} to {b} at n={n}, q={q}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_bernoulli_p_zero_and_mean() {
+        for_all("binomial identities", |g: &mut Gen| {
+            let n = g.u64_in(1, 40) as usize;
+            let q = g.f64_in(0.05, 0.95);
+            let m = PreemptionModel::Bernoulli { q };
+            close(m.p_zero(n), q.powi(n as i32), 1e-12, "p_zero")?;
+            // unconditional mean: E[y * 1{y>0}] = n(1-q)
+            let uncond = m.expected_active(n) * (1.0 - m.p_zero(n));
+            close(uncond, n as f64 * (1.0 - q), 1e-9, "unconditional mean")
+        });
+    }
+
+    #[test]
+    fn draw_active_uniform_has_uniform_count() {
+        let m = PreemptionModel::Uniform;
+        let mut rng = Rng::new(17);
+        let n = 6;
+        let mut counts = vec![0u32; n + 1];
+        for _ in 0..60_000 {
+            counts[m.draw_active(n, &mut rng).len()] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        for k in 1..=n {
+            let f = counts[k] as f64 / 60_000.0;
+            assert!((f - 1.0 / n as f64).abs() < 0.01, "k={k} f={f}");
+        }
+    }
+}

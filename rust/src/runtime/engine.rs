@@ -1,0 +1,214 @@
+//! PJRT engine: compile the AOT artifacts and expose typed step calls.
+//!
+//! The interchange is HLO *text* (`HloModuleProto::from_text_file`): see
+//! python/compile/aot.py for why serialized protos are rejected by the
+//! pinned xla_extension. One `PjRtClient` per process; one compiled
+//! executable per (model, kind in {grad, eval, apply}).
+//!
+//! Steps move `theta` and batches as host literals. Gradients are copied
+//! straight into caller-provided buffers (`copy_raw_to`) so the per-step
+//! allocation count is zero after warmup — this matters: the CNN gradient
+//! is 546k floats and the coordinator replays thousands of steps.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::ModelManifest;
+
+/// Process-wide PJRT client handle.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+/// A mini-batch crossing into HLO: CNN takes f32 features, the LM takes
+/// i32 tokens.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchInput<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Outputs of one gradient step.
+#[derive(Clone, Copy, Debug)]
+pub struct GradOutput {
+    pub loss: f32,
+    /// number of correct argmax predictions in the batch
+    pub correct: f32,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtEngine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// One model's executables + shape metadata.
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+    grad: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    apply: xla::PjRtLoadedExecutable,
+}
+
+fn as_bytes<T>(xs: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation for upload
+    unsafe {
+        std::slice::from_raw_parts(
+            xs.as_ptr() as *const u8,
+            std::mem::size_of_val(xs),
+        )
+    }
+}
+
+impl ModelRuntime {
+    /// Compile the model's three artifacts on the engine.
+    pub fn load(engine: &PjrtEngine, manifest: &ModelManifest) -> Result<Self> {
+        let get = |kind: &str| -> Result<xla::PjRtLoadedExecutable> {
+            engine.compile(&manifest.artifacts[kind])
+        };
+        Ok(ModelRuntime {
+            manifest: manifest.clone(),
+            grad: get("grad")?,
+            eval: get("eval")?,
+            apply: get("apply")?,
+        })
+    }
+
+    fn theta_literal(&self, theta: &[f32]) -> Result<xla::Literal> {
+        if theta.len() != self.manifest.d {
+            bail!("theta len {} != d {}", theta.len(), self.manifest.d);
+        }
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[self.manifest.d],
+            as_bytes(theta),
+        )?)
+    }
+
+    fn batch_literals(
+        &self,
+        x: BatchInput<'_>,
+        y: &[i32],
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let in_elems: usize = self.manifest.input_shape.iter().product();
+        let lab_elems: usize = self.manifest.label_shape.iter().product();
+        let xl = match (x, self.manifest.input_dtype.as_str()) {
+            (BatchInput::F32(xs), "f32") => {
+                if xs.len() != in_elems {
+                    bail!("x len {} != {}", xs.len(), in_elems);
+                }
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &self.manifest.input_shape,
+                    as_bytes(xs),
+                )?
+            }
+            (BatchInput::I32(xs), "i32") => {
+                if xs.len() != in_elems {
+                    bail!("x len {} != {}", xs.len(), in_elems);
+                }
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &self.manifest.input_shape,
+                    as_bytes(xs),
+                )?
+            }
+            (got, want) => bail!(
+                "batch dtype mismatch: model wants {want}, got {got:?}"
+            ),
+        };
+        if y.len() != lab_elems {
+            bail!("y len {} != {}", y.len(), lab_elems);
+        }
+        let yl = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &self.manifest.label_shape,
+            as_bytes(y),
+        )?;
+        Ok((xl, yl))
+    }
+
+    /// One worker gradient step: grad(theta, x, y) -> (grad, loss, correct).
+    /// The gradient is written into `grad_out` (len d, caller-allocated).
+    pub fn grad_step(
+        &self,
+        theta: &[f32],
+        x: BatchInput<'_>,
+        y: &[i32],
+        grad_out: &mut [f32],
+    ) -> Result<GradOutput> {
+        if grad_out.len() != self.manifest.d {
+            bail!("grad_out len {} != d {}", grad_out.len(), self.manifest.d);
+        }
+        let tl = self.theta_literal(theta)?;
+        let (xl, yl) = self.batch_literals(x, y)?;
+        let result = self.grad.execute::<xla::Literal>(&[tl, xl, yl])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (g, loss, correct) = tuple.to_tuple3()?;
+        g.copy_raw_to(grad_out)?;
+        Ok(GradOutput {
+            loss: loss.get_first_element::<f32>()?,
+            correct: correct.get_first_element::<f32>()?,
+        })
+    }
+
+    /// Held-out evaluation: eval(theta, x, y) -> (loss, correct).
+    pub fn eval_step(
+        &self,
+        theta: &[f32],
+        x: BatchInput<'_>,
+        y: &[i32],
+    ) -> Result<GradOutput> {
+        let tl = self.theta_literal(theta)?;
+        let (xl, yl) = self.batch_literals(x, y)?;
+        let result = self.eval.execute::<xla::Literal>(&[tl, xl, yl])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (loss, correct) = tuple.to_tuple2()?;
+        Ok(GradOutput {
+            loss: loss.get_first_element::<f32>()?,
+            correct: correct.get_first_element::<f32>()?,
+        })
+    }
+
+    /// Parameter update via the Pallas sgd_update artifact:
+    /// theta <- theta - lr * grad (written back into `theta`).
+    pub fn apply_step(
+        &self,
+        theta: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let tl = self.theta_literal(theta)?;
+        let gl = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[self.manifest.d],
+            as_bytes(grad),
+        )?;
+        let lrl = xla::Literal::scalar(lr);
+        let result = self.apply.execute::<xla::Literal>(&[tl, gl, lrl])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let out = tuple.to_tuple1()?;
+        out.copy_raw_to(theta)?;
+        Ok(())
+    }
+
+    pub fn d(&self) -> usize {
+        self.manifest.d
+    }
+}

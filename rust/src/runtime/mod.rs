@@ -1,0 +1,8 @@
+//! PJRT runtime: load HLO-text artifacts once, execute them from the
+//! coordinator's hot path (the only layer that touches the `xla` crate).
+
+pub mod engine;
+pub mod pool;
+
+pub use engine::{BatchInput, GradOutput, ModelRuntime, PjrtEngine};
+pub use pool::WorkerPool;

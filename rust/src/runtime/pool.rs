@@ -1,0 +1,67 @@
+//! Worker-side gradient execution for the active set of one iteration.
+//!
+//! Deployment note: the paper runs each SGD worker on its own (volatile)
+//! VM. In this single-process reproduction a "worker" is a slot that
+//! executes the same `grad` artifact on its own mini-batch; the pool runs
+//! the active slots and hands each gradient to the aggregation sink.
+//!
+//! Execution is sequential over the active set by default: XLA's CPU
+//! client already fans each matmul out across cores (an intra-op Eigen
+//! pool), so stacking an inter-op thread pool on top mostly adds
+//! contention — measured in `cargo bench --bench hotpath` and recorded in
+//! EXPERIMENTS.md §Perf. The simulated wall-clock (Sec. III-C) is
+//! unaffected either way: iteration *time* comes from the runtime model,
+//! not host time.
+
+use anyhow::Result;
+
+use super::engine::{BatchInput, GradOutput, ModelRuntime};
+
+/// Runs the active workers' gradient steps for one iteration.
+pub struct WorkerPool {
+    /// scratch gradient buffer per worker slot (reused across iterations)
+    scratch: Vec<Vec<f32>>,
+}
+
+impl WorkerPool {
+    pub fn new(max_workers: usize, d: usize) -> Self {
+        WorkerPool {
+            scratch: (0..max_workers).map(|_| vec![0f32; d]).collect(),
+        }
+    }
+
+    pub fn max_workers(&self) -> usize {
+        self.scratch.len()
+    }
+
+    /// Execute grad steps for `batches` (one per active worker); calls
+    /// `sink(worker_idx, grad, stats)` for each. Returns mean stats.
+    pub fn run_iteration<F>(
+        &mut self,
+        rt: &ModelRuntime,
+        theta: &[f32],
+        batches: &[(BatchInput<'_>, &[i32])],
+        mut sink: F,
+    ) -> Result<GradOutput>
+    where
+        F: FnMut(usize, &[f32], GradOutput),
+    {
+        assert!(
+            batches.len() <= self.scratch.len(),
+            "{} active workers > pool capacity {}",
+            batches.len(),
+            self.scratch.len()
+        );
+        let mut loss_sum = 0.0f32;
+        let mut correct_sum = 0.0f32;
+        for (slot, (x, y)) in batches.iter().enumerate() {
+            let grad = &mut self.scratch[slot];
+            let stats = rt.grad_step(theta, *x, y, grad)?;
+            loss_sum += stats.loss;
+            correct_sum += stats.correct;
+            sink(slot, grad, stats);
+        }
+        let k = batches.len().max(1) as f32;
+        Ok(GradOutput { loss: loss_sum / k, correct: correct_sum / k })
+    }
+}

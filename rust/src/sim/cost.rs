@@ -1,0 +1,126 @@
+//! Cost metering: the $ integral of (active workers x price) over time.
+//!
+//! Spot semantics (Sec. IV): while a worker is active it pays the
+//! prevailing *spot price* per unit time; inactive workers pay nothing
+//! (persistent requests queue for free). Preemptible semantics (Sec. V):
+//! active workers pay the platform's fixed price. Both reduce to
+//! `charge(y, price, duration)`.
+
+/// Accumulates cost and time, with conservation checks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostMeter {
+    total_cost: f64,
+    busy_time: f64,
+    idle_time: f64,
+    worker_time: f64,
+}
+
+impl CostMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `y` active workers at `price` for `duration`.
+    pub fn charge(&mut self, y: usize, price: f64, duration: f64) {
+        debug_assert!(price >= 0.0 && duration >= 0.0);
+        self.total_cost += y as f64 * price * duration;
+        self.busy_time += duration;
+        self.worker_time += y as f64 * duration;
+    }
+
+    /// Record an idle (zero-active) wait.
+    pub fn idle(&mut self, duration: f64) {
+        debug_assert!(duration >= 0.0);
+        self.idle_time += duration;
+    }
+
+    pub fn cost(&self) -> f64 {
+        self.total_cost
+    }
+
+    /// Wall-clock = busy + idle.
+    pub fn elapsed(&self) -> f64 {
+        self.busy_time + self.idle_time
+    }
+
+    pub fn busy_time(&self) -> f64 {
+        self.busy_time
+    }
+
+    pub fn idle_time(&self) -> f64 {
+        self.idle_time
+    }
+
+    /// Total worker-seconds paid for.
+    pub fn worker_time(&self) -> f64 {
+        self.worker_time
+    }
+
+    /// Mean price actually paid per worker-second.
+    pub fn mean_price(&self) -> f64 {
+        if self.worker_time == 0.0 {
+            0.0
+        } else {
+            self.total_cost / self.worker_time
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_all, Gen};
+
+    #[test]
+    fn basic_accounting() {
+        let mut m = CostMeter::new();
+        m.charge(4, 0.5, 10.0);
+        m.idle(5.0);
+        m.charge(2, 0.25, 4.0);
+        assert!((m.cost() - (4.0 * 0.5 * 10.0 + 2.0 * 0.25 * 4.0)).abs() < 1e-12);
+        assert_eq!(m.elapsed(), 19.0);
+        assert_eq!(m.idle_time(), 5.0);
+        assert_eq!(m.worker_time(), 48.0);
+        assert!((m.mean_price() - m.cost() / 48.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_everything() {
+        let m = CostMeter::new();
+        assert_eq!(m.cost(), 0.0);
+        assert_eq!(m.elapsed(), 0.0);
+        assert_eq!(m.mean_price(), 0.0);
+    }
+
+    #[test]
+    fn prop_cost_nonnegative_and_additive() {
+        for_all("cost meter additivity", |g: &mut Gen| {
+            let mut m = CostMeter::new();
+            let mut manual = 0.0;
+            let mut time = 0.0;
+            for _ in 0..g.u64_in(1, 20) {
+                let y = g.u64_in(0, 10) as usize;
+                let p = g.f64_in(0.0, 2.0);
+                let dur = g.f64_in(0.0, 100.0);
+                if g.bool() {
+                    m.charge(y, p, dur);
+                    manual += y as f64 * p * dur;
+                    time += dur;
+                } else {
+                    m.idle(dur);
+                    time += dur;
+                }
+            }
+            if m.cost() < -1e-12 {
+                return Err("negative cost".into());
+            }
+            if (m.cost() - manual).abs() > 1e-9 * (1.0 + manual) {
+                return Err(format!("cost {} != {}", m.cost(), manual));
+            }
+            if (m.elapsed() - time).abs() > 1e-9 * (1.0 + time) {
+                return Err("time not conserved".into());
+            }
+            Ok(())
+        });
+    }
+}

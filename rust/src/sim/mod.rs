@@ -1,0 +1,8 @@
+//! Virtual-clock simulation substrate: price sources over time and the
+//! cost meter.
+
+pub mod cost;
+pub mod price_source;
+
+pub use cost::CostMeter;
+pub use price_source::PriceSource;

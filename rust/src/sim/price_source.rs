@@ -1,0 +1,71 @@
+//! Where the scheduler's per-slot spot price comes from.
+//!
+//! * `Iid` re-draws from the distribution each iteration slot (the
+//!   paper's model in Secs. III–IV: prices i.i.d. across iterations, and
+//!   re-drawn every `idle_step` seconds while the job is interrupted);
+//! * `Trace` replays a time-stamped price path (Fig. 4), making prices
+//!   auto-correlated — the robustness case the paper tests;
+//! * `Fixed` is the preemptible-platform case (Sec. V): a stable price
+//!   the whole run.
+
+use crate::market::process::{PriceDist, PriceModel};
+use crate::market::trace::SpotTrace;
+use crate::util::rng::Rng;
+
+pub enum PriceSource {
+    Iid(PriceModel),
+    Trace(SpotTrace),
+    Fixed(f64),
+}
+
+impl PriceSource {
+    /// Price in effect at virtual time `clock`.
+    pub fn price_at(&self, clock: f64, rng: &mut Rng) -> f64 {
+        match self {
+            PriceSource::Iid(m) => m.sample(rng),
+            PriceSource::Trace(t) => t.price_at(clock),
+            PriceSource::Fixed(p) => *p,
+        }
+    }
+
+    /// True when prices move with the clock (trace replay) rather than
+    /// per-draw — affects how long an idle wait should be before
+    /// re-checking.
+    pub fn time_driven(&self) -> bool {
+        matches!(self, PriceSource::Trace(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let s = PriceSource::Fixed(0.3);
+        let mut rng = Rng::new(1);
+        assert_eq!(s.price_at(0.0, &mut rng), 0.3);
+        assert_eq!(s.price_at(1e9, &mut rng), 0.3);
+        assert!(!s.time_driven());
+    }
+
+    #[test]
+    fn trace_follows_clock() {
+        let t =
+            SpotTrace::new(vec![0.0, 100.0], vec![0.5, 0.9]).unwrap();
+        let s = PriceSource::Trace(t);
+        let mut rng = Rng::new(2);
+        assert_eq!(s.price_at(50.0, &mut rng), 0.5);
+        assert_eq!(s.price_at(150.0, &mut rng), 0.9);
+        assert!(s.time_driven());
+    }
+
+    #[test]
+    fn iid_draws_vary() {
+        let s = PriceSource::Iid(PriceModel::uniform_paper());
+        let mut rng = Rng::new(3);
+        let a = s.price_at(0.0, &mut rng);
+        let b = s.price_at(0.0, &mut rng);
+        assert_ne!(a, b);
+    }
+}

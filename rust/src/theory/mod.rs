@@ -1,0 +1,19 @@
+//! The paper's analytical results as executable code.
+//!
+//! * [`bounds`] — Theorem 1's error bound, its inverse (iterations needed
+//!   for a target error), and eq. (17)'s Q(eps);
+//! * [`runtime_model`] — Sec. III-C per-iteration runtime models R(y)
+//!   (exponential stragglers, deterministic);
+//! * [`bids`] — Lemmas 1–2, Theorem 2 (optimal uniform bid), Theorem 3
+//!   (optimal two-group bids), Corollary 1 and the J/b co-optimisation;
+//! * [`workers`] — Lemma 3 + Theorems 4–5: optimal static (J*, n*) and the
+//!   dynamic n_j = ceil(n0 * eta^(j-1)) schedule with the convex eta
+//!   problem (20)–(23).
+
+pub mod bids;
+pub mod bounds;
+pub mod runtime_model;
+pub mod workers;
+
+pub use bounds::{ErrorBound, SgdHyper};
+pub use runtime_model::RuntimeModel;

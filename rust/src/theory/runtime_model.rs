@@ -1,0 +1,115 @@
+//! Sec. III-C runtime models: R(y) = max_{k in active} r_k + Delta.
+//!
+//! With i.i.d. r_k ~ Exp(lambda), E[max of y] = H_y / lambda exactly (the
+//! paper quotes the large-y form log(y)/lambda); Delta is the server's
+//! aggregation/broadcast overhead. The deterministic model drops the
+//! straggler effect (used by Theorem 4's analysis).
+
+use crate::util::harmonic;
+use crate::util::rng::Rng;
+
+/// Per-iteration runtime model.
+#[derive(Clone, Copy, Debug)]
+pub enum RuntimeModel {
+    /// r_k ~ Exp(lambda) i.i.d. across workers and iterations; runtime is
+    /// the max over active workers plus server overhead delta.
+    ExpStragglers { lambda: f64, delta: f64 },
+    /// Every iteration takes exactly `r` regardless of y (Theorem 4).
+    Deterministic { r: f64 },
+}
+
+impl RuntimeModel {
+    /// The paper-flavoured default: mean gradient time 1/lambda = 4 s,
+    /// server overhead 0.5 s (minutes-per-iteration scale is controlled
+    /// by the experiment configs).
+    pub fn paper_default() -> Self {
+        RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 }
+    }
+
+    /// E[R(y)]: expected runtime of an iteration with y active workers.
+    pub fn expected(&self, y: usize) -> f64 {
+        assert!(y > 0, "E[R(y)] undefined for y = 0");
+        match self {
+            RuntimeModel::ExpStragglers { lambda, delta } => {
+                harmonic(y as u64) / lambda + delta
+            }
+            RuntimeModel::Deterministic { r } => *r,
+        }
+    }
+
+    /// Draw one iteration runtime with y active workers.
+    pub fn sample(&self, y: usize, rng: &mut Rng) -> f64 {
+        assert!(y > 0);
+        match self {
+            RuntimeModel::ExpStragglers { lambda, delta } => {
+                let mut mx: f64 = 0.0;
+                for _ in 0..y {
+                    mx = mx.max(rng.exponential(*lambda));
+                }
+                mx + delta
+            }
+            RuntimeModel::Deterministic { r } => *r,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_all, Gen};
+
+    #[test]
+    fn exp_expected_is_harmonic_over_lambda() {
+        let m = RuntimeModel::ExpStragglers { lambda: 0.5, delta: 1.0 };
+        assert!((m.expected(1) - (2.0 + 1.0)).abs() < 1e-12);
+        assert!((m.expected(2) - (1.5 / 0.5 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_mean_matches_expected() {
+        let m = RuntimeModel::paper_default();
+        let mut rng = Rng::new(5);
+        for y in [1usize, 4, 16] {
+            let n = 60_000;
+            let mean: f64 =
+                (0..n).map(|_| m.sample(y, &mut rng)).sum::<f64>()
+                    / n as f64;
+            let want = m.expected(y);
+            assert!(
+                (mean - want).abs() < 0.05 * want,
+                "y={y}: mc={mean} exact={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_ignores_y() {
+        let m = RuntimeModel::Deterministic { r: 3.0 };
+        let mut rng = Rng::new(1);
+        assert_eq!(m.expected(1), 3.0);
+        assert_eq!(m.expected(100), 3.0);
+        assert_eq!(m.sample(7, &mut rng), 3.0);
+    }
+
+    #[test]
+    fn prop_expected_runtime_increases_with_y() {
+        // the straggler effect: more workers => longer synchronous round
+        for_all("E[R(y)] nondecreasing in y", |g: &mut Gen| {
+            let lambda = g.f64_in(0.05, 5.0);
+            let delta = g.f64_in(0.0, 2.0);
+            let m = RuntimeModel::ExpStragglers { lambda, delta };
+            let y = g.u64_in(1, 256) as usize;
+            if m.expected(y + 1) >= m.expected(y) {
+                Ok(())
+            } else {
+                Err(format!("E[R] decreased at y={y}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_workers_rejected() {
+        RuntimeModel::paper_default().expected(0);
+    }
+}

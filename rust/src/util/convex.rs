@@ -1,0 +1,151 @@
+//! 1-D optimisation / root-finding used by the bid and eta solvers.
+//!
+//! The paper's optimisation problems reduce to one-dimensional searches:
+//! Theorem 4 needs the root of the monotone H(J~) = eps, and the dynamic
+//! worker problem (20)-(23) is convex in eta for fixed J, so golden-section
+//! over the feasible interval is exact up to tolerance.
+
+/// Golden-section minimisation of a unimodal `f` on [lo, hi].
+/// Returns (argmin, min). ~1.44 log2((hi-lo)/tol) evaluations.
+pub fn golden_section_min<F: FnMut(f64) -> f64>(
+    mut f: F,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+) -> (f64, f64) {
+    assert!(lo <= hi, "golden_section_min: lo={lo} > hi={hi}");
+    const INVPHI: f64 = 0.618_033_988_749_894_8; // 1/phi
+    const INVPHI2: f64 = 0.381_966_011_250_105_2; // 1/phi^2
+    let (mut a, mut b) = (lo, hi);
+    let mut h = b - a;
+    if h <= tol {
+        let m = (a + b) / 2.0;
+        return (m, f(m));
+    }
+    let mut c = a + INVPHI2 * h;
+    let mut d = a + INVPHI * h;
+    let mut yc = f(c);
+    let mut yd = f(d);
+    while h > tol {
+        if yc < yd {
+            b = d;
+            d = c;
+            yd = yc;
+            h = b - a;
+            c = a + INVPHI2 * h;
+            yc = f(c);
+        } else {
+            a = c;
+            c = d;
+            yc = yd;
+            h = b - a;
+            d = a + INVPHI * h;
+            yd = f(d);
+        }
+    }
+    if yc < yd { (c, yc) } else { (d, yd) }
+}
+
+/// Bisection root of a monotone `f` with f(lo), f(hi) of opposite signs.
+/// Returns None if no sign change on the bracket.
+pub fn bisect_root<F: FnMut(f64) -> f64>(
+    mut f: F,
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+) -> Option<f64> {
+    let mut flo = f(lo);
+    let fhi = f(hi);
+    if flo == 0.0 {
+        return Some(lo);
+    }
+    if fhi == 0.0 {
+        return Some(hi);
+    }
+    if flo.signum() == fhi.signum() {
+        return None;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        let fm = f(mid);
+        if fm == 0.0 || hi - lo < tol {
+            return Some(mid);
+        }
+        if fm.signum() == flo.signum() {
+            lo = mid;
+            flo = fm;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+/// Minimise a unimodal integer function on [lo, hi] by ternary search,
+/// falling back to scan when the interval is small. Returns (argmin, min).
+pub fn ternary_min_int<F: FnMut(i64) -> f64>(
+    mut f: F,
+    mut lo: i64,
+    mut hi: i64,
+) -> (i64, f64) {
+    assert!(lo <= hi);
+    while hi - lo > 8 {
+        let m1 = lo + (hi - lo) / 3;
+        let m2 = hi - (hi - lo) / 3;
+        if f(m1) <= f(m2) {
+            hi = m2 - 1;
+        } else {
+            lo = m1 + 1;
+        }
+    }
+    let mut best = (lo, f(lo));
+    for x in (lo + 1)..=hi {
+        let y = f(x);
+        if y < best.1 {
+            best = (x, y);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let (x, y) = golden_section_min(|x| (x - 1.7) * (x - 1.7) + 3.0, -10.0, 10.0, 1e-9);
+        assert!((x - 1.7).abs() < 1e-6);
+        assert!((y - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn golden_handles_boundary_min() {
+        let (x, _) = golden_section_min(|x| x, 2.0, 5.0, 1e-9);
+        assert!((x - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bisect_finds_root() {
+        let r = bisect_root(|x| x * x - 2.0, 0.0, 2.0, 1e-12).unwrap();
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bisect_rejects_no_sign_change() {
+        assert!(bisect_root(|x| x * x + 1.0, -1.0, 1.0, 1e-9).is_none());
+    }
+
+    #[test]
+    fn ternary_int_min() {
+        let (x, y) = ternary_min_int(|x| ((x - 37) * (x - 37)) as f64, 0, 1000);
+        assert_eq!(x, 37);
+        assert_eq!(y, 0.0);
+    }
+
+    #[test]
+    fn ternary_int_min_small_range() {
+        let (x, _) = ternary_min_int(|x| (x as f64 - 2.2).abs(), 0, 4);
+        assert_eq!(x, 2);
+    }
+}

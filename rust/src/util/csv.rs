@@ -1,0 +1,143 @@
+//! Minimal CSV reading/writing (figure series + trace files).
+//!
+//! The subset we need: comma separation, optional header row, numeric
+//! fields, `#`-prefixed comment lines. No quoting — none of our data
+//! contains commas.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A named column-oriented table written as CSV.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Self {
+        Table {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != {} columns",
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let mut first = true;
+            for v in row {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                let _ = write!(out, "{v}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Extract one column as a Vec.
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.col(name)?;
+        Some(self.rows.iter().map(|r| r[i]).collect())
+    }
+}
+
+/// Parse numeric CSV text (optionally with one header row; `#` comments and
+/// blank lines skipped). Non-numeric header is auto-detected.
+pub fn parse_numeric_csv(text: &str) -> (Vec<String>, Vec<Vec<f64>>) {
+    let mut header: Vec<String> = Vec::new();
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Result<Vec<f64>, _> =
+            fields.iter().map(|f| f.parse::<f64>()).collect();
+        match parsed {
+            Ok(row) => rows.push(row),
+            Err(_) if header.is_empty() && rows.is_empty() => {
+                header = fields.iter().map(|s| s.to_string()).collect();
+            }
+            Err(_) => { /* skip malformed line */ }
+        }
+    }
+    (header, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(&["x", "y"]);
+        t.push(vec![1.0, 2.5]);
+        t.push(vec![3.0, -4.0]);
+        let (hdr, rows) = parse_numeric_csv(&t.to_csv());
+        assert_eq!(hdr, vec!["x", "y"]);
+        assert_eq!(rows, vec![vec![1.0, 2.5], vec![3.0, -4.0]]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let (h, rows) =
+            parse_numeric_csv("# hi\n\nt,price\n0,0.5\n# mid\n1,0.7\n");
+        assert_eq!(h, vec!["t", "price"]);
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn headerless_numeric() {
+        let (h, rows) = parse_numeric_csv("1,2\n3,4\n");
+        assert!(h.is_empty());
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_wrong_width_panics() {
+        let mut t = Table::new(&["a"]);
+        t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn column_access() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec![1.0, 10.0]);
+        t.push(vec![2.0, 20.0]);
+        assert_eq!(t.column("b").unwrap(), vec![10.0, 20.0]);
+        assert!(t.column("zzz").is_none());
+    }
+}

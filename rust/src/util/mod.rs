@@ -1,0 +1,97 @@
+//! Zero-dependency numeric and testing substrate.
+//!
+//! Everything here exists because the build is fully offline: the only
+//! crates available are `xla` and `anyhow`, so the RNG, statistics,
+//! special functions, 1-D optimizers, CSV writer and property-test runner
+//! are implemented from scratch (and unit-tested against closed forms).
+
+pub mod convex;
+pub mod csv;
+pub mod erf;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Round `x` up to the next multiple of `m`.
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// `H_n = sum_{k=1}^{n} 1/k` (exact for small n, Euler–Mascheroni
+/// expansion beyond 1e6 — error < 1e-12 there).
+pub fn harmonic(n: u64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    if n <= 1_000_000 {
+        (1..=n).map(|k| 1.0 / k as f64).sum()
+    } else {
+        const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+        let x = n as f64;
+        x.ln() + EULER_GAMMA + 1.0 / (2.0 * x) - 1.0 / (12.0 * x * x)
+    }
+}
+
+/// ln C(n, k), numerically stable via ln-gamma.
+pub fn ln_binomial(n: u64, k: u64) -> f64 {
+    debug_assert!(k <= n);
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// ln(n!) via Stirling for large n, exact accumulation otherwise.
+pub fn ln_factorial(n: u64) -> f64 {
+    if n < 256 {
+        (2..=n).map(|k| (k as f64).ln()).sum()
+    } else {
+        // Stirling series: ln n! = n ln n - n + 0.5 ln(2 pi n) + 1/(12n) ...
+        let x = n as f64;
+        x * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI * x).ln()
+            + 1.0 / (12.0 * x)
+            - 1.0 / (360.0 * x * x * x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn harmonic_small_values() {
+        assert_eq!(harmonic(0), 0.0);
+        assert_eq!(harmonic(1), 1.0);
+        assert!((harmonic(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonic_asymptotic_consistency() {
+        // exact sum and expansion agree at the 1e6 switch-over point
+        let exact: f64 = (1..=1_000_000u64).map(|k| 1.0 / k as f64).sum();
+        let x = 1_000_001f64;
+        let approx = x.ln() + 0.577_215_664_901_532_9 + 1.0 / (2.0 * x);
+        assert!((exact + 1.0 / x - approx).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_binomial_exact_small() {
+        // C(10, 3) = 120
+        assert!((ln_binomial(10, 3) - 120f64.ln()).abs() < 1e-10);
+        assert!((ln_binomial(5, 0)).abs() < 1e-12);
+        assert!((ln_binomial(5, 5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_factorial_stirling_matches_exact() {
+        // check continuity at the 256 switch-over
+        let exact: f64 = (2..=300u64).map(|k| (k as f64).ln()).sum();
+        assert!((ln_factorial(300) - exact).abs() < 1e-8);
+    }
+}

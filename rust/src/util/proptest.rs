@@ -1,0 +1,111 @@
+//! Mini property-testing runner (proptest is unavailable offline).
+//!
+//! Properties are run over `CASES` seeded random cases; on failure the
+//! panic message carries the failing case number and the *replay seed*
+//! so the case reproduces deterministically:
+//!
+//! ```text
+//! property failed at case 17 (replay with seed 0xDEADBEEF): ...
+//! ```
+//!
+//! There is no shrinking: generators are encouraged to produce small
+//! values with decent probability instead (see `Gen::small_u64`).
+
+use super::rng::Rng;
+
+pub const CASES: u32 = 256;
+
+/// Value generators driven by the shared RNG.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Gen<'a> {
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Biased towards small values (half the mass below 16).
+    pub fn small_u64(&mut self, max: u64) -> u64 {
+        if self.rng.bool(0.5) {
+            self.u64_in(0, max.min(16))
+        } else {
+            self.u64_in(0, max)
+        }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` for [`CASES`] seeded cases. `prop` returns `Err(msg)` (or
+/// panics) to signal failure.
+pub fn for_all<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..CASES {
+        // derive a per-case seed so failures replay independently
+        let seed = 0x9E37_79B9u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(0xB5F3_C6A7);
+        let mut rng = Rng::new(seed);
+        let mut g = Gen { rng: &mut rng };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: check a close-to relation with context.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        for_all("trivial", |g| {
+            n += 1;
+            let x = g.f64_in(0.0, 1.0);
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(n, CASES);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with seed")]
+    fn failing_property_reports_seed() {
+        for_all("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_accepts_and_rejects() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+}

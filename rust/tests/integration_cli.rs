@@ -1,0 +1,96 @@
+//! CLI smoke tests: drive the leader binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_volatile-sgd"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin()
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn volatile-sgd");
+    assert!(
+        out.status.success(),
+        "{args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = run_ok(&["help"]);
+    for cmd in ["train", "simulate", "optimal-bid", "plan-workers"] {
+        assert!(out.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown"));
+}
+
+#[test]
+fn optimal_bid_prints_theorems() {
+    let out = run_ok(&[
+        "optimal-bid",
+        "--market",
+        "uniform",
+        "--n",
+        "8",
+        "--n1",
+        "4",
+        "--eps",
+        "0.35",
+        "--theta",
+        "150000",
+    ]);
+    assert!(out.contains("Theorem 2"), "missing Theorem 2 line:\n{out}");
+    assert!(out.contains("Theorem 3"), "missing Theorem 3 line:\n{out}");
+    assert!(out.contains("saving"), "missing saving line:\n{out}");
+}
+
+#[test]
+fn plan_workers_prints_both_theorems() {
+    let out = run_ok(&["plan-workers", "--eps", "0.1"]);
+    assert!(out.contains("Theorem 4"));
+    assert!(out.contains("Theorem 5"));
+}
+
+#[test]
+fn simulate_one_bid_writes_series() {
+    let out = run_ok(&["simulate", "--strategy", "one_bid"]);
+    assert!(out.contains("one_bid"), "{out}");
+    assert!(out.contains("series ->"));
+    let csv = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("out/simulate_one_bid.csv");
+    assert!(csv.exists());
+    let text = std::fs::read_to_string(csv).unwrap();
+    assert!(text.starts_with("clock,iter,cost,error,accuracy,active"));
+    assert!(text.lines().count() > 10);
+}
+
+#[test]
+fn info_requires_or_reads_artifacts() {
+    let have = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.txt")
+        .exists();
+    if have {
+        let out = run_ok(&["info"]);
+        assert!(out.contains("model cnn"));
+        assert!(out.contains("PJRT platform"));
+    } else {
+        let out = bin()
+            .arg("info")
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .unwrap();
+        assert!(!out.status.success());
+    }
+}

@@ -1,0 +1,199 @@
+//! PJRT integration: real artifact execution. These tests require
+//! `make artifacts` to have run; they are skipped (pass vacuously, with a
+//! note) when artifacts/ is absent so `cargo test` works on a fresh
+//! checkout.
+
+use volatile_sgd::coordinator::backend::{RealBackend, TrainingBackend};
+use volatile_sgd::data::CifarLike;
+use volatile_sgd::manifest::Manifest;
+use volatile_sgd::runtime::{BatchInput, ModelRuntime, PjrtEngine};
+use volatile_sgd::util::rng::Rng;
+
+fn artifacts() -> Option<Manifest> {
+    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(m) => m,
+            None => {
+                eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn cnn_batch(
+    mm: &volatile_sgd::manifest::ModelManifest,
+    seed: u64,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let data = CifarLike::generate(64, 1.0, &mut rng);
+    let idx: Vec<usize> = (0..mm.batch()).collect();
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    data.gather(&idx, &mut xs, &mut ys);
+    (xs, ys)
+}
+
+#[test]
+fn grad_and_eval_agree_on_loss() {
+    let manifest = require_artifacts!();
+    let engine = PjrtEngine::cpu().unwrap();
+    let mm = manifest.model("cnn").unwrap();
+    let rt = ModelRuntime::load(&engine, mm).unwrap();
+    let theta = mm.load_theta0().unwrap();
+    let (xs, ys) = cnn_batch(mm, 1);
+    let mut grad = vec![0f32; mm.d];
+    let g = rt
+        .grad_step(&theta, BatchInput::F32(&xs), &ys, &mut grad)
+        .unwrap();
+    let e = rt.eval_step(&theta, BatchInput::F32(&xs), &ys).unwrap();
+    assert!((g.loss - e.loss).abs() < 1e-4, "{} vs {}", g.loss, e.loss);
+    assert_eq!(g.correct, e.correct);
+    // gradient is non-trivial and finite
+    let norm: f64 = grad.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    assert!(norm.is_finite() && norm > 1e-6, "grad norm {norm}");
+}
+
+#[test]
+fn apply_artifact_matches_native_update() {
+    let manifest = require_artifacts!();
+    let engine = PjrtEngine::cpu().unwrap();
+    let mm = manifest.model("cnn").unwrap();
+    let rt = ModelRuntime::load(&engine, mm).unwrap();
+    let theta0 = mm.load_theta0().unwrap();
+    let (xs, ys) = cnn_batch(mm, 2);
+    let mut grad = vec![0f32; mm.d];
+    rt.grad_step(&theta0, BatchInput::F32(&xs), &ys, &mut grad)
+        .unwrap();
+
+    // pallas sgd_update artifact
+    let mut via_artifact = theta0.clone();
+    rt.apply_step(&mut via_artifact, &grad, 0.05).unwrap();
+    // native fused update
+    let mut acc =
+        volatile_sgd::coordinator::GradAccumulator::new(mm.d);
+    acc.add(&grad);
+    let mut via_native = theta0.clone();
+    acc.apply_into(&mut via_native, 0.05);
+
+    let max_diff = via_artifact
+        .iter()
+        .zip(&via_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-5, "pallas vs native update diff {max_diff}");
+}
+
+#[test]
+fn gradient_descends_the_loss() {
+    // one SGD step on a fixed batch must reduce that batch's loss
+    let manifest = require_artifacts!();
+    let engine = PjrtEngine::cpu().unwrap();
+    let mm = manifest.model("cnn").unwrap();
+    let rt = ModelRuntime::load(&engine, mm).unwrap();
+    let mut theta = mm.load_theta0().unwrap();
+    let (xs, ys) = cnn_batch(mm, 3);
+    let mut grad = vec![0f32; mm.d];
+    let before = rt
+        .grad_step(&theta, BatchInput::F32(&xs), &ys, &mut grad)
+        .unwrap();
+    rt.apply_step(&mut theta, &grad, 0.001).unwrap();
+    let after = rt.eval_step(&theta, BatchInput::F32(&xs), &ys).unwrap();
+    assert!(
+        after.loss < before.loss,
+        "loss should drop: {} -> {}",
+        before.loss,
+        after.loss
+    );
+}
+
+#[test]
+fn real_training_loss_decreases_with_volatile_workers() {
+    let manifest = require_artifacts!();
+    let engine = PjrtEngine::cpu().unwrap();
+    let mm = manifest.model("cnn").unwrap();
+    let rt = ModelRuntime::load(&engine, mm).unwrap();
+    let theta0 = mm.load_theta0().unwrap();
+    let mut rng = Rng::new(4);
+    let data = CifarLike::generate(1_024, 1.0, &mut rng.split(1));
+    let mut backend =
+        RealBackend::new(&rt, theta0, 0.05, data, 4, &mut rng);
+    let mut first = f64::NAN;
+    let mut rng2 = Rng::new(5);
+    for i in 0..40 {
+        // volatile worker count: alternate 1..4 active
+        let y = 1 + (i % 4);
+        let s = backend.step(y, &mut rng2).unwrap();
+        if first.is_nan() {
+            first = s.error;
+        }
+    }
+    let last = backend.error();
+    assert!(
+        last < first * 0.7,
+        "EMA loss should drop >30%: {first} -> {last}"
+    );
+}
+
+#[test]
+fn lm_artifacts_execute() {
+    let manifest = require_artifacts!();
+    let Ok(mm) = manifest.model("lm_tiny") else {
+        eprintln!("skipping: lm_tiny not exported");
+        return;
+    };
+    let engine = PjrtEngine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, mm).unwrap();
+    let theta = mm.load_theta0().unwrap();
+    let mut rng = Rng::new(6);
+    let corpus = volatile_sgd::data::MarkovCorpus::generate(
+        10_000, 256, 4, &mut rng,
+    );
+    let (b, t) = (mm.input_shape[0], mm.input_shape[1]);
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    corpus.batch(b, t, &mut rng, &mut xs, &mut ys);
+    let mut grad = vec![0f32; mm.d];
+    let s = rt
+        .grad_step(&theta, BatchInput::I32(&xs), &ys, &mut grad)
+        .unwrap();
+    // fresh init: loss ~ ln(256)
+    assert!((s.loss - 5.545).abs() < 0.5, "lm init loss {}", s.loss);
+    assert!(grad.iter().any(|&g| g != 0.0));
+}
+
+#[test]
+fn batch_shape_mismatches_are_rejected() {
+    let manifest = require_artifacts!();
+    let engine = PjrtEngine::cpu().unwrap();
+    let mm = manifest.model("cnn").unwrap();
+    let rt = ModelRuntime::load(&engine, mm).unwrap();
+    let theta = mm.load_theta0().unwrap();
+    let mut grad = vec![0f32; mm.d];
+    // wrong x length
+    assert!(rt
+        .grad_step(&theta, BatchInput::F32(&[0.0; 7]), &[0; 32], &mut grad)
+        .is_err());
+    // wrong dtype
+    let (xs, _) = cnn_batch(mm, 7);
+    let _ = xs;
+    assert!(rt
+        .grad_step(
+            &theta,
+            BatchInput::I32(&vec![0i32; 32 * 3072]),
+            &[0; 32],
+            &mut grad
+        )
+        .is_err());
+    // wrong theta length
+    assert!(rt
+        .grad_step(
+            &theta[..100],
+            BatchInput::F32(&vec![0f32; 32 * 3072]),
+            &[0; 32],
+            &mut grad
+        )
+        .is_err());
+}

@@ -1,0 +1,226 @@
+//! Cross-module integration: Monte-Carlo simulation vs the closed-form
+//! theory (Lemmas 1–2, Theorem 2/3 predictions), and end-to-end strategy
+//! orderings on the virtual-clock scheduler.
+
+use volatile_sgd::coordinator::backend::SyntheticBackend;
+use volatile_sgd::coordinator::scheduler::{Scheduler, SchedulerParams};
+use volatile_sgd::coordinator::strategy::{FixedBids, StaticWorkers};
+use volatile_sgd::market::{BidVector, PriceModel};
+use volatile_sgd::preempt::PreemptionModel;
+use volatile_sgd::sim::PriceSource;
+use volatile_sgd::theory::bids::BidProblem;
+use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+use volatile_sgd::theory::runtime_model::RuntimeModel;
+use volatile_sgd::util::rng::Rng;
+use volatile_sgd::util::stats::OnlineStats;
+
+fn bound() -> ErrorBound {
+    ErrorBound::new(SgdHyper::paper_cnn())
+}
+
+fn problem(theta: f64) -> BidProblem {
+    BidProblem {
+        bound: bound(),
+        price: PriceModel::uniform_paper(),
+        runtime: RuntimeModel::Deterministic { r: 10.0 },
+        n: 8,
+        eps: 0.35,
+        theta,
+    }
+}
+
+/// Run one uniform-bid simulation and return (cost, elapsed).
+fn run_uniform(b: f64, j: u64, seed: u64) -> (f64, f64) {
+    let mut s = FixedBids::new("mc", BidVector::uniform(8, b), j);
+    let mut backend = SyntheticBackend::new(bound());
+    let mut rng = Rng::new(seed);
+    let params = SchedulerParams {
+        runtime: RuntimeModel::Deterministic { r: 10.0 },
+        idle_step: 10.0, // slot length == iteration length: the i.i.d.
+        // price-per-slot model of Lemma 1
+        theta_cap: f64::INFINITY,
+        stride: 1_000,
+        max_slots: 100_000_000,
+        ..Default::default()
+    };
+    let r = Scheduler::new(params)
+        .run(
+            &mut s,
+            &mut backend,
+            &PriceSource::Iid(PriceModel::uniform_paper()),
+            &mut rng,
+        )
+        .unwrap();
+    (r.cost, r.elapsed)
+}
+
+#[test]
+fn monte_carlo_matches_lemma1_and_lemma2() {
+    // Lemma 1: E[tau] = J E[R] / F(b); Lemma 2: E[C] closed form.
+    // With idle_step == iteration runtime, the discrete-slot simulation
+    // is exactly the paper's geometric-waiting model.
+    let pb = problem(f64::INFINITY);
+    let j = 2_000u64;
+    for &b in &[0.4, 0.6, 0.9] {
+        let mut cost = OnlineStats::new();
+        let mut time = OnlineStats::new();
+        for seed in 0..30 {
+            let (c, t) = run_uniform(b, j, seed);
+            cost.push(c);
+            time.push(t);
+        }
+        let want_t = pb.expected_time_uniform(j, b);
+        let want_c = pb.expected_cost_uniform(j, b);
+        assert!(
+            (time.mean() - want_t).abs() < 0.03 * want_t,
+            "b={b}: E[tau] mc={} formula={}",
+            time.mean(),
+            want_t
+        );
+        assert!(
+            (cost.mean() - want_c).abs() < 0.03 * want_c,
+            "b={b}: E[C] mc={} formula={}",
+            cost.mean(),
+            want_c
+        );
+    }
+}
+
+#[test]
+fn monte_carlo_two_bid_recip_matches_formula() {
+    // E[1/y | y>0] under two bids == the Theorem-3 expression
+    let pb = problem(f64::INFINITY);
+    let (b1, b2, n1) = (0.8, 0.4, 4usize);
+    let bids = BidVector::two_group(8, n1, b1, b2);
+    let mut rng = Rng::new(5);
+    let price = PriceModel::uniform_paper();
+    let mut sum = 0.0;
+    let mut cnt = 0u64;
+    use volatile_sgd::market::process::PriceDist;
+    for _ in 0..200_000 {
+        let p = price.sample(&mut rng);
+        let y = bids.active_count(p);
+        if y > 0 {
+            sum += 1.0 / y as f64;
+            cnt += 1;
+        }
+    }
+    let mc = sum / cnt as f64;
+    let want = pb.expected_recip_two(n1, b1, b2);
+    assert!((mc - want).abs() < 2e-3, "mc={mc} want={want}");
+}
+
+#[test]
+fn theorem2_bid_is_cheapest_feasible_in_simulation() {
+    // simulate the Theorem-2 bid against over- and under-bidding
+    let pb = problem(300_000.0);
+    let plan = pb.optimal_one_bid().unwrap();
+    let avg = |b: f64| -> (f64, f64) {
+        let mut c = OnlineStats::new();
+        let mut t = OnlineStats::new();
+        for seed in 100..120 {
+            let (cc, tt) = run_uniform(b, plan.j, seed);
+            c.push(cc);
+            t.push(tt);
+        }
+        (c.mean(), t.mean())
+    };
+    let (c_star, t_star) = avg(plan.b);
+    // meets the deadline on average
+    assert!(t_star <= pb.theta * 1.03, "t={t_star} theta={}", pb.theta);
+    // higher bid: faster but costlier
+    let (c_hi, t_hi) = avg((plan.b + 0.15).min(1.0));
+    assert!(t_hi <= t_star * 1.01);
+    assert!(c_hi >= c_star * 0.99, "c_hi={c_hi} c*={c_star}");
+    // lower bid: cheaper but blows the deadline
+    let (c_lo, t_lo) = avg(plan.b - 0.1);
+    assert!(c_lo <= c_star * 1.01);
+    assert!(t_lo > pb.theta, "lower bid should miss the deadline");
+}
+
+#[test]
+fn preemption_error_worse_than_on_demand_at_same_mean_workers() {
+    // Remark 1/2 end-to-end: Bernoulli preemption with E[y] = 4 gives
+    // worse final error than 4 dedicated workers for the same J.
+    let j = 5_000u64;
+    let run = |model: PreemptionModel, n: usize, seed: u64| -> f64 {
+        let mut s = StaticWorkers { n, j, model, unit_price: 0.1 };
+        let mut backend = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(seed);
+        let r = Scheduler::new(SchedulerParams {
+            runtime: RuntimeModel::Deterministic { r: 10.0 },
+            ..Default::default()
+        })
+        .run(&mut s, &mut backend, &PriceSource::Fixed(0.1), &mut rng)
+        .unwrap();
+        r.final_error
+    };
+    let mut preempted = OnlineStats::new();
+    for seed in 0..10 {
+        preempted.push(run(
+            PreemptionModel::Bernoulli { q: 0.5 },
+            8,
+            seed,
+        ));
+    }
+    let dedicated = run(PreemptionModel::None, 4, 999);
+    assert!(
+        preempted.mean() > dedicated,
+        "preempted {} should exceed dedicated {}",
+        preempted.mean(),
+        dedicated
+    );
+}
+
+#[test]
+fn trace_replay_is_deterministic_given_seed() {
+    use volatile_sgd::exp::fig4;
+    let trace = fig4::default_trace(3);
+    let p = fig4::Fig4Params::default();
+    let a = fig4::run(&trace, &p).unwrap();
+    let b = fig4::run(&trace, &p).unwrap();
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.total_cost, y.total_cost);
+        assert_eq!(x.total_time, y.total_time);
+    }
+}
+
+#[test]
+fn checkpoint_restore_resumes_identically() {
+    use volatile_sgd::coordinator::ParameterServer;
+    // the same gradient stream applied after a restore gives the same theta
+    let mut ps = ParameterServer::new(vec![0.5f32; 64], 0.1);
+    let mut rng = Rng::new(11);
+    let mut grads = Vec::new();
+    for _ in 0..10 {
+        let g: Vec<f32> =
+            (0..64).map(|_| rng.gaussian() as f32).collect();
+        grads.push(g);
+    }
+    for g in &grads[..5] {
+        ps.begin_iteration();
+        ps.push_gradient(g);
+        ps.finish_iteration();
+    }
+    let ck = ps.checkpoint();
+    let replay = |start: &volatile_sgd::coordinator::server::Checkpoint| {
+        let mut ps2 = ParameterServer::new(vec![0.0; 64], 0.1);
+        ps2.restore(start);
+        for g in &grads[5..] {
+            ps2.begin_iteration();
+            ps2.push_gradient(g);
+            ps2.finish_iteration();
+        }
+        ps2.theta().to_vec()
+    };
+    let a = replay(&ck);
+    let b = replay(&ck);
+    assert_eq!(a, b);
+    // and matches continuing without the restore
+    for g in &grads[5..] {
+        ps.begin_iteration();
+        ps.push_gradient(g);
+        ps.finish_iteration();
+    }
+    assert_eq!(ps.theta(), a.as_slice());
+}
