@@ -60,3 +60,16 @@ pub fn fmt_ns(ns: f64) -> String {
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
+
+/// Worker count for pooled benches: `VOLATILE_SGD_THREADS` if set, else
+/// the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("VOLATILE_SGD_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}

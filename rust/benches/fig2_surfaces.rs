@@ -10,9 +10,10 @@ mod bench_util;
 use volatile_sgd::exp::fig2;
 
 fn main() {
-    println!("=== Fig. 1 + Fig. 2: analytic surfaces ===");
+    let threads = bench_util::default_threads();
+    println!("=== Fig. 1 + Fig. 2: analytic surfaces (threads={threads}) ===");
     let t0 = std::time::Instant::now();
-    let out = fig2::run(5_000, 8, 4).expect("fig2 harness");
+    let out = fig2::run(5_000, 8, 4, threads).expect("fig2 harness");
     out.surfaces
         .write("out/fig2_surfaces.csv")
         .expect("write fig2 csv");
@@ -27,9 +28,20 @@ fn main() {
     );
     assert!(out.monotone_ok, "Fig. 2 monotonicities must hold");
 
-    // micro: surface evaluation rate (the fig-sweep inner loop)
-    bench_util::bench("fig2_full_grid_25x25", 1, 5, || {
-        bench_util::black_box(fig2::run(2_000, 8, 4).unwrap());
+    // micro: surface evaluation rate (the fig-sweep inner loop), serial
+    // vs pooled — the pool must never change the output
+    let serial = fig2::run(2_000, 8, 4, 1).unwrap();
+    let pooled = fig2::run(2_000, 8, 4, threads).unwrap();
+    assert_eq!(
+        serial.surfaces.to_csv(),
+        pooled.surfaces.to_csv(),
+        "threaded surfaces must be identical"
+    );
+    bench_util::bench("fig2_full_grid_25x25_serial", 1, 5, || {
+        bench_util::black_box(fig2::run(2_000, 8, 4, 1).unwrap());
+    });
+    bench_util::bench("fig2_full_grid_25x25_pooled", 1, 5, || {
+        bench_util::black_box(fig2::run(2_000, 8, 4, threads).unwrap());
     });
     println!("CSV -> out/fig2_surfaces.csv, out/fig1_series.csv");
 }

@@ -3,18 +3,23 @@
 //! iterations on the Theorem-1 backend. Prints the paper-style summary
 //! (cost overhead at target accuracy vs the Dynamic strategy; the paper
 //! reports +134%/+82%/+46% under uniform and +103%/+101%/+43% under
-//! Gaussian) and writes all trajectories to out/.
+//! Gaussian), writes all trajectories to out/, and measures the sweep
+//! pool's speedup on a replicated Monte-Carlo grid.
 //!
 //! Run: `cargo bench --bench fig3_synthetic_bids`
 
 mod bench_util;
 
-use volatile_sgd::exp::fig3::{self, Fig3Params};
+use volatile_sgd::exp::fig3::{self, Fig3Params, Fig3Sweep};
 use volatile_sgd::market::PriceModel;
+use volatile_sgd::sweep::{run_sweep, SweepConfig};
 
 fn main() {
-    println!("=== Fig. 3: bidding strategies, synthetic prices ===");
-    let p = Fig3Params::default();
+    let threads = bench_util::default_threads();
+    println!(
+        "=== Fig. 3: bidding strategies, synthetic prices (threads={threads}) ==="
+    );
+    let p = Fig3Params { threads, ..Default::default() };
     let mut paper = std::collections::HashMap::new();
     paper.insert("uniform", [134.0, 82.0, 46.0]);
     paper.insert("gaussian", [103.0, 101.0, 43.0]);
@@ -75,4 +80,31 @@ fn main() {
             fig3::run(PriceModel::uniform_paper(), "uniform", &p).unwrap(),
         );
     });
+
+    // ---- sweep-pool scaling: the replicated Monte-Carlo grid at 1 vs N
+    // threads must produce the identical digest, and the wall-clock gap
+    // is the headline (the acceptance bar is >= 3x on 8 cores)
+    let replicates = 8;
+    let sweep = Fig3Sweep::paper(Fig3Params::default());
+    let run_at = |threads: usize| {
+        let cfg = SweepConfig { replicates, seed: 2020, threads };
+        let t0 = std::time::Instant::now();
+        let r = run_sweep(&sweep, &cfg).expect("fig3 sweep");
+        (r, t0.elapsed().as_secs_f64())
+    };
+    let (serial, t1) = run_at(1);
+    let (pooled, tn) = run_at(threads);
+    assert_eq!(
+        serial.digest(),
+        pooled.digest(),
+        "sweep results must not depend on thread count"
+    );
+    println!(
+        "sweep scaling: {} jobs  1 thread: {t1:.2}s ({:.1} jobs/s)  \
+         {threads} threads: {tn:.2}s ({:.1} jobs/s)  speedup {:.2}x",
+        serial.throughput.jobs,
+        serial.throughput.jobs_per_sec(),
+        pooled.throughput.jobs_per_sec(),
+        t1 / tn.max(1e-9)
+    );
 }

@@ -3,6 +3,10 @@
 //! (b) static n = 1, J = 10^4 vs the Theorem-5 dynamic schedule
 //!     (eta = 1.0004, chi = 1).
 //!
+//! All provisioning runs execute as parallel pool jobs; the (n x q)
+//! Monte-Carlo grid at the end exercises the sweep harness with cached
+//! E[1/y] tables.
+//!
 //! Run: `cargo bench --bench fig5_workers`
 
 mod bench_util;
@@ -11,9 +15,13 @@ use volatile_sgd::exp::fig5::{self, Fig5Params};
 use volatile_sgd::util::csv::Table;
 
 fn main() {
-    println!("=== Fig. 5: provisioning on preemptible instances ===");
+    let threads = bench_util::default_threads();
+    println!(
+        "=== Fig. 5: provisioning on preemptible instances (threads={threads}) ==="
+    );
     let t0 = std::time::Instant::now();
-    let out = fig5::run(&Fig5Params::default()).expect("fig5 harness");
+    let p = Fig5Params { threads, ..Default::default() };
+    let out = fig5::run(&p).expect("fig5 harness");
     fig5::print_summary(&out);
     println!("  [{:.2}s]", t0.elapsed().as_secs_f64());
 
@@ -62,4 +70,21 @@ fn main() {
         stat.accuracy_per_dollar
     );
     println!("CSV -> out/fig5_outcomes.csv");
+
+    // (n x q) Monte-Carlo grid on the sweep harness
+    use volatile_sgd::sweep::{run_sweep, SweepConfig};
+    let sweep = fig5::Fig5Sweep::paper(Fig5Params::default());
+    let cfg = SweepConfig { replicates: 8, seed: 2020, threads };
+    let t0 = std::time::Instant::now();
+    let results = run_sweep(&sweep, &cfg).expect("fig5 sweep");
+    println!(
+        "fig5 sweep: {} in {:.2}s  digest {:016x}",
+        results.throughput,
+        t0.elapsed().as_secs_f64(),
+        results.digest()
+    );
+    results
+        .to_table()
+        .write("out/fig5_sweep.csv")
+        .expect("write fig5 sweep csv");
 }

@@ -83,13 +83,65 @@ fn bench_scheduler() {
     );
 }
 
+fn bench_sweep_pool() {
+    use volatile_sgd::sweep::run_indexed;
+    let threads = bench_util::default_threads();
+    println!("--- sweep pool (work-stealing, {threads} threads) ---");
+    // job = one 10k-iteration scheduler run: the sweep harness's real
+    // unit of work. jobs/s serial vs pooled is the tentpole speedup.
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    let prices = PriceSource::Iid(PriceModel::uniform_paper());
+    let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
+    let jobs = (threads * 4).max(8);
+    let run_all = |t: usize| {
+        run_indexed(t, jobs, |i| {
+            let mut s = FixedBids::new(
+                "bench",
+                BidVector::two_group(8, 4, 0.8, 0.4),
+                10_000,
+            );
+            let mut rng = Rng::stream(42, i as u64);
+            volatile_sgd::exp::run_synthetic_rng(
+                &mut s,
+                bound,
+                &prices,
+                runtime,
+                f64::INFINITY,
+                &mut rng,
+            )
+            .unwrap()
+            .cost
+        })
+    };
+    let t0 = std::time::Instant::now();
+    let serial = run_all(1);
+    let t1 = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let pooled = run_all(threads);
+    let tn = t0.elapsed().as_secs_f64();
+    assert_eq!(serial, pooled, "pool must not change results");
+    println!(
+        "    {jobs} jobs: 1 thread {:.1} jobs/s, {threads} threads \
+         {:.1} jobs/s, speedup {:.2}x",
+        jobs as f64 / t1.max(1e-9),
+        jobs as f64 / tn.max(1e-9),
+        t1 / tn.max(1e-9)
+    );
+}
+
 fn bench_pjrt() {
     let Ok(manifest) = Manifest::load("artifacts") else {
         println!("--- PJRT step latency: skipped (run `make artifacts`) ---");
         return;
     };
     println!("--- PJRT step latency (cnn artifacts) ---");
-    let engine = PjrtEngine::cpu().expect("pjrt cpu");
+    let engine = match PjrtEngine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("    skipped: {e}");
+            return;
+        }
+    };
     let mm = manifest.model("cnn").expect("cnn in manifest");
     let rt = ModelRuntime::load(&engine, mm).expect("compile artifacts");
     let theta = mm.load_theta0().expect("theta0");
@@ -128,5 +180,6 @@ fn main() {
     println!("=== hot-path microbenches ===");
     bench_aggregation();
     bench_scheduler();
+    bench_sweep_pool();
     bench_pjrt();
 }

@@ -6,6 +6,11 @@
 //! a grid (CSV: `fig2_surfaces.csv`) and verify the monotonicities
 //! programmatically. Fig. 1's schematic (error/cost vs time for different
 //! worker counts) is regenerated as two simulated runs.
+//!
+//! The surface grid is evaluated row-per-job on the sweep pool (one job
+//! per F(b1) value); rows are collected in index order and the
+//! monotonicity checks run over the assembled table, so the output is
+//! identical at any thread count.
 
 use anyhow::Result;
 
@@ -13,6 +18,7 @@ use crate::coordinator::strategy::FixedBids;
 use crate::market::{BidVector, PriceModel};
 use crate::market::process::PriceDist;
 use crate::sim::PriceSource;
+use crate::sweep::run_indexed;
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
@@ -28,7 +34,7 @@ pub struct Fig2Output {
     pub monotone_ok: bool,
 }
 
-pub fn run(j: u64, n: usize, n1: usize) -> Result<Fig2Output> {
+pub fn run(j: u64, n: usize, n1: usize, threads: usize) -> Result<Fig2Output> {
     let bound = ErrorBound::new(SgdHyper::paper_cnn());
     let pb = BidProblem {
         bound,
@@ -38,22 +44,33 @@ pub fn run(j: u64, n: usize, n1: usize) -> Result<Fig2Output> {
         eps: 0.35,
         theta: f64::INFINITY,
     };
+    let grid = 25usize;
+
+    // one job per F(b1) row: each returns the row's (gamma-sweep) points
+    let rows: Vec<Vec<[f64; 5]>> = run_indexed(threads, grid, |row| {
+        let f1 = (row + 1) as f64 / grid as f64;
+        let b1 = pb.price.inv_cdf(f1);
+        (0..=grid)
+            .map(|g| {
+                let gamma = g as f64 / grid as f64;
+                let b2 = pb.price.inv_cdf(gamma * f1);
+                let r = pb.expected_recip_two(n1, b1, b2);
+                let err = bound.phi_const(j, r);
+                let cost = pb.expected_cost_two(j, n1, b1, b2);
+                let time = pb.expected_time_two(j, n1, b1, b2);
+                [f1, gamma, err, cost, time]
+            })
+            .collect()
+    });
+
+    // assemble + monotonicity checks over the deterministic row order
     let mut surfaces =
         Table::new(&["f_b1", "gamma", "err_bound", "exp_cost", "exp_time"]);
-    let grid = 25usize;
     let mut monotone_ok = true;
     let mut prev_cost_along_gamma = vec![0.0; grid + 1];
-    for i in 1..=grid {
-        let f1 = i as f64 / grid as f64;
-        let b1 = pb.price.inv_cdf(f1);
+    for (row, points) in rows.iter().enumerate() {
         let mut prev_err = f64::INFINITY;
-        for g in 0..=grid {
-            let gamma = g as f64 / grid as f64;
-            let b2 = pb.price.inv_cdf(gamma * f1);
-            let r = pb.expected_recip_two(n1, b1, b2);
-            let err = bound.phi_const(j, r);
-            let cost = pb.expected_cost_two(j, n1, b1, b2);
-            let time = pb.expected_time_two(j, n1, b1, b2);
+        for (g, &[f1, gamma, err, cost, time]) in points.iter().enumerate() {
             surfaces.push(vec![f1, gamma, err, cost, time]);
             // Fig. 2a: error decreasing in gamma
             if err > prev_err + 1e-9 {
@@ -61,7 +78,7 @@ pub fn run(j: u64, n: usize, n1: usize) -> Result<Fig2Output> {
             }
             prev_err = err;
             // Fig. 2b/2d: cost increasing in gamma and in F(b1)
-            if i > 1 && cost + 1e-9 < prev_cost_along_gamma[g] {
+            if row > 0 && cost + 1e-9 < prev_cost_along_gamma[g] {
                 monotone_ok = false;
             }
             prev_cost_along_gamma[g] = cost;
@@ -69,20 +86,22 @@ pub fn run(j: u64, n: usize, n1: usize) -> Result<Fig2Output> {
     }
 
     // ---- Fig. 1: error & cost vs time for n = 2 vs n = 8 (no preemption)
-    let mut fig1 =
-        Table::new(&["time", "err_n2", "cost_n2", "err_n8", "cost_n8"]);
     let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
     let prices = PriceSource::Iid(PriceModel::uniform_paper());
-    let run_n = |workers: usize, seed: u64| -> Result<_> {
+    let runs = run_indexed(threads, 2, |k| {
+        let (workers, seed) = [(2usize, 11u64), (8, 12)][k];
         let mut s = FixedBids::new(
             "fig1",
             BidVector::uniform(workers, 1.0),
             j.min(3_000),
         );
         run_synthetic(&mut s, bound, &prices, runtime, f64::INFINITY, seed)
-    };
-    let r2 = run_n(2, 11)?;
-    let r8 = run_n(8, 12)?;
+    });
+    let mut runs = runs.into_iter();
+    let r2 = runs.next().unwrap()?;
+    let r8 = runs.next().unwrap()?;
+    let mut fig1 =
+        Table::new(&["time", "err_n2", "cost_n2", "err_n8", "cost_n8"]);
     let len = r2.series.len().min(r8.series.len());
     for k in 0..len {
         let p2 = &r2.series.points[k];
@@ -97,7 +116,7 @@ pub fn run(j: u64, n: usize, n1: usize) -> Result<Fig2Output> {
 mod tests {
     #[test]
     fn surfaces_are_monotone_and_complete() {
-        let out = super::run(5_000, 8, 4).unwrap();
+        let out = super::run(5_000, 8, 4, 1).unwrap();
         assert!(out.monotone_ok, "Fig. 2 monotonicities violated");
         assert_eq!(out.surfaces.rows.len(), 25 * 26);
         assert!(!out.fig1.rows.is_empty());
@@ -105,10 +124,19 @@ mod tests {
 
     #[test]
     fn fig1_more_workers_less_error_more_cost() {
-        let out = super::run(5_000, 8, 4).unwrap();
+        let out = super::run(5_000, 8, 4, 1).unwrap();
         let last = out.fig1.rows.last().unwrap();
         let (err2, cost2, err8, cost8) = (last[1], last[2], last[3], last[4]);
         assert!(err8 < err2, "more workers should give lower error");
         assert!(cost8 > cost2, "more workers should cost more");
+    }
+
+    #[test]
+    fn threaded_surfaces_identical_to_serial() {
+        let a = super::run(2_000, 8, 4, 1).unwrap();
+        let b = super::run(2_000, 8, 4, 4).unwrap();
+        assert_eq!(a.monotone_ok, b.monotone_ok);
+        assert_eq!(a.surfaces.to_csv(), b.surfaces.to_csv());
+        assert_eq!(a.fig1.to_csv(), b.fig1.to_csv());
     }
 }

@@ -11,17 +11,27 @@
 //!
 //! Price model: a fixed preemptible unit price and a 3x on-demand price
 //! (the GCP preemptible discount is ~70%).
+//!
+//! All provisioning runs (baseline + n sweep + both panel-b schedules)
+//! execute as parallel pool jobs with per-job RNG streams. [`Fig5Sweep`]
+//! exposes the (n × q) grid as a replicated Monte-Carlo scenario whose
+//! per-point context caches the exact preemption statistics (E[1/y],
+//! P[y=0], Jensen penalty) once per grid point.
 
 use anyhow::Result;
 
-use crate::coordinator::strategy::{DynamicWorkers, StaticWorkers};
-use crate::preempt::PreemptionModel;
+use crate::coordinator::strategy::{
+    DynamicWorkers, StaticWorkers, Strategy,
+};
+use crate::preempt::{jensen_penalty, PreemptionModel, RecipTable};
 use crate::sim::PriceSource;
+use crate::sweep::{run_indexed, Grid, Scenario};
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
 use crate::theory::workers::WorkerProblem;
+use crate::util::rng::Rng;
 
-use super::run_synthetic;
+use super::run_synthetic_rng;
 
 pub const PREEMPTIBLE_PRICE: f64 = 0.1;
 pub const ON_DEMAND_PRICE: f64 = 0.3;
@@ -49,6 +59,7 @@ pub struct Fig5Output {
     pub j_dynamic: u64,
 }
 
+#[derive(Clone, Debug)]
 pub struct Fig5Params {
     pub j: u64,
     pub q: f64,
@@ -56,6 +67,8 @@ pub struct Fig5Params {
     pub n_sweep: Vec<usize>,
     pub eta: f64,
     pub seed: u64,
+    /// sweep-pool workers for the provisioning runs
+    pub threads: usize,
 }
 
 impl Default for Fig5Params {
@@ -67,6 +80,66 @@ impl Default for Fig5Params {
             n_sweep: vec![2, 4, 8, 16],
             eta: 1.0004,
             seed: 2020,
+            threads: 1,
+        }
+    }
+}
+
+/// One provisioning run, fully specified (the pool job payload).
+#[derive(Clone, Debug)]
+enum ProvisionJob {
+    Static {
+        label: String,
+        n_or_eta: f64,
+        n: usize,
+        j: u64,
+        model: PreemptionModel,
+        unit_price: f64,
+    },
+    Dynamic {
+        label: String,
+        eta: f64,
+        j: u64,
+        model: PreemptionModel,
+        unit_price: f64,
+    },
+}
+
+impl ProvisionJob {
+    fn build(&self) -> Box<dyn Strategy> {
+        match self {
+            ProvisionJob::Static { n, j, model, unit_price, .. } => {
+                Box::new(StaticWorkers {
+                    n: *n,
+                    j: *j,
+                    model: model.clone(),
+                    unit_price: *unit_price,
+                })
+            }
+            ProvisionJob::Dynamic { eta, j, model, unit_price, .. } => {
+                Box::new(DynamicWorkers::new(
+                    1,
+                    *eta,
+                    *j,
+                    model.clone(),
+                    *unit_price,
+                    100_000,
+                ))
+            }
+        }
+    }
+
+    fn label(&self) -> &str {
+        match self {
+            ProvisionJob::Static { label, .. } => label,
+            ProvisionJob::Dynamic { label, .. } => label,
+        }
+    }
+
+    fn n_or_eta(&self) -> f64 {
+        match self {
+            ProvisionJob::Static { n_or_eta, .. } => *n_or_eta,
+            ProvisionJob::Dynamic { eta, .. } => *eta,
         }
     }
 }
@@ -76,67 +149,13 @@ pub fn run(p: &Fig5Params) -> Result<Fig5Output> {
     let runtime = RuntimeModel::Deterministic { r: 10.0 };
     let prices = PriceSource::Fixed(0.0); // strategies carry their price
 
-    let mut panel_a = Vec::new();
-
-    // ---- No-preemption baseline: n_baseline on-demand workers
-    {
-        let mut s = StaticWorkers {
-            n: p.n_baseline,
-            j: p.j,
-            model: PreemptionModel::None,
-            unit_price: ON_DEMAND_PRICE,
-        };
-        let r = run_synthetic(
-            &mut s,
-            bound,
-            &prices,
-            runtime,
-            f64::INFINITY,
-            p.seed,
-        )?;
-        panel_a.push(outcome(
-            format!("no_preemption_n{}", p.n_baseline),
-            p.n_baseline as f64,
-            &r,
-        ));
-    }
-
     // ---- Theorem 4's scaling: to match the no-preemption baseline's
     // effective worker count under preemption q, provision
     // n* = n_baseline / (1 - q) (the paper's Fig. 5a argument).
     let n_star =
         ((p.n_baseline as f64) / (1.0 - p.q)).round().max(1.0) as usize;
 
-    // ---- n sweep at q (includes n*)
-    let mut sweep = p.n_sweep.clone();
-    if !sweep.contains(&n_star) {
-        sweep.push(n_star);
-        sweep.sort_unstable();
-    }
-    for (k, n) in sweep.iter().enumerate() {
-        let mut s = StaticWorkers {
-            n: *n,
-            j: p.j,
-            model: PreemptionModel::Bernoulli { q: p.q },
-            unit_price: PREEMPTIBLE_PRICE,
-        };
-        let r = run_synthetic(
-            &mut s,
-            bound,
-            &prices,
-            runtime,
-            f64::INFINITY,
-            p.seed + 10 + k as u64,
-        )?;
-        let label = if *n == n_star {
-            format!("preempt_q{}_n{}_star", p.q, n)
-        } else {
-            format!("preempt_q{}_n{}", p.q, n)
-        };
-        panel_a.push(outcome(label, *n as f64, &r));
-    }
-
-    // ---- panel (b): static n = 1 vs dynamic eta
+    // ---- panel (b) plan: Theorem-5 dynamic iteration count
     let wp = WorkerProblem {
         bound,
         d: 1.0,
@@ -145,49 +164,83 @@ pub fn run(p: &Fig5Params) -> Result<Fig5Output> {
         theta_iters: p.j * 4,
     };
     let j_dynamic = wp.dynamic_iterations(p.eta, p.j);
-    let mut panel_b = Vec::new();
-    {
-        let mut s = StaticWorkers {
-            n: 1,
+
+    // ---- assemble the full job list (panel a then panel b), keeping
+    // the seed repo's per-run seed offsets (still a pure function of
+    // the job, so any thread count reproduces them exactly)
+    let mut jobs: Vec<ProvisionJob> = Vec::new();
+    let mut seeds: Vec<u64> = Vec::new();
+    jobs.push(ProvisionJob::Static {
+        label: format!("no_preemption_n{}", p.n_baseline),
+        n_or_eta: p.n_baseline as f64,
+        n: p.n_baseline,
+        j: p.j,
+        model: PreemptionModel::None,
+        unit_price: ON_DEMAND_PRICE,
+    });
+    seeds.push(p.seed);
+    let mut sweep = p.n_sweep.clone();
+    if !sweep.contains(&n_star) {
+        sweep.push(n_star);
+        sweep.sort_unstable();
+    }
+    for (k, n) in sweep.iter().enumerate() {
+        let label = if *n == n_star {
+            format!("preempt_q{}_n{}_star", p.q, n)
+        } else {
+            format!("preempt_q{}_n{}", p.q, n)
+        };
+        jobs.push(ProvisionJob::Static {
+            label,
+            n_or_eta: *n as f64,
+            n: *n,
             j: p.j,
             model: PreemptionModel::Bernoulli { q: p.q },
             unit_price: PREEMPTIBLE_PRICE,
-        };
-        let r = run_synthetic(
-            &mut s,
-            bound,
-            &prices,
-            runtime,
-            f64::INFINITY,
-            p.seed + 50,
-        )?;
-        panel_b.push(outcome("static_n1".to_string(), 1.0, &r));
+        });
+        seeds.push(p.seed + 10 + k as u64);
     }
-    {
-        let mut s = DynamicWorkers::new(
-            1,
-            p.eta,
-            j_dynamic,
-            PreemptionModel::Bernoulli { q: p.q },
-            PREEMPTIBLE_PRICE,
-            100_000,
-        );
-        let r = run_synthetic(
-            &mut s,
-            bound,
-            &prices,
-            runtime,
-            f64::INFINITY,
-            p.seed + 51,
-        )?;
-        panel_b.push(outcome(
-            format!("dynamic_eta{}", p.eta),
-            p.eta,
-            &r,
-        ));
-    }
+    let panel_a_len = jobs.len();
+    jobs.push(ProvisionJob::Static {
+        label: "static_n1".to_string(),
+        n_or_eta: 1.0,
+        n: 1,
+        j: p.j,
+        model: PreemptionModel::Bernoulli { q: p.q },
+        unit_price: PREEMPTIBLE_PRICE,
+    });
+    seeds.push(p.seed + 50);
+    jobs.push(ProvisionJob::Dynamic {
+        label: format!("dynamic_eta{}", p.eta),
+        eta: p.eta,
+        j: j_dynamic,
+        model: PreemptionModel::Bernoulli { q: p.q },
+        unit_price: PREEMPTIBLE_PRICE,
+    });
+    seeds.push(p.seed + 51);
 
-    Ok(Fig5Output { panel_a, n_star, panel_b, j_dynamic })
+    // ---- run everything on the pool, one private RNG per job
+    debug_assert_eq!(jobs.len(), seeds.len());
+    let mut outcomes: Vec<ProvisioningOutcome> =
+        run_indexed(p.threads, jobs.len(), |i| -> Result<ProvisioningOutcome> {
+            let job = &jobs[i];
+            let mut s = job.build();
+            let mut rng = Rng::new(seeds[i]);
+            let r = run_synthetic_rng(
+                s.as_mut(),
+                bound,
+                &prices,
+                runtime,
+                f64::INFINITY,
+                &mut rng,
+            )?;
+            Ok(outcome(job.label().to_string(), job.n_or_eta(), &r))
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
+
+    let panel_b = outcomes.split_off(panel_a_len);
+    Ok(Fig5Output { panel_a: outcomes, n_star, panel_b, j_dynamic })
 }
 
 fn outcome(
@@ -239,6 +292,128 @@ pub fn print_summary(out: &Fig5Output) {
     }
 }
 
+// ------------------------------------------------------------ sweep view
+
+/// Fig. 5 as a Monte-Carlo sweep over the (n, q) provisioning grid. The
+/// per-point context caches the exact preemption statistics — E[1/y],
+/// P[y=0], the Jensen penalty, and the Theorem-4 provisioning match
+/// `n_match_exact` (smallest fleet whose conditional E[1/y] is at least
+/// as good as the no-preemption baseline's 1/n_baseline, found by
+/// scanning a [`RecipTable`]) — once per point; replicates only pay for
+/// the simulation itself.
+pub struct Fig5Sweep {
+    pub params: Fig5Params,
+    pub grid: Grid,
+}
+
+impl Fig5Sweep {
+    /// Default grid: n in {2,4,8,16} x q in {0.3,0.5,0.7}.
+    pub fn paper(params: Fig5Params) -> Self {
+        let grid = Grid::new()
+            .axis("n", vec![2.0, 4.0, 8.0, 16.0])
+            .axis("q", vec![0.3, 0.5, 0.7]);
+        Fig5Sweep { params, grid }
+    }
+}
+
+/// Cached per-point state: the preemption model and its exact statistics.
+pub struct Fig5Ctx {
+    n: usize,
+    model: PreemptionModel,
+    /// exact E[1/y | y > 0] at this point's fleet size
+    recip: f64,
+    p_zero: f64,
+    jensen: f64,
+    /// exact Theorem-4 match: smallest m with E[1/y(m)] <= 1/n_baseline
+    /// (NaN when no fleet within the scanned range qualifies)
+    n_match: f64,
+}
+
+impl Scenario for Fig5Sweep {
+    type Ctx = Fig5Ctx;
+
+    fn points(&self) -> usize {
+        self.grid.num_points()
+    }
+
+    fn label(&self, point: usize) -> String {
+        self.grid.label(point)
+    }
+
+    fn metrics(&self) -> Vec<&'static str> {
+        vec![
+            "cost",
+            "final_error",
+            "final_accuracy",
+            "acc_per_dollar",
+            "recip_exact",
+            "p_zero",
+            "jensen_penalty",
+            "n_match_exact",
+        ]
+    }
+
+    fn prepare(&self, point: usize) -> Result<Fig5Ctx> {
+        let vals = self.grid.point(point);
+        let (n, q) = (vals[0] as usize, vals[1]);
+        let model = PreemptionModel::Bernoulli { q };
+        // exact per-point statistics, computed once per sweep point and
+        // shared by every replicate. The RecipTable memoises E[1/y] for
+        // the whole fleet-size scan below (Fig. 5a's Theorem-4 argument
+        // done exactly, not via the n_b/(1-q) heuristic).
+        let n_base = self.params.n_baseline.max(1);
+        let table = RecipTable::build(&model, n.max(8 * n_base));
+        let n_match = (1..=table.n_max())
+            .find(|&m| table.recip(m) <= 1.0 / n_base as f64)
+            .map(|m| m as f64)
+            .unwrap_or(f64::NAN);
+        // the table always covers n (built to n.max(8 * n_base) above)
+        Ok(Fig5Ctx {
+            n,
+            recip: table.recip(n),
+            p_zero: model.p_zero(n),
+            jensen: jensen_penalty(&model, n),
+            n_match,
+            model,
+        })
+    }
+
+    fn run(
+        &self,
+        _point: usize,
+        ctx: &Fig5Ctx,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>> {
+        let bound = ErrorBound::new(SgdHyper::paper_cnn());
+        let runtime = RuntimeModel::Deterministic { r: 10.0 };
+        let prices = PriceSource::Fixed(0.0);
+        let mut s = StaticWorkers {
+            n: ctx.n,
+            j: self.params.j,
+            model: ctx.model.clone(),
+            unit_price: PREEMPTIBLE_PRICE,
+        };
+        let r = run_synthetic_rng(
+            &mut s,
+            bound,
+            &prices,
+            runtime,
+            f64::INFINITY,
+            rng,
+        )?;
+        Ok(vec![
+            r.cost,
+            r.final_error,
+            r.final_accuracy,
+            if r.cost > 0.0 { r.final_accuracy / r.cost } else { 0.0 },
+            ctx.recip,
+            ctx.p_zero,
+            ctx.jensen,
+            ctx.n_match,
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,5 +457,23 @@ mod tests {
             dynm.accuracy_per_dollar,
             stat.accuracy_per_dollar
         );
+    }
+
+    #[test]
+    fn panels_identical_across_thread_counts() {
+        let serial = Fig5Params { j: 2_000, ..Default::default() };
+        let threaded = Fig5Params { threads: 8, ..serial.clone() };
+        let a = run(&serial).unwrap();
+        let b = run(&threaded).unwrap();
+        for (x, y) in a
+            .panel_a
+            .iter()
+            .chain(&a.panel_b)
+            .zip(b.panel_a.iter().chain(&b.panel_b))
+        {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+            assert_eq!(x.final_error.to_bits(), y.final_error.to_bits());
+        }
     }
 }

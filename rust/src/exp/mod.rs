@@ -5,6 +5,16 @@
 //! J/eps/theta settings), emitting CSV series plus a printed summary of
 //! the headline comparisons. They are invoked by `cargo bench` (one bench
 //! target per figure), by the examples, and by the CLI.
+//!
+//! Since the sweep refactor every figure runs its strategy simulations
+//! through [`crate::sweep::run_indexed`]: runs are planned up front
+//! (expensive bid optimisation cached per grid point), executed on the
+//! work-stealing pool with RNGs that are pure functions of each job's
+//! index, and collected in plan order — so `threads` is a pure
+//! throughput knob and results are identical at any thread count. The
+//! `Fig*Sweep` types in the submodules expose the same experiments as
+//! Monte-Carlo [`crate::sweep::Scenario`]s (replicates seeded via
+//! [`Rng::stream`]) for the `sweep` CLI subcommand.
 
 pub mod fig2;
 pub mod fig3;
@@ -15,20 +25,26 @@ use anyhow::Result;
 
 use crate::coordinator::backend::SyntheticBackend;
 use crate::coordinator::scheduler::{RunResult, Scheduler, SchedulerParams};
-use crate::coordinator::strategy::Strategy;
+use crate::coordinator::strategy::{
+    DynamicBids, FixedBids, StageSpec, Strategy,
+};
+use crate::market::BidVector;
 use crate::sim::PriceSource;
+use crate::theory::bids::BidProblem;
 use crate::theory::bounds::ErrorBound;
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
 
-/// Run one strategy against the synthetic (Theorem-1) backend.
-pub fn run_synthetic(
+/// Run one strategy against the synthetic (Theorem-1) backend, drawing
+/// all randomness from the caller's generator — the sweep-friendly entry
+/// point (pair it with [`Rng::stream`] for order-independent seeding).
+pub fn run_synthetic_rng(
     strategy: &mut dyn Strategy,
     bound: ErrorBound,
     prices: &PriceSource,
     runtime: RuntimeModel,
     theta_cap: f64,
-    seed: u64,
+    rng: &mut Rng,
 ) -> Result<RunResult> {
     let params = SchedulerParams {
         runtime,
@@ -38,8 +54,55 @@ pub fn run_synthetic(
         max_slots: 200_000_000,
     };
     let mut backend = SyntheticBackend::new(bound);
+    Scheduler::new(params).run(strategy, &mut backend, prices, rng)
+}
+
+/// Seeded convenience wrapper around [`run_synthetic_rng`].
+pub fn run_synthetic(
+    strategy: &mut dyn Strategy,
+    bound: ErrorBound,
+    prices: &PriceSource,
+    runtime: RuntimeModel,
+    theta_cap: f64,
+    seed: u64,
+) -> Result<RunResult> {
     let mut rng = Rng::new(seed);
-    Scheduler::new(params).run(strategy, &mut backend, prices, &mut rng)
+    run_synthetic_rng(strategy, bound, prices, runtime, theta_cap, &mut rng)
+}
+
+/// A fully-planned strategy: the pure, cacheable product of the (often
+/// expensive) Theorem 2/3 bid optimisation, from which a fresh mutable
+/// [`Strategy`] can be built per replicate. Plans are `Send + Sync`, so
+/// one plan computed in a sweep's prepare phase serves every replicate
+/// job on every worker thread.
+#[derive(Clone, Debug)]
+pub enum PlannedStrategy {
+    /// Fixed bid vector for the whole job (no-interruptions, one-bid,
+    /// two-bids, depending on the vector).
+    Fixed { name: &'static str, bids: BidVector, j: u64 },
+    /// Sec. VI dynamic strategy: staged fleet growth + re-optimisation.
+    Dynamic { problem: BidProblem, stages: Vec<StageSpec>, j: u64 },
+}
+
+impl PlannedStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannedStrategy::Fixed { name, .. } => *name,
+            PlannedStrategy::Dynamic { .. } => "dynamic",
+        }
+    }
+
+    /// Instantiate a fresh strategy for one run.
+    pub fn build(&self) -> Result<Box<dyn Strategy>> {
+        Ok(match self {
+            PlannedStrategy::Fixed { name, bids, j } => {
+                Box::new(FixedBids::new(*name, bids.clone(), *j))
+            }
+            PlannedStrategy::Dynamic { problem, stages, j } => Box::new(
+                DynamicBids::new(problem.clone(), stages.clone(), *j)?,
+            ),
+        })
+    }
 }
 
 /// Accuracy proxy corresponding to an error target (see DESIGN.md §2):

@@ -18,6 +18,8 @@
 //! * [`coordinator`] — parameter server, gradient aggregation, scheduler,
 //!   strategies;
 //! * [`sim`] — virtual-clock cost/time accounting;
+//! * [`sweep`] — parallel deterministic sweep harness (grids, replicates,
+//!   work-stealing pool, Welford collation);
 //! * [`runtime`] — PJRT bridge to the AOT artifacts;
 //! * [`data`] — synthetic CIFAR-like images + Markov corpus;
 //! * [`exp`] — per-figure experiment harnesses (Figs. 1–5);
@@ -34,5 +36,6 @@ pub mod metrics;
 pub mod preempt;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod theory;
 pub mod util;

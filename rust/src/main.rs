@@ -7,8 +7,14 @@
 //! volatile-sgd optimal-bid [--market uniform|gaussian] [--n 8] [--n1 4]
 //!                          [--eps 0.35] [--theta 120000] [--two-bids]
 //! volatile-sgd plan-workers [--eps 0.1] [--q 0.5] [--chi 1.0] [--theta-iters 40000]
-//! volatile-sgd fig2|fig3|fig4|fig5  [--out out/]
+//! volatile-sgd fig2|fig3|fig4|fig5  [--out out/] [--threads N]
+//! volatile-sgd sweep       [--fig 3|4|5] [--threads N] [--replicates R]
+//!                          [--j 10000] [--seed S] [--out out/]
 //! ```
+//!
+//! `--threads` parallelises the simulation jobs on the work-stealing
+//! sweep pool; results are bit-identical at any thread count (every
+//! job's RNG is a pure function of its job identity — see DESIGN.md §3).
 //!
 //! Python is never invoked here: `train` runs the AOT artifacts over PJRT.
 
@@ -55,7 +61,10 @@ fn print_help() {
          simulate      run one strategy simulation from a config\n  \
          optimal-bid   Theorem 2 / Theorem 3 bid calculator\n  \
          plan-workers  Theorem 4 / Theorem 5 provisioning planner\n  \
-         fig2..fig5    regenerate the paper's figures (CSV + summary)\n"
+         fig2..fig5    regenerate the paper's figures (CSV + summary)\n  \
+         sweep         replicated Monte-Carlo sweep of a figure grid\n                \
+         (--fig 3|4|5 --threads N --replicates R; deterministic\n                \
+         for a fixed --seed at any thread count)\n"
     );
 }
 
@@ -71,6 +80,7 @@ fn run(argv: &[String]) -> Result<()> {
         "fig3" => cmd_fig3(&args),
         "fig4" => cmd_fig4(&args),
         "fig5" => cmd_fig5(&args),
+        "sweep" => cmd_sweep(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -339,7 +349,7 @@ fn out_dir(args: &Args) -> std::path::PathBuf {
 }
 
 fn cmd_fig2(args: &Args) -> Result<()> {
-    let out = exp::fig2::run(5_000, 8, 4)?;
+    let out = exp::fig2::run(5_000, 8, 4, args.usize("threads", 1)?)?;
     let dir = out_dir(args);
     out.surfaces.write(dir.join("fig2_surfaces.csv"))?;
     out.fig1.write(dir.join("fig1_series.csv"))?;
@@ -356,6 +366,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     let p = exp::fig3::Fig3Params {
         j: args.u64("j", 10_000)?,
         seed: args.u64("seed", 2020)?,
+        threads: args.usize("threads", 1)?,
         ..Default::default()
     };
     let dir = out_dir(args);
@@ -383,6 +394,7 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     let p = exp::fig4::Fig4Params {
         j: args.u64("j", 10_000)?,
         seed: args.u64("seed", 2020)?,
+        threads: args.usize("threads", 1)?,
         ..Default::default()
     };
     let out = exp::fig4::run(&trace, &p)?;
@@ -404,6 +416,7 @@ fn cmd_fig5(args: &Args) -> Result<()> {
         j: args.u64("j", 10_000)?,
         q: args.f64("q", 0.5)?,
         seed: args.u64("seed", 2020)?,
+        threads: args.usize("threads", 1)?,
         ..Default::default()
     };
     let out = exp::fig5::run(&p)?;
@@ -424,5 +437,64 @@ fn cmd_fig5(args: &Args) -> Result<()> {
     }
     t.write(dir.join("fig5_outcomes.csv"))?;
     println!("series -> {}", dir.display());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use volatile_sgd::sweep::{run_sweep, SweepConfig};
+
+    let fig = args.str("fig", "3");
+    let cfg = SweepConfig {
+        replicates: args.u64("replicates", 8)?,
+        seed: args.u64("seed", 2020)?,
+        threads: args.usize("threads", 1)?,
+    };
+    // keep the figure-default J: the Theorem 2/3 deadlines scale with it,
+    // and a much smaller J makes the optimal-bid plans infeasible
+    let j = args.u64("j", 10_000)?;
+    let dir = out_dir(args);
+
+    let (results, name) = match fig.as_str() {
+        "3" => {
+            let sweep = exp::fig3::Fig3Sweep::paper(exp::fig3::Fig3Params {
+                j,
+                seed: cfg.seed,
+                ..Default::default()
+            });
+            (run_sweep(&sweep, &cfg)?, "fig3")
+        }
+        "4" => {
+            let sweep = exp::fig4::Fig4Sweep {
+                params: exp::fig4::Fig4Params {
+                    j,
+                    seed: cfg.seed,
+                    ..Default::default()
+                },
+                trace_seeds: vec![7, 8, 9],
+            };
+            (run_sweep(&sweep, &cfg)?, "fig4")
+        }
+        "5" => {
+            let sweep = exp::fig5::Fig5Sweep::paper(exp::fig5::Fig5Params {
+                j,
+                seed: cfg.seed,
+                ..Default::default()
+            });
+            (run_sweep(&sweep, &cfg)?, "fig5")
+        }
+        other => bail!("--fig must be 3|4|5, got '{other}'"),
+    };
+
+    println!(
+        "== sweep {name}  ({} points x {} replicates, seed {})",
+        results.points.len(),
+        cfg.replicates,
+        cfg.seed
+    );
+    results.print();
+    println!("  digest: {:016x}", results.digest());
+    let out = dir.join(format!("sweep_{name}.csv"));
+    results.to_table().write(&out)?;
+    println!("collated stats -> {}", out.display());
     Ok(())
 }

@@ -256,6 +256,81 @@ mod tests {
     }
 
     #[test]
+    fn generator_invariants_across_seeds() {
+        // the invariants every consumer (replay, CDF estimation, CSV
+        // round-trip) relies on, checked across many seeds and two
+        // revision disciplines
+        for seed in 0..20u64 {
+            for cfg in [
+                TraceGenConfig::default(),
+                TraceGenConfig {
+                    revision_interval: 3600.0, // the paper's "<= 1/hour"
+                    ..TraceGenConfig::default()
+                },
+            ] {
+                let mut rng = Rng::new(seed);
+                let tr = SpotTrace::generate(&cfg, &mut rng);
+                // times strictly increasing, starting at exactly 0
+                assert_eq!(tr.times[0], 0.0, "seed {seed}");
+                assert!(
+                    tr.times.windows(2).all(|w| w[0] < w[1]),
+                    "seed {seed}: times not strictly increasing"
+                );
+                assert_eq!(tr.times.len(), tr.prices.len());
+                // prices within [floor, cap] (finite, positive implied)
+                for &p in &tr.prices {
+                    assert!(
+                        p >= cfg.floor - 1e-12 && p <= cfg.cap + 1e-12,
+                        "seed {seed}: price {p} outside [{}, {}]",
+                        cfg.floor,
+                        cfg.cap
+                    );
+                }
+                // the whole path fits the horizon
+                assert!(tr.horizon() < cfg.horizon, "seed {seed}");
+                // revision discipline: mean gap tracks the configured
+                // interval (exponential gaps, so individual gaps vary)
+                let gaps: Vec<f64> =
+                    tr.times.windows(2).map(|w| w[1] - w[0]).collect();
+                let mean_gap =
+                    gaps.iter().sum::<f64>() / gaps.len().max(1) as f64;
+                assert!(gaps.len() > 50, "seed {seed}: degenerate trace");
+                assert!(
+                    (mean_gap - cfg.revision_interval).abs()
+                        < 0.4 * cfg.revision_interval,
+                    "seed {seed}: mean gap {mean_gap} vs {}",
+                    cfg.revision_interval
+                );
+                // and the generated trace passes its own validator
+                SpotTrace::new(tr.times.clone(), tr.prices.clone())
+                    .expect("generated trace must validate");
+            }
+        }
+    }
+
+    #[test]
+    fn generator_is_byte_identical_for_fixed_seed() {
+        let cfg = TraceGenConfig::default();
+        let a = SpotTrace::generate(&cfg, &mut Rng::new(2020));
+        let b = SpotTrace::generate(&cfg, &mut Rng::new(2020));
+        // exact f64 bit patterns, not approximate equality
+        assert_eq!(a.times.len(), b.times.len());
+        for (x, y) in a.times.iter().zip(&b.times) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.prices.iter().zip(&b.prices) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // and the serialised form (what sweeps cache and CSVs record)
+        assert_eq!(a.to_csv(), b.to_csv());
+        // stream-derived seeding is order-independent too
+        let c = SpotTrace::generate(&cfg, &mut Rng::stream(99, 5));
+        let d = SpotTrace::generate(&cfg, &mut Rng::stream(99, 5));
+        assert_eq!(c.to_csv(), d.to_csv());
+        assert_ne!(a.to_csv(), c.to_csv());
+    }
+
+    #[test]
     fn generator_visits_both_regimes() {
         let cfg = TraceGenConfig::default();
         let mut rng = Rng::new(7);

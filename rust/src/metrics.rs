@@ -1,8 +1,43 @@
 //! Run metrics: time series of (clock, iter, cost, error, accuracy, y)
-//! plus summary extraction used by the figure harnesses.
+//! plus summary extraction used by the figure harnesses, and the sweep
+//! harness's throughput meter.
+
+use std::fmt;
 
 use crate::util::csv::Table;
 use crate::util::stats::interp;
+
+/// Throughput of a parallel sweep: jobs completed over wall-clock time.
+#[derive(Clone, Copy, Debug)]
+pub struct Throughput {
+    pub jobs: u64,
+    pub elapsed_s: f64,
+    pub threads: usize,
+}
+
+impl Throughput {
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.elapsed_s > 1e-12 {
+            self.jobs as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+}
+
+impl fmt::Display for Throughput {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} jobs in {:.2}s on {} thread{} ({:.1} jobs/s)",
+            self.jobs,
+            self.elapsed_s,
+            self.threads,
+            if self.threads == 1 { "" } else { "s" },
+            self.jobs_per_sec()
+        )
+    }
+}
 
 /// One recorded point along a training run.
 #[derive(Clone, Copy, Debug)]
@@ -141,5 +176,14 @@ mod tests {
         let t = s.table();
         assert_eq!(t.rows.len(), 10);
         assert_eq!(t.column("cost").unwrap()[3], 6.0);
+    }
+
+    #[test]
+    fn throughput_rate_and_display() {
+        let t = Throughput { jobs: 120, elapsed_s: 3.0, threads: 8 };
+        assert!((t.jobs_per_sec() - 40.0).abs() < 1e-12);
+        assert!(format!("{t}").contains("jobs/s"));
+        let z = Throughput { jobs: 0, elapsed_s: 0.0, threads: 1 };
+        assert_eq!(z.jobs_per_sec(), 0.0);
     }
 }

@@ -118,6 +118,46 @@ pub fn jensen_penalty(model: &PreemptionModel, n: usize) -> f64 {
     model.expected_recip(n) - 1.0 / model.expected_active(n)
 }
 
+/// Precomputed E[1/y] for n = 1..=n_max under one preemption model.
+///
+/// Bernoulli E[1/y] is an O(n) sum per evaluation; a sweep that consults
+/// it per replicate (or a solver scanning fleet sizes) pays O(n^2) per
+/// grid point without memoisation. The sweep harness builds one table in
+/// each grid point's prepare phase and shares it across all replicates.
+#[derive(Clone, Debug)]
+pub struct RecipTable {
+    model: PreemptionModel,
+    recip: Vec<f64>,
+}
+
+impl RecipTable {
+    pub fn build(model: &PreemptionModel, n_max: usize) -> Self {
+        assert!(n_max > 0);
+        RecipTable {
+            model: model.clone(),
+            recip: (1..=n_max).map(|n| model.expected_recip(n)).collect(),
+        }
+    }
+
+    pub fn n_max(&self) -> usize {
+        self.recip.len()
+    }
+
+    pub fn model(&self) -> &PreemptionModel {
+        &self.model
+    }
+
+    /// Cached E[1/y | y > 0] for a fleet of `n` (1 <= n <= n_max).
+    pub fn recip(&self, n: usize) -> f64 {
+        assert!(
+            n >= 1 && n <= self.recip.len(),
+            "n={n} outside table 1..={}",
+            self.recip.len()
+        );
+        self.recip[n - 1]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +288,140 @@ mod tests {
             let uncond = m.expected_active(n) * (1.0 - m.p_zero(n));
             close(uncond, n as f64 * (1.0 - q), 1e-9, "unconditional mean")
         });
+    }
+
+    /// MC estimate of (E[1/y], E[y], P[y=0]) for y ~ Bin(n, 1-q) | y>0.
+    fn monte_carlo_bernoulli(
+        n: usize,
+        q: f64,
+        samples: u64,
+        rng: &mut Rng,
+    ) -> (f64, f64, f64) {
+        let m = PreemptionModel::Bernoulli { q };
+        let (mut recip, mut active, mut zeros) = (0.0, 0.0, 0u64);
+        let mut nonzero = 0u64;
+        for _ in 0..samples {
+            let y = m.draw_active(n, rng).len();
+            if y == 0 {
+                zeros += 1;
+            } else {
+                nonzero += 1;
+                recip += 1.0 / y as f64;
+                active += y as f64;
+            }
+        }
+        (
+            recip / nonzero.max(1) as f64,
+            active / nonzero.max(1) as f64,
+            zeros as f64 / samples as f64,
+        )
+    }
+
+    #[test]
+    fn exact_stats_match_monte_carlo_across_models() {
+        // exact E[1/y], E[y|y>0] and P[y=0] vs simulation, spanning the
+        // issue's n/q ranges at MC-affordable sample counts
+        let mut rng = Rng::new(0xF16);
+        for &n in &[1usize, 2, 3, 4, 8, 16, 32, 64] {
+            for &q in &[0.0, 0.2, 0.5, 0.8] {
+                let m = PreemptionModel::Bernoulli { q };
+                let samples = 40_000u64;
+                let (mc_recip, mc_active, mc_p0) =
+                    monte_carlo_bernoulli(n, q, samples, &mut rng);
+                let tol = 4.0 / (samples as f64).sqrt();
+                assert!(
+                    (mc_recip - m.expected_recip(n)).abs() < tol,
+                    "E[1/y] n={n} q={q}: mc={mc_recip} exact={}",
+                    m.expected_recip(n)
+                );
+                assert!(
+                    (mc_active - m.expected_active(n)).abs()
+                        < tol * n as f64,
+                    "E[y] n={n} q={q}: mc={mc_active} exact={}",
+                    m.expected_active(n)
+                );
+                assert!(
+                    (mc_p0 - m.p_zero(n)).abs() < tol,
+                    "P[0] n={n} q={q}: mc={mc_p0} exact={}",
+                    m.p_zero(n)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chao_strawderman_cross_check_full_grid() {
+        // the closed form E[1/(z+1)] vs the direct log-space pmf sum,
+        // exactly, across the whole n in 1..=64, q in {0,0.1,..,0.9} grid
+        for n in 1..=64usize {
+            for qi in 0..10 {
+                let q = 0.1 * qi as f64;
+                let cf = chao_strawderman_recip_plus_one(n, q);
+                let direct = if q == 0.0 {
+                    // z = n deterministically
+                    1.0 / (n as f64 + 1.0)
+                } else {
+                    let a = 1.0 - q;
+                    (0..=n)
+                        .map(|k| {
+                            let ln_pmf = ln_binomial(n as u64, k as u64)
+                                + k as f64 * a.ln()
+                                + (n - k) as f64 * q.ln();
+                            ln_pmf.exp() / (k as f64 + 1.0)
+                        })
+                        .sum()
+                };
+                assert!(
+                    (direct - cf).abs() < 1e-9,
+                    "n={n} q={q}: direct={direct} closed={cf}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_recip_consistent_with_chao_strawderman_bound() {
+        // E[1/y | y>0] >= E[1/(y+1)] always (pointwise 1/y > 1/(y+1) and
+        // conditioning on y>0 only raises the weight of small y), pinning
+        // expected_recip against the independent closed form across the
+        // full grid
+        for n in 1..=64usize {
+            for qi in 0..10 {
+                let q = 0.1 * qi as f64;
+                let recip = binomial_expected_recip(n, q);
+                let cs = chao_strawderman_recip_plus_one(n, q);
+                assert!(
+                    recip >= cs - 1e-12,
+                    "n={n} q={q}: E[1/y]={recip} < E[1/(z+1)]={cs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recip_table_matches_direct_evaluation() {
+        for model in [
+            PreemptionModel::None,
+            PreemptionModel::Uniform,
+            PreemptionModel::Bernoulli { q: 0.45 },
+        ] {
+            let table = RecipTable::build(&model, 64);
+            assert_eq!(table.n_max(), 64);
+            for n in 1..=64 {
+                assert_eq!(
+                    table.recip(n).to_bits(),
+                    model.expected_recip(n).to_bits(),
+                    "{model:?} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn recip_table_rejects_out_of_range() {
+        let t = RecipTable::build(&PreemptionModel::Uniform, 8);
+        let _ = t.recip(9);
     }
 
     #[test]

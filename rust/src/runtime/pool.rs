@@ -15,7 +15,7 @@
 
 use anyhow::Result;
 
-use super::engine::{BatchInput, GradOutput, ModelRuntime};
+use super::{BatchInput, GradOutput, ModelRuntime};
 
 /// Runs the active workers' gradient steps for one iteration.
 pub struct WorkerPool {

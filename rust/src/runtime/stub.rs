@@ -1,0 +1,104 @@
+//! API-compatible stand-in for [`super::engine`] when the `pjrt` feature
+//! (and with it the `xla` bindings crate) is unavailable.
+//!
+//! The stub preserves every public type and signature so the coordinator,
+//! examples and integration tests compile unchanged; construction fails
+//! with a descriptive error instead. `ModelRuntime` can therefore never
+//! exist at runtime without the feature — its methods are unreachable but
+//! still typecheck against the real surface.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelManifest;
+
+const NO_PJRT: &str = "built without the `pjrt` feature: real artifact \
+     execution needs the xla bindings crate, which must be vendored and \
+     added to rust/Cargo.toml [dependencies] before building with \
+     --features pjrt (see the feature note in that file); the simulator, \
+     theory solvers and sweeps do not require it";
+
+/// Process-wide PJRT client handle (stub).
+pub struct PjrtEngine {
+    _private: (),
+}
+
+/// A mini-batch crossing into HLO: CNN takes f32 features, the LM takes
+/// i32 tokens.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchInput<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Outputs of one gradient step.
+#[derive(Clone, Copy, Debug)]
+pub struct GradOutput {
+    pub loss: f32,
+    /// number of correct argmax predictions in the batch
+    pub correct: f32,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> Result<Self> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no pjrt feature)".to_string()
+    }
+}
+
+/// One model's executables + shape metadata (stub).
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+}
+
+impl ModelRuntime {
+    /// Always fails: compiling artifacts requires the real engine.
+    pub fn load(_engine: &PjrtEngine, _manifest: &ModelManifest) -> Result<Self> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn grad_step(
+        &self,
+        _theta: &[f32],
+        _x: BatchInput<'_>,
+        _y: &[i32],
+        _grad_out: &mut [f32],
+    ) -> Result<GradOutput> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn eval_step(
+        &self,
+        _theta: &[f32],
+        _x: BatchInput<'_>,
+        _y: &[i32],
+    ) -> Result<GradOutput> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn apply_step(
+        &self,
+        _theta: &mut [f32],
+        _grad: &[f32],
+        _lr: f32,
+    ) -> Result<()> {
+        bail!(NO_PJRT);
+    }
+
+    pub fn d(&self) -> usize {
+        self.manifest.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let err = PjrtEngine::cpu().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

@@ -12,6 +12,7 @@ use crate::market::process::{PriceDist, PriceModel};
 use crate::market::trace::SpotTrace;
 use crate::util::rng::Rng;
 
+#[derive(Clone, Debug)]
 pub enum PriceSource {
     Iid(PriceModel),
     Trace(SpotTrace),

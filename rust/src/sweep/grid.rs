@@ -1,0 +1,97 @@
+//! Grid specification: named numeric axes crossed into a flat list of
+//! points (row-major, first axis slowest).
+//!
+//! The figure sweeps are grids over things like (bid fraction, worker
+//! count, preemption probability); scenarios decode a flat point index
+//! into one value per axis with [`Grid::point`].
+
+/// A cartesian product of named axes.
+#[derive(Clone, Debug, Default)]
+pub struct Grid {
+    axes: Vec<(String, Vec<f64>)>,
+}
+
+impl Grid {
+    pub fn new() -> Self {
+        Grid { axes: Vec::new() }
+    }
+
+    /// Add an axis (builder-style). Empty axes are rejected: they would
+    /// zero out the whole product, which is never what a sweep means.
+    pub fn axis(mut self, name: &str, values: Vec<f64>) -> Self {
+        assert!(!values.is_empty(), "axis '{name}' has no values");
+        self.axes.push((name.to_string(), values));
+        self
+    }
+
+    pub fn axis_names(&self) -> Vec<&str> {
+        self.axes.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Number of grid points: the product of axis lengths (1 for no
+    /// axes — the empty product; `axis()` rejects empty value lists, so
+    /// the count is always positive).
+    pub fn num_points(&self) -> usize {
+        self.axes.iter().map(|(_, v)| v.len()).product()
+    }
+
+    /// Decode a flat index into one value per axis (first axis slowest).
+    pub fn point(&self, mut idx: usize) -> Vec<f64> {
+        assert!(
+            idx < self.num_points(),
+            "grid index {idx} out of {}",
+            self.num_points()
+        );
+        let mut out = vec![0.0; self.axes.len()];
+        for (k, (_, values)) in self.axes.iter().enumerate().rev() {
+            out[k] = values[idx % values.len()];
+            idx /= values.len();
+        }
+        out
+    }
+
+    /// Human label for a point: `"n=8 q=0.5"`.
+    pub fn label(&self, idx: usize) -> String {
+        let vals = self.point(idx);
+        self.axes
+            .iter()
+            .zip(&vals)
+            .map(|((name, _), v)| format!("{name}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_decode() {
+        let g = Grid::new()
+            .axis("a", vec![1.0, 2.0])
+            .axis("b", vec![10.0, 20.0, 30.0]);
+        assert_eq!(g.num_points(), 6);
+        assert_eq!(g.point(0), vec![1.0, 10.0]);
+        assert_eq!(g.point(2), vec![1.0, 30.0]);
+        assert_eq!(g.point(3), vec![2.0, 10.0]);
+        assert_eq!(g.point(5), vec![2.0, 30.0]);
+        assert_eq!(g.label(3), "a=2 b=10");
+        assert_eq!(g.axis_names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn single_axis_and_zero_axes() {
+        let g = Grid::new().axis("x", vec![5.0]);
+        assert_eq!(g.num_points(), 1);
+        assert_eq!(g.point(0), vec![5.0]);
+        assert_eq!(Grid::new().num_points(), 1); // empty product is the unit
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_index_panics() {
+        let g = Grid::new().axis("x", vec![1.0, 2.0]);
+        let _ = g.point(2);
+    }
+}

@@ -1,0 +1,405 @@
+//! Parallel deterministic sweep harness.
+//!
+//! The paper's evaluation (Figs. 2–5) and every ROADMAP scaling scenario
+//! reduce to the same shape: a grid of configurations, R Monte-Carlo
+//! replicates per grid point, and per-point summary statistics. This
+//! module makes that inner loop embarrassingly parallel *without changing
+//! a single output bit*:
+//!
+//! * [`planner`] expands (points × replicates) into stably-numbered jobs,
+//!   each owning an RNG derived as `Rng::stream(seed, job.stream)` — a
+//!   pure function of job identity, never of execution order;
+//! * [`pool`] runs jobs on a work-stealing `std::thread` pool and returns
+//!   outputs in index order;
+//! * [`Scenario::prepare`] builds each grid point's *context* (price-CDF
+//!   estimates, generated traces, E[1/y] tables — anything pure in the
+//!   point) exactly once per sweep instead of once per replicate;
+//! * collation folds job outputs into per-point Welford accumulators in
+//!   job order, so means/variances are bit-identical at any thread count
+//!   ([`SweepResults::digest`] pins this in tests).
+//!
+//! Seeding guarantee: `(seed, grid, replicates)` fully determine the
+//! results; `--threads` is a pure throughput knob. See DESIGN.md §3.
+
+pub mod grid;
+pub mod planner;
+pub mod pool;
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::Throughput;
+use crate::util::rng::Rng;
+use crate::util::stats::OnlineStats;
+
+pub use grid::Grid;
+pub use planner::{Job, JobPlan};
+pub use pool::run_indexed;
+
+/// How a sweep runs: replicates per grid point, master seed, workers.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepConfig {
+    pub replicates: u64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig { replicates: 8, seed: 2020, threads: 1 }
+    }
+}
+
+/// A sweepable experiment: a grid of points, a cached per-point context,
+/// and a replicate body that reports one f64 per metric.
+///
+/// Contract for determinism: `prepare` and `run` must be pure in their
+/// arguments (all randomness through the provided `rng`); the harness
+/// guarantees in return that results are identical at any thread count.
+pub trait Scenario: Sync {
+    /// Pure per-grid-point data computed once per sweep (CDF estimates,
+    /// generated traces, bid plans, E[1/y] tables...). `Send + Sync`
+    /// because replicate jobs on any worker borrow it concurrently.
+    type Ctx: Send + Sync;
+
+    /// Number of grid points.
+    fn points(&self) -> usize;
+
+    /// Human label for a point (used in tables and CSV).
+    fn label(&self, point: usize) -> String;
+
+    /// Names of the metrics each replicate reports, in order.
+    fn metrics(&self) -> Vec<&'static str>;
+
+    /// Build the cached context for one grid point.
+    fn prepare(&self, point: usize) -> Result<Self::Ctx>;
+
+    /// Run one replicate at a grid point. Non-finite metric values are
+    /// collated as "missing" (e.g. a run that never reached the target
+    /// accuracy) rather than poisoning the statistics.
+    fn run(&self, point: usize, ctx: &Self::Ctx, rng: &mut Rng)
+        -> Result<Vec<f64>>;
+}
+
+/// Collated statistics for one grid point.
+#[derive(Clone, Debug)]
+pub struct PointSummary {
+    pub label: String,
+    /// one Welford accumulator per metric, fed in job order
+    pub stats: Vec<OnlineStats>,
+    /// per metric: replicates whose value was non-finite
+    pub missing: Vec<u64>,
+}
+
+/// The result of a sweep: per-point Welford statistics plus throughput.
+#[derive(Clone, Debug)]
+pub struct SweepResults {
+    pub metric_names: Vec<&'static str>,
+    pub points: Vec<PointSummary>,
+    pub throughput: Throughput,
+}
+
+/// Run a scenario under a config. Contexts are built in parallel (one
+/// job per grid point), then replicate jobs run on the same pool;
+/// collation is sequential in job order.
+pub fn run_sweep<S: Scenario>(
+    scenario: &S,
+    cfg: &SweepConfig,
+) -> Result<SweepResults> {
+    let t0 = Instant::now();
+    let npts = scenario.points();
+    let metric_names = scenario.metrics();
+    let nmetrics = metric_names.len();
+
+    // phase 1: per-point contexts, once per sweep
+    let ctxs: Vec<S::Ctx> =
+        run_indexed(cfg.threads, npts, |p| scenario.prepare(p))
+            .into_iter()
+            .collect::<Result<_>>()?;
+
+    // phase 2: replicate jobs
+    let plan = JobPlan::new(npts, cfg.replicates);
+    let outputs = run_indexed(cfg.threads, plan.len(), |i| {
+        let job = plan.jobs[i];
+        let mut rng = Rng::stream(cfg.seed, job.stream);
+        scenario.run(job.point, &ctxs[job.point], &mut rng)
+    });
+
+    // phase 3: deterministic collation in job order
+    let mut points: Vec<PointSummary> = (0..npts)
+        .map(|p| PointSummary {
+            label: scenario.label(p),
+            stats: vec![OnlineStats::new(); nmetrics],
+            missing: vec![0; nmetrics],
+        })
+        .collect();
+    for (i, out) in outputs.into_iter().enumerate() {
+        let job = plan.jobs[i];
+        let vals = out?;
+        ensure!(
+            vals.len() == nmetrics,
+            "scenario returned {} metrics, declared {nmetrics}",
+            vals.len()
+        );
+        let summary = &mut points[job.point];
+        for (m, &v) in vals.iter().enumerate() {
+            if v.is_finite() {
+                summary.stats[m].push(v);
+            } else {
+                summary.missing[m] += 1;
+            }
+        }
+    }
+
+    Ok(SweepResults {
+        metric_names,
+        points,
+        throughput: Throughput {
+            jobs: plan.len() as u64,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            threads: cfg.threads.max(1),
+        },
+    })
+}
+
+impl SweepResults {
+    /// Flatten into a CSV table: one row per grid point, with
+    /// `mean/std/min/max/n/missing` columns per metric. Point labels are
+    /// not representable in the numeric table; `print` carries them.
+    pub fn to_table(&self) -> crate::util::csv::Table {
+        let mut names: Vec<String> = vec!["point".to_string()];
+        for m in &self.metric_names {
+            for suffix in ["mean", "std", "min", "max", "n", "missing"] {
+                names.push(format!("{m}_{suffix}"));
+            }
+        }
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let mut t = crate::util::csv::Table::new(&name_refs);
+        for (p, point) in self.points.iter().enumerate() {
+            let mut row = vec![p as f64];
+            for (s, &miss) in point.stats.iter().zip(&point.missing) {
+                let empty = s.count() == 0;
+                row.push(s.mean());
+                row.push(s.std());
+                row.push(if empty { f64::NAN } else { s.min() });
+                row.push(if empty { f64::NAN } else { s.max() });
+                row.push(s.count() as f64);
+                row.push(miss as f64);
+            }
+            t.push(row);
+        }
+        t
+    }
+
+    /// Order- and thread-count-sensitive only if collation were broken:
+    /// an FNV-1a hash over every label, count and statistic bit pattern.
+    /// Two sweeps with the same seed must agree on this exactly.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        for name in &self.metric_names {
+            h.bytes(name.as_bytes());
+        }
+        for p in &self.points {
+            h.bytes(p.label.as_bytes());
+            for (s, &miss) in p.stats.iter().zip(&p.missing) {
+                h.u64(s.count());
+                h.u64(miss);
+                h.f64(s.mean());
+                h.f64(s.variance());
+                if s.count() > 0 {
+                    h.f64(s.min());
+                    h.f64(s.max());
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Human-readable summary: one block per point, one line per metric.
+    pub fn print(&self) {
+        for p in &self.points {
+            println!("  {}", p.label);
+            for ((name, s), &miss) in
+                self.metric_names.iter().zip(&p.stats).zip(&p.missing)
+            {
+                let miss_note = if miss > 0 {
+                    format!("  ({miss} missing)")
+                } else {
+                    String::new()
+                };
+                println!(
+                    "    {name:<18} mean={:<12.4} std={:<12.4} n={}{miss_note}",
+                    s.mean(),
+                    s.std(),
+                    s.count()
+                );
+            }
+        }
+        println!("  {}", self.throughput);
+    }
+}
+
+/// FNV-1a, 64-bit.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.bytes(&x.to_bits().to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy scenario: points are offsets, the metric is offset + a
+    /// replicate-random draw; ctx proves `prepare` runs once per point.
+    struct Toy {
+        offsets: Vec<f64>,
+    }
+
+    impl Scenario for Toy {
+        type Ctx = f64;
+
+        fn points(&self) -> usize {
+            self.offsets.len()
+        }
+
+        fn label(&self, point: usize) -> String {
+            format!("offset={}", self.offsets[point])
+        }
+
+        fn metrics(&self) -> Vec<&'static str> {
+            vec!["value", "draw"]
+        }
+
+        fn prepare(&self, point: usize) -> Result<f64> {
+            Ok(self.offsets[point] * 10.0)
+        }
+
+        fn run(
+            &self,
+            _point: usize,
+            ctx: &f64,
+            rng: &mut Rng,
+        ) -> Result<Vec<f64>> {
+            let u = rng.f64();
+            Ok(vec![ctx + u, u])
+        }
+    }
+
+    #[test]
+    fn identical_results_at_any_thread_count() {
+        let toy = Toy { offsets: vec![1.0, 2.0, 3.0] };
+        let base = SweepConfig { replicates: 16, seed: 99, threads: 1 };
+        let serial = run_sweep(&toy, &base).unwrap();
+        for threads in [2usize, 4, 8] {
+            let cfg = SweepConfig { threads, ..base };
+            let par = run_sweep(&toy, &cfg).unwrap();
+            assert_eq!(serial.digest(), par.digest(), "threads={threads}");
+            assert_eq!(
+                serial.to_table().to_csv(),
+                par.to_table().to_csv(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn collation_counts_and_means() {
+        let toy = Toy { offsets: vec![0.0, 5.0] };
+        let cfg = SweepConfig { replicates: 200, seed: 3, threads: 4 };
+        let out = run_sweep(&toy, &cfg).unwrap();
+        assert_eq!(out.points.len(), 2);
+        for (p, offset) in out.points.iter().zip([0.0f64, 5.0]) {
+            assert_eq!(p.stats[0].count(), 200);
+            assert_eq!(p.missing[0], 0);
+            // value = 10 * offset + U(0,1)
+            let want = offset * 10.0 + 0.5;
+            assert!(
+                (p.stats[0].mean() - want).abs() < 0.1,
+                "mean {} vs {want}",
+                p.stats[0].mean()
+            );
+        }
+        assert_eq!(out.throughput.jobs, 400);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let toy = Toy { offsets: vec![1.0] };
+        let a = run_sweep(
+            &toy,
+            &SweepConfig { replicates: 8, seed: 1, threads: 2 },
+        )
+        .unwrap();
+        let b = run_sweep(
+            &toy,
+            &SweepConfig { replicates: 8, seed: 2, threads: 2 },
+        )
+        .unwrap();
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    /// Non-finite metrics are counted missing, not averaged.
+    struct Sometimes;
+
+    impl Scenario for Sometimes {
+        type Ctx = ();
+
+        fn points(&self) -> usize {
+            1
+        }
+
+        fn label(&self, _point: usize) -> String {
+            "p".to_string()
+        }
+
+        fn metrics(&self) -> Vec<&'static str> {
+            vec!["maybe"]
+        }
+
+        fn prepare(&self, _point: usize) -> Result<()> {
+            Ok(())
+        }
+
+        fn run(
+            &self,
+            _point: usize,
+            _ctx: &(),
+            rng: &mut Rng,
+        ) -> Result<Vec<f64>> {
+            Ok(vec![if rng.bool(0.5) { 1.0 } else { f64::NAN }])
+        }
+    }
+
+    #[test]
+    fn missing_values_are_skipped() {
+        let cfg = SweepConfig { replicates: 64, seed: 11, threads: 3 };
+        let out = run_sweep(&Sometimes, &cfg).unwrap();
+        let p = &out.points[0];
+        assert_eq!(p.stats[0].count() + p.missing[0], 64);
+        assert!(p.missing[0] > 0);
+        assert_eq!(p.stats[0].mean(), 1.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Job planning: expand a (grid points × replicates) sweep into a flat,
+//! stably-numbered job list.
+//!
+//! Each job owns a *stream id* — `point * replicates + replicate` — that
+//! seeds its private RNG via [`crate::util::rng::Rng::stream`]. The id is
+//! a pure function of the job's identity, so the randomness a job sees is
+//! independent of execution order, worker assignment, and thread count.
+
+/// One unit of sweep work: a (grid point, replicate) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Job {
+    /// index into the scenario's grid points
+    pub point: usize,
+    /// replicate number within the point, `0..replicates`
+    pub replicate: u64,
+    /// RNG stream id: `point * replicates + replicate` (unique per job)
+    pub stream: u64,
+}
+
+/// The flat job list for one sweep.
+#[derive(Clone, Debug)]
+pub struct JobPlan {
+    pub points: usize,
+    pub replicates: u64,
+    pub jobs: Vec<Job>,
+}
+
+impl JobPlan {
+    /// Point-major order: a point's replicates are adjacent, so the
+    /// round-robin deal in the pool keeps each worker cycling through a
+    /// small set of cached contexts.
+    pub fn new(points: usize, replicates: u64) -> Self {
+        let mut jobs = Vec::with_capacity(points * replicates as usize);
+        for point in 0..points {
+            for replicate in 0..replicates {
+                jobs.push(Job {
+                    point,
+                    replicate,
+                    stream: point as u64 * replicates + replicate,
+                });
+            }
+        }
+        JobPlan { points, replicates, jobs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_the_product() {
+        let plan = JobPlan::new(3, 4);
+        assert_eq!(plan.len(), 12);
+        // stream ids are exactly 0..12, each exactly once
+        let mut streams: Vec<u64> = plan.jobs.iter().map(|j| j.stream).collect();
+        streams.sort_unstable();
+        assert_eq!(streams, (0..12).collect::<Vec<_>>());
+        // point-major ordering
+        assert_eq!(plan.jobs[0], Job { point: 0, replicate: 0, stream: 0 });
+        assert_eq!(plan.jobs[4], Job { point: 1, replicate: 0, stream: 4 });
+        assert_eq!(plan.jobs[11], Job { point: 2, replicate: 3, stream: 11 });
+    }
+
+    #[test]
+    fn empty_plans() {
+        assert!(JobPlan::new(0, 5).is_empty());
+        assert!(JobPlan::new(5, 0).is_empty());
+    }
+}

@@ -1,0 +1,166 @@
+//! Work-stealing thread pool over `std::thread` + channels.
+//!
+//! [`run_indexed`] is the one primitive everything else builds on: run
+//! `f(0..n)` across `threads` workers and return the outputs **in index
+//! order**. Jobs are dealt round-robin into per-worker deques; a worker
+//! pops its own queue from the front and, when empty, steals from the
+//! back of another worker's queue, so an unlucky worker stuck on a slow
+//! job cannot strand the jobs queued behind it.
+//!
+//! Determinism contract: if `f` is a pure function of its index (the
+//! sweep harness guarantees this by deriving each job's RNG with
+//! [`crate::util::rng::Rng::stream`]), the returned vector is identical
+//! at any thread count — scheduling only changes *when* a job runs,
+//! never *what* it computes, and collation is by index, not completion
+//! order.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread;
+
+/// Run `f` over `0..n` on up to `threads` workers; `out[i] == f(i)`.
+///
+/// `threads <= 1` (or `n <= 1`) runs inline on the caller's thread with
+/// no pool at all, which keeps single-threaded runs trivially
+/// deterministic and overhead-free.
+pub fn run_indexed<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    // deal jobs round-robin so every worker starts with local work
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..workers)
+        .map(|w| Mutex::new((w..n).step_by(workers).collect()))
+        .collect();
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+
+    thread::scope(|scope| {
+        for w in 0..workers {
+            let tx = tx.clone();
+            let queues = &queues;
+            let f = &f;
+            scope.spawn(move || {
+                while let Some(i) = next_job(queues, w) {
+                    // receiver gone means the collector bailed; just stop
+                    if tx.send((i, f(i))).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+        drop(tx); // collector's rx ends when the last worker clone drops
+        for (i, out) in rx {
+            slots[i] = Some(out);
+        }
+    });
+
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} was never delivered")))
+        .collect()
+}
+
+/// Pop own queue front, else steal the back of the fullest other queue.
+/// Returns `None` only once a full scan observes every queue empty — a
+/// lost steal race (the victim drained between the scan and the lock)
+/// rescans instead of retiring the worker, so no worker exits while
+/// another queue still holds jobs. Terminates because jobs are only ever
+/// removed: each rescan sees a strictly shrinking backlog.
+fn next_job(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    if let Some(i) = queues[me].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    loop {
+        // victim selection: fullest queue first, so steals spread the
+        // tail of a slow worker's backlog rather than ping-ponging
+        // single jobs
+        let mut best: Option<(usize, usize)> = None; // (len, victim)
+        for (v, q) in queues.iter().enumerate() {
+            if v == me {
+                continue;
+            }
+            let len = q.lock().unwrap().len();
+            if len > 0 && best.map(|(l, _)| len > l).unwrap_or(true) {
+                best = Some((len, v));
+            }
+        }
+        let (_, victim) = best?;
+        if let Some(i) = queues[victim].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn outputs_are_in_index_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let out = run_indexed(threads, 100, |i| i * i);
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let counts: Vec<AtomicUsize> =
+            (0..257).map(|_| AtomicUsize::new(0)).collect();
+        run_indexed(8, 257, |i| {
+            counts[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "job {i}");
+        }
+    }
+
+    #[test]
+    fn uneven_job_durations_still_collate_correctly() {
+        // early indices sleep, forcing later ones to be stolen
+        let out = run_indexed(4, 32, |i| {
+            if i < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            i + 1
+        });
+        assert_eq!(out, (1..=32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_and_one_jobs() {
+        assert_eq!(run_indexed(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(4, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn more_threads_than_jobs() {
+        assert_eq!(run_indexed(64, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts_with_stream_rng() {
+        use crate::util::rng::Rng;
+        let job = |i: usize| {
+            let mut rng = Rng::stream(7, i as u64);
+            (0..100).map(|_| rng.f64()).sum::<f64>()
+        };
+        let serial = run_indexed(1, 40, job);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(serial, run_indexed(threads, 40, job));
+        }
+    }
+}

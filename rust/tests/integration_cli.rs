@@ -77,6 +77,38 @@ fn simulate_one_bid_writes_series() {
 }
 
 #[test]
+fn sweep_subcommand_is_deterministic_across_threads() {
+    // figure-default J keeps the Theorem 2/3 plans feasible (theta
+    // scales with J); 2 replicates keeps the smoke test quick
+    let run_sweep = |threads: &str| {
+        run_ok(&[
+            "sweep", "--fig", "3", "--replicates", "2", "--seed", "77",
+            "--threads", threads,
+        ])
+    };
+    let a = run_sweep("1");
+    let b = run_sweep("4");
+    let digest = |out: &str| {
+        out.lines()
+            .find(|l| l.contains("digest:"))
+            .map(str::trim)
+            .map(str::to_string)
+            .expect("digest line")
+    };
+    assert_eq!(digest(&a), digest(&b), "sweep digest differs by threads");
+    assert!(a.contains("jobs/s"), "throughput line missing:\n{a}");
+    let csv = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("out/sweep_fig3.csv");
+    assert!(csv.exists());
+}
+
+#[test]
+fn help_mentions_sweep() {
+    let out = run_ok(&["help"]);
+    assert!(out.contains("sweep"), "help missing sweep:\n{out}");
+}
+
+#[test]
 fn info_requires_or_reads_artifacts() {
     let have = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts/manifest.txt")

@@ -1,7 +1,11 @@
 //! PJRT integration: real artifact execution. These tests require
 //! `make artifacts` to have run; they are skipped (pass vacuously, with a
 //! note) when artifacts/ is absent so `cargo test` works on a fresh
-//! checkout.
+//! checkout. The whole file is additionally compile-gated on the `pjrt`
+//! feature: without it the engine is a stub whose `cpu()` always errors,
+//! and a checkout that *does* have artifacts would otherwise panic here
+//! instead of skipping.
+#![cfg(feature = "pjrt")]
 
 use volatile_sgd::coordinator::backend::{RealBackend, TrainingBackend};
 use volatile_sgd::data::CifarLike;

@@ -1,0 +1,118 @@
+//! Sweep-harness integration: the determinism contract end to end.
+//!
+//! The tentpole guarantee is that `--threads` is a pure throughput knob:
+//! for a fixed seed, a sweep's collated results (Welford statistics,
+//! CSV table, digest) are bit-identical at any thread count, because
+//! every (grid-point, replicate) job derives its RNG from
+//! `Rng::stream(seed, job)` and collation folds outputs in job order.
+
+use volatile_sgd::exp::fig3::{Fig3Params, Fig3Sweep};
+use volatile_sgd::exp::fig5::{Fig5Params, Fig5Sweep};
+use volatile_sgd::market::PriceModel;
+use volatile_sgd::sweep::{run_sweep, SweepConfig};
+
+/// A small Fig. 3 grid: one distribution x four strategies. Default J
+/// keeps the Theorem 2/3 plans feasible (their deadlines scale with it).
+fn small_fig3() -> Fig3Sweep {
+    Fig3Sweep {
+        params: Fig3Params::default(),
+        dists: vec![(PriceModel::uniform_paper(), "uniform")],
+    }
+}
+
+#[test]
+fn fig3_sweep_identical_at_threads_1_and_8() {
+    let sweep = small_fig3();
+    let base = SweepConfig { replicates: 3, seed: 2020, threads: 1 };
+    let serial = run_sweep(&sweep, &base).unwrap();
+    let par = run_sweep(
+        &sweep,
+        &SweepConfig { threads: 8, ..base },
+    )
+    .unwrap();
+
+    // the digest pins every count, mean, variance, min and max bit
+    assert_eq!(serial.digest(), par.digest());
+    // and the exported table is textually identical
+    assert_eq!(serial.to_table().to_csv(), par.to_table().to_csv());
+    // sanity: the sweep actually covered the grid
+    assert_eq!(serial.points.len(), 4);
+    assert_eq!(serial.throughput.jobs, 12);
+    for p in &serial.points {
+        // every replicate reported total_cost (metric 2) as finite
+        assert_eq!(p.stats[2].count(), 3, "{}", p.label);
+    }
+}
+
+#[test]
+fn fig3_sweep_reruns_reproduce_exactly() {
+    let sweep = small_fig3();
+    let cfg = SweepConfig { replicates: 2, seed: 7, threads: 4 };
+    let a = run_sweep(&sweep, &cfg).unwrap();
+    let b = run_sweep(&sweep, &cfg).unwrap();
+    assert_eq!(a.digest(), b.digest());
+    // a different seed must change the statistics
+    let c = run_sweep(
+        &sweep,
+        &SweepConfig { seed: 8, ..cfg },
+    )
+    .unwrap();
+    assert_ne!(a.digest(), c.digest());
+}
+
+#[test]
+fn fig5_grid_sweep_deterministic_and_cached_stats_exact() {
+    use volatile_sgd::preempt::{PreemptionModel, RecipTable};
+
+    let sweep = Fig5Sweep::paper(Fig5Params { j: 1_000, ..Default::default() });
+    let base = SweepConfig { replicates: 4, seed: 11, threads: 1 };
+    let serial = run_sweep(&sweep, &base).unwrap();
+    let par = run_sweep(
+        &sweep,
+        &SweepConfig { threads: 8, ..base },
+    )
+    .unwrap();
+    assert_eq!(serial.digest(), par.digest());
+    assert_eq!(serial.points.len(), 12); // 4 n x 3 q
+
+    // the cached recip_exact metric (index 4) equals the direct exact
+    // computation for its grid point, with zero variance across
+    // replicates (it is a per-point constant)
+    for (idx, p) in serial.points.iter().enumerate() {
+        let vals = sweep.grid.point(idx);
+        let (n, q) = (vals[0] as usize, vals[1]);
+        let want = RecipTable::build(
+            &PreemptionModel::Bernoulli { q },
+            n,
+        )
+        .recip(n);
+        let recip = &p.stats[4];
+        assert_eq!(recip.count(), 4);
+        assert!(
+            (recip.mean() - want).abs() < 1e-15,
+            "{}: {} vs {want}",
+            p.label,
+            recip.mean()
+        );
+        assert_eq!(recip.variance(), 0.0, "{}", p.label);
+    }
+}
+
+#[test]
+fn thread_count_does_not_leak_into_labels_or_metrics() {
+    let sweep = small_fig3();
+    let cfg = SweepConfig { replicates: 1, seed: 1, threads: 6 };
+    let out = run_sweep(&sweep, &cfg).unwrap();
+    let labels: Vec<String> =
+        out.points.iter().map(|p| p.label.clone()).collect();
+    assert_eq!(
+        labels,
+        vec![
+            "uniform/no_interruptions",
+            "uniform/one_bid",
+            "uniform/two_bids",
+            "uniform/dynamic"
+        ]
+    );
+    assert_eq!(out.metric_names[0], "cost_at_target");
+}

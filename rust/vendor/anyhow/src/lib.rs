@@ -1,0 +1,215 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! This build cannot reach crates.io, so the workspace vendors the small
+//! slice of anyhow's surface the codebase actually uses:
+//!
+//! * [`Error`] — an opaque error carrying a human-readable context chain;
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — ad-hoc error construction;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Semantics mirror upstream where it matters to callers: `{err}` prints
+//! the outermost message, `{err:#}` prints the whole chain separated by
+//! `": "`, `{err:?}` prints the message plus a `Caused by:` list, and any
+//! `std::error::Error + Send + Sync + 'static` converts via `?`
+//! (including its `source()` chain). Like upstream, [`Error`] itself does
+//! **not** implement `std::error::Error` — that is what keeps the blanket
+//! `From` impl coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error with a context chain. `chain[0]` is the outermost (most
+/// recently attached) message; the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (consuming form, mirrors
+    /// `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, so this
+// blanket impl is coherent (same trick as upstream anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error carried by a `Result`, or turn an
+/// `Option::None` into a contextualised error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Into::<Error>::into(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Into::<Error>::into(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or displayable
+/// expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")
+            .map(|_| ())
+            .context("reading config")
+    }
+
+    #[test]
+    fn display_outer_and_alternate_chain() {
+        let e = anyhow!("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(5).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(7)
+        }
+        fn outer() -> Result<u32> {
+            let v = inner(true).context("calling inner")?;
+            if v != 7 {
+                bail!("bad value {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(outer().unwrap(), 7);
+        assert!(inner(false).is_err());
+        // expression form (non-literal)
+        let msg = String::from("dynamic");
+        let e = anyhow!(msg);
+        assert_eq!(format!("{e}"), "dynamic");
+    }
+
+    #[test]
+    fn root_cause_and_chain() {
+        let e = anyhow!("root").context("outer");
+        assert_eq!(e.root_cause(), "root");
+        let parts: Vec<&str> = e.chain().collect();
+        assert_eq!(parts, vec!["outer", "root"]);
+    }
+}
