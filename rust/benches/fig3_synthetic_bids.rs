@@ -10,7 +10,8 @@
 
 mod bench_util;
 
-use volatile_sgd::exp::fig3::{self, Fig3Params, Fig3Sweep};
+use volatile_sgd::exp::fig3::{self, Fig3Params};
+use volatile_sgd::exp::presets;
 use volatile_sgd::market::PriceModel;
 use volatile_sgd::sweep::{run_sweep, SweepConfig};
 
@@ -85,7 +86,7 @@ fn main() {
     // threads must produce the identical digest, and the wall-clock gap
     // is the headline (the acceptance bar is >= 3x on 8 cores)
     let replicates = 8;
-    let sweep = Fig3Sweep::paper(Fig3Params::default());
+    let sweep = presets::scenario("fig3").expect("fig3 preset");
     let run_at = |threads: usize| {
         let cfg = SweepConfig { replicates, seed: 2020, threads };
         let t0 = std::time::Instant::now();

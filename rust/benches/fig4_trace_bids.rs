@@ -56,13 +56,12 @@ fn main() {
     );
     println!("CSV -> out/fig4_*.csv");
 
-    // replicated Monte-Carlo over the same traces on the sweep harness:
-    // per-point prepare (trace gen + CDF + plans) runs once per trace
+    // replicated Monte-Carlo over the same traces on the sweep harness
+    // (the fig4 preset spec, lineup mode): per-point prepare (trace gen
+    // + CDF + plans) runs once per trace
     use volatile_sgd::sweep::{run_sweep, SweepConfig};
-    let sweep = fig4::Fig4Sweep {
-        params: Fig4Params::default(),
-        trace_seeds: vec![7, 8, 9],
-    };
+    let sweep = volatile_sgd::exp::presets::scenario("fig4")
+        .expect("fig4 preset");
     let cfg = SweepConfig { replicates: 4, seed: 2020, threads };
     let t0 = std::time::Instant::now();
     let results = run_sweep(&sweep, &cfg).expect("fig4 sweep");

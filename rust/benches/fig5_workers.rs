@@ -71,9 +71,11 @@ fn main() {
     );
     println!("CSV -> out/fig5_outcomes.csv");
 
-    // (n x q) Monte-Carlo grid on the sweep harness
+    // (n x q) Monte-Carlo grid on the sweep harness (the fig5 preset
+    // spec, exact E[1/y] tables cached per point)
     use volatile_sgd::sweep::{run_sweep, SweepConfig};
-    let sweep = fig5::Fig5Sweep::paper(Fig5Params::default());
+    let sweep =
+        volatile_sgd::exp::presets::scenario("fig5").expect("fig5 preset");
     let cfg = SweepConfig { replicates: 8, seed: 2020, threads };
     let t0 = std::time::Instant::now();
     let results = run_sweep(&sweep, &cfg).expect("fig5 sweep");

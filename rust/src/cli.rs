@@ -64,9 +64,16 @@ impl Args {
     }
 
     pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.u64_opt(key)?.unwrap_or(default))
+    }
+
+    /// `Some(parsed)` when the flag is present, `None` when absent —
+    /// for flags whose absence means "defer to the config/spec default"
+    /// rather than a fixed built-in.
+    pub fn u64_opt(&self, key: &str) -> Result<Option<u64>> {
         match self.flags.get(key) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|_| {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
                 anyhow::anyhow!("--{key} expects an integer, got '{v}'")
             }),
         }
@@ -97,6 +104,8 @@ mod tests {
         .unwrap();
         assert_eq!(a.command, "simulate");
         assert_eq!(a.usize("n", 0).unwrap(), 8);
+        assert_eq!(a.u64_opt("n").unwrap(), Some(8));
+        assert_eq!(a.u64_opt("absent").unwrap(), None);
         assert_eq!(a.f64("eps", 0.0).unwrap(), 0.35);
         assert!(a.bool("real"));
         assert!(!a.bool("missing"));

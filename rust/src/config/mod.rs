@@ -4,4 +4,4 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{ExperimentConfig, StrategyKind};
-pub use toml::{Doc, Value};
+pub use toml::{Doc, TrackedDoc, Value};

@@ -2,7 +2,9 @@
 //!
 //! One config file fully describes a run: model + artifacts, price model,
 //! runtime model, SGD bound constants, the job constraints (eps, theta)
-//! and the strategy. Example (`examples/configs/fig3_uniform.toml`-style):
+//! and the strategy. The shipped scenario specs under `examples/configs/`
+//! use the richer sweep schema (`exp::spec`); this simpler single-run
+//! shape drives `volatile-sgd simulate`. Example:
 //!
 //! ```toml
 //! seed = 42
@@ -31,7 +33,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::market::{PriceModel, SpotTrace};
 use crate::theory::bounds::{ErrorBound, SgdHyper};
@@ -48,12 +50,59 @@ pub enum StrategyKind {
     OneBid,
     /// Theorem 3 with a fixed group split
     TwoBids { n1: usize },
+    /// Two-group bids placed directly at CDF fractions, no optimisation:
+    /// `b1 = F^-1(f1)`, `b2 = F^-1(gamma * f1)` — the Fig. 2 surface
+    /// parameterisation.
+    BidFractions { n1: usize, f1: f64, gamma: f64 },
     /// Sec. VI dynamic strategy: staged growth + re-optimised bids
     DynamicBids { n1: usize, stage_iters: u64 },
     /// Sec. V static provisioning (Theorem 4)
     StaticWorkers,
     /// Sec. V dynamic n_j = ceil(n0 eta^{j-1}) (Theorem 5)
     DynamicWorkers { eta: f64 },
+}
+
+impl StrategyKind {
+    /// The config-file name of this kind (what `from_name` parses and
+    /// what `simulate` uses for output labels/paths).
+    pub fn canonical_name(&self) -> &'static str {
+        match self {
+            StrategyKind::NoInterruption => "no_interruption",
+            StrategyKind::OneBid => "one_bid",
+            StrategyKind::TwoBids { .. } => "two_bids",
+            StrategyKind::BidFractions { .. } => "bid_fractions",
+            StrategyKind::DynamicBids { .. } => "dynamic",
+            StrategyKind::StaticWorkers => "static_workers",
+            StrategyKind::DynamicWorkers { .. } => "dynamic_workers",
+        }
+    }
+
+    /// Parse a kind name into a `StrategyKind` with defaults scaled to a
+    /// fleet of `n` workers (`n1 = n/2`, the paper's split). Accepts the
+    /// figure-label plural "no_interruptions" as an alias.
+    pub fn from_name(name: &str, n: usize) -> Result<Self> {
+        let n1 = (n / 2).max(1);
+        Ok(match name {
+            "no_interruption" | "no_interruptions" => {
+                StrategyKind::NoInterruption
+            }
+            "one_bid" => StrategyKind::OneBid,
+            "two_bids" => StrategyKind::TwoBids { n1 },
+            "bid_fractions" => {
+                StrategyKind::BidFractions { n1, f1: 0.5, gamma: 1.0 }
+            }
+            "dynamic" | "dynamic_bids" => {
+                StrategyKind::DynamicBids { n1, stage_iters: 4_000 }
+            }
+            "static_workers" => StrategyKind::StaticWorkers,
+            "dynamic_workers" => StrategyKind::DynamicWorkers { eta: 1.0004 },
+            other => bail!(
+                "unknown strategy kind '{other}' (no_interruption | one_bid \
+                 | two_bids | bid_fractions | dynamic | static_workers | \
+                 dynamic_workers)"
+            ),
+        })
+    }
 }
 
 /// Fully-resolved experiment configuration.
@@ -145,31 +194,52 @@ impl ExperimentConfig {
         let j_fixed = doc.get("job.j").and_then(|v| v.as_int()).map(|j| j as u64);
 
         // ---------------------------------------------------- strategy
-        let strategy = match doc.str_or("strategy.kind", "one_bid") {
-            "no_interruption" => StrategyKind::NoInterruption,
-            "one_bid" => StrategyKind::OneBid,
-            "two_bids" => StrategyKind::TwoBids {
-                n1: doc.i64_or("strategy.n1", (n / 2).max(1) as i64)
-                    as usize,
-            },
-            "dynamic" => StrategyKind::DynamicBids {
-                n1: doc.i64_or("strategy.n1", (n / 2).max(1) as i64)
-                    as usize,
-                stage_iters: doc.i64_or("strategy.stage_iters", 4_000)
-                    as u64,
-            },
-            "static_workers" => StrategyKind::StaticWorkers,
-            "dynamic_workers" => StrategyKind::DynamicWorkers {
-                eta: doc.f64_or("strategy.eta", 1.0004),
-            },
-            other => bail!("unknown strategy.kind '{other}'"),
-        };
-        if let StrategyKind::TwoBids { n1 }
-        | StrategyKind::DynamicBids { n1, .. } = &strategy
-        {
-            if *n1 == 0 || *n1 >= n {
-                bail!("strategy.n1 must satisfy 0 < n1 < n");
+        let mut strategy =
+            StrategyKind::from_name(doc.str_or("strategy.kind", "one_bid"), n)
+                .context("strategy.kind")?;
+        match &mut strategy {
+            StrategyKind::TwoBids { n1 }
+            | StrategyKind::BidFractions { n1, .. }
+            | StrategyKind::DynamicBids { n1, .. } => {
+                *n1 = doc.i64_or("strategy.n1", *n1 as i64) as usize;
             }
+            _ => {}
+        }
+        match &mut strategy {
+            StrategyKind::BidFractions { f1, gamma, .. } => {
+                *f1 = doc.f64_or("strategy.f1", *f1);
+                *gamma = doc.f64_or("strategy.gamma", *gamma);
+                if !(*f1 > 0.0 && *f1 <= 1.0) {
+                    bail!("strategy.f1 must be in (0, 1], got {f1}");
+                }
+                if !(0.0..=1.0).contains(gamma) {
+                    bail!("strategy.gamma must be in [0, 1], got {gamma}");
+                }
+            }
+            StrategyKind::DynamicBids { stage_iters, .. } => {
+                *stage_iters =
+                    doc.i64_or("strategy.stage_iters", *stage_iters as i64)
+                        as u64;
+            }
+            StrategyKind::DynamicWorkers { eta } => {
+                *eta = doc.f64_or("strategy.eta", *eta);
+            }
+            _ => {}
+        }
+        match &strategy {
+            StrategyKind::TwoBids { n1 }
+            | StrategyKind::DynamicBids { n1, .. } => {
+                if *n1 == 0 || *n1 >= n {
+                    bail!("strategy.n1 must satisfy 0 < n1 < n");
+                }
+            }
+            // the uniform degenerate n1 == n is meaningful for fractions
+            StrategyKind::BidFractions { n1, .. } => {
+                if *n1 == 0 || *n1 > n {
+                    bail!("strategy.n1 must satisfy 0 < n1 <= n");
+                }
+            }
+            _ => {}
         }
 
         Ok(ExperimentConfig {
@@ -261,6 +331,50 @@ kind = "two_bids"
 n1 = 4
 "#;
         assert!(ExperimentConfig::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn bid_fractions_parses() {
+        let c = ExperimentConfig::from_str(
+            "[job]\nn = 8\n[strategy]\nkind = \"bid_fractions\"\nn1 = 4\nf1 = 0.6\ngamma = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.strategy,
+            StrategyKind::BidFractions { n1: 4, f1: 0.6, gamma: 0.5 }
+        );
+        assert_eq!(c.strategy.canonical_name(), "bid_fractions");
+        // out-of-range fractions are config errors, not downstream panics
+        assert!(ExperimentConfig::from_str(
+            "[strategy]\nkind = \"bid_fractions\"\ngamma = 3.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_str(
+            "[strategy]\nkind = \"bid_fractions\"\nf1 = 0.0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for name in [
+            "no_interruption",
+            "one_bid",
+            "two_bids",
+            "bid_fractions",
+            "dynamic",
+            "static_workers",
+            "dynamic_workers",
+        ] {
+            let k = StrategyKind::from_name(name, 8).unwrap();
+            assert_eq!(k.canonical_name(), name);
+        }
+        // figure-label alias
+        assert_eq!(
+            StrategyKind::from_name("no_interruptions", 8).unwrap(),
+            StrategyKind::NoInterruption
+        );
+        assert!(StrategyKind::from_name("zzz", 8).is_err());
     }
 
     #[test]

@@ -140,6 +140,172 @@ impl Doc {
     }
 }
 
+/// A [`Doc`] wrapper that records every key the schema reads, so the
+/// loader can reject unconsumed (unknown / misspelled) keys by name
+/// instead of silently applying defaults. Its typed getters are also
+/// *strict*: a key that is present with the wrong type is an error,
+/// never a silent fallback to the default — `job.n = "eight"` must not
+/// quietly become `n = 8`.
+///
+/// The scenario-spec loader (`exp::spec`) is built on this; the older
+/// [`super::schema::ExperimentConfig`] keeps the permissive accessors
+/// for backwards compatibility with existing `simulate` configs.
+pub struct TrackedDoc<'a> {
+    doc: &'a Doc,
+    used: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+fn type_name(v: &Value) -> &'static str {
+    match v {
+        Value::Str(_) => "a string",
+        Value::Bool(_) => "a bool",
+        Value::Int(_) => "an integer",
+        Value::Float(_) => "a float",
+        Value::Array(_) => "an array",
+    }
+}
+
+impl<'a> TrackedDoc<'a> {
+    pub fn new(doc: &'a Doc) -> Self {
+        TrackedDoc { doc, used: Default::default() }
+    }
+
+    fn touch(&self, path: &str) {
+        self.used.borrow_mut().insert(path.to_string());
+    }
+
+    /// Typed lookup: `None` when absent, error when present with the
+    /// wrong type.
+    fn typed<T>(
+        &self,
+        path: &str,
+        want: &str,
+        conv: impl Fn(&Value) -> Option<T>,
+    ) -> Result<Option<T>> {
+        self.touch(path);
+        match self.doc.get(path) {
+            None => Ok(None),
+            Some(v) => conv(v).map(Some).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "key '{path}' expects {want}, got {}",
+                    type_name(v)
+                )
+            }),
+        }
+    }
+
+    /// Marks `path` used and reports whether it is present.
+    pub fn has(&self, path: &str) -> bool {
+        self.touch(path);
+        self.doc.get(path).is_some()
+    }
+
+    pub fn str_opt(&self, path: &str) -> Result<Option<String>> {
+        self.typed(path, "a string", |v| v.as_str().map(str::to_string))
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> Result<String> {
+        Ok(self.str_opt(path)?.unwrap_or_else(|| default.to_string()))
+    }
+
+    pub fn require_str(&self, path: &str) -> Result<String> {
+        self.str_opt(path)?
+            .with_context(|| format!("missing required key '{path}'"))
+    }
+
+    pub fn f64_opt(&self, path: &str) -> Result<Option<f64>> {
+        self.typed(path, "a number", Value::as_float)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> Result<f64> {
+        Ok(self.f64_opt(path)?.unwrap_or(default))
+    }
+
+    pub fn u64_opt(&self, path: &str) -> Result<Option<u64>> {
+        match self.typed(path, "a non-negative integer", Value::as_int)? {
+            None => Ok(None),
+            Some(i) if i >= 0 => Ok(Some(i as u64)),
+            Some(i) => bail!("key '{path}' must be >= 0, got {i}"),
+        }
+    }
+
+    pub fn u64_or(&self, path: &str, default: u64) -> Result<u64> {
+        Ok(self.u64_opt(path)?.unwrap_or(default))
+    }
+
+    pub fn usize_opt(&self, path: &str) -> Result<Option<usize>> {
+        Ok(self.u64_opt(path)?.map(|i| i as usize))
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> Result<usize> {
+        Ok(self.usize_opt(path)?.unwrap_or(default))
+    }
+
+    /// A (possibly absent) array of strings; absent parses as empty.
+    pub fn str_array_or_empty(&self, path: &str) -> Result<Vec<String>> {
+        let arr = self.typed(path, "an array", |v| {
+            v.as_array().map(<[Value]>::to_vec)
+        })?;
+        match arr {
+            None => Ok(Vec::new()),
+            Some(items) => items
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "key '{path}' must be an array of strings, \
+                             found {}",
+                            type_name(v)
+                        )
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// A required array of numbers (ints promote to floats).
+    pub fn f64_array(&self, path: &str) -> Result<Vec<f64>> {
+        self.touch(path);
+        let v = self
+            .doc
+            .get(path)
+            .with_context(|| format!("missing required key '{path}'"))?;
+        let items = v.as_array().ok_or_else(|| {
+            anyhow::anyhow!(
+                "key '{path}' expects an array of numbers, got {}",
+                type_name(v)
+            )
+        })?;
+        items
+            .iter()
+            .map(|item| {
+                item.as_float().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "key '{path}' must contain only numbers, found {}",
+                        type_name(item)
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// Reject any key the schema never consumed, naming the offenders.
+    pub fn finish(&self) -> Result<()> {
+        let used = self.used.borrow();
+        let unknown: Vec<&str> = self
+            .doc
+            .entries
+            .keys()
+            .filter(|k| !used.contains(*k))
+            .map(String::as_str)
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown key(s) in spec: '{}'", unknown.join("', '"));
+        }
+        Ok(())
+    }
+}
+
 fn strip_comment(line: &str) -> &str {
     // a '#' outside quotes starts a comment
     let mut in_str = false;
@@ -266,5 +432,53 @@ weights = [1, 2.5, 3]
         let doc = Doc::parse("x = 1\n").unwrap();
         assert!(doc.require_f64("y").is_err());
         assert!(doc.require_str("x").is_err()); // wrong type
+    }
+
+    #[test]
+    fn tracked_doc_rejects_unconsumed_keys_by_name() {
+        let doc = Doc::parse("a = 1\n[job]\nepss = 0.3\n").unwrap();
+        let d = TrackedDoc::new(&doc);
+        assert_eq!(d.u64_or("a", 0).unwrap(), 1);
+        let err = d.finish().unwrap_err().to_string();
+        assert!(err.contains("job.epss"), "should name the key: {err}");
+    }
+
+    #[test]
+    fn tracked_doc_wrong_types_are_errors_not_defaults() {
+        let doc =
+            Doc::parse("n = \"eight\"\neps = true\nxs = [1, \"a\"]\n")
+                .unwrap();
+        let d = TrackedDoc::new(&doc);
+        let err = d.u64_or("n", 8).unwrap_err().to_string();
+        assert!(err.contains("'n'") && err.contains("integer"), "{err}");
+        assert!(d.f64_or("eps", 0.35).is_err());
+        assert!(d.f64_array("xs").is_err());
+        // absent keys still fall back to defaults
+        assert_eq!(d.f64_or("missing", 0.5).unwrap(), 0.5);
+        assert_eq!(d.str_or("also_missing", "x").unwrap(), "x");
+    }
+
+    #[test]
+    fn tracked_doc_negative_int_rejected_for_u64() {
+        let doc = Doc::parse("j = -5\n").unwrap();
+        let d = TrackedDoc::new(&doc);
+        assert!(d.u64_or("j", 1).is_err());
+    }
+
+    #[test]
+    fn tracked_doc_arrays() {
+        let doc = Doc::parse(
+            "names = [\"a\", \"b\"]\nvals = [1, 2.5]\n",
+        )
+        .unwrap();
+        let d = TrackedDoc::new(&doc);
+        assert_eq!(
+            d.str_array_or_empty("names").unwrap(),
+            vec!["a".to_string(), "b".to_string()]
+        );
+        assert_eq!(d.f64_array("vals").unwrap(), vec![1.0, 2.5]);
+        assert!(d.str_array_or_empty("absent").unwrap().is_empty());
+        assert!(d.f64_array("absent").is_err());
+        assert!(d.finish().is_ok());
     }
 }

@@ -253,6 +253,7 @@ mod tests {
     fn preemptible_fixed_price_cost_accounting() {
         use crate::coordinator::strategy::StaticWorkers;
         let mut s = StaticWorkers {
+            label: "static_n".to_string(),
             n: 4,
             j: 200,
             model: PreemptionModel::None,

@@ -40,7 +40,10 @@ pub struct ActiveDecision {
 
 /// A coordination policy.
 pub trait Strategy {
-    fn name(&self) -> &'static str;
+    /// Display label. Owned (not `&'static`) so config-defined lineups
+    /// can name their entries — two dynamic strategies with different
+    /// stage schedules must be distinguishable in tables and CSV.
+    fn name(&self) -> &str;
 
     /// Total SGD iterations this strategy intends to run.
     fn target_iters(&self) -> u64;
@@ -66,20 +69,20 @@ pub trait Strategy {
 /// support max), Optimal-one-bid (Theorem 2) and Optimal-two-bids
 /// (Theorem 3), depending on the vector it is built with.
 pub struct FixedBids {
-    pub label: &'static str,
+    pub label: String,
     pub bids: BidVector,
     pub j: u64,
 }
 
 impl FixedBids {
-    pub fn new(label: &'static str, bids: BidVector, j: u64) -> Self {
-        FixedBids { label, bids, j }
+    pub fn new(label: impl Into<String>, bids: BidVector, j: u64) -> Self {
+        FixedBids { label: label.into(), bids, j }
     }
 }
 
 impl Strategy for FixedBids {
-    fn name(&self) -> &'static str {
-        self.label
+    fn name(&self) -> &str {
+        &self.label
     }
 
     fn target_iters(&self) -> u64 {
@@ -99,6 +102,7 @@ impl Strategy for FixedBids {
 /// stage boundary the fleet doubles and bids are re-optimised for the
 /// remaining error/deadline budget.
 pub struct DynamicBids {
+    label: String,
     problem: BidProblem,
     stages: Vec<StageSpec>,
     current: usize,
@@ -123,12 +127,14 @@ impl DynamicBids {
     /// stage cannot reach a sub-noise-floor final target — it just has to
     /// make good progress per dollar until the fleet grows).
     pub fn new(
+        label: impl Into<String>,
         problem: BidProblem,
         stages: Vec<StageSpec>,
         j_total: u64,
     ) -> Result<Self> {
         assert!(!stages.is_empty());
         let mut me = DynamicBids {
+            label: label.into(),
             bids: BidVector::uniform(stages[0].n, 1.0), // replaced below
             problem,
             stages,
@@ -183,8 +189,8 @@ impl DynamicBids {
 }
 
 impl Strategy for DynamicBids {
-    fn name(&self) -> &'static str {
-        "dynamic"
+    fn name(&self) -> &str {
+        &self.label
     }
 
     fn target_iters(&self) -> u64 {
@@ -215,6 +221,8 @@ impl Strategy for DynamicBids {
 /// Sec. V static provisioning: n workers at a fixed unit price, preempted
 /// by the platform per the preemption model.
 pub struct StaticWorkers {
+    /// display label (config lineups may run several distinct entries)
+    pub label: String,
     pub n: usize,
     pub j: u64,
     pub model: PreemptionModel,
@@ -223,8 +231,8 @@ pub struct StaticWorkers {
 }
 
 impl Strategy for StaticWorkers {
-    fn name(&self) -> &'static str {
-        "static_n"
+    fn name(&self) -> &str {
+        &self.label
     }
 
     fn target_iters(&self) -> u64 {
@@ -245,6 +253,7 @@ impl Strategy for StaticWorkers {
 
 /// Theorem 5 dynamic provisioning: n_j = ceil(n0 eta^{j-1}).
 pub struct DynamicWorkers {
+    pub label: String,
     pub n0: usize,
     pub eta: f64,
     pub j: u64,
@@ -255,7 +264,9 @@ pub struct DynamicWorkers {
 }
 
 impl DynamicWorkers {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
+        label: impl Into<String>,
         n0: usize,
         eta: f64,
         j: u64,
@@ -264,7 +275,16 @@ impl DynamicWorkers {
         cap: usize,
     ) -> Self {
         assert!(eta > 1.0, "Theorem 5 requires eta > 1");
-        DynamicWorkers { n0, eta, j, model, unit_price, cap, iter: 0 }
+        DynamicWorkers {
+            label: label.into(),
+            n0,
+            eta,
+            j,
+            model,
+            unit_price,
+            cap,
+            iter: 0,
+        }
     }
 
     /// The provisioned fleet size at (0-based) iteration `j`.
@@ -275,8 +295,8 @@ impl DynamicWorkers {
 }
 
 impl Strategy for DynamicWorkers {
-    fn name(&self) -> &'static str {
-        "dynamic_n"
+    fn name(&self) -> &str {
+        &self.label
     }
 
     fn target_iters(&self) -> u64 {
@@ -340,7 +360,7 @@ mod tests {
             StageSpec { n: 4, n1: 2, until_iter: 100 },
             StageSpec { n: 8, n1: 4, until_iter: u64::MAX },
         ];
-        let mut s = DynamicBids::new(p, stages, 2_000).unwrap();
+        let mut s = DynamicBids::new("dynamic", p, stages, 2_000).unwrap();
         assert_eq!(s.max_workers(), 8);
         let mut rng = Rng::new(2);
         // stage 1: at most 4 workers
@@ -361,6 +381,7 @@ mod tests {
     #[test]
     fn dynamic_workers_schedule_monotone() {
         let s = DynamicWorkers::new(
+            "dynamic_n",
             1,
             1.001,
             10_000,
@@ -380,6 +401,7 @@ mod tests {
     #[test]
     fn dynamic_workers_cap_respected() {
         let s = DynamicWorkers::new(
+            "dynamic_n",
             1,
             1.01,
             100_000,
@@ -394,6 +416,7 @@ mod tests {
     #[test]
     fn static_workers_bernoulli_draws() {
         let mut s = StaticWorkers {
+            label: "static_n".to_string(),
             n: 10,
             j: 100,
             model: PreemptionModel::Bernoulli { q: 0.5 },

@@ -7,24 +7,26 @@
 //! programmatically. Fig. 1's schematic (error/cost vs time for different
 //! worker counts) is regenerated as two simulated runs.
 //!
-//! The surface grid is evaluated row-per-job on the sweep pool (one job
-//! per F(b1) value); rows are collected in index order and the
-//! monotonicity checks run over the assembled table, so the output is
-//! identical at any thread count.
+//! The surface grid is *data*: the `fig2` preset spec
+//! (`examples/configs/fig2.toml`) declares a `bid_fractions` strategy
+//! with axes over `f1` and `gamma` and the analytic point-constant
+//! metrics `bound_err` / `exp_cost` / `exp_time`; this module just runs
+//! that spec on the sweep harness (threads = a pure throughput knob) and
+//! reassembles the rows + monotonicity checks.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::strategy::FixedBids;
-use crate::market::{BidVector, PriceModel};
-use crate::market::process::PriceDist;
+use crate::config::StrategyKind;
+use crate::market::BidVector;
 use crate::sim::PriceSource;
-use crate::sweep::run_indexed;
-use crate::theory::bids::BidProblem;
+use crate::sweep::{run_indexed, run_sweep, SweepConfig};
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::csv::Table;
 
-use super::run_synthetic;
+use super::spec::SpecScenario;
+use super::{presets, run_synthetic};
+use crate::coordinator::strategy::FixedBids;
 
 pub struct Fig2Output {
     /// columns: f_b1, gamma, err_bound, exp_cost, exp_time
@@ -35,42 +37,47 @@ pub struct Fig2Output {
 }
 
 pub fn run(j: u64, n: usize, n1: usize, threads: usize) -> Result<Fig2Output> {
-    let bound = ErrorBound::new(SgdHyper::paper_cnn());
-    let pb = BidProblem {
-        bound,
-        price: PriceModel::uniform_paper(),
-        runtime: RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 },
-        n,
-        eps: 0.35,
-        theta: f64::INFINITY,
+    // ---- Fig. 2: the preset spec, overridden to this call's (j, n, n1)
+    let mut spec = presets::spec("fig2")?;
+    spec.job.j = j;
+    spec.job.n = n;
+    for e in &mut spec.strategies {
+        if let StrategyKind::BidFractions { n1: s_n1, .. } = &mut e.kind {
+            *s_n1 = n1;
+        }
+    }
+    let scenario = SpecScenario::new(spec)?;
+    // all three metrics are per-point constants, so one replicate is the
+    // exact value (the seed never gets consumed)
+    let results = run_sweep(
+        &scenario,
+        &SweepConfig { replicates: 1, seed: 0, threads },
+    )?;
+    let metric = |name: &str| {
+        results
+            .metric_names
+            .iter()
+            .position(|m| m.as_str() == name)
+            .with_context(|| format!("fig2 spec lacks metric {name}"))
     };
-    let grid = 25usize;
-
-    // one job per F(b1) row: each returns the row's (gamma-sweep) points
-    let rows: Vec<Vec<[f64; 5]>> = run_indexed(threads, grid, |row| {
-        let f1 = (row + 1) as f64 / grid as f64;
-        let b1 = pb.price.inv_cdf(f1);
-        (0..=grid)
-            .map(|g| {
-                let gamma = g as f64 / grid as f64;
-                let b2 = pb.price.inv_cdf(gamma * f1);
-                let r = pb.expected_recip_two(n1, b1, b2);
-                let err = bound.phi_const(j, r);
-                let cost = pb.expected_cost_two(j, n1, b1, b2);
-                let time = pb.expected_time_two(j, n1, b1, b2);
-                [f1, gamma, err, cost, time]
-            })
-            .collect()
-    });
+    let (mi_err, mi_cost, mi_time) =
+        (metric("bound_err")?, metric("exp_cost")?, metric("exp_time")?);
 
     // assemble + monotonicity checks over the deterministic row order
+    // (first axis = F(b1) slowest, second = gamma fastest)
+    let f1s = scenario.spec().axes[0].values.clone();
+    let gammas = scenario.spec().axes[1].values.clone();
     let mut surfaces =
         Table::new(&["f_b1", "gamma", "err_bound", "exp_cost", "exp_time"]);
     let mut monotone_ok = true;
-    let mut prev_cost_along_gamma = vec![0.0; grid + 1];
-    for (row, points) in rows.iter().enumerate() {
+    let mut prev_cost_along_gamma = vec![0.0; gammas.len()];
+    for (row, &f1) in f1s.iter().enumerate() {
         let mut prev_err = f64::INFINITY;
-        for (g, &[f1, gamma, err, cost, time]) in points.iter().enumerate() {
+        for (g, &gamma) in gammas.iter().enumerate() {
+            let point = &results.points[row * gammas.len() + g];
+            let err = point.stats[mi_err].mean();
+            let cost = point.stats[mi_cost].mean();
+            let time = point.stats[mi_time].mean();
             surfaces.push(vec![f1, gamma, err, cost, time]);
             // Fig. 2a: error decreasing in gamma
             if err > prev_err + 1e-9 {
@@ -86,8 +93,9 @@ pub fn run(j: u64, n: usize, n1: usize, threads: usize) -> Result<Fig2Output> {
     }
 
     // ---- Fig. 1: error & cost vs time for n = 2 vs n = 8 (no preemption)
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
     let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
-    let prices = PriceSource::Iid(PriceModel::uniform_paper());
+    let prices = PriceSource::Iid(crate::market::PriceModel::uniform_paper());
     let runs = run_indexed(threads, 2, |k| {
         let (workers, seed) = [(2usize, 11u64), (8, 12)][k];
         let mut s = FixedBids::new(

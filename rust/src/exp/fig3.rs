@@ -15,29 +15,32 @@
 //! +103%/+101%/+43% under Gaussian).
 //!
 //! Execution goes through the sweep pool: bid plans are computed once per
-//! strategy (the expensive co-optimisation), then the four simulations
+//! strategy via the shared [`build_plan`] path, then the four simulations
 //! run as parallel jobs, each seeded purely from its job index (`seed +
 //! i`, the seed repo's scheme) — identical results at any `threads`.
-//! [`Fig3Sweep`] additionally exposes the grid as a replicated
-//! Monte-Carlo [`Scenario`] (stream-split RNG) for `volatile-sgd sweep`.
+//! The replicated Monte-Carlo view of this figure is the `fig3` preset
+//! spec (`examples/configs/fig3.toml`, see [`super::presets`]) — not a
+//! hand-rolled `Scenario` impl.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::market::{BidVector, PriceModel};
+use crate::config::StrategyKind;
+use crate::market::PriceModel;
 use crate::metrics::Series;
 use crate::sim::PriceSource;
-use crate::sweep::{run_indexed, Scenario};
+use crate::sweep::run_indexed;
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
 
+use super::spec::{build_plan, PlanInputs};
 use super::{accuracy_for_error, run_synthetic_rng, PlannedStrategy};
 
 /// One strategy's trajectory + headline numbers.
 #[derive(Clone, Debug)]
 pub struct StrategyOutcome {
-    pub name: &'static str,
+    pub name: String,
     pub series: Series,
     pub total_cost: f64,
     pub total_time: f64,
@@ -108,63 +111,36 @@ fn problem_for(dist: &PriceModel, p: &Fig3Params) -> (BidProblem, f64, f64) {
     (pb, target_acc, cap)
 }
 
-/// Compute one strategy's plan (index into [`STRATEGY_NAMES`]). This is
-/// the pure per-grid-point work the sweep harness caches.
+/// Compute one strategy's plan (index into [`STRATEGY_NAMES`]) via the
+/// shared [`build_plan`] path. This is the pure per-grid-point work the
+/// sweep harness caches.
 pub fn plan_strategy(
     pb: &BidProblem,
     p: &Fig3Params,
     strategy: usize,
 ) -> Result<PlannedStrategy> {
-    Ok(match STRATEGY_NAMES[strategy] {
-        // bid the support max, J for r = 1/n
-        "no_interruptions" => {
-            use crate::market::process::PriceDist;
-            let plan = pb.no_interruption_plan()?;
-            let (_, hi) = pb.price.support();
-            PlannedStrategy::Fixed {
-                name: "no_interruptions",
-                bids: BidVector::uniform(p.n, hi),
-                j: plan.j.max(p.j),
-            }
-        }
-        // Theorem 2
-        "one_bid" => {
-            let plan = pb.optimal_one_bid().context("one-bid plan")?;
-            PlannedStrategy::Fixed {
-                name: "one_bid",
-                bids: BidVector::uniform(p.n, plan.b),
-                j: plan.j,
-            }
-        }
-        // Theorem 3, J chosen by co-optimisation
-        "two_bids" => {
-            let plan =
-                pb.cooptimize_j_two_bids(p.n1).context("two-bid plan")?;
-            PlannedStrategy::Fixed {
-                name: "two_bids",
-                bids: BidVector::two_group(p.n, p.n1, plan.b1, plan.b2),
-                j: plan.j,
-            }
-        }
-        // Sec. VI: grow 4 -> 8 and re-optimise
-        "dynamic" => {
-            use crate::coordinator::strategy::StageSpec;
-            let stages = vec![
-                StageSpec {
-                    n: p.n / 2,
-                    n1: (p.n1 / 2).max(1),
-                    until_iter: p.stage_iters,
-                },
-                StageSpec { n: p.n, n1: p.n1, until_iter: u64::MAX },
-            ];
-            PlannedStrategy::Dynamic {
-                problem: pb.clone(),
-                stages,
-                j: p.j,
-            }
-        }
+    let name = STRATEGY_NAMES[strategy];
+    let kind = match name {
+        "no_interruptions" => StrategyKind::NoInterruption,
+        "one_bid" => StrategyKind::OneBid,
+        "two_bids" => StrategyKind::TwoBids { n1: p.n1 },
+        "dynamic" => StrategyKind::DynamicBids {
+            n1: p.n1,
+            stage_iters: p.stage_iters,
+        },
         other => unreachable!("unknown strategy {other}"),
-    })
+    };
+    build_plan(
+        name,
+        &kind,
+        &PlanInputs {
+            pb: Some(pb),
+            n: p.n,
+            j: p.j,
+            preempt_q: 0.0,
+            unit_price: super::fig5::PREEMPTIBLE_PRICE,
+        },
+    )
 }
 
 pub fn run(
@@ -187,8 +163,8 @@ pub fn run(
     // run the four simulations as pool jobs. Seeding stays `seed + i`
     // (the seed repo's scheme, still a pure function of the job index,
     // so any thread count reproduces it): the figure tests' calibrated
-    // assertions were tuned against these exact realizations. The
-    // Fig3Sweep scenario uses Rng::stream for its replicates instead.
+    // assertions were tuned against these exact realizations. The fig3
+    // preset spec uses Rng::stream for its replicates instead.
     let outcomes: Vec<StrategyOutcome> =
         run_indexed(p.threads, plans.len(), |i| -> Result<StrategyOutcome> {
             let mut strategy = plans[i].build()?;
@@ -201,7 +177,7 @@ pub fn run(
                 cap,
                 &mut rng,
             )?;
-            Ok(outcome(plans[i].name(), r, target_acc))
+            Ok(outcome(plans[i].name().to_string(), r, target_acc))
         })
         .into_iter()
         .collect::<Result<_>>()?;
@@ -225,7 +201,7 @@ pub fn run(
 }
 
 fn outcome(
-    name: &'static str,
+    name: String,
     r: crate::coordinator::scheduler::RunResult,
     target_acc: f64,
 ) -> StrategyOutcome {
@@ -264,108 +240,6 @@ pub fn print_summary(out: &Fig3Output) {
         if let Some(pct) = out.overhead_vs_dynamic[i] {
             println!("  {name} cost overhead vs dynamic: {pct:+.1}%");
         }
-    }
-}
-
-// ------------------------------------------------------------ sweep view
-
-/// Fig. 3 as a Monte-Carlo sweep scenario: grid = (distribution ×
-/// strategy), each replicate re-runs the simulation under a fresh
-/// `Rng::stream`. The per-point context caches the bid plan, so the
-/// Theorem 2/3 optimisation runs once per point, not once per replicate.
-pub struct Fig3Sweep {
-    pub params: Fig3Params,
-    pub dists: Vec<(PriceModel, &'static str)>,
-}
-
-/// Cached per-point state: the planned strategy plus everything needed
-/// to replay it.
-pub struct Fig3Ctx {
-    plan: PlannedStrategy,
-    bound: ErrorBound,
-    runtime: RuntimeModel,
-    prices: PriceSource,
-    target_acc: f64,
-    cap: f64,
-}
-
-impl Fig3Sweep {
-    /// The paper's two synthetic distributions.
-    pub fn paper(params: Fig3Params) -> Self {
-        Fig3Sweep {
-            params,
-            dists: vec![
-                (PriceModel::uniform_paper(), "uniform"),
-                (PriceModel::gaussian_paper(), "gaussian"),
-            ],
-        }
-    }
-}
-
-impl Scenario for Fig3Sweep {
-    type Ctx = Fig3Ctx;
-
-    fn points(&self) -> usize {
-        self.dists.len() * STRATEGY_NAMES.len()
-    }
-
-    fn label(&self, point: usize) -> String {
-        let dist = &self.dists[point / STRATEGY_NAMES.len()].1;
-        let strat = STRATEGY_NAMES[point % STRATEGY_NAMES.len()];
-        format!("{dist}/{strat}")
-    }
-
-    fn metrics(&self) -> Vec<&'static str> {
-        vec![
-            "cost_at_target",
-            "time_at_target",
-            "total_cost",
-            "total_time",
-            "final_error",
-            "final_accuracy",
-            "iters",
-        ]
-    }
-
-    fn prepare(&self, point: usize) -> Result<Fig3Ctx> {
-        let (dist, _) = &self.dists[point / STRATEGY_NAMES.len()];
-        let strategy = point % STRATEGY_NAMES.len();
-        let (pb, target_acc, cap) = problem_for(dist, &self.params);
-        let plan = plan_strategy(&pb, &self.params, strategy)?;
-        Ok(Fig3Ctx {
-            plan,
-            bound: pb.bound,
-            runtime: pb.runtime,
-            prices: PriceSource::Iid(dist.clone()),
-            target_acc,
-            cap,
-        })
-    }
-
-    fn run(
-        &self,
-        _point: usize,
-        ctx: &Fig3Ctx,
-        rng: &mut Rng,
-    ) -> Result<Vec<f64>> {
-        let mut strategy = ctx.plan.build()?;
-        let r = run_synthetic_rng(
-            strategy.as_mut(),
-            ctx.bound,
-            &ctx.prices,
-            ctx.runtime,
-            ctx.cap,
-            rng,
-        )?;
-        Ok(vec![
-            r.series.cost_at_accuracy(ctx.target_acc).unwrap_or(f64::NAN),
-            r.series.time_at_accuracy(ctx.target_acc).unwrap_or(f64::NAN),
-            r.cost,
-            r.elapsed,
-            r.final_error,
-            r.final_accuracy,
-            r.iters as f64,
-        ])
     }
 }
 

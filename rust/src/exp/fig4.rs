@@ -10,22 +10,25 @@
 //! 26.27% / 65.46%) at >= 96% of its accuracy.
 //!
 //! The empirical-CDF estimate and the Theorem 2/3 plans are computed
-//! once per trace and shared by the three strategy simulations, which
-//! run as parallel pool jobs. [`Fig4Sweep`] scales the same experiment
-//! across many generated traces (one cached trace + plan set per grid
-//! point, replicated over scheduler randomness).
+//! once per trace (via the shared [`build_plan`] path) and shared by the
+//! three strategy simulations, which run as parallel pool jobs. The
+//! replicated many-trace Monte-Carlo view is the `fig4` preset spec
+//! (`examples/configs/fig4.toml`): a lineup-mode scenario gridded over
+//! `market.trace_seed`, with one cached trace + plan set per grid point.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::market::{BidVector, EmpiricalCdf, PriceModel, SpotTrace, TraceGenConfig};
+use crate::config::StrategyKind;
+use crate::market::{EmpiricalCdf, PriceModel, SpotTrace, TraceGenConfig};
 use crate::sim::PriceSource;
-use crate::sweep::{run_indexed, Scenario};
+use crate::sweep::run_indexed;
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
 
 use super::fig3::StrategyOutcome;
+use super::spec::{build_plan, PlanInputs};
 use super::{accuracy_for_error, run_synthetic_rng, PlannedStrategy};
 
 #[derive(Clone, Debug)]
@@ -69,10 +72,11 @@ impl Default for Fig4Params {
     }
 }
 
-/// Generate the default c5.xlarge-style trace used by the bench (hour
-/// units: prices $/h, times h).
-pub fn default_trace(seed: u64) -> SpotTrace {
-    let cfg = TraceGenConfig {
+/// The c5.xlarge-style generator parameters used by the bench and the
+/// `fig4` preset spec (hour units: prices $/h, times h). Also the
+/// defaults for `market.kind = "trace"` scenario specs.
+pub fn default_trace_config() -> TraceGenConfig {
+    TraceGenConfig {
         horizon: 24.0 * 28.0,      // four weeks
         revision_interval: 0.5,    // <= hourly revisions
         floor: 0.068,
@@ -83,9 +87,13 @@ pub fn default_trace(seed: u64) -> SpotTrace {
         spike_prob: 0.004,
         reversion: 0.15,
         noise: 0.035,
-    };
+    }
+}
+
+/// Generate the default c5.xlarge-style trace used by the bench.
+pub fn default_trace(seed: u64) -> SpotTrace {
     let mut rng = Rng::new(seed);
-    SpotTrace::generate(&cfg, &mut rng)
+    SpotTrace::generate(&default_trace_config(), &mut rng)
 }
 
 /// Everything pure in the trace, computed once: the time-weighted F
@@ -117,25 +125,21 @@ fn plan_for_trace(trace: &SpotTrace, p: &Fig4Params) -> Result<TracePlans> {
         theta,
     };
 
-    let noint_plan = pb.no_interruption_plan()?;
-    let one = pb.optimal_one_bid().context("fig4 one-bid")?;
-    let two = pb.cooptimize_j_two_bids(p.n1).context("fig4 two-bid")?;
+    let inputs = PlanInputs {
+        pb: Some(&pb),
+        n: p.n,
+        j: p.j,
+        preempt_q: 0.0,
+        unit_price: super::fig5::PREEMPTIBLE_PRICE,
+    };
     let plans = vec![
-        PlannedStrategy::Fixed {
-            name: "no_interruptions",
-            bids: BidVector::uniform(p.n, 1.0), // above the 0.17 cap
-            j: noint_plan.j.max(p.j),
-        },
-        PlannedStrategy::Fixed {
-            name: "one_bid",
-            bids: BidVector::uniform(p.n, one.b),
-            j: one.j,
-        },
-        PlannedStrategy::Fixed {
-            name: "two_bids",
-            bids: BidVector::two_group(p.n, p.n1, two.b1, two.b2),
-            j: two.j,
-        },
+        build_plan("no_interruptions", &StrategyKind::NoInterruption, &inputs)?,
+        build_plan("one_bid", &StrategyKind::OneBid, &inputs)?,
+        build_plan(
+            "two_bids",
+            &StrategyKind::TwoBids { n1: p.n1 },
+            &inputs,
+        )?,
     ];
     Ok(TracePlans {
         est,
@@ -167,7 +171,7 @@ pub fn run(trace: &SpotTrace, p: &Fig4Params) -> Result<Fig4Output> {
                 &mut rng,
             )?;
             Ok(StrategyOutcome {
-                name: tp.plans[i].name(),
+                name: tp.plans[i].name().to_string(),
                 cost_at_target: r.series.cost_at_accuracy(tp.target_acc),
                 time_at_target: r.series.time_at_accuracy(tp.target_acc),
                 total_cost: r.cost,
@@ -230,90 +234,6 @@ pub fn print_summary(out: &Fig4Output) {
                 100.0 * out.accuracy_ratio[i]
             );
         }
-    }
-}
-
-// ------------------------------------------------------------ sweep view
-
-/// Fig. 4 as a Monte-Carlo sweep: one grid point per generated trace
-/// seed. `prepare` generates the trace, estimates its CDF and computes
-/// all three bid plans exactly once; each replicate replays the three
-/// strategies against the cached trace under fresh scheduler randomness
-/// and reports the savings headlines.
-pub struct Fig4Sweep {
-    pub params: Fig4Params,
-    pub trace_seeds: Vec<u64>,
-}
-
-pub struct Fig4Ctx {
-    prices: PriceSource,
-    tp: TracePlans,
-}
-
-impl Scenario for Fig4Sweep {
-    type Ctx = Fig4Ctx;
-
-    fn points(&self) -> usize {
-        self.trace_seeds.len()
-    }
-
-    fn label(&self, point: usize) -> String {
-        format!("trace_seed={}", self.trace_seeds[point])
-    }
-
-    fn metrics(&self) -> Vec<&'static str> {
-        vec![
-            "noint_cost",
-            "one_bid_cost",
-            "two_bids_cost",
-            "one_bid_saving_pct",
-            "two_bids_saving_pct",
-            "one_bid_acc_ratio",
-            "two_bids_acc_ratio",
-        ]
-    }
-
-    fn prepare(&self, point: usize) -> Result<Fig4Ctx> {
-        let trace = default_trace(self.trace_seeds[point]);
-        let tp = plan_for_trace(&trace, &self.params)?;
-        Ok(Fig4Ctx { prices: PriceSource::Trace(trace), tp })
-    }
-
-    fn run(
-        &self,
-        _point: usize,
-        ctx: &Fig4Ctx,
-        rng: &mut Rng,
-    ) -> Result<Vec<f64>> {
-        // the three strategies share this replicate's stream, consumed in
-        // a fixed order — still a pure function of the job identity
-        let mut finals = Vec::with_capacity(3);
-        for plan in &ctx.tp.plans {
-            let mut s = plan.build()?;
-            let r = run_synthetic_rng(
-                s.as_mut(),
-                ctx.tp.bound,
-                &ctx.prices,
-                ctx.tp.runtime,
-                ctx.tp.cap,
-                rng,
-            )?;
-            let acc = r.series.last().map(|p| p.accuracy).unwrap_or(0.0);
-            finals.push((r.cost, acc));
-        }
-        let (noint_cost, noint_acc) = finals[0];
-        let base_acc = noint_acc.max(1e-9);
-        let saving =
-            |cost: f64| 100.0 * (noint_cost - cost) / noint_cost.max(1e-9);
-        Ok(vec![
-            noint_cost,
-            finals[1].0,
-            finals[2].0,
-            saving(finals[1].0),
-            saving(finals[2].0),
-            finals[1].1 / base_acc,
-            finals[2].1 / base_acc,
-        ])
     }
 }
 

@@ -13,25 +13,24 @@
 //! (the GCP preemptible discount is ~70%).
 //!
 //! All provisioning runs (baseline + n sweep + both panel-b schedules)
-//! execute as parallel pool jobs with per-job RNG streams. [`Fig5Sweep`]
-//! exposes the (n × q) grid as a replicated Monte-Carlo scenario whose
-//! per-point context caches the exact preemption statistics (E[1/y],
-//! P[y=0], Jensen penalty) once per grid point.
+//! execute as parallel pool jobs with per-job RNG streams, instantiated
+//! from shared [`PlannedStrategy`] values. The replicated (n × q)
+//! Monte-Carlo view is the `fig5` preset spec
+//! (`examples/configs/fig5.toml`), whose per-point context caches the
+//! exact preemption statistics (E[1/y], P[y=0], Jensen penalty) once per
+//! grid point.
 
 use anyhow::Result;
 
-use crate::coordinator::strategy::{
-    DynamicWorkers, StaticWorkers, Strategy,
-};
-use crate::preempt::{jensen_penalty, PreemptionModel, RecipTable};
+use crate::preempt::PreemptionModel;
 use crate::sim::PriceSource;
-use crate::sweep::{run_indexed, Grid, Scenario};
+use crate::sweep::run_indexed;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
 use crate::theory::workers::WorkerProblem;
 use crate::util::rng::Rng;
 
-use super::run_synthetic_rng;
+use super::{run_synthetic_rng, PlannedStrategy};
 
 pub const PREEMPTIBLE_PRICE: f64 = 0.1;
 pub const ON_DEMAND_PRICE: f64 = 0.3;
@@ -85,63 +84,12 @@ impl Default for Fig5Params {
     }
 }
 
-/// One provisioning run, fully specified (the pool job payload).
+/// One provisioning run: a planned strategy plus its panel metadata.
 #[derive(Clone, Debug)]
-enum ProvisionJob {
-    Static {
-        label: String,
-        n_or_eta: f64,
-        n: usize,
-        j: u64,
-        model: PreemptionModel,
-        unit_price: f64,
-    },
-    Dynamic {
-        label: String,
-        eta: f64,
-        j: u64,
-        model: PreemptionModel,
-        unit_price: f64,
-    },
-}
-
-impl ProvisionJob {
-    fn build(&self) -> Box<dyn Strategy> {
-        match self {
-            ProvisionJob::Static { n, j, model, unit_price, .. } => {
-                Box::new(StaticWorkers {
-                    n: *n,
-                    j: *j,
-                    model: model.clone(),
-                    unit_price: *unit_price,
-                })
-            }
-            ProvisionJob::Dynamic { eta, j, model, unit_price, .. } => {
-                Box::new(DynamicWorkers::new(
-                    1,
-                    *eta,
-                    *j,
-                    model.clone(),
-                    *unit_price,
-                    100_000,
-                ))
-            }
-        }
-    }
-
-    fn label(&self) -> &str {
-        match self {
-            ProvisionJob::Static { label, .. } => label,
-            ProvisionJob::Dynamic { label, .. } => label,
-        }
-    }
-
-    fn n_or_eta(&self) -> f64 {
-        match self {
-            ProvisionJob::Static { n_or_eta, .. } => *n_or_eta,
-            ProvisionJob::Dynamic { eta, .. } => *eta,
-        }
-    }
+struct ProvisionJob {
+    n_or_eta: f64,
+    plan: PlannedStrategy,
+    seed: u64,
 }
 
 pub fn run(p: &Fig5Params) -> Result<Fig5Output> {
@@ -169,16 +117,17 @@ pub fn run(p: &Fig5Params) -> Result<Fig5Output> {
     // the seed repo's per-run seed offsets (still a pure function of
     // the job, so any thread count reproduces them exactly)
     let mut jobs: Vec<ProvisionJob> = Vec::new();
-    let mut seeds: Vec<u64> = Vec::new();
-    jobs.push(ProvisionJob::Static {
-        label: format!("no_preemption_n{}", p.n_baseline),
+    jobs.push(ProvisionJob {
         n_or_eta: p.n_baseline as f64,
-        n: p.n_baseline,
-        j: p.j,
-        model: PreemptionModel::None,
-        unit_price: ON_DEMAND_PRICE,
+        plan: PlannedStrategy::StaticWorkers {
+            name: format!("no_preemption_n{}", p.n_baseline),
+            n: p.n_baseline,
+            j: p.j,
+            model: PreemptionModel::None,
+            unit_price: ON_DEMAND_PRICE,
+        },
+        seed: p.seed,
     });
-    seeds.push(p.seed);
     let mut sweep = p.n_sweep.clone();
     if !sweep.contains(&n_star) {
         sweep.push(n_star);
@@ -190,42 +139,50 @@ pub fn run(p: &Fig5Params) -> Result<Fig5Output> {
         } else {
             format!("preempt_q{}_n{}", p.q, n)
         };
-        jobs.push(ProvisionJob::Static {
-            label,
+        jobs.push(ProvisionJob {
             n_or_eta: *n as f64,
-            n: *n,
+            plan: PlannedStrategy::StaticWorkers {
+                name: label,
+                n: *n,
+                j: p.j,
+                model: PreemptionModel::Bernoulli { q: p.q },
+                unit_price: PREEMPTIBLE_PRICE,
+            },
+            seed: p.seed + 10 + k as u64,
+        });
+    }
+    let panel_a_len = jobs.len();
+    jobs.push(ProvisionJob {
+        n_or_eta: 1.0,
+        plan: PlannedStrategy::StaticWorkers {
+            name: "static_n1".to_string(),
+            n: 1,
             j: p.j,
             model: PreemptionModel::Bernoulli { q: p.q },
             unit_price: PREEMPTIBLE_PRICE,
-        });
-        seeds.push(p.seed + 10 + k as u64);
-    }
-    let panel_a_len = jobs.len();
-    jobs.push(ProvisionJob::Static {
-        label: "static_n1".to_string(),
-        n_or_eta: 1.0,
-        n: 1,
-        j: p.j,
-        model: PreemptionModel::Bernoulli { q: p.q },
-        unit_price: PREEMPTIBLE_PRICE,
+        },
+        seed: p.seed + 50,
     });
-    seeds.push(p.seed + 50);
-    jobs.push(ProvisionJob::Dynamic {
-        label: format!("dynamic_eta{}", p.eta),
-        eta: p.eta,
-        j: j_dynamic,
-        model: PreemptionModel::Bernoulli { q: p.q },
-        unit_price: PREEMPTIBLE_PRICE,
+    jobs.push(ProvisionJob {
+        n_or_eta: p.eta,
+        plan: PlannedStrategy::DynamicWorkers {
+            name: format!("dynamic_eta{}", p.eta),
+            n0: 1,
+            eta: p.eta,
+            j: j_dynamic,
+            model: PreemptionModel::Bernoulli { q: p.q },
+            unit_price: PREEMPTIBLE_PRICE,
+            cap: 100_000,
+        },
+        seed: p.seed + 51,
     });
-    seeds.push(p.seed + 51);
 
     // ---- run everything on the pool, one private RNG per job
-    debug_assert_eq!(jobs.len(), seeds.len());
     let mut outcomes: Vec<ProvisioningOutcome> =
         run_indexed(p.threads, jobs.len(), |i| -> Result<ProvisioningOutcome> {
             let job = &jobs[i];
-            let mut s = job.build();
-            let mut rng = Rng::new(seeds[i]);
+            let mut s = job.plan.build()?;
+            let mut rng = Rng::new(job.seed);
             let r = run_synthetic_rng(
                 s.as_mut(),
                 bound,
@@ -234,7 +191,11 @@ pub fn run(p: &Fig5Params) -> Result<Fig5Output> {
                 f64::INFINITY,
                 &mut rng,
             )?;
-            Ok(outcome(job.label().to_string(), job.n_or_eta(), &r))
+            Ok(outcome(
+                job.plan.name().to_string(),
+                job.n_or_eta,
+                &r,
+            ))
         })
         .into_iter()
         .collect::<Result<_>>()?;
@@ -289,128 +250,6 @@ pub fn print_summary(out: &Fig5Output) {
             o.final_accuracy,
             o.accuracy_per_dollar
         );
-    }
-}
-
-// ------------------------------------------------------------ sweep view
-
-/// Fig. 5 as a Monte-Carlo sweep over the (n, q) provisioning grid. The
-/// per-point context caches the exact preemption statistics — E[1/y],
-/// P[y=0], the Jensen penalty, and the Theorem-4 provisioning match
-/// `n_match_exact` (smallest fleet whose conditional E[1/y] is at least
-/// as good as the no-preemption baseline's 1/n_baseline, found by
-/// scanning a [`RecipTable`]) — once per point; replicates only pay for
-/// the simulation itself.
-pub struct Fig5Sweep {
-    pub params: Fig5Params,
-    pub grid: Grid,
-}
-
-impl Fig5Sweep {
-    /// Default grid: n in {2,4,8,16} x q in {0.3,0.5,0.7}.
-    pub fn paper(params: Fig5Params) -> Self {
-        let grid = Grid::new()
-            .axis("n", vec![2.0, 4.0, 8.0, 16.0])
-            .axis("q", vec![0.3, 0.5, 0.7]);
-        Fig5Sweep { params, grid }
-    }
-}
-
-/// Cached per-point state: the preemption model and its exact statistics.
-pub struct Fig5Ctx {
-    n: usize,
-    model: PreemptionModel,
-    /// exact E[1/y | y > 0] at this point's fleet size
-    recip: f64,
-    p_zero: f64,
-    jensen: f64,
-    /// exact Theorem-4 match: smallest m with E[1/y(m)] <= 1/n_baseline
-    /// (NaN when no fleet within the scanned range qualifies)
-    n_match: f64,
-}
-
-impl Scenario for Fig5Sweep {
-    type Ctx = Fig5Ctx;
-
-    fn points(&self) -> usize {
-        self.grid.num_points()
-    }
-
-    fn label(&self, point: usize) -> String {
-        self.grid.label(point)
-    }
-
-    fn metrics(&self) -> Vec<&'static str> {
-        vec![
-            "cost",
-            "final_error",
-            "final_accuracy",
-            "acc_per_dollar",
-            "recip_exact",
-            "p_zero",
-            "jensen_penalty",
-            "n_match_exact",
-        ]
-    }
-
-    fn prepare(&self, point: usize) -> Result<Fig5Ctx> {
-        let vals = self.grid.point(point);
-        let (n, q) = (vals[0] as usize, vals[1]);
-        let model = PreemptionModel::Bernoulli { q };
-        // exact per-point statistics, computed once per sweep point and
-        // shared by every replicate. The RecipTable memoises E[1/y] for
-        // the whole fleet-size scan below (Fig. 5a's Theorem-4 argument
-        // done exactly, not via the n_b/(1-q) heuristic).
-        let n_base = self.params.n_baseline.max(1);
-        let table = RecipTable::build(&model, n.max(8 * n_base));
-        let n_match = (1..=table.n_max())
-            .find(|&m| table.recip(m) <= 1.0 / n_base as f64)
-            .map(|m| m as f64)
-            .unwrap_or(f64::NAN);
-        // the table always covers n (built to n.max(8 * n_base) above)
-        Ok(Fig5Ctx {
-            n,
-            recip: table.recip(n),
-            p_zero: model.p_zero(n),
-            jensen: jensen_penalty(&model, n),
-            n_match,
-            model,
-        })
-    }
-
-    fn run(
-        &self,
-        _point: usize,
-        ctx: &Fig5Ctx,
-        rng: &mut Rng,
-    ) -> Result<Vec<f64>> {
-        let bound = ErrorBound::new(SgdHyper::paper_cnn());
-        let runtime = RuntimeModel::Deterministic { r: 10.0 };
-        let prices = PriceSource::Fixed(0.0);
-        let mut s = StaticWorkers {
-            n: ctx.n,
-            j: self.params.j,
-            model: ctx.model.clone(),
-            unit_price: PREEMPTIBLE_PRICE,
-        };
-        let r = run_synthetic_rng(
-            &mut s,
-            bound,
-            &prices,
-            runtime,
-            f64::INFINITY,
-            rng,
-        )?;
-        Ok(vec![
-            r.cost,
-            r.final_error,
-            r.final_accuracy,
-            if r.cost > 0.0 { r.final_accuracy / r.cost } else { 0.0 },
-            ctx.recip,
-            ctx.p_zero,
-            ctx.jensen,
-            ctx.n_match,
-        ])
     }
 }
 

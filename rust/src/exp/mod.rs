@@ -11,29 +11,40 @@
 //! (expensive bid optimisation cached per grid point), executed on the
 //! work-stealing pool with RNGs that are pure functions of each job's
 //! index, and collected in plan order — so `threads` is a pure
-//! throughput knob and results are identical at any thread count. The
-//! `Fig*Sweep` types in the submodules expose the same experiments as
-//! Monte-Carlo [`crate::sweep::Scenario`]s (replicates seeded via
-//! [`Rng::stream`]) for the `sweep` CLI subcommand.
+//! throughput knob and results are identical at any thread count.
+//!
+//! The replicated Monte-Carlo view of each figure is no longer a
+//! hand-rolled `Scenario` impl per figure: [`spec`] defines a
+//! declarative, TOML-loadable [`ScenarioSpec`] (market x strategy
+//! lineup x grid axes x metric set) with one generic [`SpecScenario`]
+//! driver, and [`presets`] ships fig2–fig5 as spec files
+//! (`examples/configs/*.toml`). `volatile-sgd sweep --spec file.toml`
+//! or `--preset fig3` is the one entry point.
 
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod presets;
+pub mod spec;
 
 use anyhow::Result;
 
 use crate::coordinator::backend::SyntheticBackend;
 use crate::coordinator::scheduler::{RunResult, Scheduler, SchedulerParams};
 use crate::coordinator::strategy::{
-    DynamicBids, FixedBids, StageSpec, Strategy,
+    DynamicBids, DynamicWorkers, FixedBids, StageSpec, StaticWorkers,
+    Strategy,
 };
 use crate::market::BidVector;
+use crate::preempt::PreemptionModel;
 use crate::sim::PriceSource;
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::ErrorBound;
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
+
+pub use spec::{build_plan, PlanInputs, ScenarioSpec, SpecScenario};
 
 /// Run one strategy against the synthetic (Theorem-1) backend, drawing
 /// all randomness from the caller's generator — the sweep-friendly entry
@@ -75,20 +86,62 @@ pub fn run_synthetic(
 /// [`Strategy`] can be built per replicate. Plans are `Send + Sync`, so
 /// one plan computed in a sweep's prepare phase serves every replicate
 /// job on every worker thread.
+///
+/// This is the one `StrategyKind -> runnable strategy` currency: the
+/// figure harnesses, the `simulate` subcommand and the declarative
+/// scenario specs ([`spec`]) all obtain plans through
+/// [`spec::build_plan`] and instantiate them here. Names are owned so
+/// config-defined lineup entries keep their labels (two dynamic plans
+/// with different stage schedules stay distinguishable).
 #[derive(Clone, Debug)]
 pub enum PlannedStrategy {
     /// Fixed bid vector for the whole job (no-interruptions, one-bid,
-    /// two-bids, depending on the vector).
-    Fixed { name: &'static str, bids: BidVector, j: u64 },
+    /// two-bids, bid-fractions — depending on the vector).
+    Fixed { name: String, bids: BidVector, j: u64 },
     /// Sec. VI dynamic strategy: staged fleet growth + re-optimisation.
-    Dynamic { problem: BidProblem, stages: Vec<StageSpec>, j: u64 },
+    Dynamic {
+        name: String,
+        problem: BidProblem,
+        stages: Vec<StageSpec>,
+        j: u64,
+    },
+    /// Sec. V static provisioning of preemptible instances (Theorem 4).
+    StaticWorkers {
+        name: String,
+        n: usize,
+        j: u64,
+        model: PreemptionModel,
+        unit_price: f64,
+    },
+    /// Sec. V dynamic provisioning n_j = ceil(n0 eta^{j-1}) (Theorem 5).
+    DynamicWorkers {
+        name: String,
+        n0: usize,
+        eta: f64,
+        j: u64,
+        model: PreemptionModel,
+        unit_price: f64,
+        cap: usize,
+    },
 }
 
 impl PlannedStrategy {
-    pub fn name(&self) -> &'static str {
+    pub fn name(&self) -> &str {
         match self {
-            PlannedStrategy::Fixed { name, .. } => *name,
-            PlannedStrategy::Dynamic { .. } => "dynamic",
+            PlannedStrategy::Fixed { name, .. }
+            | PlannedStrategy::Dynamic { name, .. }
+            | PlannedStrategy::StaticWorkers { name, .. }
+            | PlannedStrategy::DynamicWorkers { name, .. } => name,
+        }
+    }
+
+    /// The iteration budget the plan targets.
+    pub fn target_iters(&self) -> u64 {
+        match self {
+            PlannedStrategy::Fixed { j, .. }
+            | PlannedStrategy::Dynamic { j, .. }
+            | PlannedStrategy::StaticWorkers { j, .. }
+            | PlannedStrategy::DynamicWorkers { j, .. } => *j,
         }
     }
 
@@ -96,11 +149,42 @@ impl PlannedStrategy {
     pub fn build(&self) -> Result<Box<dyn Strategy>> {
         Ok(match self {
             PlannedStrategy::Fixed { name, bids, j } => {
-                Box::new(FixedBids::new(*name, bids.clone(), *j))
+                Box::new(FixedBids::new(name.clone(), bids.clone(), *j))
             }
-            PlannedStrategy::Dynamic { problem, stages, j } => Box::new(
-                DynamicBids::new(problem.clone(), stages.clone(), *j)?,
-            ),
+            PlannedStrategy::Dynamic { name, problem, stages, j } => {
+                Box::new(DynamicBids::new(
+                    name.clone(),
+                    problem.clone(),
+                    stages.clone(),
+                    *j,
+                )?)
+            }
+            PlannedStrategy::StaticWorkers {
+                name, n, j, model, unit_price,
+            } => Box::new(StaticWorkers {
+                label: name.clone(),
+                n: *n,
+                j: *j,
+                model: model.clone(),
+                unit_price: *unit_price,
+            }),
+            PlannedStrategy::DynamicWorkers {
+                name,
+                n0,
+                eta,
+                j,
+                model,
+                unit_price,
+                cap,
+            } => Box::new(DynamicWorkers::new(
+                name.clone(),
+                *n0,
+                *eta,
+                *j,
+                model.clone(),
+                *unit_price,
+                *cap,
+            )),
         })
     }
 }

@@ -1,0 +1,121 @@
+//! Shipped preset scenarios: the paper's figures as spec *files*.
+//!
+//! Each preset is an ordinary `examples/configs/*.toml` scenario spec,
+//! embedded at compile time so `volatile-sgd sweep --preset fig3` works
+//! from any directory. The TOML files are the single source of truth —
+//! there is no Rust-side figure grid left to drift from them; a preset
+//! is exactly what `sweep --spec examples/configs/fig3.toml` would run.
+
+use anyhow::{bail, Result};
+
+use super::spec::{ScenarioSpec, SpecScenario};
+
+/// Preset names, in figure order.
+pub const PRESET_NAMES: [&str; 4] = ["fig2", "fig3", "fig4", "fig5"];
+
+/// The embedded TOML text of a preset (accepts `fig3` or bare `3`).
+pub fn preset_toml(name: &str) -> Result<&'static str> {
+    Ok(match name {
+        "fig2" | "2" => include_str!("../../../examples/configs/fig2.toml"),
+        "fig3" | "3" => include_str!("../../../examples/configs/fig3.toml"),
+        "fig4" | "4" => include_str!("../../../examples/configs/fig4.toml"),
+        "fig5" | "5" => include_str!("../../../examples/configs/fig5.toml"),
+        other => bail!(
+            "unknown preset '{other}' (available: fig2, fig3, fig4, fig5)"
+        ),
+    })
+}
+
+/// Parse a preset into a spec (callers may override fields before
+/// building the scenario — see `exp::fig2`).
+pub fn spec(name: &str) -> Result<ScenarioSpec> {
+    ScenarioSpec::from_str(preset_toml(name)?)
+}
+
+/// Parse + validate a preset into a runnable scenario.
+pub fn scenario(name: &str) -> Result<SpecScenario> {
+    SpecScenario::new(spec(name)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Scenario;
+
+    #[test]
+    fn every_preset_parses_and_validates() {
+        for name in PRESET_NAMES {
+            let sc = scenario(name).unwrap_or_else(|e| {
+                panic!("preset {name} failed to validate: {e:#}")
+            });
+            assert!(sc.points() > 0, "{name} has no points");
+        }
+    }
+
+    /// The fig3 preset must reproduce the pre-redesign `sweep --fig 3`
+    /// point space exactly: same ordering, same labels, same metric
+    /// names. Together with the shared plan builder and replicate
+    /// runner this pins digest equality with the old hand-rolled
+    /// `Fig3Sweep` (labels and metric names are hashed into the digest;
+    /// streams are a pure function of the point order).
+    #[test]
+    fn fig3_preset_matches_pre_redesign_grid() {
+        let sc = scenario("fig3").unwrap();
+        assert_eq!(sc.points(), 8);
+        let labels: Vec<String> = (0..8).map(|p| sc.label(p)).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "uniform/no_interruptions",
+                "uniform/one_bid",
+                "uniform/two_bids",
+                "uniform/dynamic",
+                "gaussian/no_interruptions",
+                "gaussian/one_bid",
+                "gaussian/two_bids",
+                "gaussian/dynamic",
+            ]
+        );
+        assert_eq!(
+            sc.metrics(),
+            vec![
+                "cost_at_target",
+                "time_at_target",
+                "total_cost",
+                "total_time",
+                "final_error",
+                "final_accuracy",
+                "iters",
+            ]
+        );
+    }
+
+    #[test]
+    fn fig5_preset_matches_pre_redesign_grid() {
+        let sc = scenario("fig5").unwrap();
+        assert_eq!(sc.points(), 12); // 4 n x 3 q
+        assert_eq!(sc.label(0), "n=2 q=0.3");
+        assert_eq!(sc.label(11), "n=16 q=0.7");
+        assert_eq!(sc.metrics()[0], "cost");
+        assert_eq!(sc.metrics()[4], "recip_exact");
+    }
+
+    #[test]
+    fn fig4_preset_is_lineup_mode_over_trace_seeds() {
+        let sc = scenario("fig4").unwrap();
+        assert_eq!(sc.points(), 3);
+        assert_eq!(sc.label(0), "trace_seed=7");
+        assert_eq!(
+            sc.metrics(),
+            vec![
+                "noint_cost",
+                "one_bid_cost",
+                "two_bids_cost",
+                "one_bid_saving_pct",
+                "two_bids_saving_pct",
+                "one_bid_acc_ratio",
+                "two_bids_acc_ratio",
+            ]
+        );
+    }
+}

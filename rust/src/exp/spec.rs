@@ -1,0 +1,1873 @@
+//! Declarative scenario specs: one config-driven surface for every sweep.
+//!
+//! The paper's whole evaluation is one shape — pick a price/preemption
+//! model, a strategy lineup, a grid over (eps, theta, n, q, ...), then
+//! Monte-Carlo it. [`ScenarioSpec`] is that shape as data: a typed,
+//! TOML-loadable description composing
+//!
+//! * a **market lineup** (uniform / gaussian / trace / fixed price),
+//! * a **runtime model** and the SGD bound constants,
+//! * a **strategy lineup** (`Vec<StrategyKind>`-shaped entries with
+//!   owned labels),
+//! * zero or more **grid axes** — any numeric field is sweepable via an
+//!   axis path like `job.eps`, `job.preempt_q`, `market.trace_seed` or
+//!   `strategy.<label>.stage_iters`,
+//! * and a requested **metric set**.
+//!
+//! [`SpecScenario`] implements [`sweep::Scenario`] generically off a
+//! spec: `prepare` does the cached pure work per grid point (CDF
+//! estimation, trace generation, Theorem 2/3 bid plans, exact `E[1/y]`
+//! tables), `run` executes replicates via [`PlannedStrategy`]. The
+//! determinism contract of DESIGN.md §3 is inherited wholesale: points
+//! are numbered (market-major, then grid, then strategy), replicate
+//! RNGs are pure functions of job identity, and results are
+//! bit-identical at any thread count.
+//!
+//! A new scenario is a TOML file, not a new Rust module — the fig2–fig5
+//! presets under `examples/configs/` are ordinary spec files (see
+//! [`super::presets`]); schema details are documented in DESIGN.md §4.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::toml::{Doc, TrackedDoc};
+use crate::config::StrategyKind;
+use crate::coordinator::strategy::StageSpec;
+use crate::market::process::PriceDist;
+use crate::market::{BidVector, PriceModel, SpotTrace, TraceGenConfig};
+use crate::preempt::{jensen_penalty, PreemptionModel, RecipTable};
+use crate::sim::PriceSource;
+use crate::sweep::{Grid, Scenario};
+use crate::theory::bids::BidProblem;
+use crate::theory::bounds::{ErrorBound, SgdHyper};
+use crate::theory::runtime_model::RuntimeModel;
+use crate::util::rng::Rng;
+
+use super::{accuracy_for_error, run_synthetic_rng, PlannedStrategy};
+
+// ===================================================================
+// Spec data model
+// ===================================================================
+
+/// How the grid crosses with the strategy lineup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepMode {
+    /// Each (market, grid point, strategy) is its own point; metrics
+    /// describe one strategy's run. The default.
+    PerStrategy,
+    /// Each (market, grid point) is one point; every replicate runs the
+    /// *whole* lineup sequentially on a shared RNG stream and metrics
+    /// compare entries against the first (the baseline) — the Fig. 4
+    /// savings shape.
+    Lineup,
+}
+
+/// Job-level knobs shared by every strategy (entry overrides aside).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub n: usize,
+    pub eps: f64,
+    /// explicit deadline; when absent it is derived as
+    /// `deadline_slack * j * E[runtime(n)]` (infinite for fixed-price
+    /// markets, which have no bid deadline)
+    pub theta: Option<f64>,
+    pub deadline_slack: f64,
+    pub j: u64,
+    pub preempt_q: f64,
+    /// baseline fleet for the Theorem-4 `n_match_exact` metric
+    pub n_baseline: usize,
+    /// $/worker/time for preemptible strategies
+    pub unit_price: f64,
+}
+
+/// One market model in the lineup.
+#[derive(Clone, Debug)]
+pub struct MarketSpec {
+    pub label: String,
+    pub kind: MarketKind,
+}
+
+#[derive(Clone, Debug)]
+pub enum MarketKind {
+    Uniform { lo: f64, hi: f64 },
+    Gaussian { mean: f64, std: f64, lo: f64, hi: f64 },
+    /// Preemptible-platform case: a constant price, no bidding.
+    Fixed { price: f64 },
+    /// Replay a trace loaded from CSV; F estimated from it.
+    TraceFile { path: String, cdf_resolution: f64 },
+    /// Generate a regime-switching trace (DESIGN.md §2), seeded
+    /// deterministically; F estimated from the generated path.
+    TraceGen { cfg: TraceGenConfig, seed: u64, cdf_resolution: f64 },
+}
+
+/// One strategy lineup entry: an owned label, a kind, and optional
+/// per-entry overrides of the job-level fleet/preemption/price knobs.
+#[derive(Clone, Debug)]
+pub struct StrategyEntry {
+    pub label: String,
+    pub kind: StrategyKind,
+    pub n: Option<usize>,
+    pub preempt_q: Option<f64>,
+    pub unit_price: Option<f64>,
+}
+
+/// One grid axis: a display name, a dotted field path, and the values.
+#[derive(Clone, Debug)]
+pub struct AxisSpec {
+    pub name: String,
+    pub path: String,
+    pub values: Vec<f64>,
+}
+
+/// A fully-parsed scenario spec. Public fields: presets are ordinary
+/// specs and callers (figure harnesses, tests) may override them
+/// programmatically before building a [`SpecScenario`].
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub mode: SweepMode,
+    pub job: JobSpec,
+    pub runtime: RuntimeModel,
+    pub sgd: SgdHyper,
+    pub markets: Vec<MarketSpec>,
+    pub strategies: Vec<StrategyEntry>,
+    pub axes: Vec<AxisSpec>,
+    pub metrics: Vec<String>,
+    /// default replicate count / master seed (CLI flags override)
+    pub replicates: Option<u64>,
+    pub seed: Option<u64>,
+}
+
+impl ScenarioSpec {
+    pub fn from_str(text: &str) -> Result<Self> {
+        Self::from_doc(&Doc::parse(text)?)
+    }
+
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {}", path.display()))?;
+        Self::from_str(&text)
+            .with_context(|| format!("parsing spec {}", path.display()))
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let d = TrackedDoc::new(doc);
+        let name = d.str_or("name", "scenario")?;
+        let mode = match d.str_or("mode", "per_strategy")?.as_str() {
+            "per_strategy" => SweepMode::PerStrategy,
+            "lineup" => SweepMode::Lineup,
+            other => {
+                bail!("mode must be per_strategy | lineup, got '{other}'")
+            }
+        };
+        let replicates = d.u64_opt("replicates")?;
+        let seed = d.u64_opt("seed")?;
+
+        // ------------------------------------------------------- job
+        let n = d.usize_or("job.n", 8)?;
+        ensure!(n >= 1, "job.n must be >= 1, got {n}");
+        let eps = d.f64_or("job.eps", 0.35)?;
+        ensure!(eps > 0.0, "job.eps must be > 0, got {eps}");
+        let theta = d.f64_opt("job.theta")?;
+        if let Some(t) = theta {
+            ensure!(t > 0.0, "job.theta must be > 0, got {t}");
+        }
+        let deadline_slack = d.f64_or("job.deadline_slack", 2.0)?;
+        ensure!(
+            deadline_slack > 0.0,
+            "job.deadline_slack must be > 0, got {deadline_slack}"
+        );
+        let j = d.u64_or("job.j", 10_000)?;
+        ensure!(j >= 1, "job.j must be >= 1");
+        let preempt_q = d.f64_or("job.preempt_q", 0.5)?;
+        ensure!(
+            (0.0..1.0).contains(&preempt_q),
+            "job.preempt_q must be in [0, 1), got {preempt_q}"
+        );
+        let n_baseline = d.usize_or("job.n_baseline", 2)?;
+        ensure!(n_baseline >= 1, "job.n_baseline must be >= 1");
+        let unit_price =
+            d.f64_or("job.unit_price", super::fig5::PREEMPTIBLE_PRICE)?;
+        ensure!(unit_price >= 0.0, "job.unit_price must be >= 0");
+        let job = JobSpec {
+            n,
+            eps,
+            theta,
+            deadline_slack,
+            j,
+            preempt_q,
+            n_baseline,
+            unit_price,
+        };
+
+        // --------------------------------------------------- runtime
+        let runtime = match d.str_or("runtime.kind", "exp")?.as_str() {
+            "exp" => RuntimeModel::ExpStragglers {
+                lambda: d.f64_or("runtime.lambda", 0.25)?,
+                delta: d.f64_or("runtime.delta", 0.5)?,
+            },
+            "deterministic" => RuntimeModel::Deterministic {
+                r: d.f64_or("runtime.r", 10.0)?,
+            },
+            other => bail!("unknown runtime.kind '{other}'"),
+        };
+
+        // ------------------------------------------------------- sgd
+        let defaults = SgdHyper::paper_cnn();
+        let sgd = SgdHyper {
+            alpha: d.f64_or("sgd.alpha", defaults.alpha)?,
+            c: d.f64_or("sgd.c", defaults.c)?,
+            mu: d.f64_or("sgd.mu", defaults.mu)?,
+            l: d.f64_or("sgd.l", defaults.l)?,
+            m: d.f64_or("sgd.m", defaults.m)?,
+            a0: d.f64_or("sgd.a0", defaults.a0)?,
+        };
+        sgd.validate().map_err(anyhow::Error::msg)?;
+
+        // --------------------------------------------------- markets
+        let market_labels = d.str_array_or_empty("markets")?;
+        let markets = if market_labels.is_empty() {
+            if !d.has("market.kind") {
+                bail!(
+                    "missing required [market] table (set market.kind, or \
+                     declare a markets = [...] lineup)"
+                );
+            }
+            let kind = parse_market(&d, "market")?;
+            vec![MarketSpec { label: market_label(&kind), kind }]
+        } else {
+            market_labels
+                .iter()
+                .map(|label| {
+                    let prefix = format!("market.{label}");
+                    ensure!(
+                        d.has(&format!("{prefix}.kind")),
+                        "market '{label}' needs a [market.{label}] table \
+                         with a kind"
+                    );
+                    Ok(MarketSpec {
+                        label: label.clone(),
+                        kind: parse_market(&d, &prefix)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+
+        // ------------------------------------------------ strategies
+        let labels = d.str_array_or_empty("strategies")?;
+        ensure!(
+            !labels.is_empty(),
+            "missing required key 'strategies' (a non-empty array of \
+             lineup labels)"
+        );
+        for (i, l) in labels.iter().enumerate() {
+            ensure!(
+                !labels[..i].contains(l),
+                "duplicate strategy label '{l}'"
+            );
+        }
+        let strategies = labels
+            .iter()
+            .map(|label| parse_strategy(&d, label, n))
+            .collect::<Result<Vec<_>>>()?;
+
+        // -------------------------------------------------------- axes
+        let axis_names = d.str_array_or_empty("axes")?;
+        let axes = axis_names
+            .iter()
+            .map(|an| {
+                let prefix = format!("axis.{an}");
+                let path = d.require_str(&format!("{prefix}.path"))?;
+                let values = d.f64_array(&format!("{prefix}.values"))?;
+                ensure!(!values.is_empty(), "axis '{an}' has no values");
+                Ok(AxisSpec { name: an.clone(), path, values })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // ----------------------------------------------------- metrics
+        let metrics = d.str_array_or_empty("metrics")?;
+        ensure!(
+            !metrics.is_empty(),
+            "missing required key 'metrics' (a non-empty array of metric \
+             names)"
+        );
+
+        d.finish()?;
+        Ok(ScenarioSpec {
+            name,
+            mode,
+            job,
+            runtime,
+            sgd,
+            markets,
+            strategies,
+            axes,
+            metrics,
+            replicates,
+            seed,
+        })
+    }
+}
+
+fn market_label(kind: &MarketKind) -> String {
+    match kind {
+        MarketKind::Uniform { .. } => "uniform",
+        MarketKind::Gaussian { .. } => "gaussian",
+        MarketKind::Fixed { .. } => "fixed",
+        MarketKind::TraceFile { .. } | MarketKind::TraceGen { .. } => "trace",
+    }
+    .to_string()
+}
+
+fn parse_market(d: &TrackedDoc, prefix: &str) -> Result<MarketKind> {
+    let key = |f: &str| format!("{prefix}.{f}");
+    Ok(match d.require_str(&key("kind"))?.as_str() {
+        "uniform" => {
+            let lo = d.f64_or(&key("lo"), 0.2)?;
+            let hi = d.f64_or(&key("hi"), 1.0)?;
+            ensure!(lo < hi, "{prefix}: need lo < hi, got [{lo}, {hi}]");
+            MarketKind::Uniform { lo, hi }
+        }
+        "gaussian" => {
+            let mean = d.f64_or(&key("mean"), 0.6)?;
+            let std = d.f64_or(&key("std"), 0.175)?;
+            let lo = d.f64_or(&key("lo"), 0.2)?;
+            let hi = d.f64_or(&key("hi"), 1.0)?;
+            ensure!(std > 0.0, "{prefix}: std must be > 0");
+            ensure!(lo < hi, "{prefix}: need lo < hi, got [{lo}, {hi}]");
+            MarketKind::Gaussian { mean, std, lo, hi }
+        }
+        "fixed" => {
+            let price = d.f64_or(&key("price"), 0.0)?;
+            ensure!(price >= 0.0, "{prefix}: price must be >= 0");
+            MarketKind::Fixed { price }
+        }
+        "trace" => {
+            if let Some(path) = d.str_opt(&key("path"))? {
+                MarketKind::TraceFile {
+                    path,
+                    // loaded traces default to the historical-feed scale
+                    // used by `simulate --config` (seconds-resolution)
+                    cdf_resolution: d.f64_or(&key("cdf_resolution"), 60.0)?,
+                }
+            } else {
+                let base = super::fig4::default_trace_config();
+                MarketKind::TraceGen {
+                    seed: d.u64_or(&key("trace_seed"), 7)?,
+                    cdf_resolution: d.f64_or(&key("cdf_resolution"), 0.02)?,
+                    cfg: TraceGenConfig {
+                        horizon: d.f64_or(&key("horizon"), base.horizon)?,
+                        revision_interval: d.f64_or(
+                            &key("revision_interval"),
+                            base.revision_interval,
+                        )?,
+                        floor: d.f64_or(&key("floor"), base.floor)?,
+                        cap: d.f64_or(&key("cap"), base.cap)?,
+                        base: d.f64_or(&key("base"), base.base)?,
+                        regime_switch_prob: d.f64_or(
+                            &key("regime_switch_prob"),
+                            base.regime_switch_prob,
+                        )?,
+                        contended_mult: d.f64_or(
+                            &key("contended_mult"),
+                            base.contended_mult,
+                        )?,
+                        spike_prob: d
+                            .f64_or(&key("spike_prob"), base.spike_prob)?,
+                        reversion: d
+                            .f64_or(&key("reversion"), base.reversion)?,
+                        noise: d.f64_or(&key("noise"), base.noise)?,
+                    },
+                }
+            }
+        }
+        other => bail!(
+            "unknown market kind '{other}' (uniform | gaussian | trace | \
+             fixed)"
+        ),
+    })
+}
+
+fn parse_strategy(
+    d: &TrackedDoc,
+    label: &str,
+    n_default: usize,
+) -> Result<StrategyEntry> {
+    let key = |f: &str| format!("strategy.{label}.{f}");
+    // a bare label with no [strategy.<label>] table names its own kind
+    let kind_name = if d.has(&key("kind")) {
+        d.require_str(&key("kind"))?
+    } else {
+        label.to_string()
+    };
+    let mut kind = StrategyKind::from_name(&kind_name, n_default)
+        .with_context(|| format!("strategy '{label}'"))?;
+    match &mut kind {
+        StrategyKind::TwoBids { n1 }
+        | StrategyKind::BidFractions { n1, .. }
+        | StrategyKind::DynamicBids { n1, .. } => {
+            *n1 = d.usize_or(&key("n1"), *n1)?;
+            ensure!(*n1 >= 1, "strategy '{label}': n1 must be >= 1");
+        }
+        _ => {}
+    }
+    match &mut kind {
+        StrategyKind::BidFractions { f1, gamma, .. } => {
+            *f1 = d.f64_or(&key("f1"), *f1)?;
+            *gamma = d.f64_or(&key("gamma"), *gamma)?;
+            ensure!(
+                *f1 > 0.0 && *f1 <= 1.0,
+                "strategy '{label}': f1 must be in (0, 1]"
+            );
+            ensure!(
+                (0.0..=1.0).contains(gamma),
+                "strategy '{label}': gamma must be in [0, 1]"
+            );
+        }
+        StrategyKind::DynamicBids { stage_iters, .. } => {
+            *stage_iters = d.u64_or(&key("stage_iters"), *stage_iters)?;
+            ensure!(
+                *stage_iters >= 1,
+                "strategy '{label}': stage_iters must be >= 1"
+            );
+        }
+        StrategyKind::DynamicWorkers { eta } => {
+            *eta = d.f64_or(&key("eta"), *eta)?;
+            ensure!(
+                *eta > 1.0,
+                "strategy '{label}': Theorem 5 requires eta > 1"
+            );
+        }
+        _ => {}
+    }
+    let n = d.usize_opt(&key("n"))?;
+    if let Some(n) = n {
+        ensure!(n >= 1, "strategy '{label}': n must be >= 1");
+    }
+    let preempt_q = d.f64_opt(&key("preempt_q"))?;
+    if let Some(q) = preempt_q {
+        ensure!(
+            (0.0..1.0).contains(&q),
+            "strategy '{label}': preempt_q must be in [0, 1)"
+        );
+    }
+    let unit_price = d.f64_opt(&key("unit_price"))?;
+    Ok(StrategyEntry {
+        label: label.to_string(),
+        kind,
+        n,
+        preempt_q,
+        unit_price,
+    })
+}
+
+// ===================================================================
+// The one StrategyKind -> PlannedStrategy build path
+// ===================================================================
+
+/// Everything a plan needs besides the kind itself.
+pub struct PlanInputs<'a> {
+    /// the bid-optimisation problem; `None` for fixed-price markets
+    /// (preemptible strategies never bid)
+    pub pb: Option<&'a BidProblem>,
+    /// fleet size for preemptible strategies
+    pub n: usize,
+    /// job-level iteration budget (bid plans may choose their own J)
+    pub j: u64,
+    pub preempt_q: f64,
+    pub unit_price: f64,
+}
+
+/// Build the [`PlannedStrategy`] for one `StrategyKind`. This is the
+/// single build path shared by the figure harnesses, `simulate`, and
+/// [`SpecScenario::prepare`] — the expensive Theorem 2/3 optimisation
+/// happens here, once per grid point.
+pub fn build_plan(
+    label: &str,
+    kind: &StrategyKind,
+    inp: &PlanInputs,
+) -> Result<PlannedStrategy> {
+    let need_pb = || {
+        inp.pb.ok_or_else(|| {
+            anyhow::anyhow!(
+                "strategy '{label}' bids on spot prices, but the market \
+                 has no price distribution (kind = \"fixed\")"
+            )
+        })
+    };
+    Ok(match kind {
+        StrategyKind::NoInterruption => {
+            let pb = need_pb()?;
+            let plan = pb.no_interruption_plan()?;
+            // "bid above the price cap" [Sharma et al.]: an unbounded bid
+            // keeps every worker active at any realizable price — also
+            // above the prices an *estimated* (empirical) support can
+            // undershoot. Workers still pay the spot price, never the bid.
+            PlannedStrategy::Fixed {
+                name: label.to_string(),
+                bids: BidVector::uniform(pb.n, f64::INFINITY),
+                j: plan.j.max(inp.j),
+            }
+        }
+        StrategyKind::OneBid => {
+            let pb = need_pb()?;
+            let plan = pb
+                .optimal_one_bid()
+                .with_context(|| format!("one-bid plan for '{label}'"))?;
+            PlannedStrategy::Fixed {
+                name: label.to_string(),
+                bids: BidVector::uniform(pb.n, plan.b),
+                j: plan.j,
+            }
+        }
+        StrategyKind::TwoBids { n1 } => {
+            let pb = need_pb()?;
+            ensure!(
+                *n1 >= 1 && *n1 < pb.n,
+                "strategy '{label}': need 0 < n1 < n, got n1={n1} n={}",
+                pb.n
+            );
+            let plan = pb
+                .cooptimize_j_two_bids(*n1)
+                .with_context(|| format!("two-bid plan for '{label}'"))?;
+            PlannedStrategy::Fixed {
+                name: label.to_string(),
+                bids: BidVector::two_group(pb.n, *n1, plan.b1, plan.b2),
+                j: plan.j,
+            }
+        }
+        StrategyKind::BidFractions { n1, f1, gamma } => {
+            let pb = need_pb()?;
+            ensure!(
+                *n1 >= 1 && *n1 <= pb.n,
+                "strategy '{label}': need 0 < n1 <= n, got n1={n1} n={}",
+                pb.n
+            );
+            let b1 = pb.price.inv_cdf(*f1);
+            let b2 = pb.price.inv_cdf(*gamma * *f1);
+            PlannedStrategy::Fixed {
+                name: label.to_string(),
+                bids: BidVector::two_group(pb.n, *n1, b1, b2),
+                j: inp.j,
+            }
+        }
+        StrategyKind::DynamicBids { n1, stage_iters } => {
+            let pb = need_pb()?;
+            ensure!(
+                *n1 >= 1 && *n1 < pb.n,
+                "strategy '{label}': need 0 < n1 < n, got n1={n1} n={}",
+                pb.n
+            );
+            let stages = vec![
+                StageSpec {
+                    n: (pb.n / 2).max(1),
+                    n1: (*n1 / 2).max(1),
+                    until_iter: *stage_iters,
+                },
+                StageSpec { n: pb.n, n1: *n1, until_iter: u64::MAX },
+            ];
+            PlannedStrategy::Dynamic {
+                name: label.to_string(),
+                problem: pb.clone(),
+                stages,
+                j: inp.j,
+            }
+        }
+        StrategyKind::StaticWorkers => PlannedStrategy::StaticWorkers {
+            name: label.to_string(),
+            n: inp.n,
+            j: inp.j,
+            model: preemption_model(inp.preempt_q),
+            unit_price: inp.unit_price,
+        },
+        StrategyKind::DynamicWorkers { eta } => {
+            ensure!(
+                *eta > 1.0,
+                "strategy '{label}': Theorem 5 requires eta > 1"
+            );
+            PlannedStrategy::DynamicWorkers {
+                name: label.to_string(),
+                n0: 1,
+                eta: *eta,
+                j: inp.j,
+                model: preemption_model(inp.preempt_q),
+                unit_price: inp.unit_price,
+                cap: 100_000,
+            }
+        }
+    })
+}
+
+fn preemption_model(q: f64) -> PreemptionModel {
+    if q == 0.0 {
+        PreemptionModel::None
+    } else {
+        PreemptionModel::Bernoulli { q }
+    }
+}
+
+fn kind_bids(kind: &StrategyKind) -> bool {
+    matches!(
+        kind,
+        StrategyKind::NoInterruption
+            | StrategyKind::OneBid
+            | StrategyKind::TwoBids { .. }
+            | StrategyKind::BidFractions { .. }
+            | StrategyKind::DynamicBids { .. }
+    )
+}
+
+// ===================================================================
+// Metric catalogue
+// ===================================================================
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum MetricKind {
+    // per-run metrics (per_strategy mode)
+    CostAtTarget,
+    TimeAtTarget,
+    TotalCost,
+    TotalTime,
+    FinalError,
+    FinalAccuracy,
+    Iters,
+    IdleTime,
+    AccPerDollar,
+    // per-point constants (computed once in prepare)
+    RecipExact,
+    PZero,
+    JensenPenalty,
+    NMatchExact,
+    BoundErr,
+    ExpCost,
+    ExpTime,
+    // lineup-comparison metrics (lineup mode), index into the lineup
+    LineupCost(usize),
+    LineupSavingPct(usize),
+    LineupAccRatio(usize),
+}
+
+impl MetricKind {
+    fn needs_run(self) -> bool {
+        matches!(
+            self,
+            MetricKind::CostAtTarget
+                | MetricKind::TimeAtTarget
+                | MetricKind::TotalCost
+                | MetricKind::TotalTime
+                | MetricKind::FinalError
+                | MetricKind::FinalAccuracy
+                | MetricKind::Iters
+                | MetricKind::IdleTime
+                | MetricKind::AccPerDollar
+                | MetricKind::LineupCost(_)
+                | MetricKind::LineupSavingPct(_)
+                | MetricKind::LineupAccRatio(_)
+        )
+    }
+
+    fn is_preempt_const(self) -> bool {
+        matches!(
+            self,
+            MetricKind::RecipExact
+                | MetricKind::PZero
+                | MetricKind::JensenPenalty
+                | MetricKind::NMatchExact
+        )
+    }
+
+    fn is_analytic_const(self) -> bool {
+        matches!(
+            self,
+            MetricKind::BoundErr | MetricKind::ExpCost | MetricKind::ExpTime
+        )
+    }
+}
+
+fn compile_metric(
+    name: &str,
+    mode: SweepMode,
+    strategies: &[StrategyEntry],
+) -> Result<MetricKind> {
+    if mode == SweepMode::Lineup {
+        for (i, e) in strategies.iter().enumerate() {
+            if name == format!("{}_cost", e.label) {
+                return Ok(MetricKind::LineupCost(i));
+            }
+            if i > 0 && name == format!("{}_saving_pct", e.label) {
+                return Ok(MetricKind::LineupSavingPct(i));
+            }
+            if i > 0 && name == format!("{}_acc_ratio", e.label) {
+                return Ok(MetricKind::LineupAccRatio(i));
+            }
+        }
+    }
+    let kind = match name {
+        "cost_at_target" => MetricKind::CostAtTarget,
+        "time_at_target" => MetricKind::TimeAtTarget,
+        "total_cost" | "cost" => MetricKind::TotalCost,
+        "total_time" | "time" => MetricKind::TotalTime,
+        "final_error" => MetricKind::FinalError,
+        "final_accuracy" => MetricKind::FinalAccuracy,
+        "iters" => MetricKind::Iters,
+        "idle_time" => MetricKind::IdleTime,
+        "acc_per_dollar" => MetricKind::AccPerDollar,
+        "recip_exact" => MetricKind::RecipExact,
+        "p_zero" => MetricKind::PZero,
+        "jensen_penalty" => MetricKind::JensenPenalty,
+        "n_match_exact" => MetricKind::NMatchExact,
+        "bound_err" => MetricKind::BoundErr,
+        "exp_cost" => MetricKind::ExpCost,
+        "exp_time" => MetricKind::ExpTime,
+        other => bail!(
+            "unknown metric '{other}' (run metrics: cost_at_target, \
+             time_at_target, total_cost, total_time, final_error, \
+             final_accuracy, iters, idle_time, acc_per_dollar; point \
+             constants: recip_exact, p_zero, jensen_penalty, \
+             n_match_exact, bound_err, exp_cost, exp_time; lineup mode \
+             additionally derives <label>_cost, <label>_saving_pct, \
+             <label>_acc_ratio)"
+        ),
+    };
+    if mode == SweepMode::Lineup && kind.needs_run() {
+        bail!(
+            "metric '{name}' is per-run; in lineup mode use the derived \
+             '<label>_cost' / '<label>_saving_pct' / '<label>_acc_ratio' \
+             names"
+        );
+    }
+    Ok(kind)
+}
+
+// ===================================================================
+// SpecScenario: the generic Scenario driver
+// ===================================================================
+
+/// The point-resolved view of a spec: base values with one market
+/// selected and every axis value applied.
+#[derive(Clone, Debug)]
+struct Resolved {
+    job: JobSpec,
+    runtime: RuntimeModel,
+    sgd: SgdHyper,
+    market: MarketSpec,
+    strategies: Vec<StrategyEntry>,
+}
+
+/// Cached per-grid-point state (DESIGN.md §3 prepare phase): planned
+/// strategies, the price source, and every point-constant metric.
+pub struct SpecCtx {
+    plans: Vec<PlannedStrategy>,
+    prices: PriceSource,
+    bound: ErrorBound,
+    runtime: RuntimeModel,
+    target_acc: f64,
+    cap: f64,
+    /// [recip_exact, p_zero, jensen_penalty, n_match_exact]
+    preempt_consts: [f64; 4],
+    /// [bound_err, exp_cost, exp_time]
+    analytic_consts: [f64; 3],
+    needs_sim: bool,
+}
+
+impl SpecCtx {
+    /// The planned strategies cached for this point (one in
+    /// per-strategy mode, the whole lineup in lineup mode) — exposed so
+    /// tests can pin plan equivalence against the figure harnesses.
+    pub fn plans(&self) -> &[PlannedStrategy] {
+        &self.plans
+    }
+}
+
+/// A [`Scenario`] generically driven by a [`ScenarioSpec`].
+pub struct SpecScenario {
+    spec: ScenarioSpec,
+    grid: Grid,
+    metrics: Vec<MetricKind>,
+}
+
+impl SpecScenario {
+    pub fn new(spec: ScenarioSpec) -> Result<Self> {
+        // compile the metric set
+        let metrics = spec
+            .metrics
+            .iter()
+            .map(|m| compile_metric(m, spec.mode, &spec.strategies))
+            .collect::<Result<Vec<_>>>()?;
+
+        // bidding strategies need a price distribution on every market
+        for m in &spec.markets {
+            if matches!(m.kind, MarketKind::Fixed { .. }) {
+                if let Some(e) =
+                    spec.strategies.iter().find(|e| kind_bids(&e.kind))
+                {
+                    bail!(
+                        "strategy '{}' bids on spot prices, but market \
+                         '{}' is fixed-price",
+                        e.label,
+                        m.label
+                    );
+                }
+                if metrics.iter().any(|k| k.is_analytic_const()) {
+                    bail!(
+                        "metrics bound_err/exp_cost/exp_time need a price \
+                         distribution, but market '{}' is fixed-price",
+                        m.label
+                    );
+                }
+            }
+        }
+        if metrics.iter().any(|k| k.is_analytic_const()) {
+            // in per-strategy mode every point's own plan feeds the
+            // analytic constants, so every entry must have fixed bids;
+            // in lineup mode only the first (baseline) entry does
+            let must_fix: &[StrategyEntry] = match spec.mode {
+                SweepMode::PerStrategy => &spec.strategies,
+                SweepMode::Lineup => &spec.strategies[..1],
+            };
+            for e in must_fix {
+                ensure!(
+                    matches!(
+                        e.kind,
+                        StrategyKind::NoInterruption
+                            | StrategyKind::OneBid
+                            | StrategyKind::TwoBids { .. }
+                            | StrategyKind::BidFractions { .. }
+                    ),
+                    "metrics bound_err/exp_cost/exp_time describe a fixed \
+                     bid vector, but strategy '{}' has no fixed bids",
+                    e.label
+                );
+            }
+        }
+
+        let mut grid = Grid::new();
+        for a in &spec.axes {
+            grid = grid.axis(&a.name, a.values.clone());
+        }
+
+        let me = SpecScenario { spec, grid, metrics };
+        // dry-run so bad axis paths, out-of-range values and statically
+        // broken points (inverted market bounds, n1 >= n, unstable SGD
+        // constants) fail at load / `--check`, not mid-sweep. Resolving
+        // every real grid point validates exactly the combinations that
+        // will run — axis values are never cross-checked against mixes
+        // that no point actually pairs. Degenerately huge grids (which
+        // could never be swept anyway) fall back to per-value path/range
+        // checks on a fresh scratch each, so --check stays fast.
+        let total = me.spec.markets.len() * me.grid.num_points();
+        for m in 0..me.spec.markets.len() {
+            if total <= 100_000 {
+                for g in 0..me.grid.num_points() {
+                    me.resolve(m, g).with_context(|| {
+                        format!(
+                            "market '{}', grid point {g}",
+                            me.spec.markets[m].label
+                        )
+                    })?;
+                }
+            } else {
+                for axis in &me.spec.axes {
+                    for &v in &axis.values {
+                        let mut scratch = me.resolved_base(m);
+                        set_path(&mut scratch, &axis.path, v).with_context(
+                            || format!("axis '{}'", axis.name),
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(me)
+    }
+
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    pub fn grid(&self) -> &Grid {
+        &self.grid
+    }
+
+    fn strategy_count(&self) -> usize {
+        match self.spec.mode {
+            SweepMode::PerStrategy => self.spec.strategies.len(),
+            SweepMode::Lineup => 1,
+        }
+    }
+
+    /// point -> (market, grid point, strategy); market slowest, strategy
+    /// fastest — the ordering the fig3 sweep has always used, so preset
+    /// digests match the pre-redesign harness.
+    fn decode(&self, point: usize) -> (usize, usize, usize) {
+        let s_count = self.strategy_count();
+        let g_count = self.grid.num_points();
+        let s = point % s_count;
+        let rest = point / s_count;
+        (rest / g_count, rest % g_count, s)
+    }
+
+    fn resolved_base(&self, market: usize) -> Resolved {
+        Resolved {
+            job: self.spec.job.clone(),
+            runtime: self.spec.runtime,
+            sgd: self.spec.sgd,
+            market: self.spec.markets[market].clone(),
+            strategies: self.spec.strategies.clone(),
+        }
+    }
+
+    fn resolve(&self, market: usize, gpt: usize) -> Result<Resolved> {
+        let mut r = self.resolved_base(market);
+        let vals = self.grid.point(gpt);
+        for (axis, v) in self.spec.axes.iter().zip(vals) {
+            set_path(&mut r, &axis.path, v)
+                .with_context(|| format!("axis '{}'", axis.name))?;
+        }
+        r.validate()?;
+        Ok(r)
+    }
+}
+
+impl Resolved {
+    /// Cross-field checks on a fully-resolved point: single-field ranges
+    /// are enforced by `set_path` / the parser, but only the final
+    /// combination can be judged for coherence (an axis may legally move
+    /// one side of a pair the other axis fixes later).
+    fn validate(&self) -> Result<()> {
+        self.sgd.validate().map_err(anyhow::Error::msg)?;
+        match &self.market.kind {
+            MarketKind::Uniform { lo, hi }
+            | MarketKind::Gaussian { lo, hi, .. } => {
+                ensure!(
+                    lo < hi,
+                    "market '{}': need lo < hi, got [{lo}, {hi}]",
+                    self.market.label
+                );
+            }
+            MarketKind::Fixed { .. }
+            | MarketKind::TraceFile { .. }
+            | MarketKind::TraceGen { .. } => {}
+        }
+        for e in &self.strategies {
+            let n_e = e.n.unwrap_or(self.job.n);
+            match &e.kind {
+                StrategyKind::TwoBids { n1 }
+                | StrategyKind::DynamicBids { n1, .. } => {
+                    ensure!(
+                        *n1 >= 1 && *n1 < n_e,
+                        "strategy '{}': need 0 < n1 < n, got n1={n1} \
+                         n={n_e}",
+                        e.label
+                    );
+                }
+                StrategyKind::BidFractions { n1, .. } => {
+                    ensure!(
+                        *n1 >= 1 && *n1 <= n_e,
+                        "strategy '{}': need 0 < n1 <= n, got n1={n1} \
+                         n={n_e}",
+                        e.label
+                    );
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+fn build_market(
+    kind: &MarketKind,
+) -> Result<(Option<PriceModel>, PriceSource, Option<f64>)> {
+    Ok(match kind {
+        MarketKind::Uniform { lo, hi } => {
+            let pm = PriceModel::Uniform { lo: *lo, hi: *hi };
+            (Some(pm.clone()), PriceSource::Iid(pm), None)
+        }
+        MarketKind::Gaussian { mean, std, lo, hi } => {
+            let pm = PriceModel::TruncGaussian {
+                mean: *mean,
+                std: *std,
+                lo: *lo,
+                hi: *hi,
+            };
+            (Some(pm.clone()), PriceSource::Iid(pm), None)
+        }
+        MarketKind::Fixed { price } => {
+            (None, PriceSource::Fixed(*price), None)
+        }
+        MarketKind::TraceFile { path, cdf_resolution } => {
+            let trace = SpotTrace::load(path)?;
+            let cdf = trace.empirical_cdf(*cdf_resolution);
+            let horizon = trace.horizon();
+            (
+                Some(PriceModel::Empirical(cdf)),
+                PriceSource::Trace(trace),
+                Some(horizon),
+            )
+        }
+        MarketKind::TraceGen { cfg, seed, cdf_resolution } => {
+            let mut rng = Rng::new(*seed);
+            let trace = SpotTrace::generate(cfg, &mut rng);
+            let cdf = trace.empirical_cdf(*cdf_resolution);
+            let horizon = trace.horizon();
+            (
+                Some(PriceModel::Empirical(cdf)),
+                PriceSource::Trace(trace),
+                Some(horizon),
+            )
+        }
+    })
+}
+
+impl Scenario for SpecScenario {
+    type Ctx = SpecCtx;
+
+    fn points(&self) -> usize {
+        self.spec.markets.len()
+            * self.grid.num_points()
+            * self.strategy_count()
+    }
+
+    fn label(&self, point: usize) -> String {
+        let (m, g, s) = self.decode(point);
+        let mut parts = Vec::new();
+        if self.spec.markets.len() > 1 {
+            parts.push(self.spec.markets[m].label.clone());
+        }
+        if !self.spec.axes.is_empty() {
+            parts.push(self.grid.label(g));
+        }
+        if self.spec.mode == SweepMode::PerStrategy
+            && self.spec.strategies.len() > 1
+        {
+            parts.push(self.spec.strategies[s].label.clone());
+        }
+        if parts.is_empty() {
+            parts.push(self.spec.strategies[s].label.clone());
+        }
+        parts.join("/")
+    }
+
+    fn metrics(&self) -> Vec<String> {
+        self.spec.metrics.clone()
+    }
+
+    fn prepare(&self, point: usize) -> Result<SpecCtx> {
+        let (m, g, s) = self.decode(point);
+        let r = self.resolve(m, g)?; // validated: resolve() checks points
+        let bound = ErrorBound::new(r.sgd);
+        let (price_model, prices, horizon) = build_market(&r.market.kind)?;
+
+        let theta = match (r.job.theta, &price_model) {
+            (Some(t), _) => t,
+            // the Sec. VI convention: deadline = slack x expected
+            // uninterrupted total runtime
+            (None, Some(_)) => {
+                r.job.deadline_slack
+                    * r.job.j as f64
+                    * r.runtime.expected(r.job.n)
+            }
+            // preemptible platforms have no bid deadline
+            (None, None) => f64::INFINITY,
+        };
+        let cap = match horizon {
+            // trace replays stop at the end of the recorded path
+            Some(h) => h,
+            None if theta.is_finite() => theta * 4.0,
+            None => f64::INFINITY,
+        };
+        let target_acc = accuracy_for_error(&bound, r.job.eps);
+
+        let entries: Vec<&StrategyEntry> = match self.spec.mode {
+            SweepMode::PerStrategy => vec![&r.strategies[s]],
+            SweepMode::Lineup => r.strategies.iter().collect(),
+        };
+        let mut plans = Vec::with_capacity(entries.len());
+        let mut first_pb: Option<BidProblem> = None;
+        for e in &entries {
+            let n_e = e.n.unwrap_or(r.job.n);
+            let pb_e = price_model.as_ref().map(|price| BidProblem {
+                bound,
+                price: price.clone(),
+                runtime: r.runtime,
+                n: n_e,
+                eps: r.job.eps,
+                theta,
+            });
+            let plan = build_plan(
+                &e.label,
+                &e.kind,
+                &PlanInputs {
+                    pb: pb_e.as_ref(),
+                    n: n_e,
+                    j: r.job.j,
+                    preempt_q: e.preempt_q.unwrap_or(r.job.preempt_q),
+                    unit_price: e.unit_price.unwrap_or(r.job.unit_price),
+                },
+            )
+            .with_context(|| format!("strategy '{}'", e.label))?;
+            if first_pb.is_none() {
+                first_pb = pb_e;
+            }
+            plans.push(plan);
+        }
+
+        // ---- point-constant metrics, computed once per grid point
+        let preempt_consts = if self
+            .metrics
+            .iter()
+            .any(|k| k.is_preempt_const())
+        {
+            let (n_c, q_c) = match self.spec.mode {
+                SweepMode::PerStrategy => (
+                    entries[0].n.unwrap_or(r.job.n),
+                    entries[0].preempt_q.unwrap_or(r.job.preempt_q),
+                ),
+                SweepMode::Lineup => (r.job.n, r.job.preempt_q),
+            };
+            let model = PreemptionModel::Bernoulli { q: q_c };
+            let n_base = r.job.n_baseline.max(1);
+            // exact Theorem-4 match: smallest fleet whose conditional
+            // E[1/y] is at least as good as the baseline's 1/n_base
+            let table = RecipTable::build(&model, n_c.max(8 * n_base));
+            let n_match = (1..=table.n_max())
+                .find(|&mm| table.recip(mm) <= 1.0 / n_base as f64)
+                .map(|mm| mm as f64)
+                .unwrap_or(f64::NAN);
+            [
+                table.recip(n_c),
+                model.p_zero(n_c),
+                jensen_penalty(&model, n_c),
+                n_match,
+            ]
+        } else {
+            [f64::NAN; 4]
+        };
+
+        let analytic_consts = if self
+            .metrics
+            .iter()
+            .any(|k| k.is_analytic_const())
+        {
+            match (&plans[0], &first_pb) {
+                (PlannedStrategy::Fixed { bids, j, .. }, Some(pb)) => {
+                    let (n1, b1, b2) = (bids.n1, bids.b1, bids.b2);
+                    let recip = pb.expected_recip_two(n1, b1, b2);
+                    [
+                        bound.phi_const(*j, recip),
+                        pb.expected_cost_two(*j, n1, b1, b2),
+                        pb.expected_time_two(*j, n1, b1, b2),
+                    ]
+                }
+                // validated in `new`, but axes could have morphed things
+                _ => bail!(
+                    "bound_err/exp_cost/exp_time need a fixed-bid first \
+                     strategy and a price-model market"
+                ),
+            }
+        } else {
+            [f64::NAN; 3]
+        };
+
+        let needs_sim = self.metrics.iter().any(|k| k.needs_run());
+        Ok(SpecCtx {
+            plans,
+            prices,
+            bound,
+            runtime: r.runtime,
+            target_acc,
+            cap,
+            preempt_consts,
+            analytic_consts,
+            needs_sim,
+        })
+    }
+
+    fn run(
+        &self,
+        _point: usize,
+        ctx: &SpecCtx,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>> {
+        let const_value = |k: MetricKind| match k {
+            MetricKind::RecipExact => ctx.preempt_consts[0],
+            MetricKind::PZero => ctx.preempt_consts[1],
+            MetricKind::JensenPenalty => ctx.preempt_consts[2],
+            MetricKind::NMatchExact => ctx.preempt_consts[3],
+            MetricKind::BoundErr => ctx.analytic_consts[0],
+            MetricKind::ExpCost => ctx.analytic_consts[1],
+            MetricKind::ExpTime => ctx.analytic_consts[2],
+            _ => f64::NAN,
+        };
+        if !ctx.needs_sim {
+            return Ok(self
+                .metrics
+                .iter()
+                .map(|&k| const_value(k))
+                .collect());
+        }
+        match self.spec.mode {
+            SweepMode::PerStrategy => {
+                let mut s = ctx.plans[0].build()?;
+                let r = run_synthetic_rng(
+                    s.as_mut(),
+                    ctx.bound,
+                    &ctx.prices,
+                    ctx.runtime,
+                    ctx.cap,
+                    rng,
+                )?;
+                Ok(self
+                    .metrics
+                    .iter()
+                    .map(|&k| match k {
+                        MetricKind::CostAtTarget => r
+                            .series
+                            .cost_at_accuracy(ctx.target_acc)
+                            .unwrap_or(f64::NAN),
+                        MetricKind::TimeAtTarget => r
+                            .series
+                            .time_at_accuracy(ctx.target_acc)
+                            .unwrap_or(f64::NAN),
+                        MetricKind::TotalCost => r.cost,
+                        MetricKind::TotalTime => r.elapsed,
+                        MetricKind::FinalError => r.final_error,
+                        MetricKind::FinalAccuracy => r.final_accuracy,
+                        MetricKind::Iters => r.iters as f64,
+                        MetricKind::IdleTime => r.idle_time,
+                        MetricKind::AccPerDollar => {
+                            if r.cost > 0.0 {
+                                r.final_accuracy / r.cost
+                            } else {
+                                0.0
+                            }
+                        }
+                        other => const_value(other),
+                    })
+                    .collect())
+            }
+            SweepMode::Lineup => {
+                // the lineup shares this replicate's stream, consumed in
+                // entry order — still a pure function of job identity
+                let mut finals = Vec::with_capacity(ctx.plans.len());
+                for plan in &ctx.plans {
+                    let mut s = plan.build()?;
+                    let r = run_synthetic_rng(
+                        s.as_mut(),
+                        ctx.bound,
+                        &ctx.prices,
+                        ctx.runtime,
+                        ctx.cap,
+                        rng,
+                    )?;
+                    let acc =
+                        r.series.last().map(|p| p.accuracy).unwrap_or(0.0);
+                    finals.push((r.cost, acc));
+                }
+                let (base_cost, base_acc) = finals[0];
+                let base_acc = base_acc.max(1e-9);
+                Ok(self
+                    .metrics
+                    .iter()
+                    .map(|&k| match k {
+                        MetricKind::LineupCost(i) => finals[i].0,
+                        MetricKind::LineupSavingPct(i) => {
+                            100.0 * (base_cost - finals[i].0)
+                                / base_cost.max(1e-9)
+                        }
+                        MetricKind::LineupAccRatio(i) => {
+                            finals[i].1 / base_acc
+                        }
+                        other => const_value(other),
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+// ===================================================================
+// Axis paths
+// ===================================================================
+
+fn as_count(path: &str, v: f64, min: u64) -> Result<u64> {
+    ensure!(
+        v.fract() == 0.0 && v >= min as f64 && v <= u64::MAX as f64,
+        "axis value for '{path}' must be an integer >= {min}, got {v}"
+    );
+    Ok(v as u64)
+}
+
+/// Apply one axis value to a resolved point. This match *is* the axis
+/// grammar; DESIGN.md §4 documents it.
+fn set_path(r: &mut Resolved, path: &str, v: f64) -> Result<()> {
+    let parts: Vec<&str> = path.split('.').collect();
+    match parts.as_slice() {
+        ["job", field] => set_job(&mut r.job, path, *field, v),
+        ["runtime", field] => set_runtime(&mut r.runtime, path, *field, v),
+        ["sgd", field] => set_sgd(&mut r.sgd, path, *field, v),
+        ["market", field] => set_market(&mut r.market.kind, path, *field, v),
+        ["strategy", label, field] => {
+            let e = r
+                .strategies
+                .iter_mut()
+                .find(|e| e.label == **label)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "axis path '{path}': no strategy labelled '{label}'"
+                    )
+                })?;
+            set_strategy(e, path, *field, v)
+        }
+        _ => bail!(
+            "unsupported axis path '{path}' (expected job.*, runtime.*, \
+             sgd.*, market.*, or strategy.<label>.*)"
+        ),
+    }
+}
+
+fn set_job(job: &mut JobSpec, path: &str, field: &str, v: f64) -> Result<()> {
+    match field {
+        "n" => job.n = as_count(path, v, 1)? as usize,
+        "eps" => {
+            ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+            job.eps = v;
+        }
+        "theta" => {
+            ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+            job.theta = Some(v);
+        }
+        "deadline_slack" => {
+            ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+            job.deadline_slack = v;
+        }
+        "j" => job.j = as_count(path, v, 1)?,
+        "preempt_q" => {
+            ensure!(
+                (0.0..1.0).contains(&v),
+                "'{path}' must be in [0, 1), got {v}"
+            );
+            job.preempt_q = v;
+        }
+        "n_baseline" => job.n_baseline = as_count(path, v, 1)? as usize,
+        "unit_price" => {
+            ensure!(v >= 0.0, "'{path}' must be >= 0, got {v}");
+            job.unit_price = v;
+        }
+        _ => bail!("unsupported axis path '{path}'"),
+    }
+    Ok(())
+}
+
+fn set_runtime(
+    rt: &mut RuntimeModel,
+    path: &str,
+    field: &str,
+    v: f64,
+) -> Result<()> {
+    match (rt, field) {
+        (RuntimeModel::ExpStragglers { lambda, .. }, "lambda") => {
+            ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+            *lambda = v;
+        }
+        (RuntimeModel::ExpStragglers { delta, .. }, "delta") => {
+            ensure!(v >= 0.0, "'{path}' must be >= 0, got {v}");
+            *delta = v;
+        }
+        (RuntimeModel::Deterministic { r }, "r") => {
+            ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+            *r = v;
+        }
+        _ => bail!(
+            "axis path '{path}' does not match the configured runtime kind"
+        ),
+    }
+    Ok(())
+}
+
+// stability (c <= L, beta in (0,1)) is a property of the final
+// combination, judged by `Resolved::validate` once every axis applied
+fn set_sgd(sgd: &mut SgdHyper, path: &str, field: &str, v: f64) -> Result<()> {
+    match field {
+        "alpha" => sgd.alpha = v,
+        "c" => sgd.c = v,
+        "mu" => sgd.mu = v,
+        "l" => sgd.l = v,
+        "m" => sgd.m = v,
+        "a0" => sgd.a0 = v,
+        _ => bail!("unsupported axis path '{path}'"),
+    }
+    Ok(())
+}
+
+fn set_market(
+    kind: &mut MarketKind,
+    path: &str,
+    field: &str,
+    v: f64,
+) -> Result<()> {
+    let mismatch = || {
+        anyhow::anyhow!(
+            "axis path '{path}' does not match the configured market kind"
+        )
+    };
+    match kind {
+        MarketKind::Uniform { lo, hi } => match field {
+            "lo" => *lo = v,
+            "hi" => *hi = v,
+            _ => return Err(mismatch()),
+        },
+        MarketKind::Gaussian { mean, std, lo, hi } => match field {
+            "mean" => *mean = v,
+            "std" => {
+                ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+                *std = v;
+            }
+            "lo" => *lo = v,
+            "hi" => *hi = v,
+            _ => return Err(mismatch()),
+        },
+        MarketKind::Fixed { price } => match field {
+            "price" => {
+                ensure!(v >= 0.0, "'{path}' must be >= 0, got {v}");
+                *price = v;
+            }
+            _ => return Err(mismatch()),
+        },
+        MarketKind::TraceFile { cdf_resolution, .. } => match field {
+            "cdf_resolution" => {
+                ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+                *cdf_resolution = v;
+            }
+            _ => return Err(mismatch()),
+        },
+        MarketKind::TraceGen { cfg, seed, cdf_resolution } => match field {
+            "trace_seed" => *seed = as_count(path, v, 0)?,
+            "cdf_resolution" => {
+                ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+                *cdf_resolution = v;
+            }
+            "horizon" => {
+                ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+                cfg.horizon = v;
+            }
+            "revision_interval" => cfg.revision_interval = v,
+            "floor" => cfg.floor = v,
+            "cap" => cfg.cap = v,
+            "base" => cfg.base = v,
+            "regime_switch_prob" => cfg.regime_switch_prob = v,
+            "contended_mult" => cfg.contended_mult = v,
+            "spike_prob" => cfg.spike_prob = v,
+            "reversion" => cfg.reversion = v,
+            "noise" => cfg.noise = v,
+            _ => return Err(mismatch()),
+        },
+    }
+    Ok(())
+}
+
+fn set_strategy(
+    e: &mut StrategyEntry,
+    path: &str,
+    field: &str,
+    v: f64,
+) -> Result<()> {
+    match field {
+        "n" => {
+            e.n = Some(as_count(path, v, 1)? as usize);
+            return Ok(());
+        }
+        "preempt_q" => {
+            ensure!(
+                (0.0..1.0).contains(&v),
+                "'{path}' must be in [0, 1), got {v}"
+            );
+            e.preempt_q = Some(v);
+            return Ok(());
+        }
+        "unit_price" => {
+            ensure!(v >= 0.0, "'{path}' must be >= 0, got {v}");
+            e.unit_price = Some(v);
+            return Ok(());
+        }
+        _ => {}
+    }
+    match (&mut e.kind, field) {
+        (
+            StrategyKind::TwoBids { n1 }
+            | StrategyKind::BidFractions { n1, .. }
+            | StrategyKind::DynamicBids { n1, .. },
+            "n1",
+        ) => *n1 = as_count(path, v, 1)? as usize,
+        (StrategyKind::BidFractions { f1, .. }, "f1") => {
+            ensure!(
+                v > 0.0 && v <= 1.0,
+                "'{path}' must be in (0, 1], got {v}"
+            );
+            *f1 = v;
+        }
+        (StrategyKind::BidFractions { gamma, .. }, "gamma") => {
+            ensure!(
+                (0.0..=1.0).contains(&v),
+                "'{path}' must be in [0, 1], got {v}"
+            );
+            *gamma = v;
+        }
+        (StrategyKind::DynamicBids { stage_iters, .. }, "stage_iters") => {
+            *stage_iters = as_count(path, v, 1)?;
+        }
+        (StrategyKind::DynamicWorkers { eta }, "eta") => {
+            ensure!(v > 1.0, "'{path}' requires eta > 1, got {v}");
+            *eta = v;
+        }
+        _ => bail!(
+            "axis path '{path}' does not match strategy '{}' (kind {})",
+            e.label,
+            e.kind.canonical_name()
+        ),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{run_sweep, SweepConfig};
+
+    // top-level keys precede every [table]: a bare key after a header
+    // would inherit the table's dotted prefix (flat-parser subset)
+    const MINI: &str = r#"
+name = "mini"
+strategies = ["static_workers"]
+axes = ["n", "q"]
+metrics = ["cost", "final_error", "recip_exact", "p_zero"]
+
+[job]
+n = 4
+eps = 0.35
+j = 400
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+price = 0.0
+
+[axis.n]
+path = "job.n"
+values = [2, 4]
+
+[axis.q]
+path = "job.preempt_q"
+values = [0.3, 0.6]
+"#;
+
+    #[test]
+    fn mini_spec_parses_and_runs() {
+        let spec = ScenarioSpec::from_str(MINI).unwrap();
+        assert_eq!(spec.name, "mini");
+        assert_eq!(spec.markets.len(), 1);
+        assert_eq!(spec.strategies.len(), 1);
+        let sc = SpecScenario::new(spec).unwrap();
+        assert_eq!(sc.points(), 4);
+        assert_eq!(sc.label(0), "n=2 q=0.3");
+        assert_eq!(sc.label(3), "n=4 q=0.6");
+        let cfg = SweepConfig { replicates: 3, seed: 5, threads: 2 };
+        let out = run_sweep(&sc, &cfg).unwrap();
+        assert_eq!(out.points.len(), 4);
+        // recip_exact is a per-point constant: zero variance
+        let recip_idx = 2;
+        for p in &out.points {
+            assert_eq!(p.stats[recip_idx].count(), 3);
+            assert_eq!(p.stats[recip_idx].variance(), 0.0, "{}", p.label);
+        }
+    }
+
+    #[test]
+    fn spec_sweep_deterministic_across_threads() {
+        let sc = SpecScenario::new(ScenarioSpec::from_str(MINI).unwrap())
+            .unwrap();
+        let base = SweepConfig { replicates: 4, seed: 9, threads: 1 };
+        let serial = run_sweep(&sc, &base).unwrap();
+        let par =
+            run_sweep(&sc, &SweepConfig { threads: 8, ..base }).unwrap();
+        assert_eq!(serial.digest(), par.digest());
+    }
+
+    #[test]
+    fn unknown_keys_rejected_by_name() {
+        let bad = MINI.replace("[job]", "[job]\nepss = 0.2");
+        let err = ScenarioSpec::from_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("job.epss"), "{err}");
+    }
+
+    #[test]
+    fn wrong_types_and_ranges_rejected() {
+        for (needle, replacement, what) in [
+            ("n = 4", "n = 0", "job.n zero"),
+            ("eps = 0.35", "eps = -0.2", "negative eps"),
+            ("eps = 0.35", "eps = \"high\"", "string eps"),
+            ("j = 400", "j = 0", "zero j"),
+        ] {
+            let bad = MINI.replace(needle, replacement);
+            assert!(
+                ScenarioSpec::from_str(&bad).is_err(),
+                "{what} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn missing_required_tables_rejected() {
+        let no_market = MINI
+            .replace("[market]", "[ignored_market]")
+            .replace("kind = \"fixed\"", "kind2 = \"fixed\"");
+        let err =
+            ScenarioSpec::from_str(&no_market).unwrap_err().to_string();
+        assert!(err.contains("market"), "{err}");
+
+        let no_strategies =
+            MINI.replace("strategies = [\"static_workers\"]", "");
+        let err =
+            ScenarioSpec::from_str(&no_strategies).unwrap_err().to_string();
+        assert!(err.contains("strategies"), "{err}");
+
+        let no_metrics = MINI.replace(
+            "metrics = [\"cost\", \"final_error\", \"recip_exact\", \"p_zero\"]",
+            "",
+        );
+        let err =
+            ScenarioSpec::from_str(&no_metrics).unwrap_err().to_string();
+        assert!(err.contains("metrics"), "{err}");
+    }
+
+    #[test]
+    fn bad_axis_paths_fail_at_load() {
+        let bad = MINI.replace("path = \"job.n\"", "path = \"job.nn\"");
+        let spec = ScenarioSpec::from_str(&bad).unwrap();
+        assert!(SpecScenario::new(spec).is_err());
+        // non-integer value for an integer path
+        let bad = MINI.replace("values = [2, 4]", "values = [2.5, 4]");
+        let spec = ScenarioSpec::from_str(&bad).unwrap();
+        assert!(SpecScenario::new(spec).is_err());
+    }
+
+    #[test]
+    fn statically_broken_points_fail_at_load() {
+        // n1 >= n is known before any sweep runs; --check must reject it
+        let bad_split = r#"
+name = "bad_split"
+strategies = ["two_bids"]
+metrics = ["total_cost"]
+
+[job]
+n = 8
+
+[market]
+kind = "uniform"
+
+[strategy.two_bids]
+kind = "two_bids"
+n1 = 8
+"#;
+        let err =
+            SpecScenario::new(ScenarioSpec::from_str(bad_split).unwrap())
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("n1"), "{err}");
+
+        // an axis that inverts the market support is caught at load too
+        let inverted = r#"
+name = "inverted"
+strategies = ["one_bid"]
+axes = ["hi"]
+metrics = ["total_cost"]
+
+[job]
+n = 8
+
+[market]
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+
+[axis.hi]
+path = "market.hi"
+values = [0.1, 1.0]
+"#;
+        let err =
+            SpecScenario::new(ScenarioSpec::from_str(inverted).unwrap())
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("lo < hi"), "{err}");
+    }
+
+    #[test]
+    fn sweeping_coupled_sgd_fields_judges_real_points_only() {
+        // c and L move together across the grid; every real point is
+        // stable even though (new c, base L) would not be. The load-time
+        // dry-run must not reject combinations no point actually pairs.
+        let text = r#"
+name = "coupled"
+strategies = ["static_workers"]
+axes = ["c", "l"]
+metrics = ["cost"]
+
+[job]
+n = 2
+j = 50
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[sgd]
+c = 1.0
+l = 1.5
+
+[axis.c]
+path = "sgd.c"
+values = [2.0]
+
+[axis.l]
+path = "sgd.l"
+values = [4.0]
+"#;
+        let sc =
+            SpecScenario::new(ScenarioSpec::from_str(text).unwrap()).unwrap();
+        assert_eq!(sc.points(), 1);
+    }
+
+    #[test]
+    fn analytic_metrics_require_fixed_bid_entries() {
+        let text = r#"
+name = "mixed_analytic"
+strategies = ["two_bids", "dynamic"]
+metrics = ["bound_err"]
+
+[job]
+n = 8
+
+[market]
+kind = "uniform"
+"#;
+        let err = SpecScenario::new(ScenarioSpec::from_str(text).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dynamic"), "{err}");
+    }
+
+    #[test]
+    fn unknown_metric_rejected() {
+        let bad = MINI.replace("\"p_zero\"", "\"p_zeroo\"");
+        let spec = ScenarioSpec::from_str(&bad).unwrap();
+        let err = SpecScenario::new(spec).unwrap_err().to_string();
+        assert!(err.contains("p_zeroo"), "{err}");
+    }
+
+    #[test]
+    fn fixed_market_rejects_bidding_strategies() {
+        let bad = MINI.replace(
+            "strategies = [\"static_workers\"]",
+            "strategies = [\"one_bid\"]",
+        );
+        let spec = ScenarioSpec::from_str(&bad).unwrap();
+        assert!(SpecScenario::new(spec).is_err());
+    }
+
+    #[test]
+    fn distinct_dynamic_entries_keep_their_labels() {
+        let text = r#"
+name = "two_dynamics"
+strategies = ["fast", "slow"]
+metrics = ["total_cost"]
+
+[job]
+n = 8
+eps = 0.35
+j = 2000
+
+[market]
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+
+[strategy.fast]
+kind = "dynamic"
+stage_iters = 500
+
+[strategy.slow]
+kind = "dynamic"
+stage_iters = 1500
+"#;
+        let spec = ScenarioSpec::from_str(text).unwrap();
+        let sc = SpecScenario::new(spec).unwrap();
+        assert_eq!(sc.points(), 2);
+        assert_eq!(sc.label(0), "fast");
+        assert_eq!(sc.label(1), "slow");
+        let a = sc.prepare(0).unwrap();
+        let b = sc.prepare(1).unwrap();
+        assert_eq!(a.plans[0].name(), "fast");
+        assert_eq!(b.plans[0].name(), "slow");
+        // the two plans differ only in their stage schedule
+        match (&a.plans[0], &b.plans[0]) {
+            (
+                PlannedStrategy::Dynamic { stages: sa, .. },
+                PlannedStrategy::Dynamic { stages: sb, .. },
+            ) => {
+                assert_eq!(sa[0].until_iter, 500);
+                assert_eq!(sb[0].until_iter, 1500);
+            }
+            other => panic!("expected dynamic plans, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn per_entry_overrides_apply() {
+        let text = r#"
+name = "mixed_fleet"
+strategies = ["cheap", "on_demand"]
+metrics = ["cost", "final_accuracy"]
+
+[job]
+n = 4
+preempt_q = 0.5
+unit_price = 0.1
+j = 200
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[strategy.cheap]
+kind = "static_workers"
+
+[strategy.on_demand]
+kind = "static_workers"
+preempt_q = 0.0
+unit_price = 0.3
+n = 2
+"#;
+        let sc =
+            SpecScenario::new(ScenarioSpec::from_str(text).unwrap()).unwrap();
+        let on_demand = sc.prepare(1).unwrap();
+        match &on_demand.plans[0] {
+            PlannedStrategy::StaticWorkers {
+                n, model, unit_price, ..
+            } => {
+                assert_eq!(*n, 2);
+                assert!(matches!(model, PreemptionModel::None));
+                assert_eq!(*unit_price, 0.3);
+            }
+            other => panic!("expected static workers, got {other:?}"),
+        }
+    }
+}

@@ -22,7 +22,9 @@
 //!   work-stealing pool, Welford collation);
 //! * [`runtime`] — PJRT bridge to the AOT artifacts;
 //! * [`data`] — synthetic CIFAR-like images + Markov corpus;
-//! * [`exp`] — per-figure experiment harnesses (Figs. 1–5);
+//! * [`exp`] — per-figure experiment harnesses (Figs. 1–5) plus the
+//!   declarative scenario-spec API (`exp::spec`, `exp::presets`): any
+//!   sweep as a TOML file driven by one generic `Scenario`;
 //! * [`config`], [`manifest`], [`metrics`], [`util`] — substrates.
 
 pub mod cli;

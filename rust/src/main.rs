@@ -8,10 +8,14 @@
 //!                          [--eps 0.35] [--theta 120000] [--two-bids]
 //! volatile-sgd plan-workers [--eps 0.1] [--q 0.5] [--chi 1.0] [--theta-iters 40000]
 //! volatile-sgd fig2|fig3|fig4|fig5  [--out out/] [--threads N]
-//! volatile-sgd sweep       [--fig 3|4|5] [--threads N] [--replicates R]
-//!                          [--j 10000] [--seed S] [--out out/]
+//! volatile-sgd sweep       [--spec FILE | --preset fig2..fig5 | --fig 2|3|4|5]
+//!                          [--threads N] [--replicates R] [--seed S] [--j J]
+//!                          [--out DIR|results.csv] [--json [FILE]] [--check]
 //! ```
 //!
+//! `sweep` is the one entry point for every scenario: a spec file
+//! (`--spec`), a shipped preset (`--preset`, also reachable as the
+//! legacy `--fig N`), same schema either way — see DESIGN.md §4.
 //! `--threads` parallelises the simulation jobs on the work-stealing
 //! sweep pool; results are bit-identical at any thread count (every
 //! job's RNG is a pure function of its job identity — see DESIGN.md §3).
@@ -23,16 +27,14 @@ use anyhow::{bail, Context, Result};
 use volatile_sgd::cli::Args;
 use volatile_sgd::config::{ExperimentConfig, StrategyKind};
 use volatile_sgd::coordinator::backend::{RealBackend, TrainingBackend};
-use volatile_sgd::coordinator::strategy::{
-    DynamicBids, FixedBids, StageSpec, StaticWorkers,
-};
 use volatile_sgd::data::CifarLike;
 use volatile_sgd::exp;
+use volatile_sgd::exp::{PlanInputs, PlannedStrategy, ScenarioSpec};
 use volatile_sgd::manifest::Manifest;
-use volatile_sgd::market::{BidVector, PriceModel};
-use volatile_sgd::preempt::PreemptionModel;
+use volatile_sgd::market::PriceModel;
 use volatile_sgd::runtime::{ModelRuntime, PjrtEngine};
 use volatile_sgd::sim::PriceSource;
+use volatile_sgd::sweep::Scenario;
 use volatile_sgd::theory::bids::BidProblem;
 use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
 use volatile_sgd::theory::runtime_model::RuntimeModel;
@@ -62,9 +64,11 @@ fn print_help() {
          optimal-bid   Theorem 2 / Theorem 3 bid calculator\n  \
          plan-workers  Theorem 4 / Theorem 5 provisioning planner\n  \
          fig2..fig5    regenerate the paper's figures (CSV + summary)\n  \
-         sweep         replicated Monte-Carlo sweep of a figure grid\n                \
-         (--fig 3|4|5 --threads N --replicates R; deterministic\n                \
-         for a fixed --seed at any thread count)\n"
+         sweep         replicated Monte-Carlo sweep of a declarative\n                \
+         scenario spec (--spec file.toml | --preset fig2..fig5\n                \
+         | --fig N; --out results.csv / --json for machine-readable\n                \
+         output; --check validates without running; deterministic\n                \
+         for a fixed --seed at any --threads)\n"
     );
 }
 
@@ -158,23 +162,47 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn describe_plan(plan: &PlannedStrategy) {
+    match plan {
+        PlannedStrategy::Fixed { name, bids, j } => println!(
+            "plan {name}: J={j}  bids b1={:.4} (n1={}) b2={:.4}",
+            bids.b1, bids.n1, bids.b2
+        ),
+        PlannedStrategy::Dynamic { name, stages, j, .. } => {
+            println!("plan {name}: J={j}  {} stages", stages.len())
+        }
+        PlannedStrategy::StaticWorkers { name, n, j, unit_price, .. } => {
+            println!("plan {name}: n={n}  J={j}  ${unit_price}/worker/t")
+        }
+        PlannedStrategy::DynamicWorkers { name, eta, j, .. } => {
+            println!("plan {name}: eta={eta}  J'={j}")
+        }
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = match args.get("config") {
         Some(path) => ExperimentConfig::from_file(path)?,
         None => ExperimentConfig::from_str("")?,
     };
-    let strategy_name = args.str(
-        "strategy",
-        match &cfg.strategy {
-            StrategyKind::NoInterruption => "no_interruption",
-            StrategyKind::OneBid => "one_bid",
-            StrategyKind::TwoBids { .. } => "two_bids",
-            StrategyKind::DynamicBids { .. } => "dynamic",
-            StrategyKind::StaticWorkers => "static_workers",
-            StrategyKind::DynamicWorkers { .. } => "dynamic_workers",
-        },
-    );
-    let n1 = args.usize("n1", (cfg.n / 2).max(1))?;
+    // --strategy overrides the config; both route through the one
+    // shared StrategyKind -> PlannedStrategy build path
+    let mut kind = match args.get("strategy") {
+        Some(name) => StrategyKind::from_name(name, cfg.n)?,
+        None => cfg.strategy.clone(),
+    };
+    if args.get("n1").is_some() {
+        let v = args.usize("n1", 0)?;
+        match &mut kind {
+            StrategyKind::TwoBids { n1 }
+            | StrategyKind::BidFractions { n1, .. }
+            | StrategyKind::DynamicBids { n1, .. } => *n1 = v,
+            _ => bail!(
+                "--n1 only applies to two_bids / bid_fractions / dynamic"
+            ),
+        }
+    }
+    let name = kind.canonical_name();
     let pb = BidProblem {
         bound: cfg.bound,
         price: cfg.price.clone(),
@@ -188,80 +216,36 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         None => PriceSource::Iid(cfg.price.clone()),
     };
     let cap = cfg.theta * 4.0;
-    let result = match strategy_name.as_str() {
-        "no_interruption" => {
-            let plan = pb.no_interruption_plan()?;
-            let hi = {
-                use volatile_sgd::market::process::PriceDist;
-                pb.price.support().1
-            };
-            let mut s = FixedBids::new(
-                "no_interruptions",
-                BidVector::uniform(cfg.n, hi),
-                plan.j,
-            );
-            exp::run_synthetic(
-                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
-            )?
-        }
-        "one_bid" => {
-            let plan = pb.optimal_one_bid()?;
-            println!("Theorem 2 bid: b*={:.4}, J={}", plan.b, plan.j);
-            let mut s = FixedBids::new(
-                "one_bid",
-                BidVector::uniform(cfg.n, plan.b),
-                plan.j,
-            );
-            exp::run_synthetic(
-                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
-            )?
-        }
-        "two_bids" => {
-            let plan = pb.cooptimize_j_two_bids(n1)?;
-            println!(
-                "Theorem 3 bids: b1*={:.4} b2*={:.4} gamma={:.3} J={}",
-                plan.b1, plan.b2, plan.gamma, plan.j
-            );
-            let mut s = FixedBids::new(
-                "two_bids",
-                BidVector::two_group(cfg.n, n1, plan.b1, plan.b2),
-                plan.j,
-            );
-            exp::run_synthetic(
-                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
-            )?
-        }
-        "dynamic" => {
-            let j = cfg.j_fixed.unwrap_or(10_000);
-            let stages = vec![
-                StageSpec {
-                    n: (cfg.n / 2).max(2),
-                    n1: (n1 / 2).max(1),
-                    until_iter: j * 2 / 5,
-                },
-                StageSpec { n: cfg.n, n1, until_iter: u64::MAX },
-            ];
-            let mut s = DynamicBids::new(pb.clone(), stages, j)?;
-            exp::run_synthetic(
-                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
-            )?
-        }
-        "static_workers" => {
-            let j = cfg.j_fixed.unwrap_or(10_000);
-            let mut s = StaticWorkers {
-                n: cfg.n,
-                j,
-                model: PreemptionModel::Bernoulli { q: cfg.preempt_q },
-                unit_price: exp::fig5::PREEMPTIBLE_PRICE,
-            };
-            exp::run_synthetic(
-                &mut s, cfg.bound, &prices, cfg.runtime, cap, cfg.seed,
-            )?
-        }
-        other => bail!("unknown --strategy '{other}'"),
-    };
-    println!("{}", exp::summarize(&strategy_name, &result));
-    let out = cfg.out_dir.join(format!("simulate_{strategy_name}.csv"));
+    // the no-interruption plan picks its own J (Theorem 1); only an
+    // explicit job.j in the config raises that floor. Other kinds need
+    // an iteration budget, defaulting to the paper's 10^4.
+    let j = cfg.j_fixed.unwrap_or(match &kind {
+        StrategyKind::NoInterruption => 0,
+        _ => 10_000,
+    });
+    let plan = exp::build_plan(
+        name,
+        &kind,
+        &PlanInputs {
+            pb: Some(&pb),
+            n: cfg.n,
+            j,
+            preempt_q: cfg.preempt_q,
+            unit_price: exp::fig5::PREEMPTIBLE_PRICE,
+        },
+    )?;
+    describe_plan(&plan);
+    let mut strategy = plan.build()?;
+    let result = exp::run_synthetic(
+        strategy.as_mut(),
+        cfg.bound,
+        &prices,
+        cfg.runtime,
+        cap,
+        cfg.seed,
+    )?;
+    println!("{}", exp::summarize(name, &result));
+    let out = cfg.out_dir.join(format!("simulate_{name}.csv"));
     result.series.table().write(&out)?;
     println!("series -> {}", out.display());
     Ok(())
@@ -443,48 +427,45 @@ fn cmd_fig5(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     use volatile_sgd::sweep::{run_sweep, SweepConfig};
 
-    let fig = args.str("fig", "3");
+    // resolve the spec: --spec FILE > --preset NAME > --fig N (legacy
+    // alias; default fig3). Every path yields the same ScenarioSpec
+    // schema — presets ARE spec files.
+    let mut spec = if let Some(path) = args.get("spec") {
+        ScenarioSpec::from_file(path)?
+    } else if let Some(name) = args.get("preset") {
+        exp::presets::spec(name)?
+    } else {
+        exp::presets::spec(&args.str("fig", "3"))?
+    };
+    // --j overrides the job iteration budget (the Theorem 2/3 deadlines
+    // scale with it; figure presets default to the paper's J = 10^4)
+    if let Some(j) = args.u64_opt("j")? {
+        spec.job.j = j;
+    }
+
+    // CLI flags override spec-level defaults, which override built-ins
     let cfg = SweepConfig {
-        replicates: args.u64("replicates", 8)?,
-        seed: args.u64("seed", 2020)?,
+        replicates: args
+            .u64_opt("replicates")?
+            .or(spec.replicates)
+            .unwrap_or(8),
+        seed: args.u64_opt("seed")?.or(spec.seed).unwrap_or(2020),
         threads: args.usize("threads", 1)?,
     };
-    // keep the figure-default J: the Theorem 2/3 deadlines scale with it,
-    // and a much smaller J makes the optimal-bid plans infeasible
-    let j = args.u64("j", 10_000)?;
-    let dir = out_dir(args);
+    let scenario = volatile_sgd::exp::SpecScenario::new(spec)?;
+    let name = scenario.spec().name.clone();
 
-    let (results, name) = match fig.as_str() {
-        "3" => {
-            let sweep = exp::fig3::Fig3Sweep::paper(exp::fig3::Fig3Params {
-                j,
-                seed: cfg.seed,
-                ..Default::default()
-            });
-            (run_sweep(&sweep, &cfg)?, "fig3")
-        }
-        "4" => {
-            let sweep = exp::fig4::Fig4Sweep {
-                params: exp::fig4::Fig4Params {
-                    j,
-                    seed: cfg.seed,
-                    ..Default::default()
-                },
-                trace_seeds: vec![7, 8, 9],
-            };
-            (run_sweep(&sweep, &cfg)?, "fig4")
-        }
-        "5" => {
-            let sweep = exp::fig5::Fig5Sweep::paper(exp::fig5::Fig5Params {
-                j,
-                seed: cfg.seed,
-                ..Default::default()
-            });
-            (run_sweep(&sweep, &cfg)?, "fig5")
-        }
-        other => bail!("--fig must be 3|4|5, got '{other}'"),
-    };
+    if args.bool("check") {
+        println!(
+            "spec OK: {name}  ({} points x {} metrics, {} strategies)",
+            scenario.points(),
+            scenario.metrics().len(),
+            scenario.spec().strategies.len()
+        );
+        return Ok(());
+    }
 
+    let results = run_sweep(&scenario, &cfg)?;
     println!(
         "== sweep {name}  ({} points x {} replicates, seed {})",
         results.points.len(),
@@ -493,8 +474,42 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     );
     results.print();
     println!("  digest: {:016x}", results.digest());
-    let out = dir.join(format!("sweep_{name}.csv"));
-    results.to_table().write(&out)?;
-    println!("collated stats -> {}", out.display());
+
+    // --out: a *.csv path gets the labeled machine-readable table; a
+    // directory (default "out") keeps the legacy numeric table
+    let out = args.str("out", "out");
+    if out.ends_with(".csv") {
+        let path = std::path::PathBuf::from(&out);
+        results.to_labeled_table().write(&path)?;
+        println!("collated stats -> {}", path.display());
+    } else {
+        let path = std::path::PathBuf::from(&out)
+            .join(format!("sweep_{name}.csv"));
+        results.to_table().write(&path)?;
+        println!("collated stats -> {}", path.display());
+    }
+    if let Some(jflag) = args.get("json") {
+        // bare --json lands next to the CSV: the --out directory, or the
+        // parent of an --out *.csv file
+        let path = if jflag == "true" {
+            let base = if out.ends_with(".csv") {
+                std::path::Path::new(&out)
+                    .parent()
+                    .filter(|p| !p.as_os_str().is_empty())
+                    .unwrap_or_else(|| std::path::Path::new("out"))
+                    .to_path_buf()
+            } else {
+                std::path::PathBuf::from(&out)
+            };
+            base.join(format!("sweep_{name}.json"))
+        } else {
+            std::path::PathBuf::from(jflag)
+        };
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, results.to_json(&name, &cfg))?;
+        println!("json -> {}", path.display());
+    }
     Ok(())
 }

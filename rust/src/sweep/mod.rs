@@ -69,8 +69,10 @@ pub trait Scenario: Sync {
     /// Human label for a point (used in tables and CSV).
     fn label(&self, point: usize) -> String;
 
-    /// Names of the metrics each replicate reports, in order.
-    fn metrics(&self) -> Vec<&'static str>;
+    /// Names of the metrics each replicate reports, in order. Owned so
+    /// config-driven scenarios can derive them (e.g. lineup-comparison
+    /// metrics named after config-defined strategy labels).
+    fn metrics(&self) -> Vec<String>;
 
     /// Build the cached context for one grid point.
     fn prepare(&self, point: usize) -> Result<Self::Ctx>;
@@ -95,7 +97,7 @@ pub struct PointSummary {
 /// The result of a sweep: per-point Welford statistics plus throughput.
 #[derive(Clone, Debug)]
 pub struct SweepResults {
-    pub metric_names: Vec<&'static str>,
+    pub metric_names: Vec<String>,
     pub points: Vec<PointSummary>,
     pub throughput: Throughput,
 }
@@ -190,6 +192,109 @@ impl SweepResults {
             t.push(row);
         }
         t
+    }
+
+    /// Machine-readable per-point summary: one row per grid point with
+    /// its label and `mean/std/n/missing` per metric — the
+    /// `sweep --out results.csv` payload, so downstream plotting never
+    /// scrapes stdout.
+    pub fn to_labeled_table(&self) -> crate::util::csv::StrTable {
+        let mut names: Vec<String> = vec!["label".to_string()];
+        for m in &self.metric_names {
+            for suffix in ["mean", "std", "n", "missing"] {
+                names.push(format!("{m}_{suffix}"));
+            }
+        }
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let mut t = crate::util::csv::StrTable::new(&name_refs);
+        for point in &self.points {
+            let mut row = vec![point.label.clone()];
+            for (s, &miss) in point.stats.iter().zip(&point.missing) {
+                row.push(format!("{}", s.mean()));
+                row.push(format!("{}", s.std()));
+                row.push(format!("{}", s.count()));
+                row.push(format!("{miss}"));
+            }
+            t.push(row);
+        }
+        t
+    }
+
+    /// The same summary as JSON (hand-rolled: the build is offline and
+    /// dependency-free). Non-finite statistics serialise as `null`.
+    pub fn to_json(&self, scenario: &str, cfg: &SweepConfig) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len() + 2);
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    c if (c as u32) < 0x20 => {
+                        out.push_str(&format!("\\u{:04x}", c as u32));
+                    }
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\n  \"scenario\": \"{}\",\n  \"seed\": {},\n  \
+             \"replicates\": {},\n  \"threads\": {},\n  \
+             \"digest\": \"{:016x}\",\n  \"metrics\": [",
+            esc(scenario),
+            cfg.seed,
+            cfg.replicates,
+            cfg.threads,
+            self.digest()
+        ));
+        for (i, m) in self.metric_names.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"{}\"", esc(m)));
+        }
+        out.push_str("],\n  \"points\": [\n");
+        for (pi, p) in self.points.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"metrics\": {{",
+                esc(&p.label)
+            ));
+            for (mi, ((name, s), &miss)) in self
+                .metric_names
+                .iter()
+                .zip(&p.stats)
+                .zip(&p.missing)
+                .enumerate()
+            {
+                if mi > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!(
+                    "\"{}\": {{\"mean\": {}, \"std\": {}, \"n\": {}, \
+                     \"missing\": {}}}",
+                    esc(name),
+                    num(s.mean()),
+                    num(s.std()),
+                    s.count(),
+                    miss
+                ));
+            }
+            out.push_str("}}");
+            if pi + 1 < self.points.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
     }
 
     /// Order- and thread-count-sensitive only if collation were broken:
@@ -289,8 +394,8 @@ mod tests {
             format!("offset={}", self.offsets[point])
         }
 
-        fn metrics(&self) -> Vec<&'static str> {
-            vec!["value", "draw"]
+        fn metrics(&self) -> Vec<String> {
+            vec!["value".to_string(), "draw".to_string()]
         }
 
         fn prepare(&self, point: usize) -> Result<f64> {
@@ -375,8 +480,8 @@ mod tests {
             "p".to_string()
         }
 
-        fn metrics(&self) -> Vec<&'static str> {
-            vec!["maybe"]
+        fn metrics(&self) -> Vec<String> {
+            vec!["maybe".to_string()]
         }
 
         fn prepare(&self, _point: usize) -> Result<()> {
@@ -391,6 +496,35 @@ mod tests {
         ) -> Result<Vec<f64>> {
             Ok(vec![if rng.bool(0.5) { 1.0 } else { f64::NAN }])
         }
+    }
+
+    #[test]
+    fn labeled_table_and_json_outputs() {
+        let toy = Toy { offsets: vec![1.0, 2.0] };
+        let cfg = SweepConfig { replicates: 4, seed: 1, threads: 2 };
+        let out = run_sweep(&toy, &cfg).unwrap();
+
+        let csv = out.to_labeled_table().to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "label,value_mean,value_std,value_n,value_missing,\
+             draw_mean,draw_std,draw_n,draw_missing"
+        );
+        assert_eq!(csv.lines().count(), 3); // header + 2 points
+        assert!(csv.contains("offset=1,"));
+
+        let json = out.to_json("toy", &cfg);
+        assert!(json.contains("\"scenario\": \"toy\""));
+        assert!(json.contains("\"seed\": 1"));
+        assert!(json.contains(&format!("{:016x}", out.digest())));
+        assert!(json.contains("\"offset=2\""));
+        assert!(json.contains("\"n\": 4"));
+        // crude structural sanity: balanced braces/brackets
+        let bal = |open: char, close: char| {
+            json.matches(open).count() == json.matches(close).count()
+        };
+        assert!(bal('{', '}') && bal('[', ']'));
     }
 
     #[test]

@@ -72,6 +72,61 @@ impl Table {
     }
 }
 
+/// A string-celled table written as CSV — for outputs that carry
+/// non-numeric columns (e.g. sweep point labels next to their
+/// statistics). Cells must not contain commas or newlines (the writer
+/// asserts; none of our labels do — the no-quoting subset above).
+#[derive(Clone, Debug, Default)]
+pub struct StrTable {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl StrTable {
+    pub fn new(columns: &[&str]) -> Self {
+        StrTable {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != {} columns",
+            row.len(),
+            self.columns.len()
+        );
+        for cell in &row {
+            assert!(
+                !cell.contains(',') && !cell.contains('\n'),
+                "cell '{cell}' needs quoting, which this CSV subset \
+                 does not support"
+            );
+        }
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+}
+
 /// Parse numeric CSV text (optionally with one header row; `#` comments and
 /// blank lines skipped). Non-numeric header is auto-detected.
 pub fn parse_numeric_csv(text: &str) -> (Vec<String>, Vec<Vec<f64>>) {
@@ -130,6 +185,20 @@ mod tests {
     fn push_wrong_width_panics() {
         let mut t = Table::new(&["a"]);
         t.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn str_table_roundtrip() {
+        let mut t = StrTable::new(&["label", "mean"]);
+        t.push(vec!["n=2 q=0.3".to_string(), "1.5".to_string()]);
+        assert_eq!(t.to_csv(), "label,mean\nn=2 q=0.3,1.5\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn str_table_rejects_commas() {
+        let mut t = StrTable::new(&["a"]);
+        t.push(vec!["x,y".to_string()]);
     }
 
     #[test]

@@ -77,17 +77,20 @@ fn simulate_one_bid_writes_series() {
 }
 
 #[test]
-fn sweep_subcommand_is_deterministic_across_threads() {
+fn sweep_preset_equals_legacy_fig_flag_and_is_thread_deterministic() {
     // figure-default J keeps the Theorem 2/3 plans feasible (theta
-    // scales with J); 2 replicates keeps the smoke test quick
-    let run_sweep = |threads: &str| {
-        run_ok(&[
-            "sweep", "--fig", "3", "--replicates", "2", "--seed", "77",
-            "--threads", threads,
-        ])
-    };
-    let a = run_sweep("1");
-    let b = run_sweep("4");
+    // scales with J); 2 replicates keeps the smoke test quick. One pair
+    // of runs pins BOTH contracts: `--fig 3` (the pre-redesign surface)
+    // and `--preset fig3` (the spec path) print identical digests, at
+    // different thread counts.
+    let a = run_ok(&[
+        "sweep", "--fig", "3", "--replicates", "2", "--seed", "77",
+        "--threads", "1",
+    ]);
+    let b = run_ok(&[
+        "sweep", "--preset", "fig3", "--replicates", "2", "--seed", "77",
+        "--threads", "4",
+    ]);
     let digest = |out: &str| {
         out.lines()
             .find(|l| l.contains("digest:"))
@@ -95,11 +98,62 @@ fn sweep_subcommand_is_deterministic_across_threads() {
             .map(str::to_string)
             .expect("digest line")
     };
-    assert_eq!(digest(&a), digest(&b), "sweep digest differs by threads");
+    assert_eq!(
+        digest(&a),
+        digest(&b),
+        "--preset fig3 must reproduce --fig 3 bit-for-bit"
+    );
     assert!(a.contains("jobs/s"), "throughput line missing:\n{a}");
     let csv = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("out/sweep_fig3.csv");
     assert!(csv.exists());
+}
+
+#[test]
+fn sweep_spec_file_with_machine_readable_output() {
+    let out = run_ok(&[
+        "sweep",
+        "--spec",
+        "../examples/configs/preempt_grid.toml",
+        "--replicates",
+        "1",
+        "--j",
+        "500",
+        "--threads",
+        "2",
+        "--out",
+        "out/spec_smoke.csv",
+        "--json",
+    ]);
+    assert!(out.contains("sweep preempt_grid"), "{out}");
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let csv =
+        std::fs::read_to_string(root.join("out/spec_smoke.csv")).unwrap();
+    let header = csv.lines().next().unwrap();
+    assert!(header.starts_with("label,"), "{header}");
+    assert!(header.contains("cost_mean") && header.contains("cost_missing"));
+    assert!(csv.contains("n=2 q=0.1/static,"), "{csv}");
+    let json = std::fs::read_to_string(
+        root.join("out/sweep_preempt_grid.json"),
+    )
+    .unwrap();
+    assert!(json.contains("\"scenario\": \"preempt_grid\""));
+    assert!(json.contains("\"points\""));
+}
+
+#[test]
+fn sweep_check_validates_without_running() {
+    let out = run_ok(&["sweep", "--preset", "fig5", "--check"]);
+    assert!(out.contains("spec OK: fig5"), "{out}");
+    assert!(!out.contains("digest"), "--check must not run the sweep");
+    // a broken spec fails loudly, naming the problem
+    let bad = bin()
+        .args(["sweep", "--preset", "nope"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown preset"));
 }
 
 #[test]

@@ -144,7 +144,13 @@ fn preemption_error_worse_than_on_demand_at_same_mean_workers() {
     // worse final error than 4 dedicated workers for the same J.
     let j = 5_000u64;
     let run = |model: PreemptionModel, n: usize, seed: u64| -> f64 {
-        let mut s = StaticWorkers { n, j, model, unit_price: 0.1 };
+        let mut s = StaticWorkers {
+            label: "static_n".to_string(),
+            n,
+            j,
+            model,
+            unit_price: 0.1,
+        };
         let mut backend = SyntheticBackend::new(bound());
         let mut rng = Rng::new(seed);
         let r = Scheduler::new(SchedulerParams {

@@ -1,0 +1,171 @@
+//! Scenario-spec integration: every shipped config validates, the
+//! fig3 preset reproduces the pre-redesign sweep exactly (same point
+//! space, same plans, same runner — hence the same digests), and a
+//! scenario that was *not* expressible before the redesign runs from a
+//! TOML file with no new Rust code.
+
+use volatile_sgd::exp::fig3::{self, Fig3Params, STRATEGY_NAMES};
+use volatile_sgd::exp::presets;
+use volatile_sgd::exp::{PlannedStrategy, ScenarioSpec, SpecScenario};
+use volatile_sgd::market::PriceModel;
+use volatile_sgd::sweep::{run_sweep, Scenario, SweepConfig};
+use volatile_sgd::theory::bids::BidProblem;
+use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+use volatile_sgd::theory::runtime_model::RuntimeModel;
+
+fn configs_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/configs")
+}
+
+#[test]
+fn every_shipped_config_parses_and_validates() {
+    let mut seen = 0;
+    for entry in
+        std::fs::read_dir(configs_dir()).expect("examples/configs exists")
+    {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        seen += 1;
+        let spec = ScenarioSpec::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let sc = SpecScenario::new(spec)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        assert!(sc.points() > 0, "{}", path.display());
+    }
+    assert!(seen >= 5, "expected >= 5 shipped configs, found {seen}");
+}
+
+/// The digest hashes labels, metric names and every collated statistic
+/// bit; replicate RNG streams are a pure function of the point order.
+/// So "spec path == pre-redesign `sweep --fig 3`" reduces to: same
+/// point space (pinned in `presets` unit tests), same per-point plans
+/// (pinned here against the figure harness's own plan builder), and the
+/// same replicate runner (both call `run_synthetic_rng` via
+/// `PlannedStrategy::build`).
+#[test]
+fn fig3_preset_plans_match_figure_harness_exactly() {
+    let sc = presets::scenario("fig3").unwrap();
+    let p = Fig3Params::default();
+    // the figure harness's problem setting for the uniform market
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
+    let theta = p.deadline_slack * p.j as f64 * runtime.expected(p.n);
+    let pb = BidProblem {
+        bound,
+        price: PriceModel::uniform_paper(),
+        runtime,
+        n: p.n,
+        eps: p.eps,
+        theta,
+    };
+    for (idx, name) in STRATEGY_NAMES.iter().enumerate() {
+        let want = fig3::plan_strategy(&pb, &p, idx).unwrap();
+        // uniform market points are 0..4 in the preset's ordering
+        let ctx = sc.prepare(idx).unwrap();
+        let got = &ctx.plans()[0];
+        assert_eq!(got.name(), *name);
+        assert_eq!(got.name(), want.name());
+        assert_eq!(got.target_iters(), want.target_iters(), "{name}");
+        match (got, &want) {
+            (
+                PlannedStrategy::Fixed { bids: a, .. },
+                PlannedStrategy::Fixed { bids: b, .. },
+            ) => {
+                assert_eq!(a.n(), b.n(), "{name}");
+                assert_eq!(a.n1, b.n1, "{name}");
+                assert_eq!(a.b1.to_bits(), b.b1.to_bits(), "{name}");
+                assert_eq!(a.b2.to_bits(), b.b2.to_bits(), "{name}");
+            }
+            (
+                PlannedStrategy::Dynamic { stages: a, .. },
+                PlannedStrategy::Dynamic { stages: b, .. },
+            ) => {
+                assert_eq!(a.len(), b.len(), "{name}");
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.n, y.n, "{name}");
+                    assert_eq!(x.n1, y.n1, "{name}");
+                    assert_eq!(x.until_iter, y.until_iter, "{name}");
+                }
+            }
+            other => panic!("plan shape mismatch for {name}: {other:?}"),
+        }
+    }
+}
+
+/// Not expressible before the redesign: a (fleet-size x preemption
+/// probability) grid over BOTH Sec. V provisioning strategies, straight
+/// from a shipped TOML file — zero scenario-specific Rust.
+#[test]
+fn novel_preempt_grid_runs_from_toml_only() {
+    let mut spec =
+        ScenarioSpec::from_file(configs_dir().join("preempt_grid.toml"))
+            .unwrap();
+    spec.job.j = 800; // keep the test quick; the shipped default is 4000
+    let sc = SpecScenario::new(spec).unwrap();
+    assert_eq!(sc.points(), 24); // 3 n x 4 q x 2 strategies
+
+    let base = SweepConfig { replicates: 2, seed: 13, threads: 1 };
+    let serial = run_sweep(&sc, &base).unwrap();
+    let par =
+        run_sweep(&sc, &SweepConfig { threads: 4, ..base }).unwrap();
+    assert_eq!(serial.digest(), par.digest());
+
+    let labels: Vec<&str> =
+        serial.points.iter().map(|p| p.label.as_str()).collect();
+    assert!(labels.contains(&"n=2 q=0.1/static"), "{labels:?}");
+    assert!(labels.contains(&"n=8 q=0.7/growing"), "{labels:?}");
+    let cost_idx = 0; // "cost" is the first metric
+    for p in &serial.points {
+        assert_eq!(p.stats[cost_idx].count(), 2, "{}", p.label);
+        assert!(p.stats[cost_idx].mean() > 0.0, "{}", p.label);
+    }
+    // n_match_exact (last metric) is a per-point constant >= n_baseline
+    let nm_idx = serial.metric_names.len() - 1;
+    for p in &serial.points {
+        let nm = p.stats[nm_idx].mean();
+        assert!(nm >= 2.0, "{}: n_match {nm}", p.label);
+        assert_eq!(p.stats[nm_idx].variance(), 0.0, "{}", p.label);
+    }
+}
+
+/// Lineup mode end to end on a single generated trace: the whole
+/// lineup runs inside each replicate and the savings/accuracy
+/// comparisons come out as finite, baseline-relative numbers.
+#[test]
+fn fig4_preset_lineup_mode_produces_comparisons() {
+    let mut spec = presets::spec("fig4").unwrap();
+    spec.axes[0].values = vec![7.0]; // one trace seed
+    let sc = SpecScenario::new(spec).unwrap();
+    assert_eq!(sc.points(), 1);
+    let out = run_sweep(
+        &sc,
+        &SweepConfig { replicates: 1, seed: 2020, threads: 1 },
+    )
+    .unwrap();
+    let p = &out.points[0];
+    assert_eq!(p.label, "trace_seed=7");
+    let metric = |name: &str| {
+        let i = out
+            .metric_names
+            .iter()
+            .position(|m| m == name)
+            .unwrap_or_else(|| panic!("missing metric {name}"));
+        p.stats[i].mean()
+    };
+    assert!(metric("noint_cost") > 0.0);
+    assert!(metric("one_bid_cost") > 0.0);
+    assert!(metric("two_bids_cost") > 0.0);
+    // savings are defined relative to the baseline's own cost
+    let s1 = metric("one_bid_saving_pct");
+    let s2 = metric("two_bids_saving_pct");
+    assert!(s1.is_finite() && s2.is_finite());
+    assert!(
+        (metric("noint_cost") * (1.0 - s1 / 100.0) - metric("one_bid_cost"))
+            .abs()
+            < 1e-9 * metric("noint_cost").max(1.0)
+    );
+    assert!(metric("one_bid_acc_ratio") > 0.0);
+}

@@ -1,4 +1,6 @@
-//! Sweep-harness integration: the determinism contract end to end.
+//! Sweep-harness integration: the determinism contract end to end,
+//! driven through the declarative scenario specs (the presets are
+//! ordinary `examples/configs/*.toml` files).
 //!
 //! The tentpole guarantee is that `--threads` is a pure throughput knob:
 //! for a fixed seed, a sweep's collated results (Welford statistics,
@@ -6,18 +8,16 @@
 //! every (grid-point, replicate) job derives its RNG from
 //! `Rng::stream(seed, job)` and collation folds outputs in job order.
 
-use volatile_sgd::exp::fig3::{Fig3Params, Fig3Sweep};
-use volatile_sgd::exp::fig5::{Fig5Params, Fig5Sweep};
-use volatile_sgd::market::PriceModel;
+use volatile_sgd::exp::presets;
+use volatile_sgd::exp::SpecScenario;
 use volatile_sgd::sweep::{run_sweep, SweepConfig};
 
 /// A small Fig. 3 grid: one distribution x four strategies. Default J
 /// keeps the Theorem 2/3 plans feasible (their deadlines scale with it).
-fn small_fig3() -> Fig3Sweep {
-    Fig3Sweep {
-        params: Fig3Params::default(),
-        dists: vec![(PriceModel::uniform_paper(), "uniform")],
-    }
+fn small_fig3() -> SpecScenario {
+    let mut spec = presets::spec("fig3").unwrap();
+    spec.markets.truncate(1); // uniform only
+    SpecScenario::new(spec).unwrap()
 }
 
 #[test]
@@ -35,6 +35,10 @@ fn fig3_sweep_identical_at_threads_1_and_8() {
     assert_eq!(serial.digest(), par.digest());
     // and the exported table is textually identical
     assert_eq!(serial.to_table().to_csv(), par.to_table().to_csv());
+    assert_eq!(
+        serial.to_labeled_table().to_csv(),
+        par.to_labeled_table().to_csv()
+    );
     // sanity: the sweep actually covered the grid
     assert_eq!(serial.points.len(), 4);
     assert_eq!(serial.throughput.jobs, 12);
@@ -64,7 +68,9 @@ fn fig3_sweep_reruns_reproduce_exactly() {
 fn fig5_grid_sweep_deterministic_and_cached_stats_exact() {
     use volatile_sgd::preempt::{PreemptionModel, RecipTable};
 
-    let sweep = Fig5Sweep::paper(Fig5Params { j: 1_000, ..Default::default() });
+    let mut spec = presets::spec("fig5").unwrap();
+    spec.job.j = 1_000;
+    let sweep = SpecScenario::new(spec).unwrap();
     let base = SweepConfig { replicates: 4, seed: 11, threads: 1 };
     let serial = run_sweep(&sweep, &base).unwrap();
     let par = run_sweep(
@@ -79,7 +85,7 @@ fn fig5_grid_sweep_deterministic_and_cached_stats_exact() {
     // computation for its grid point, with zero variance across
     // replicates (it is a per-point constant)
     for (idx, p) in serial.points.iter().enumerate() {
-        let vals = sweep.grid.point(idx);
+        let vals = sweep.grid().point(idx);
         let (n, q) = (vals[0] as usize, vals[1]);
         let want = RecipTable::build(
             &PreemptionModel::Bernoulli { q },
@@ -100,6 +106,9 @@ fn fig5_grid_sweep_deterministic_and_cached_stats_exact() {
 
 #[test]
 fn thread_count_does_not_leak_into_labels_or_metrics() {
+    // with the market lineup truncated to one entry, the singleton
+    // market part drops out of labels (the full 2-market preset keeps
+    // "uniform/...", pinned in the presets unit tests)
     let sweep = small_fig3();
     let cfg = SweepConfig { replicates: 1, seed: 1, threads: 6 };
     let out = run_sweep(&sweep, &cfg).unwrap();
@@ -107,12 +116,7 @@ fn thread_count_does_not_leak_into_labels_or_metrics() {
         out.points.iter().map(|p| p.label.clone()).collect();
     assert_eq!(
         labels,
-        vec![
-            "uniform/no_interruptions",
-            "uniform/one_bid",
-            "uniform/two_bids",
-            "uniform/dynamic"
-        ]
+        vec!["no_interruptions", "one_bid", "two_bids", "dynamic"]
     );
     assert_eq!(out.metric_names[0], "cost_at_target");
 }
