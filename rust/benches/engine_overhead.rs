@@ -1,0 +1,112 @@
+//! Event-engine benchmarks: lockstep throughput (the engine must not
+//! tax the paper-exact path it replaced) and the overhead model's
+//! checkpoint/rollback machinery under heavy preemption churn.
+//!
+//! Run: `cargo bench --bench engine_overhead`
+
+mod bench_util;
+
+use bench_util::{bench, black_box};
+use volatile_sgd::coordinator::strategy::StaticWorkers;
+use volatile_sgd::exp::{
+    run_synthetic_engine, run_synthetic_reference, RunParams,
+};
+use volatile_sgd::preempt::PreemptionModel;
+use volatile_sgd::sim::{OverheadModel, PriceSource};
+use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+use volatile_sgd::theory::runtime_model::RuntimeModel;
+use volatile_sgd::util::rng::Rng;
+
+const J: u64 = 20_000;
+
+fn strategy() -> StaticWorkers {
+    StaticWorkers {
+        label: "static_n".to_string(),
+        n: 8,
+        j: J,
+        model: PreemptionModel::Bernoulli { q: 0.4 },
+        unit_price: 0.1,
+    }
+}
+
+fn params(overhead: OverheadModel) -> RunParams {
+    let mut p = RunParams::lockstep(
+        RuntimeModel::Deterministic { r: 10.0 },
+        f64::INFINITY,
+    );
+    p.overhead = overhead;
+    p
+}
+
+fn main() {
+    let bound = ErrorBound::new(SgdHyper::paper_cnn());
+    let prices = PriceSource::Fixed(0.0);
+
+    println!("--- engine vs reference, lockstep ({J} iters) ---");
+    let mut iters = 0u64;
+    let r = bench("reference_lockstep", 2, 10, || {
+        let mut s = strategy();
+        let mut rng = Rng::new(7);
+        let out = run_synthetic_reference(
+            &mut s,
+            bound,
+            &prices,
+            &params(OverheadModel::none()),
+            &mut rng,
+        )
+        .unwrap();
+        iters = out.iters;
+        black_box(out.cost);
+    });
+    println!(
+        "    -> {:.2} M simulated iters/s",
+        iters as f64 / (r.mean_ns / 1e9) / 1e6
+    );
+    let r = bench("engine_lockstep", 2, 10, || {
+        let mut s = strategy();
+        let mut rng = Rng::new(7);
+        let out = run_synthetic_engine(
+            &mut s,
+            bound,
+            &prices,
+            &params(OverheadModel::none()),
+            &mut rng,
+        )
+        .unwrap();
+        black_box(out.cost);
+    });
+    println!(
+        "    -> {:.2} M simulated iters/s",
+        iters as f64 / (r.mean_ns / 1e9) / 1e6
+    );
+
+    println!("--- overhead model: checkpoint/rollback churn ---");
+    let overhead = OverheadModel {
+        checkpoint_every_iters: 25,
+        checkpoint_cost_s: 2.0,
+        restart_delay_s: 60.0,
+        lost_work_on_preempt: true,
+        preempt_notice_s: 0.0,
+    };
+    let mut executed = 0u64;
+    let r = bench("engine_overhead_churn", 2, 10, || {
+        let mut s = strategy();
+        let mut rng = Rng::new(7);
+        let out = run_synthetic_engine(
+            &mut s,
+            bound,
+            &prices,
+            &params(overhead),
+            &mut rng,
+        )
+        .unwrap();
+        executed = out.iters + out.lost_iters;
+        black_box(out.cost);
+    });
+    println!(
+        "    -> {:.2} M executed iters/s ({} net + {} recomputed)",
+        executed as f64 / (r.mean_ns / 1e9) / 1e6,
+        J,
+        executed.saturating_sub(J)
+    );
+}

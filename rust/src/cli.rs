@@ -53,13 +53,17 @@ impl Args {
     }
 
     pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.f64_opt(key)?.unwrap_or(default))
+    }
+
+    /// `Some(parsed)` when the flag is present, `None` when absent —
+    /// for flags whose absence means "defer to the config default".
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
         match self.flags.get(key) {
-            None => Ok(default),
-            Some(v) => {
-                v.parse().map_err(|_| {
-                    anyhow::anyhow!("--{key} expects a number, got '{v}'")
-                })
-            }
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                anyhow::anyhow!("--{key} expects a number, got '{v}'")
+            }),
         }
     }
 
@@ -107,6 +111,8 @@ mod tests {
         assert_eq!(a.u64_opt("n").unwrap(), Some(8));
         assert_eq!(a.u64_opt("absent").unwrap(), None);
         assert_eq!(a.f64("eps", 0.0).unwrap(), 0.35);
+        assert_eq!(a.f64_opt("eps").unwrap(), Some(0.35));
+        assert_eq!(a.f64_opt("gone").unwrap(), None);
         assert!(a.bool("real"));
         assert!(!a.bool("missing"));
         assert_eq!(a.str("model", "cnn"), "cnn");

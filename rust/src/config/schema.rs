@@ -36,6 +36,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::market::{PriceModel, SpotTrace};
+use crate::sim::OverheadModel;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
 
@@ -123,6 +124,10 @@ pub struct ExperimentConfig {
     pub strategy: StrategyKind,
     /// preemption probability for Sec. V experiments
     pub preempt_q: f64,
+    /// `[overhead]` worker-lifecycle model (checkpoint/restart costs),
+    /// executed by the event engine; absent table = the paper's
+    /// frictionless model
+    pub overhead: OverheadModel,
     pub out_dir: PathBuf,
 }
 
@@ -242,6 +247,24 @@ impl ExperimentConfig {
             _ => {}
         }
 
+        // ---------------------------------------------------- overhead
+        let ckpt_every = doc.i64_or("overhead.checkpoint_every_iters", 0);
+        if ckpt_every < 0 {
+            bail!(
+                "overhead.checkpoint_every_iters must be >= 0, got \
+                 {ckpt_every}"
+            );
+        }
+        let overhead = OverheadModel {
+            checkpoint_every_iters: ckpt_every as u64,
+            checkpoint_cost_s: doc.f64_or("overhead.checkpoint_cost_s", 0.0),
+            restart_delay_s: doc.f64_or("overhead.restart_delay_s", 0.0),
+            lost_work_on_preempt: doc
+                .bool_or("overhead.lost_work_on_preempt", false),
+            preempt_notice_s: doc.f64_or("overhead.preempt_notice_s", 0.0),
+        };
+        overhead.validate()?;
+
         Ok(ExperimentConfig {
             seed,
             model,
@@ -256,6 +279,7 @@ impl ExperimentConfig {
             j_fixed,
             strategy,
             preempt_q: doc.f64_or("job.preempt_q", 0.5),
+            overhead,
             out_dir,
         })
     }
@@ -281,6 +305,29 @@ mod tests {
         assert_eq!(c.n, 8);
         assert_eq!(c.strategy, StrategyKind::OneBid);
         assert!(c.trace.is_none());
+        assert!(!c.overhead.enabled());
+    }
+
+    #[test]
+    fn overhead_table_parses_and_validates() {
+        let c = ExperimentConfig::from_str(
+            "[overhead]\ncheckpoint_every_iters = 50\n\
+             checkpoint_cost_s = 5.0\nrestart_delay_s = 60.0\n\
+             lost_work_on_preempt = true\n",
+        )
+        .unwrap();
+        assert!(c.overhead.enabled());
+        assert_eq!(c.overhead.checkpoint_every_iters, 50);
+        assert_eq!(c.overhead.restart_delay_s, 60.0);
+        assert!(c.overhead.lost_work_on_preempt);
+        assert!(ExperimentConfig::from_str(
+            "[overhead]\nrestart_delay_s = -3.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_str(
+            "[overhead]\ncheckpoint_every_iters = -50\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -221,6 +221,14 @@ impl<'a> TrackedDoc<'a> {
         Ok(self.f64_opt(path)?.unwrap_or(default))
     }
 
+    pub fn bool_opt(&self, path: &str) -> Result<Option<bool>> {
+        self.typed(path, "a bool", Value::as_bool)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> Result<bool> {
+        Ok(self.bool_opt(path)?.unwrap_or(default))
+    }
+
     pub fn u64_opt(&self, path: &str) -> Result<Option<u64>> {
         match self.typed(path, "a non-negative integer", Value::as_int)? {
             None => Ok(None),
@@ -452,6 +460,9 @@ weights = [1, 2.5, 3]
         let err = d.u64_or("n", 8).unwrap_err().to_string();
         assert!(err.contains("'n'") && err.contains("integer"), "{err}");
         assert!(d.f64_or("eps", 0.35).is_err());
+        assert!(d.bool_or("n", false).is_err());
+        assert!(d.bool_or("eps", false).unwrap());
+        assert!(d.bool_or("gone", true).unwrap());
         assert!(d.f64_array("xs").is_err());
         // absent keys still fall back to defaults
         assert_eq!(d.f64_or("missing", 0.5).unwrap(), 0.5);

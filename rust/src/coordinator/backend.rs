@@ -34,6 +34,23 @@ pub trait TrainingBackend {
     fn step(&mut self, y: usize, rng: &mut Rng) -> Result<StepStats>;
     /// Current error estimate without stepping.
     fn error(&self) -> f64;
+    /// Current accuracy estimate without stepping — what a run
+    /// truncated before its first iteration reports (the proxy at
+    /// start, not a hard-coded zero).
+    fn accuracy(&self) -> f64 {
+        0.0
+    }
+    /// Cheap snapshot of the learning state for the engine's
+    /// checkpoint/rollback overhead model. `None` means the backend
+    /// cannot roll back (lost work then only rewinds the iteration
+    /// counter, never the learning signal).
+    fn snapshot(&self) -> Option<f64> {
+        None
+    }
+    /// Restore a state captured by [`TrainingBackend::snapshot`].
+    fn restore(&mut self, snap: f64) {
+        let _ = snap;
+    }
 }
 
 // ------------------------------------------------------------- synthetic
@@ -65,6 +82,19 @@ impl TrainingBackend for SyntheticBackend {
 
     fn error(&self) -> f64 {
         self.err
+    }
+
+    fn accuracy(&self) -> f64 {
+        self.acc()
+    }
+
+    // Theorem-1 state is one f64: checkpoint/rollback is exact.
+    fn snapshot(&self) -> Option<f64> {
+        Some(self.err)
+    }
+
+    fn restore(&mut self, snap: f64) {
+        self.err = snap;
     }
 }
 
@@ -194,6 +224,10 @@ impl TrainingBackend for RealBackend<'_> {
         } else {
             self.err_ema
         }
+    }
+
+    fn accuracy(&self) -> f64 {
+        self.acc_ema
     }
 }
 

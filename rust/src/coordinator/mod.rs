@@ -10,8 +10,10 @@
 //! * [`strategy`] — the bidding / provisioning policies of Secs. IV–VI
 //!   (No-interruptions, Optimal-one-bid, Optimal-two-bids, Dynamic
 //!   rebidding, static-n, dynamic-n_j);
-//! * [`scheduler`] — the virtual-clock training loop tying market,
-//!   preemption, runtime model, backend and strategy together.
+//! * [`scheduler`] — the lockstep façade over the discrete-event
+//!   engine (`sim::engine`): the virtual-clock training loop tying
+//!   market, preemption, runtime model, backend and strategy together,
+//!   plus the verbatim pre-engine loop kept as the determinism oracle.
 
 pub mod aggregate;
 pub mod backend;

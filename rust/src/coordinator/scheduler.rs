@@ -13,11 +13,23 @@
 //!   within an iteration, Sec. IV-B);
 //! * the loop ends at the strategy's target iteration count, the deadline
 //!   `theta_cap`, or a hard slot cap (runaway guard).
+//!
+//! Since the event-engine redesign (DESIGN.md §5) this module is the
+//! *lockstep façade* over [`crate::sim::engine`]: [`Scheduler::run`]
+//! wraps the strategy in a [`LockstepPolicy`] and drives the engine
+//! with `OverheadModel::none()`, which consumes the RNG stream in the
+//! identical order — so results are bit-identical to the pre-engine
+//! loop. That pre-engine loop is kept verbatim as
+//! [`Scheduler::run_reference`], the oracle the equivalence tests
+//! (`tests/integration_engine.rs`) compare the engine against.
 
 use anyhow::Result;
 
 use crate::metrics::{Point, Series};
-use crate::sim::{CostMeter, PriceSource};
+use crate::sim::{
+    CostMeter, Engine, EngineParams, EngineResult, LockstepPolicy,
+    OverheadModel, PriceSource,
+};
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
 
@@ -49,6 +61,21 @@ impl Default for SchedulerParams {
     }
 }
 
+impl SchedulerParams {
+    /// The equivalent engine configuration with the paper's
+    /// frictionless overhead model.
+    pub fn to_engine_params(&self) -> EngineParams {
+        EngineParams {
+            runtime: self.runtime,
+            idle_step: self.idle_step,
+            theta_cap: self.theta_cap,
+            stride: self.stride,
+            max_slots: self.max_slots,
+            overhead: OverheadModel::none(),
+        }
+    }
+}
+
 /// Outcome of a run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -63,6 +90,45 @@ pub struct RunResult {
     pub truncated: bool,
 }
 
+impl From<EngineResult> for RunResult {
+    fn from(r: EngineResult) -> Self {
+        RunResult {
+            series: r.series,
+            iters: r.iters,
+            cost: r.cost,
+            elapsed: r.elapsed,
+            idle_time: r.idle_time,
+            final_error: r.final_error,
+            final_accuracy: r.final_accuracy,
+            truncated: r.truncated,
+        }
+    }
+}
+
+/// Widening for the reference (pre-engine) runner: a lockstep result
+/// with an all-zero overhead ledger — the one place the zero-fill is
+/// spelled out.
+impl From<RunResult> for EngineResult {
+    fn from(r: RunResult) -> Self {
+        EngineResult {
+            series: r.series,
+            iters: r.iters,
+            cost: r.cost,
+            elapsed: r.elapsed,
+            idle_time: r.idle_time,
+            final_error: r.final_error,
+            final_accuracy: r.final_accuracy,
+            truncated: r.truncated,
+            preemptions: 0,
+            restarts: 0,
+            checkpoints: 0,
+            checkpoint_time: 0.0,
+            restart_time: 0.0,
+            lost_iters: 0,
+        }
+    }
+}
+
 /// Drives one training run.
 pub struct Scheduler {
     pub params: SchedulerParams,
@@ -73,7 +139,28 @@ impl Scheduler {
         Scheduler { params }
     }
 
+    /// Run the paper's lockstep loop through the event engine
+    /// (RNG-identical to [`Scheduler::run_reference`]; pinned by the
+    /// engine-equivalence tests).
     pub fn run(
+        &self,
+        strategy: &mut dyn Strategy,
+        backend: &mut dyn TrainingBackend,
+        prices: &PriceSource,
+        rng: &mut Rng,
+    ) -> Result<RunResult> {
+        let engine = Engine::new(self.params.to_engine_params());
+        let mut policy = LockstepPolicy(strategy);
+        let res = engine.run(&mut policy, backend, prices, rng, &mut [])?;
+        Ok(res.into())
+    }
+
+    /// The pre-engine lockstep loop, kept verbatim as the determinism
+    /// oracle: the engine with `OverheadModel::none()` must reproduce
+    /// this function bit for bit (same RNG-consumption order, same
+    /// `CostMeter` operation order). Do not "improve" this body —
+    /// its value is that it does not change.
+    pub fn run_reference(
         &self,
         strategy: &mut dyn Strategy,
         backend: &mut dyn TrainingBackend,
@@ -84,7 +171,7 @@ impl Scheduler {
         let mut series = Series::default();
         let mut iter = 0u64;
         let mut slots = 0u64;
-        let mut last = (backend.error(), 0.0f64);
+        let mut last = (backend.error(), backend.accuracy());
         let target = strategy.target_iters();
         let mut truncated = false;
 
@@ -142,7 +229,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::SyntheticBackend;
+    use crate::coordinator::backend::{SyntheticBackend, TrainingBackend};
     use crate::coordinator::strategy::FixedBids;
     use crate::market::{BidVector, PriceModel};
     use crate::preempt::PreemptionModel;
@@ -288,5 +375,104 @@ mod tests {
         let costs: Vec<f64> =
             res.series.points.iter().map(|p| p.cost).collect();
         assert!(costs.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    /// The engine path and the verbatim pre-engine loop must agree to
+    /// the bit — every field, every series point — across strategy
+    /// shapes and seeds. This is the §5 determinism contract in
+    /// miniature (the preset-level version lives in
+    /// tests/integration_engine.rs).
+    #[test]
+    fn engine_run_matches_reference_bit_for_bit() {
+        use crate::coordinator::strategy::StaticWorkers;
+        let prices = [
+            PriceSource::Iid(PriceModel::uniform_paper()),
+            PriceSource::Iid(PriceModel::gaussian_paper()),
+            PriceSource::Fixed(0.3),
+        ];
+        for seed in [1u64, 7, 42] {
+            for prices in &prices {
+                // FixedBids and StaticWorkers carry no mutable run
+                // state, so one instance can serve both paths in turn
+                let mk: Vec<Box<dyn Strategy>> = vec![
+                    Box::new(FixedBids::new(
+                        "two",
+                        BidVector::two_group(8, 4, 0.8, 0.4),
+                        300,
+                    )),
+                    Box::new(StaticWorkers {
+                        label: "static_n".to_string(),
+                        n: 4,
+                        j: 300,
+                        model: PreemptionModel::Bernoulli { q: 0.5 },
+                        unit_price: 0.1,
+                    }),
+                ];
+                for mut s in mk {
+                    let mut b1 = SyntheticBackend::new(bound());
+                    let mut b2 = SyntheticBackend::new(bound());
+                    let mut r1 = Rng::new(seed);
+                    let mut r2 = Rng::new(seed);
+                    let a = sched(2_000.0)
+                        .run(s.as_mut(), &mut b1, prices, &mut r1)
+                        .unwrap();
+                    let b = sched(2_000.0)
+                        .run_reference(s.as_mut(), &mut b2, prices, &mut r2)
+                        .unwrap();
+                    assert_eq!(a.iters, b.iters);
+                    assert_eq!(a.truncated, b.truncated);
+                    assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+                    assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits());
+                    assert_eq!(a.idle_time.to_bits(), b.idle_time.to_bits());
+                    assert_eq!(
+                        a.final_error.to_bits(),
+                        b.final_error.to_bits()
+                    );
+                    assert_eq!(a.series.len(), b.series.len());
+                    for (x, y) in a.series.points.iter().zip(&b.series.points)
+                    {
+                        assert_eq!(x.iter, y.iter);
+                        assert_eq!(x.clock.to_bits(), y.clock.to_bits());
+                        assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+                        assert_eq!(x.error.to_bits(), y.error.to_bits());
+                    }
+                    // the generators advanced identically too
+                    assert_eq!(r1.next_u64(), r2.next_u64());
+                }
+            }
+        }
+    }
+
+    /// Regression (PR 3 satellite): a run truncated before its first
+    /// iteration reports the backend's *current* error/accuracy, not
+    /// `(err0, 0.0)`. A pre-warmed backend makes the old hard-coded
+    /// zero visible.
+    #[test]
+    fn truncation_before_first_iteration_reports_backend_state() {
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            b.step(4, &mut rng).unwrap();
+        }
+        let (err0, acc0) = (b.error(), b.accuracy());
+        assert!(acc0 > 0.0, "warmed backend has nonzero accuracy proxy");
+        let mut s = FixedBids::new("noint", BidVector::uniform(4, 1.0), 100);
+        // theta_cap 0: the very first slot hits the deadline
+        for reference in [false, true] {
+            let mut backend = b.clone();
+            let mut r = Rng::new(10);
+            let sc = sched(0.0);
+            let prices = PriceSource::Fixed(0.5);
+            let res = if reference {
+                sc.run_reference(&mut s, &mut backend, &prices, &mut r)
+            } else {
+                sc.run(&mut s, &mut backend, &prices, &mut r)
+            }
+            .unwrap();
+            assert!(res.truncated);
+            assert_eq!(res.iters, 0);
+            assert_eq!(res.final_error.to_bits(), err0.to_bits());
+            assert_eq!(res.final_accuracy.to_bits(), acc0.to_bits());
+        }
     }
 }

@@ -38,7 +38,14 @@ pub struct ActiveDecision {
     pub price: f64,
 }
 
-/// A coordination policy.
+/// A lockstep coordination strategy: decides an active set per price
+/// slot and reacts to completed iterations.
+///
+/// Superseded by the event-reactive [`crate::sim::engine::Policy`] —
+/// any `Strategy` adapts into a `Policy` through the blanket
+/// [`crate::sim::engine::LockstepPolicy`] wrapper (iteration events
+/// map onto [`Strategy::on_iteration`], every other event is
+/// ignored), so the seven `StrategyKind`s run on the engine unchanged.
 pub trait Strategy {
     /// Display label. Owned (not `&'static`) so config-defined lineups
     /// can name their entries — two dynamic strategies with different
@@ -61,6 +68,52 @@ pub trait Strategy {
 
     /// Upper bound on concurrently active workers (pool sizing).
     fn max_workers(&self) -> usize;
+}
+
+// Delegating impls so `Box<dyn Strategy>` and `&mut dyn Strategy`
+// plug straight into generic adapters like `LockstepPolicy<S>`.
+impl<S: Strategy + ?Sized> Strategy for Box<S> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+
+    fn target_iters(&self) -> u64 {
+        (**self).target_iters()
+    }
+
+    fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision {
+        (**self).decide(price, rng)
+    }
+
+    fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
+        (**self).on_iteration(state)
+    }
+
+    fn max_workers(&self) -> usize {
+        (**self).max_workers()
+    }
+}
+
+impl<S: Strategy + ?Sized> Strategy for &mut S {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+
+    fn target_iters(&self) -> u64 {
+        (**self).target_iters()
+    }
+
+    fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision {
+        (**self).decide(price, rng)
+    }
+
+    fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
+        (**self).on_iteration(state)
+    }
+
+    fn max_workers(&self) -> usize {
+        (**self).max_workers()
+    }
 }
 
 // ------------------------------------------------------- spot strategies

@@ -28,7 +28,7 @@ pub mod fig5;
 pub mod presets;
 pub mod spec;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::coordinator::backend::SyntheticBackend;
 use crate::coordinator::scheduler::{RunResult, Scheduler, SchedulerParams};
@@ -38,7 +38,9 @@ use crate::coordinator::strategy::{
 };
 use crate::market::BidVector;
 use crate::preempt::PreemptionModel;
-use crate::sim::PriceSource;
+use crate::sim::{
+    Engine, EngineParams, EngineResult, LockstepPolicy, PriceSource,
+};
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::ErrorBound;
 use crate::theory::runtime_model::RuntimeModel;
@@ -46,9 +48,66 @@ use crate::util::rng::Rng;
 
 pub use spec::{build_plan, PlanInputs, ScenarioSpec, SpecScenario};
 
+/// How one synthetic run executes: the engine loop knobs (now
+/// spec-configurable under `[runtime]`) plus the `[overhead]`
+/// worker-lifecycle model — exactly [`EngineParams`], under the name
+/// the experiment layer has always used. `EngineParams::lockstep`
+/// reproduces the pre-redesign constants, which is what keeps every
+/// shipped preset digest bit-identical.
+pub type RunParams = EngineParams;
+
+/// Run one strategy on the event engine against the synthetic
+/// (Theorem-1) backend — the full-fidelity entry point: overhead
+/// modelling and the engine's event ledger included.
+pub fn run_synthetic_engine(
+    strategy: &mut dyn Strategy,
+    bound: ErrorBound,
+    prices: &PriceSource,
+    params: &RunParams,
+    rng: &mut Rng,
+) -> Result<EngineResult> {
+    let engine = Engine::new(*params);
+    let mut backend = SyntheticBackend::new(bound);
+    engine.run(
+        &mut LockstepPolicy(strategy),
+        &mut backend,
+        prices,
+        rng,
+        &mut [],
+    )
+}
+
+/// Run one strategy through the *pre-engine* lockstep loop
+/// ([`Scheduler::run_reference`]) — the determinism oracle for the
+/// engine-equivalence tests. Rejects overhead configurations (the old
+/// loop cannot express them); overhead ledger fields come back zero.
+pub fn run_synthetic_reference(
+    strategy: &mut dyn Strategy,
+    bound: ErrorBound,
+    prices: &PriceSource,
+    params: &RunParams,
+    rng: &mut Rng,
+) -> Result<RunResult> {
+    ensure!(
+        !params.overhead.enabled(),
+        "the reference lockstep loop cannot model [overhead]"
+    );
+    let sp = SchedulerParams {
+        runtime: params.runtime,
+        idle_step: params.idle_step,
+        theta_cap: params.theta_cap,
+        stride: params.stride,
+        max_slots: params.max_slots,
+    };
+    let mut backend = SyntheticBackend::new(bound);
+    Scheduler::new(sp).run_reference(strategy, &mut backend, prices, rng)
+}
+
 /// Run one strategy against the synthetic (Theorem-1) backend, drawing
 /// all randomness from the caller's generator — the sweep-friendly entry
 /// point (pair it with [`Rng::stream`] for order-independent seeding).
+/// Equivalent to [`run_synthetic_engine`] with
+/// [`EngineParams::lockstep`].
 pub fn run_synthetic_rng(
     strategy: &mut dyn Strategy,
     bound: ErrorBound,
@@ -57,15 +116,14 @@ pub fn run_synthetic_rng(
     theta_cap: f64,
     rng: &mut Rng,
 ) -> Result<RunResult> {
-    let params = SchedulerParams {
-        runtime,
-        idle_step: 4.0,
-        theta_cap,
-        stride: 10,
-        max_slots: 200_000_000,
-    };
-    let mut backend = SyntheticBackend::new(bound);
-    Scheduler::new(params).run(strategy, &mut backend, prices, rng)
+    run_synthetic_engine(
+        strategy,
+        bound,
+        prices,
+        &RunParams::lockstep(runtime, theta_cap),
+        rng,
+    )
+    .map(RunResult::from)
 }
 
 /// Seeded convenience wrapper around [`run_synthetic_rng`].

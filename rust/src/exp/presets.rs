@@ -10,8 +10,9 @@ use anyhow::{bail, Result};
 
 use super::spec::{ScenarioSpec, SpecScenario};
 
-/// Preset names, in figure order.
-pub const PRESET_NAMES: [&str; 4] = ["fig2", "fig3", "fig4", "fig5"];
+/// Preset names: the figures, then the engine-era scenarios.
+pub const PRESET_NAMES: [&str; 5] =
+    ["fig2", "fig3", "fig4", "fig5", "checkpoint_grid"];
 
 /// The embedded TOML text of a preset (accepts `fig3` or bare `3`).
 pub fn preset_toml(name: &str) -> Result<&'static str> {
@@ -20,8 +21,12 @@ pub fn preset_toml(name: &str) -> Result<&'static str> {
         "fig3" | "3" => include_str!("../../../examples/configs/fig3.toml"),
         "fig4" | "4" => include_str!("../../../examples/configs/fig4.toml"),
         "fig5" | "5" => include_str!("../../../examples/configs/fig5.toml"),
+        "checkpoint_grid" => {
+            include_str!("../../../examples/configs/checkpoint_grid.toml")
+        }
         other => bail!(
-            "unknown preset '{other}' (available: fig2, fig3, fig4, fig5)"
+            "unknown preset '{other}' (available: fig2, fig3, fig4, fig5, \
+             checkpoint_grid)"
         ),
     })
 }
@@ -50,6 +55,31 @@ mod tests {
             });
             assert!(sc.points() > 0, "{name} has no points");
         }
+    }
+
+    #[test]
+    fn checkpoint_grid_preset_is_an_overhead_scenario() {
+        let sc = scenario("checkpoint_grid").unwrap();
+        assert_eq!(sc.points(), 9); // 3 q x 3 delay
+        assert_eq!(sc.label(0), "q=0.1 delay=0");
+        assert_eq!(sc.label(8), "q=0.7 delay=120");
+        let spec = sc.spec();
+        assert!(spec.overhead.enabled());
+        assert!(spec.overhead.lost_work_on_preempt);
+        assert_eq!(spec.overhead.checkpoint_every_iters, 10);
+        assert!(spec.metrics.iter().any(|m| m == "lost_iters"));
+        // the figure presets stay frictionless: their digests are
+        // pinned to the pre-engine lockstep loop
+        for name in ["fig2", "fig3", "fig4", "fig5"] {
+            assert!(
+                !spec_is_overhead(name),
+                "{name} must not enable [overhead]"
+            );
+        }
+    }
+
+    fn spec_is_overhead(name: &str) -> bool {
+        spec(name).unwrap().overhead.enabled()
     }
 
     /// The fig3 preset must reproduce the pre-redesign `sweep --fig 3`

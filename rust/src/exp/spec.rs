@@ -6,7 +6,11 @@
 //! TOML-loadable description composing
 //!
 //! * a **market lineup** (uniform / gaussian / trace / fixed price),
-//! * a **runtime model** and the SGD bound constants,
+//! * a **runtime model**, the engine loop knobs (`[runtime]
+//!   idle_step/stride/max_slots`) and the SGD bound constants,
+//! * an optional **`[overhead]` worker-lifecycle model** (checkpoint
+//!   cadence/cost, restart delay, lost work on preemption — DESIGN.md
+//!   §5) executed by the event engine,
 //! * a **strategy lineup** (`Vec<StrategyKind>`-shaped entries with
 //!   owned labels),
 //! * zero or more **grid axes** — any numeric field is sweepable via an
@@ -35,14 +39,17 @@ use crate::coordinator::strategy::StageSpec;
 use crate::market::process::PriceDist;
 use crate::market::{BidVector, PriceModel, SpotTrace, TraceGenConfig};
 use crate::preempt::{jensen_penalty, PreemptionModel, RecipTable};
-use crate::sim::PriceSource;
+use crate::sim::{EngineResult, OverheadModel, PriceSource};
 use crate::sweep::{Grid, Scenario};
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
 
-use super::{accuracy_for_error, run_synthetic_rng, PlannedStrategy};
+use super::{
+    accuracy_for_error, run_synthetic_engine, run_synthetic_reference,
+    PlannedStrategy, RunParams,
+};
 
 // ===================================================================
 // Spec data model
@@ -118,6 +125,28 @@ pub struct AxisSpec {
     pub values: Vec<f64>,
 }
 
+/// Engine loop knobs, spec-configurable under `[runtime]` (historically
+/// compiled-in `SchedulerParams` constants) and grid-sweepable by
+/// dotted path (`runtime.idle_step`, `runtime.stride`,
+/// `runtime.max_slots`).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedKnobs {
+    /// idle re-check interval when no workers are active (paper: 4 s)
+    pub idle_step: f64,
+    /// record a series point every `stride` iterations
+    pub stride: u64,
+    /// runaway guard on total slots (idle + busy)
+    pub max_slots: u64,
+}
+
+impl Default for SchedKnobs {
+    /// The pre-redesign `run_synthetic_rng` constants — the values
+    /// every shipped preset's digest is pinned against.
+    fn default() -> Self {
+        SchedKnobs { idle_step: 4.0, stride: 10, max_slots: 200_000_000 }
+    }
+}
+
 /// A fully-parsed scenario spec. Public fields: presets are ordinary
 /// specs and callers (figure harnesses, tests) may override them
 /// programmatically before building a [`SpecScenario`].
@@ -127,6 +156,8 @@ pub struct ScenarioSpec {
     pub mode: SweepMode,
     pub job: JobSpec,
     pub runtime: RuntimeModel,
+    pub sched: SchedKnobs,
+    pub overhead: OverheadModel,
     pub sgd: SgdHyper,
     pub markets: Vec<MarketSpec>,
     pub strategies: Vec<StrategyEntry>,
@@ -211,6 +242,33 @@ impl ScenarioSpec {
             },
             other => bail!("unknown runtime.kind '{other}'"),
         };
+        // loop knobs (defaults = the pre-redesign compiled-in values)
+        let knob_defaults = SchedKnobs::default();
+        let sched = SchedKnobs {
+            idle_step: d.f64_or("runtime.idle_step", knob_defaults.idle_step)?,
+            stride: d.u64_or("runtime.stride", knob_defaults.stride)?,
+            max_slots: d
+                .u64_or("runtime.max_slots", knob_defaults.max_slots)?,
+        };
+        ensure!(
+            sched.idle_step > 0.0,
+            "runtime.idle_step must be > 0, got {}",
+            sched.idle_step
+        );
+        ensure!(sched.stride >= 1, "runtime.stride must be >= 1");
+        ensure!(sched.max_slots >= 1, "runtime.max_slots must be >= 1");
+
+        // -------------------------------------------------- overhead
+        let overhead = OverheadModel {
+            checkpoint_every_iters: d
+                .u64_or("overhead.checkpoint_every_iters", 0)?,
+            checkpoint_cost_s: d.f64_or("overhead.checkpoint_cost_s", 0.0)?,
+            restart_delay_s: d.f64_or("overhead.restart_delay_s", 0.0)?,
+            lost_work_on_preempt: d
+                .bool_or("overhead.lost_work_on_preempt", false)?,
+            preempt_notice_s: d.f64_or("overhead.preempt_notice_s", 0.0)?,
+        };
+        overhead.validate()?;
 
         // ------------------------------------------------------- sgd
         let defaults = SgdHyper::paper_cnn();
@@ -298,6 +356,8 @@ impl ScenarioSpec {
             mode,
             job,
             runtime,
+            sched,
+            overhead,
             sgd,
             markets,
             strategies,
@@ -633,6 +693,11 @@ enum MetricKind {
     Iters,
     IdleTime,
     AccPerDollar,
+    // engine overhead-ledger metrics (per run)
+    PreemptEvents,
+    LostIters,
+    CheckpointTime,
+    RestartTime,
     // per-point constants (computed once in prepare)
     RecipExact,
     PZero,
@@ -660,6 +725,10 @@ impl MetricKind {
                 | MetricKind::Iters
                 | MetricKind::IdleTime
                 | MetricKind::AccPerDollar
+                | MetricKind::PreemptEvents
+                | MetricKind::LostIters
+                | MetricKind::CheckpointTime
+                | MetricKind::RestartTime
                 | MetricKind::LineupCost(_)
                 | MetricKind::LineupSavingPct(_)
                 | MetricKind::LineupAccRatio(_)
@@ -712,6 +781,10 @@ fn compile_metric(
         "iters" => MetricKind::Iters,
         "idle_time" => MetricKind::IdleTime,
         "acc_per_dollar" => MetricKind::AccPerDollar,
+        "preempt_events" => MetricKind::PreemptEvents,
+        "lost_iters" => MetricKind::LostIters,
+        "checkpoint_time" => MetricKind::CheckpointTime,
+        "restart_time" => MetricKind::RestartTime,
         "recip_exact" => MetricKind::RecipExact,
         "p_zero" => MetricKind::PZero,
         "jensen_penalty" => MetricKind::JensenPenalty,
@@ -722,8 +795,9 @@ fn compile_metric(
         other => bail!(
             "unknown metric '{other}' (run metrics: cost_at_target, \
              time_at_target, total_cost, total_time, final_error, \
-             final_accuracy, iters, idle_time, acc_per_dollar; point \
-             constants: recip_exact, p_zero, jensen_penalty, \
+             final_accuracy, iters, idle_time, acc_per_dollar, \
+             preempt_events, lost_iters, checkpoint_time, restart_time; \
+             point constants: recip_exact, p_zero, jensen_penalty, \
              n_match_exact, bound_err, exp_cost, exp_time; lineup mode \
              additionally derives <label>_cost, <label>_saving_pct, \
              <label>_acc_ratio)"
@@ -749,20 +823,22 @@ fn compile_metric(
 struct Resolved {
     job: JobSpec,
     runtime: RuntimeModel,
+    sched: SchedKnobs,
+    overhead: OverheadModel,
     sgd: SgdHyper,
     market: MarketSpec,
     strategies: Vec<StrategyEntry>,
 }
 
 /// Cached per-grid-point state (DESIGN.md §3 prepare phase): planned
-/// strategies, the price source, and every point-constant metric.
+/// strategies, the price source, the resolved engine run parameters,
+/// and every point-constant metric.
 pub struct SpecCtx {
     plans: Vec<PlannedStrategy>,
     prices: PriceSource,
     bound: ErrorBound,
-    runtime: RuntimeModel,
+    params: RunParams,
     target_acc: f64,
-    cap: f64,
     /// [recip_exact, p_zero, jensen_penalty, n_match_exact]
     preempt_consts: [f64; 4],
     /// [bound_err, exp_cost, exp_time]
@@ -777,6 +853,25 @@ impl SpecCtx {
     pub fn plans(&self) -> &[PlannedStrategy] {
         &self.plans
     }
+
+    /// The resolved engine run parameters for this point — exposed so
+    /// tests can pin the `[runtime]` / `[overhead]` plumbing.
+    pub fn run_params(&self) -> &RunParams {
+        &self.params
+    }
+}
+
+/// Which replicate runner executes the simulations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RunnerKind {
+    /// The event engine (`sim::engine`) — the production path.
+    #[default]
+    Engine,
+    /// The verbatim pre-engine lockstep loop
+    /// (`Scheduler::run_reference`) — the determinism oracle used by
+    /// the equivalence tests. Cannot model `[overhead]`; the engine's
+    /// ledger metrics come back zero.
+    Reference,
 }
 
 /// A [`Scenario`] generically driven by a [`ScenarioSpec`].
@@ -784,6 +879,7 @@ pub struct SpecScenario {
     spec: ScenarioSpec,
     grid: Grid,
     metrics: Vec<MetricKind>,
+    runner: RunnerKind,
 }
 
 impl SpecScenario {
@@ -846,7 +942,12 @@ impl SpecScenario {
             grid = grid.axis(&a.name, a.values.clone());
         }
 
-        let me = SpecScenario { spec, grid, metrics };
+        let me = SpecScenario {
+            spec,
+            grid,
+            metrics,
+            runner: RunnerKind::default(),
+        };
         // dry-run so bad axis paths, out-of-range values and statically
         // broken points (inverted market bounds, n1 >= n, unstable SGD
         // constants) fail at load / `--check`, not mid-sweep. Resolving
@@ -888,6 +989,21 @@ impl SpecScenario {
         &self.grid
     }
 
+    /// Switch the replicate runner to the pre-engine reference loop —
+    /// the oracle half of the engine-equivalence tests. Errors when the
+    /// spec configures `[overhead]`, which the reference loop cannot
+    /// model.
+    pub fn with_reference_runner(mut self) -> Result<Self> {
+        ensure!(
+            !self.spec.overhead.enabled(),
+            "spec '{}' enables [overhead]; the reference lockstep loop \
+             cannot model it",
+            self.spec.name
+        );
+        self.runner = RunnerKind::Reference;
+        Ok(self)
+    }
+
     fn strategy_count(&self) -> usize {
         match self.spec.mode {
             SweepMode::PerStrategy => self.spec.strategies.len(),
@@ -910,6 +1026,8 @@ impl SpecScenario {
         Resolved {
             job: self.spec.job.clone(),
             runtime: self.spec.runtime,
+            sched: self.spec.sched,
+            overhead: self.spec.overhead,
             sgd: self.spec.sgd,
             market: self.spec.markets[market].clone(),
             strategies: self.spec.strategies.clone(),
@@ -935,6 +1053,7 @@ impl Resolved {
     /// one side of a pair the other axis fixes later).
     fn validate(&self) -> Result<()> {
         self.sgd.validate().map_err(anyhow::Error::msg)?;
+        self.overhead.validate()?;
         match &self.market.kind {
             MarketKind::Uniform { lo, hi }
             | MarketKind::Gaussian { lo, hi, .. } => {
@@ -1174,9 +1293,15 @@ impl Scenario for SpecScenario {
             plans,
             prices,
             bound,
-            runtime: r.runtime,
+            params: RunParams {
+                runtime: r.runtime,
+                idle_step: r.sched.idle_step,
+                theta_cap: cap,
+                stride: r.sched.stride,
+                max_slots: r.sched.max_slots,
+                overhead: r.overhead,
+            },
             target_acc,
-            cap,
             preempt_consts,
             analytic_consts,
             needs_sim,
@@ -1206,17 +1331,34 @@ impl Scenario for SpecScenario {
                 .map(|&k| const_value(k))
                 .collect());
         }
-        match self.spec.mode {
-            SweepMode::PerStrategy => {
-                let mut s = ctx.plans[0].build()?;
-                let r = run_synthetic_rng(
+        // one runner switch for both modes: the engine is the
+        // production path, the reference loop the equivalence oracle
+        // (overhead-incapable; ledger fields come back zero)
+        let execute = |plan: &PlannedStrategy,
+                       rng: &mut Rng|
+         -> Result<EngineResult> {
+            let mut s = plan.build()?;
+            match self.runner {
+                RunnerKind::Engine => run_synthetic_engine(
                     s.as_mut(),
                     ctx.bound,
                     &ctx.prices,
-                    ctx.runtime,
-                    ctx.cap,
+                    &ctx.params,
                     rng,
-                )?;
+                ),
+                RunnerKind::Reference => run_synthetic_reference(
+                    s.as_mut(),
+                    ctx.bound,
+                    &ctx.prices,
+                    &ctx.params,
+                    rng,
+                )
+                .map(EngineResult::from),
+            }
+        };
+        match self.spec.mode {
+            SweepMode::PerStrategy => {
+                let r = execute(&ctx.plans[0], rng)?;
                 Ok(self
                     .metrics
                     .iter()
@@ -1242,6 +1384,10 @@ impl Scenario for SpecScenario {
                                 0.0
                             }
                         }
+                        MetricKind::PreemptEvents => r.preemptions as f64,
+                        MetricKind::LostIters => r.lost_iters as f64,
+                        MetricKind::CheckpointTime => r.checkpoint_time,
+                        MetricKind::RestartTime => r.restart_time,
                         other => const_value(other),
                     })
                     .collect())
@@ -1251,15 +1397,7 @@ impl Scenario for SpecScenario {
                 // entry order — still a pure function of job identity
                 let mut finals = Vec::with_capacity(ctx.plans.len());
                 for plan in &ctx.plans {
-                    let mut s = plan.build()?;
-                    let r = run_synthetic_rng(
-                        s.as_mut(),
-                        ctx.bound,
-                        &ctx.prices,
-                        ctx.runtime,
-                        ctx.cap,
-                        rng,
-                    )?;
+                    let r = execute(plan, rng)?;
                     let acc =
                         r.series.last().map(|p| p.accuracy).unwrap_or(0.0);
                     finals.push((r.cost, acc));
@@ -1304,7 +1442,24 @@ fn set_path(r: &mut Resolved, path: &str, v: f64) -> Result<()> {
     let parts: Vec<&str> = path.split('.').collect();
     match parts.as_slice() {
         ["job", field] => set_job(&mut r.job, path, *field, v),
+        // the loop knobs live under [runtime] beside the runtime model
+        ["runtime", "idle_step"] => {
+            ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+            r.sched.idle_step = v;
+            Ok(())
+        }
+        ["runtime", "stride"] => {
+            r.sched.stride = as_count(path, v, 1)?;
+            Ok(())
+        }
+        ["runtime", "max_slots"] => {
+            r.sched.max_slots = as_count(path, v, 1)?;
+            Ok(())
+        }
         ["runtime", field] => set_runtime(&mut r.runtime, path, *field, v),
+        ["overhead", field] => {
+            set_overhead(&mut r.overhead, path, *field, v)
+        }
         ["sgd", field] => set_sgd(&mut r.sgd, path, *field, v),
         ["market", field] => set_market(&mut r.market.kind, path, *field, v),
         ["strategy", label, field] => {
@@ -1321,9 +1476,44 @@ fn set_path(r: &mut Resolved, path: &str, v: f64) -> Result<()> {
         }
         _ => bail!(
             "unsupported axis path '{path}' (expected job.*, runtime.*, \
-             sgd.*, market.*, or strategy.<label>.*)"
+             overhead.*, sgd.*, market.*, or strategy.<label>.*)"
         ),
     }
+}
+
+fn set_overhead(
+    ov: &mut OverheadModel,
+    path: &str,
+    field: &str,
+    v: f64,
+) -> Result<()> {
+    match field {
+        "checkpoint_every_iters" => {
+            ov.checkpoint_every_iters = as_count(path, v, 0)?;
+        }
+        "checkpoint_cost_s" => {
+            ensure!(v >= 0.0, "'{path}' must be >= 0, got {v}");
+            ov.checkpoint_cost_s = v;
+        }
+        "restart_delay_s" => {
+            ensure!(v >= 0.0, "'{path}' must be >= 0, got {v}");
+            ov.restart_delay_s = v;
+        }
+        "preempt_notice_s" => {
+            ensure!(v >= 0.0, "'{path}' must be >= 0, got {v}");
+            ov.preempt_notice_s = v;
+        }
+        // booleans sweep as 0/1
+        "lost_work_on_preempt" => {
+            ensure!(
+                v == 0.0 || v == 1.0,
+                "'{path}' must be 0 or 1, got {v}"
+            );
+            ov.lost_work_on_preempt = v == 1.0;
+        }
+        _ => bail!("unsupported axis path '{path}'"),
+    }
+    Ok(())
 }
 
 fn set_job(job: &mut JobSpec, path: &str, field: &str, v: f64) -> Result<()> {
@@ -1869,5 +2059,118 @@ n = 2
             }
             other => panic!("expected static workers, got {other:?}"),
         }
+    }
+
+    const CKPT: &str = r#"
+name = "ckpt"
+strategies = ["static_workers"]
+axes = ["delay"]
+metrics = ["cost", "iters", "lost_iters", "restart_time", "preempt_events", "checkpoint_time"]
+
+[job]
+n = 2
+eps = 0.35
+j = 200
+preempt_q = 0.5
+unit_price = 0.1
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+idle_step = 2.0
+stride = 5
+max_slots = 100000
+
+[market]
+kind = "fixed"
+price = 0.0
+
+[overhead]
+checkpoint_every_iters = 5
+checkpoint_cost_s = 1.0
+restart_delay_s = 0.0
+lost_work_on_preempt = true
+
+[axis.delay]
+path = "overhead.restart_delay_s"
+values = [0.0, 30.0]
+"#;
+
+    #[test]
+    fn overhead_and_runtime_knobs_parse_and_plumb() {
+        let spec = ScenarioSpec::from_str(CKPT).unwrap();
+        assert_eq!(spec.sched.idle_step, 2.0);
+        assert_eq!(spec.sched.stride, 5);
+        assert_eq!(spec.sched.max_slots, 100_000);
+        assert_eq!(spec.overhead.checkpoint_every_iters, 5);
+        assert!(spec.overhead.lost_work_on_preempt);
+        let sc = SpecScenario::new(spec).unwrap();
+        // the axis overrides restart_delay_s per point
+        let p0 = sc.prepare(0).unwrap();
+        let p1 = sc.prepare(1).unwrap();
+        assert_eq!(p0.run_params().idle_step, 2.0);
+        assert_eq!(p0.run_params().stride, 5);
+        assert_eq!(p0.run_params().max_slots, 100_000);
+        assert_eq!(p0.run_params().overhead.restart_delay_s, 0.0);
+        assert_eq!(p1.run_params().overhead.restart_delay_s, 30.0);
+        // bad knob / overhead values are load errors
+        for (needle, replacement) in [
+            ("idle_step = 2.0", "idle_step = 0.0"),
+            ("stride = 5", "stride = 0"),
+            ("checkpoint_cost_s = 1.0", "checkpoint_cost_s = -1.0"),
+            ("lost_work_on_preempt = true", "lost_work_on_preempt = 2"),
+        ] {
+            let bad = CKPT.replace(needle, replacement);
+            assert!(
+                ScenarioSpec::from_str(&bad).is_err(),
+                "{replacement} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn overhead_sweep_runs_and_meters_recovery() {
+        let sc =
+            SpecScenario::new(ScenarioSpec::from_str(CKPT).unwrap()).unwrap();
+        let base = SweepConfig { replicates: 2, seed: 21, threads: 1 };
+        let serial = run_sweep(&sc, &base).unwrap();
+        let par =
+            run_sweep(&sc, &SweepConfig { threads: 4, ..base }).unwrap();
+        assert_eq!(serial.digest(), par.digest());
+        let idx = |name: &str| {
+            serial.metric_names.iter().position(|m| m == name).unwrap()
+        };
+        for p in &serial.points {
+            // q = 0.5 on 2 workers: full interruptions are frequent,
+            // work is lost and recomputed
+            assert!(p.stats[idx("preempt_events")].mean() > 0.0, "{}", p.label);
+            assert!(p.stats[idx("lost_iters")].mean() > 0.0, "{}", p.label);
+            assert!(p.stats[idx("checkpoint_time")].mean() > 0.0, "{}", p.label);
+            assert!(p.stats[idx("cost")].mean() > 0.0, "{}", p.label);
+        }
+        // recovery lag is billed only where the axis switches it on
+        assert_eq!(serial.points[0].stats[idx("restart_time")].mean(), 0.0);
+        assert!(serial.points[1].stats[idx("restart_time")].mean() > 0.0);
+    }
+
+    #[test]
+    fn reference_runner_matches_engine_and_rejects_overhead() {
+        // overhead-free spec: the reference loop and the engine collate
+        // to the same digest (the §5 contract in miniature)
+        let cfg = SweepConfig { replicates: 3, seed: 5, threads: 2 };
+        let engine =
+            SpecScenario::new(ScenarioSpec::from_str(MINI).unwrap()).unwrap();
+        let reference =
+            SpecScenario::new(ScenarioSpec::from_str(MINI).unwrap())
+                .unwrap()
+                .with_reference_runner()
+                .unwrap();
+        let a = run_sweep(&engine, &cfg).unwrap();
+        let b = run_sweep(&reference, &cfg).unwrap();
+        assert_eq!(a.digest(), b.digest());
+        // an overhead-enabled spec has no reference equivalent
+        let sc =
+            SpecScenario::new(ScenarioSpec::from_str(CKPT).unwrap()).unwrap();
+        assert!(sc.with_reference_runner().is_err());
     }
 }

@@ -17,7 +17,9 @@
 //! * [`theory`] — Theorems 1–5 and Corollary 1 as executable solvers;
 //! * [`coordinator`] — parameter server, gradient aggregation, scheduler,
 //!   strategies;
-//! * [`sim`] — virtual-clock cost/time accounting;
+//! * [`sim`] — virtual-clock cost/time accounting and the
+//!   discrete-event engine (typed events, reactive policies, observer
+//!   hooks, checkpoint/restart overhead);
 //! * [`sweep`] — parallel deterministic sweep harness (grids, replicates,
 //!   work-stealing pool, Welford collation);
 //! * [`runtime`] — PJRT bridge to the AOT artifacts;

@@ -4,11 +4,14 @@
 //! volatile-sgd info        [--artifacts DIR]
 //! volatile-sgd train       [--model cnn] [--iters 200] [--workers 4] [--lr 0.05]
 //! volatile-sgd simulate    [--config FILE] [--strategy one_bid|two_bids|...]
+//!                          [--checkpoint-every N] [--checkpoint-cost S]
+//!                          [--restart-delay S] [--lost-work]
 //! volatile-sgd optimal-bid [--market uniform|gaussian] [--n 8] [--n1 4]
 //!                          [--eps 0.35] [--theta 120000] [--two-bids]
 //! volatile-sgd plan-workers [--eps 0.1] [--q 0.5] [--chi 1.0] [--theta-iters 40000]
 //! volatile-sgd fig2|fig3|fig4|fig5  [--out out/] [--threads N]
-//! volatile-sgd sweep       [--spec FILE | --preset fig2..fig5 | --fig 2|3|4|5]
+//! volatile-sgd sweep       [--spec FILE | --preset fig2..fig5|checkpoint_grid
+//!                           | --fig 2|3|4|5]
 //!                          [--threads N] [--replicates R] [--seed S] [--j J]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
 //! ```
@@ -60,7 +63,10 @@ fn print_help() {
          subcommands:\n  \
          info          show artifacts / platform\n  \
          train         real PJRT training on the synthetic dataset\n  \
-         simulate      run one strategy simulation from a config\n  \
+         simulate      run one strategy simulation from a config (the\n                \
+         [overhead] checkpoint/restart model via the event\n                \
+         engine; --checkpoint-every/--checkpoint-cost/\n                \
+         --restart-delay/--lost-work override it)\n  \
          optimal-bid   Theorem 2 / Theorem 3 bid calculator\n  \
          plan-workers  Theorem 4 / Theorem 5 provisioning planner\n  \
          fig2..fig5    regenerate the paper's figures (CSV + summary)\n  \
@@ -236,14 +242,47 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     )?;
     describe_plan(&plan);
     let mut strategy = plan.build()?;
-    let result = exp::run_synthetic(
+    // [overhead] from the config, with CLI overrides, executed by the
+    // event engine; without either this is exactly the lockstep run
+    let mut overhead = cfg.overhead;
+    if let Some(k) = args.u64_opt("checkpoint-every")? {
+        overhead.checkpoint_every_iters = k;
+    }
+    if let Some(s) = args.f64_opt("checkpoint-cost")? {
+        overhead.checkpoint_cost_s = s;
+    }
+    if let Some(s) = args.f64_opt("restart-delay")? {
+        overhead.restart_delay_s = s;
+    }
+    if args.get("lost-work").is_some() {
+        // tri-state: bare `--lost-work` switches it on, an explicit
+        // `--lost-work false` switches a config default off
+        overhead.lost_work_on_preempt = args.bool("lost-work");
+    }
+    overhead.validate()?;
+    let mut params = exp::RunParams::lockstep(cfg.runtime, cap);
+    params.overhead = overhead;
+    let mut rng = Rng::new(cfg.seed);
+    let result = exp::run_synthetic_engine(
         strategy.as_mut(),
         cfg.bound,
         &prices,
-        cfg.runtime,
-        cap,
-        cfg.seed,
+        &params,
+        &mut rng,
     )?;
+    if overhead.enabled() {
+        println!(
+            "overhead: {} preemptions, {} restarts ({:.1}s lag), \
+             {} checkpoints ({:.1}s), {} lost iters",
+            result.preemptions,
+            result.restarts,
+            result.restart_time,
+            result.checkpoints,
+            result.checkpoint_time,
+            result.lost_iters
+        );
+    }
+    let result = volatile_sgd::coordinator::RunResult::from(result);
     println!("{}", exp::summarize(name, &result));
     let out = cfg.out_dir.join(format!("simulate_{name}.csv"));
     result.series.table().write(&out)?;

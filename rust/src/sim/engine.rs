@@ -1,0 +1,884 @@
+//! Discrete-event simulation engine: the run loop as a typed
+//! event/policy/observer API (DESIGN.md §5).
+//!
+//! The paper's model reduces every run to "read price -> resolve active
+//! set -> one synchronous iteration", and that lockstep loop used to be
+//! hard-coded in `coordinator::scheduler::Scheduler::run`. This module
+//! generalises it:
+//!
+//! * [`Event`] — the typed occurrences a run is made of (price
+//!   revisions, preemptions/restorations, iterations, checkpoints, the
+//!   deadline);
+//! * [`Policy`] — the event-reactive decision maker. It supersedes
+//!   [`Strategy`]: every existing `decide`/`on_iteration` strategy
+//!   adapts via the blanket [`LockstepPolicy`] wrapper, so all seven
+//!   `StrategyKind`s run unchanged;
+//! * [`Observer`] — pluggable read-only hooks that absorb the
+//!   recording concerns the old loop inlined ([`SeriesRecorder`] for
+//!   stride-sampled series, [`EventLog`] for ordering assertions);
+//! * [`OverheadModel`] — the worker-lifecycle overhead model
+//!   (checkpoint cost, restart/recovery lag, lost work on preemption,
+//!   preemption notice) that the lockstep loop could not express.
+//!
+//! **Determinism contract (non-negotiable, §3/§4).** With
+//! `OverheadModel::none()` the engine consumes the replicate RNG stream
+//! in *exactly* the order the paper's lockstep loop did — per slot:
+//! price draw, `decide`, runtime sample, backend step — and performs
+//! the identical `CostMeter` operations in the identical order, so
+//! every shipped preset's sweep digest is bit-identical before and
+//! after the redesign. `Scheduler::run_reference` keeps the verbatim
+//! pre-engine loop as the oracle this equivalence is tested against
+//! (`tests/integration_engine.rs`).
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::backend::TrainingBackend;
+use crate::coordinator::strategy::{ActiveDecision, Strategy, StrategyState};
+use crate::metrics::{Point, Series};
+use crate::theory::runtime_model::RuntimeModel;
+use crate::util::rng::Rng;
+
+use super::{CostMeter, PriceSource};
+
+// ===================================================================
+// Events
+// ===================================================================
+
+/// One typed occurrence in a simulated run. Ordering rules and the
+/// RNG-consumption contract per event type are documented in
+/// DESIGN.md §5.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// A new slot's price is in effect (drawn/read *before* the policy
+    /// decides). The only event that may consume RNG before it fires
+    /// (the i.i.d. price draw itself).
+    PriceRevision { price: f64 },
+    /// The active set fell to zero after a slot that ran an iteration:
+    /// a full interruption begins. `notice` is the advance warning the
+    /// platform gives (e.g. a GCP 30 s / AWS 2 min notice); with
+    /// `lost_work_on_preempt` and a notice long enough to cover
+    /// `checkpoint_cost_s`, the engine takes an emergency checkpoint
+    /// inside the window instead of losing work.
+    WorkerPreempted { notice: f64 },
+    /// The active set is non-empty again after an interruption (fires
+    /// after the restart delay has been charged).
+    WorkerRestored,
+    /// One synchronous SGD iteration completed (the event
+    /// [`LockstepPolicy`] maps onto `Strategy::on_iteration`).
+    IterationDone,
+    /// A checkpoint was written (periodic or emergency).
+    CheckpointDone,
+    /// The run was cut by `theta_cap` or the `max_slots` runaway guard.
+    DeadlineHit,
+}
+
+/// Read-only run state handed to policies and observers with every
+/// event. Values are as of the moment the event fires (e.g. at
+/// [`Event::IterationDone`] the iteration's cost is already charged).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineState {
+    /// completed (net) iterations — rolled back on lost work
+    pub iter: u64,
+    /// the policy's target iteration count
+    pub target: u64,
+    /// virtual wall-clock (busy + idle)
+    pub clock: f64,
+    /// cumulative $ cost
+    pub cost: f64,
+    /// cumulative idle (zero-active) time
+    pub idle_time: f64,
+    /// latest error signal from the backend
+    pub error: f64,
+    /// latest accuracy signal from the backend
+    pub accuracy: f64,
+    /// active workers in the current slot (0 outside iterations)
+    pub active: usize,
+    /// price in effect: the spot draw at [`Event::PriceRevision`], the
+    /// rate actually paid at iteration/checkpoint/restore events
+    pub price: f64,
+}
+
+// ===================================================================
+// Policy: the event-reactive decision maker
+// ===================================================================
+
+/// An event-reactive coordination policy — the engine-native
+/// generalisation of [`Strategy`]. `decide` resolves the active set at
+/// each price revision exactly as before; `on_event` sees *every*
+/// engine event, so a policy can react to preemptions, restorations
+/// and checkpoints rather than only to completed iterations (the
+/// Parcae-style reactive case the lockstep API could not express).
+pub trait Policy {
+    fn name(&self) -> &str;
+
+    /// Total SGD iterations this policy intends to run.
+    fn target_iters(&self) -> u64;
+
+    /// Upper bound on concurrently active workers (pool sizing).
+    fn max_workers(&self) -> usize;
+
+    /// Resolve the active set for the slot whose price is `price`.
+    fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision;
+
+    /// React to an engine event. Must not consume RNG (the §3 stream
+    /// contract leaves all stochastic choices to `decide` and the
+    /// engine itself).
+    fn on_event(&mut self, ev: &Event, state: &EngineState) -> Result<()> {
+        let _ = (ev, state);
+        Ok(())
+    }
+}
+
+/// Blanket adapter: any [`Strategy`] is a [`Policy`] that reacts only
+/// to [`Event::IterationDone`] (mapped onto `Strategy::on_iteration`)
+/// and ignores every other event — the paper's lockstep semantics as
+/// one engine configuration. `Box<dyn Strategy>` and `&mut dyn
+/// Strategy` adapt too via the delegating `Strategy` impls on those
+/// types.
+pub struct LockstepPolicy<S: Strategy>(pub S);
+
+impl<S: Strategy> Policy for LockstepPolicy<S> {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.0.target_iters()
+    }
+
+    fn max_workers(&self) -> usize {
+        self.0.max_workers()
+    }
+
+    fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision {
+        self.0.decide(price, rng)
+    }
+
+    fn on_event(&mut self, ev: &Event, state: &EngineState) -> Result<()> {
+        if matches!(ev, Event::IterationDone) {
+            self.0.on_iteration(&StrategyState {
+                iter: state.iter,
+                clock: state.clock,
+                cost: state.cost,
+                error: state.error,
+            })?;
+        }
+        Ok(())
+    }
+}
+
+// ===================================================================
+// Observers
+// ===================================================================
+
+/// A read-only event hook. Observers absorb the recording concerns
+/// the pre-engine loop inlined (series sampling, event audits); they
+/// never consume RNG and never influence the run.
+pub trait Observer {
+    fn on_event(&mut self, ev: &Event, state: &EngineState);
+}
+
+/// Records a stride-sampled [`Series`] of the run trajectory — the
+/// recording that `Scheduler::run` used to inline. A point is pushed
+/// at every `stride`-th iteration and at the final (target) iteration,
+/// exactly the pre-engine condition.
+pub struct SeriesRecorder {
+    stride: u64,
+    series: Series,
+}
+
+impl SeriesRecorder {
+    pub fn new(stride: u64) -> Self {
+        SeriesRecorder { stride: stride.max(1), series: Series::default() }
+    }
+
+    pub fn into_series(self) -> Series {
+        self.series
+    }
+}
+
+impl Observer for SeriesRecorder {
+    fn on_event(&mut self, ev: &Event, st: &EngineState) {
+        if matches!(ev, Event::IterationDone)
+            && (st.iter % self.stride == 0 || st.iter == st.target)
+        {
+            self.series.push(Point {
+                clock: st.clock,
+                iter: st.iter,
+                cost: st.cost,
+                error: st.error,
+                accuracy: st.accuracy,
+                active: st.active,
+            });
+        }
+    }
+}
+
+/// Captures the full event sequence (with the iteration counter at
+/// each event) for ordering assertions in tests and audits.
+#[derive(Default)]
+pub struct EventLog {
+    pub events: Vec<(Event, u64)>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The sequence of events, payloads dropped — convenient for
+    /// ordering assertions.
+    pub fn kinds(&self) -> Vec<&'static str> {
+        self.events
+            .iter()
+            .map(|(e, _)| match e {
+                Event::PriceRevision { .. } => "price_revision",
+                Event::WorkerPreempted { .. } => "worker_preempted",
+                Event::WorkerRestored => "worker_restored",
+                Event::IterationDone => "iteration_done",
+                Event::CheckpointDone => "checkpoint_done",
+                Event::DeadlineHit => "deadline_hit",
+            })
+            .collect()
+    }
+}
+
+impl Observer for EventLog {
+    fn on_event(&mut self, ev: &Event, st: &EngineState) {
+        self.events.push((*ev, st.iter));
+    }
+}
+
+// ===================================================================
+// Overhead model
+// ===================================================================
+
+/// Worker-lifecycle overhead (checkpoint/restart costs and recovery
+/// lag) — the failure modes that dominate real volatile-instance
+/// training but that the paper's frictionless model sets to zero.
+/// `OverheadModel::none()` is the paper's model and the digest-compat
+/// default everywhere.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverheadModel {
+    /// write a checkpoint every this many completed iterations
+    /// (0 = never checkpoint)
+    pub checkpoint_every_iters: u64,
+    /// wall-clock seconds one checkpoint takes (billed for the active
+    /// workers at the slot's price)
+    pub checkpoint_cost_s: f64,
+    /// recovery lag after a full interruption: the restored workers
+    /// are billed this long before iterations resume
+    pub restart_delay_s: f64,
+    /// on a full interruption, iterations since the last checkpoint
+    /// are lost and recomputed (the backend state rolls back)
+    pub lost_work_on_preempt: bool,
+    /// advance preemption warning; a notice covering
+    /// `checkpoint_cost_s` lets the engine emergency-checkpoint inside
+    /// the window instead of losing work
+    pub preempt_notice_s: f64,
+}
+
+impl OverheadModel {
+    /// The paper's frictionless model: no checkpoints, no restart lag,
+    /// no lost work. With this model the engine is RNG- and
+    /// accounting-identical to the pre-engine lockstep loop.
+    pub fn none() -> Self {
+        OverheadModel {
+            checkpoint_every_iters: 0,
+            checkpoint_cost_s: 0.0,
+            restart_delay_s: 0.0,
+            lost_work_on_preempt: false,
+            preempt_notice_s: 0.0,
+        }
+    }
+
+    /// True when any overhead mechanism is switched on.
+    pub fn enabled(&self) -> bool {
+        self.checkpoint_every_iters > 0
+            || self.restart_delay_s > 0.0
+            || self.lost_work_on_preempt
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.checkpoint_cost_s.is_finite() && self.checkpoint_cost_s >= 0.0,
+            "overhead.checkpoint_cost_s must be finite and >= 0, got {}",
+            self.checkpoint_cost_s
+        );
+        ensure!(
+            self.restart_delay_s.is_finite() && self.restart_delay_s >= 0.0,
+            "overhead.restart_delay_s must be finite and >= 0, got {}",
+            self.restart_delay_s
+        );
+        ensure!(
+            self.preempt_notice_s.is_finite() && self.preempt_notice_s >= 0.0,
+            "overhead.preempt_notice_s must be finite and >= 0, got {}",
+            self.preempt_notice_s
+        );
+        Ok(())
+    }
+}
+
+impl Default for OverheadModel {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+// ===================================================================
+// Engine
+// ===================================================================
+
+/// Engine configuration: the loop knobs of the old `SchedulerParams`
+/// plus the overhead model.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineParams {
+    pub runtime: RuntimeModel,
+    /// idle re-check interval when no workers are active (paper: 4 s)
+    pub idle_step: f64,
+    /// hard wall-clock cap (usually the deadline theta, or a multiple)
+    pub theta_cap: f64,
+    /// record a series point every `stride` iterations
+    pub stride: u64,
+    /// runaway guard on total slots (idle + busy)
+    pub max_slots: u64,
+    pub overhead: OverheadModel,
+}
+
+impl Default for EngineParams {
+    fn default() -> Self {
+        EngineParams {
+            runtime: RuntimeModel::paper_default(),
+            idle_step: 4.0,
+            theta_cap: f64::INFINITY,
+            stride: 10,
+            max_slots: 50_000_000,
+            overhead: OverheadModel::none(),
+        }
+    }
+}
+
+impl EngineParams {
+    /// The sweep harness's historical lockstep configuration (the
+    /// pre-redesign `exp::run_synthetic_rng` constants): idle 4 s,
+    /// stride 10, a 2x10^8 slot guard, frictionless overhead — the
+    /// values every shipped preset digest is pinned against.
+    pub fn lockstep(runtime: RuntimeModel, theta_cap: f64) -> Self {
+        EngineParams {
+            runtime,
+            idle_step: 4.0,
+            theta_cap,
+            stride: 10,
+            max_slots: 200_000_000,
+            overhead: OverheadModel::none(),
+        }
+    }
+}
+
+/// Outcome of an engine run: the pre-engine `RunResult` fields plus
+/// the overhead ledger (all zero under `OverheadModel::none()`, except
+/// `preemptions`/`restarts`, which count full-interruption episodes in
+/// any mode).
+#[derive(Clone, Debug)]
+pub struct EngineResult {
+    pub series: Series,
+    /// net completed iterations (lost work rolled back)
+    pub iters: u64,
+    pub cost: f64,
+    pub elapsed: f64,
+    pub idle_time: f64,
+    pub final_error: f64,
+    pub final_accuracy: f64,
+    /// true if the run hit theta_cap/max_slots before finishing
+    pub truncated: bool,
+    /// full interruptions (active set fell to zero after running)
+    pub preemptions: u64,
+    /// recoveries from a full interruption
+    pub restarts: u64,
+    /// checkpoints written (periodic + emergency)
+    pub checkpoints: u64,
+    /// wall-clock spent writing checkpoints (billed)
+    pub checkpoint_time: f64,
+    /// wall-clock spent in post-interruption recovery (billed)
+    pub restart_time: f64,
+    /// iterations lost to preemptions and recomputed
+    pub lost_iters: u64,
+}
+
+/// Drives one training run as a sequence of typed events.
+pub struct Engine {
+    pub params: EngineParams,
+}
+
+impl Engine {
+    pub fn new(params: EngineParams) -> Self {
+        Engine { params }
+    }
+
+    /// Run `policy` against `backend` on the virtual clock. `extra`
+    /// observers see every event after the policy does; the engine
+    /// always installs a [`SeriesRecorder`] whose output lands in
+    /// [`EngineResult::series`].
+    ///
+    /// Event order within one slot (DESIGN.md §5): `PriceRevision`,
+    /// then either (`WorkerPreempted` | idle wait) on an empty set, or
+    /// (`WorkerRestored`?, `IterationDone`, `CheckpointDone`?) on a
+    /// non-empty one; `DeadlineHit` fires at a slot boundary only.
+    pub fn run(
+        &self,
+        policy: &mut dyn Policy,
+        backend: &mut dyn TrainingBackend,
+        prices: &PriceSource,
+        rng: &mut Rng,
+        extra: &mut [&mut dyn Observer],
+    ) -> Result<EngineResult> {
+        let p = &self.params;
+        ensure!(p.idle_step > 0.0, "idle_step must be > 0");
+        ensure!(p.stride >= 1, "stride must be >= 1");
+        p.overhead.validate()?;
+        let ov = p.overhead;
+
+        let mut meter = CostMeter::new();
+        let mut recorder = SeriesRecorder::new(p.stride);
+        let mut iter = 0u64;
+        let mut slots = 0u64;
+        let target = policy.target_iters();
+        let mut truncated = false;
+        let mut last = (backend.error(), backend.accuracy());
+
+        // overhead state: the last completed slot's active set / price
+        // (needed to bill an emergency checkpoint inside the notice
+        // window), the checkpointed state, and the ledger
+        let mut was_active = false;
+        let mut interrupted = false;
+        let mut prev_y = 0usize;
+        let mut prev_price = 0.0f64;
+        let mut ckpt_iter = 0u64;
+        let mut ckpt_state = backend.snapshot();
+        let (mut preemptions, mut restarts, mut checkpoints) = (0u64, 0u64, 0u64);
+        let (mut checkpoint_time, mut restart_time) = (0.0f64, 0.0f64);
+        let mut lost_iters = 0u64;
+
+        // the one dispatch point: policy first, built-in recorder, then
+        // the caller's observers
+        fn emit(
+            policy: &mut dyn Policy,
+            recorder: &mut SeriesRecorder,
+            extra: &mut [&mut dyn Observer],
+            ev: Event,
+            st: EngineState,
+        ) -> Result<()> {
+            policy.on_event(&ev, &st)?;
+            recorder.on_event(&ev, &st);
+            for o in extra.iter_mut() {
+                o.on_event(&ev, &st);
+            }
+            Ok(())
+        }
+        macro_rules! state {
+            ($active:expr, $price:expr) => {
+                EngineState {
+                    iter,
+                    target,
+                    clock: meter.elapsed(),
+                    cost: meter.cost(),
+                    idle_time: meter.idle_time(),
+                    error: last.0,
+                    accuracy: last.1,
+                    active: $active,
+                    price: $price,
+                }
+            };
+        }
+
+        while iter < target {
+            slots += 1;
+            if slots > p.max_slots || meter.elapsed() >= p.theta_cap {
+                truncated = true;
+                emit(
+                    policy,
+                    &mut recorder,
+                    extra,
+                    Event::DeadlineHit,
+                    state!(0, prev_price),
+                )?;
+                break;
+            }
+            let price = prices.price_at(meter.elapsed(), rng);
+            emit(
+                policy,
+                &mut recorder,
+                extra,
+                Event::PriceRevision { price },
+                state!(0, price),
+            )?;
+            let decision = policy.decide(price, rng);
+            let y = decision.active.len();
+            if y == 0 {
+                if was_active {
+                    // a full interruption begins
+                    preemptions += 1;
+                    if ov.lost_work_on_preempt && iter > ckpt_iter {
+                        if ov.preempt_notice_s > 0.0
+                            && ov.preempt_notice_s >= ov.checkpoint_cost_s
+                        {
+                            // the notice window covers an emergency
+                            // checkpoint: the lapsing workers write it
+                            // at the previous slot's price, keeping all
+                            // progress
+                            meter.charge(
+                                prev_y,
+                                prev_price,
+                                ov.checkpoint_cost_s,
+                            );
+                            checkpoint_time += ov.checkpoint_cost_s;
+                            checkpoints += 1;
+                            ckpt_iter = iter;
+                            ckpt_state = backend.snapshot();
+                            emit(
+                                policy,
+                                &mut recorder,
+                                extra,
+                                Event::CheckpointDone,
+                                state!(prev_y, prev_price),
+                            )?;
+                        } else {
+                            // work since the last checkpoint is lost
+                            // and will be recomputed
+                            lost_iters += iter - ckpt_iter;
+                            iter = ckpt_iter;
+                            if let Some(s) = ckpt_state {
+                                backend.restore(s);
+                            }
+                            last = (backend.error(), backend.accuracy());
+                        }
+                    }
+                    was_active = false;
+                    interrupted = true;
+                    emit(
+                        policy,
+                        &mut recorder,
+                        extra,
+                        Event::WorkerPreempted { notice: ov.preempt_notice_s },
+                        state!(0, price),
+                    )?;
+                }
+                meter.idle(p.idle_step);
+                continue;
+            }
+            if interrupted {
+                // recovery lag: the restored workers are billed while
+                // the job reloads its state, with no progress
+                if ov.restart_delay_s > 0.0 {
+                    meter.charge(y, decision.price, ov.restart_delay_s);
+                    restart_time += ov.restart_delay_s;
+                }
+                restarts += 1;
+                interrupted = false;
+                emit(
+                    policy,
+                    &mut recorder,
+                    extra,
+                    Event::WorkerRestored,
+                    state!(y, decision.price),
+                )?;
+            }
+            let dur = p.runtime.sample(y, rng);
+            let stats = backend.step(y, rng)?;
+            meter.charge(y, decision.price, dur);
+            iter += 1;
+            last = (stats.error, stats.accuracy);
+            was_active = true;
+            prev_y = y;
+            prev_price = decision.price;
+            emit(
+                policy,
+                &mut recorder,
+                extra,
+                Event::IterationDone,
+                state!(y, decision.price),
+            )?;
+            if ov.checkpoint_every_iters > 0
+                && iter % ov.checkpoint_every_iters == 0
+                && iter < target
+            {
+                meter.charge(y, decision.price, ov.checkpoint_cost_s);
+                checkpoint_time += ov.checkpoint_cost_s;
+                checkpoints += 1;
+                ckpt_iter = iter;
+                ckpt_state = backend.snapshot();
+                emit(
+                    policy,
+                    &mut recorder,
+                    extra,
+                    Event::CheckpointDone,
+                    state!(y, decision.price),
+                )?;
+            }
+        }
+
+        Ok(EngineResult {
+            series: recorder.into_series(),
+            iters: iter,
+            cost: meter.cost(),
+            elapsed: meter.elapsed(),
+            idle_time: meter.idle_time(),
+            final_error: last.0,
+            final_accuracy: last.1,
+            truncated,
+            preemptions,
+            restarts,
+            checkpoints,
+            checkpoint_time,
+            restart_time,
+            lost_iters,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SyntheticBackend;
+    use crate::coordinator::strategy::FixedBids;
+    use crate::market::BidVector;
+    use crate::theory::bounds::{ErrorBound, SgdHyper};
+
+    fn bound() -> ErrorBound {
+        ErrorBound::new(SgdHyper::paper_cnn())
+    }
+
+    /// A scripted policy: one worker, active except at the scripted
+    /// (1-based) slot numbers — deterministic preemption injection.
+    struct Scripted {
+        target: u64,
+        idle_slots: Vec<u64>,
+        slot: u64,
+    }
+
+    impl Scripted {
+        fn new(target: u64, idle_slots: Vec<u64>) -> Self {
+            Scripted { target, idle_slots, slot: 0 }
+        }
+    }
+
+    impl Policy for Scripted {
+        fn name(&self) -> &str {
+            "scripted"
+        }
+
+        fn target_iters(&self) -> u64 {
+            self.target
+        }
+
+        fn max_workers(&self) -> usize {
+            1
+        }
+
+        fn decide(&mut self, _price: f64, _rng: &mut Rng) -> ActiveDecision {
+            self.slot += 1;
+            let active = if self.idle_slots.contains(&self.slot) {
+                vec![]
+            } else {
+                vec![0]
+            };
+            ActiveDecision { active, price: 1.0 }
+        }
+    }
+
+    fn params(overhead: OverheadModel, theta_cap: f64) -> EngineParams {
+        EngineParams {
+            runtime: RuntimeModel::Deterministic { r: 10.0 },
+            idle_step: 4.0,
+            theta_cap,
+            stride: 1,
+            max_slots: 10_000,
+            overhead,
+        }
+    }
+
+    #[test]
+    fn preemption_during_run_rolls_back_to_checkpoint() {
+        // checkpoint every 4 iters (free), preempt at slot 7 (after 6
+        // iterations): iters 5..6 are lost, recomputed after a billed
+        // 5 s restart delay
+        let ov = OverheadModel {
+            checkpoint_every_iters: 4,
+            checkpoint_cost_s: 0.0,
+            restart_delay_s: 5.0,
+            lost_work_on_preempt: true,
+            preempt_notice_s: 0.0,
+        };
+        let mut policy = Scripted::new(10, vec![7]);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(1);
+        let mut log = EventLog::new();
+        let r = Engine::new(params(ov, f64::INFINITY))
+            .run(
+                &mut policy,
+                &mut b,
+                &PriceSource::Fixed(1.0),
+                &mut rng,
+                &mut [&mut log],
+            )
+            .unwrap();
+        assert_eq!(r.iters, 10);
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.restarts, 1);
+        assert_eq!(r.lost_iters, 2); // iters 5 and 6, rolled back to 4
+        assert!((r.restart_time - 5.0).abs() < 1e-12);
+        // 12 executed iterations at 10 s + one idle slot + restart lag
+        assert!((r.elapsed - (12.0 * 10.0 + 4.0 + 5.0)).abs() < 1e-9);
+        // billed: 12 iterations + 5 s restart, 1 worker at price 1.0
+        assert!((r.cost - (12.0 * 10.0 + 5.0)).abs() < 1e-9);
+        // the rollback restores the learning state: the final error is
+        // exactly 10 net single-worker iterations
+        let mut fresh = SyntheticBackend::new(bound());
+        let mut frng = Rng::new(2);
+        for _ in 0..10 {
+            fresh.step(1, &mut frng).unwrap();
+        }
+        assert!((r.final_error - fresh.error()).abs() < 1e-12);
+        // event ordering: preempted strictly before restored, and the
+        // last checkpoint before the preemption was at iter 4
+        let kinds = log.kinds();
+        let pre = kinds.iter().position(|k| *k == "worker_preempted").unwrap();
+        let res = kinds.iter().position(|k| *k == "worker_restored").unwrap();
+        assert!(pre < res, "{kinds:?}");
+        let ck: Vec<u64> = log
+            .events
+            .iter()
+            .filter(|(e, _)| matches!(e, Event::CheckpointDone))
+            .map(|(_, i)| *i)
+            .collect();
+        assert_eq!(ck, vec![4, 8], "periodic checkpoints at 4 and 8");
+        // the preemption event sees the rolled-back counter
+        let (_, at) = log.events[log
+            .events
+            .iter()
+            .position(|(e, _)| matches!(e, Event::WorkerPreempted { .. }))
+            .unwrap()];
+        assert_eq!(at, 4);
+    }
+
+    #[test]
+    fn notice_window_covers_emergency_checkpoint() {
+        // 30 s notice >= 10 s checkpoint cost: no work is lost, the
+        // emergency checkpoint is billed at the lapsing slot's terms
+        let ov = OverheadModel {
+            checkpoint_every_iters: 100, // periodic effectively off
+            checkpoint_cost_s: 10.0,
+            restart_delay_s: 0.0,
+            lost_work_on_preempt: true,
+            preempt_notice_s: 30.0,
+        };
+        let mut policy = Scripted::new(6, vec![4]);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(3);
+        let mut log = EventLog::new();
+        let r = Engine::new(params(ov, f64::INFINITY))
+            .run(
+                &mut policy,
+                &mut b,
+                &PriceSource::Fixed(1.0),
+                &mut rng,
+                &mut [&mut log],
+            )
+            .unwrap();
+        assert_eq!(r.lost_iters, 0);
+        assert_eq!(r.iters, 6);
+        assert_eq!(r.checkpoints, 1);
+        assert!((r.checkpoint_time - 10.0).abs() < 1e-12);
+        // 6 iterations, no recomputation: 6 * 10 + ckpt 10 billed
+        assert!((r.cost - (6.0 * 10.0 + 10.0)).abs() < 1e-9);
+        let kinds = log.kinds();
+        let ck = kinds.iter().position(|k| *k == "checkpoint_done").unwrap();
+        let pre = kinds.iter().position(|k| *k == "worker_preempted").unwrap();
+        assert!(ck < pre, "emergency checkpoint inside the notice: {kinds:?}");
+    }
+
+    #[test]
+    fn checkpoint_coinciding_with_deadline() {
+        // the 4th iteration's checkpoint pushes the clock to 45 s,
+        // over the 42 s cap: the next slot fires DeadlineHit, after
+        // CheckpointDone
+        let ov = OverheadModel {
+            checkpoint_every_iters: 4,
+            checkpoint_cost_s: 5.0,
+            restart_delay_s: 0.0,
+            lost_work_on_preempt: false,
+            preempt_notice_s: 0.0,
+        };
+        let mut policy = Scripted::new(100, vec![]);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(4);
+        let mut log = EventLog::new();
+        let r = Engine::new(params(ov, 42.0))
+            .run(
+                &mut policy,
+                &mut b,
+                &PriceSource::Fixed(1.0),
+                &mut rng,
+                &mut [&mut log],
+            )
+            .unwrap();
+        assert!(r.truncated);
+        assert_eq!(r.iters, 4);
+        assert_eq!(r.checkpoints, 1);
+        let kinds = log.kinds();
+        assert_eq!(kinds.last().unwrap(), &"deadline_hit");
+        let ck = kinds.iter().position(|k| *k == "checkpoint_done").unwrap();
+        assert!(ck < kinds.len() - 1, "checkpoint precedes the deadline");
+    }
+
+    #[test]
+    fn lockstep_mode_emits_events_but_changes_nothing() {
+        // overhead off: events fire, accounting equals the plain loop
+        let mut s = FixedBids::new("noint", BidVector::uniform(2, 1.0), 50);
+        let mut policy = LockstepPolicy(&mut s as &mut dyn Strategy);
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = Rng::new(5);
+        let mut log = EventLog::new();
+        let r = Engine::new(params(OverheadModel::none(), f64::INFINITY))
+            .run(
+                &mut policy,
+                &mut b,
+                &PriceSource::Fixed(0.5),
+                &mut rng,
+                &mut [&mut log],
+            )
+            .unwrap();
+        assert_eq!(r.iters, 50);
+        assert_eq!(r.lost_iters, 0);
+        assert_eq!(r.checkpoint_time, 0.0);
+        assert_eq!(r.restart_time, 0.0);
+        assert!((r.cost - 2.0 * 0.5 * 10.0 * 50.0).abs() < 1e-9);
+        assert_eq!(
+            log.kinds().iter().filter(|k| **k == "iteration_done").count(),
+            50
+        );
+        assert_eq!(r.series.len(), 50); // stride 1
+    }
+
+    #[test]
+    fn series_recorder_matches_stride_contract() {
+        let mut rec = SeriesRecorder::new(5);
+        let mk = |iter| EngineState {
+            iter,
+            target: 12,
+            clock: iter as f64,
+            cost: iter as f64,
+            idle_time: 0.0,
+            error: 1.0,
+            accuracy: 0.5,
+            active: 2,
+            price: 0.3,
+        };
+        for i in 1..=12 {
+            rec.on_event(&Event::IterationDone, &mk(i));
+        }
+        let s = rec.into_series();
+        let iters: Vec<u64> = s.points.iter().map(|p| p.iter).collect();
+        assert_eq!(iters, vec![5, 10, 12]); // strides + final
+    }
+}

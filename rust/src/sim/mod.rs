@@ -1,8 +1,14 @@
-//! Virtual-clock simulation substrate: price sources over time and the
-//! cost meter.
+//! Virtual-clock simulation substrate: price sources over time, the
+//! cost meter, and the discrete-event engine driving a run as typed
+//! events through policies and observers (DESIGN.md §5).
 
 pub mod cost;
+pub mod engine;
 pub mod price_source;
 
 pub use cost::CostMeter;
+pub use engine::{
+    Engine, EngineParams, EngineResult, EngineState, Event, EventLog,
+    LockstepPolicy, Observer, OverheadModel, Policy, SeriesRecorder,
+};
 pub use price_source::PriceSource;

@@ -1,0 +1,117 @@
+//! Engine/scheduler equivalence: every shipped overhead-free preset
+//! collates to the *same digest* through the pre-engine lockstep loop
+//! (`Scheduler::run_reference`, kept verbatim as the oracle) and the
+//! new event engine, at 1 and 8 threads — the §5 determinism contract
+//! at full preset scale. The overhead-enabled `checkpoint_grid` preset
+//! has no pre-engine equivalent; it is pinned for thread-determinism
+//! and sane ledger metrics instead.
+
+use volatile_sgd::exp::presets;
+use volatile_sgd::exp::{ScenarioSpec, SpecScenario};
+use volatile_sgd::sweep::{run_sweep, Scenario, SweepConfig};
+
+fn configs_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/configs")
+}
+
+/// Shrink a spec's iteration budget where that cannot change plan
+/// feasibility (preemptible fixed-price scenarios have no Theorem-2/3
+/// deadline coupling), keeping the suite quick. Both runners see the
+/// same spec, so equivalence is unaffected.
+fn quick(mut spec: ScenarioSpec, j: u64) -> ScenarioSpec {
+    use volatile_sgd::exp::spec::MarketKind;
+    if spec
+        .markets
+        .iter()
+        .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
+    {
+        spec.job.j = spec.job.j.min(j);
+    }
+    spec
+}
+
+#[test]
+fn every_overhead_free_preset_is_engine_reference_identical() {
+    let mut checked = 0;
+    for entry in
+        std::fs::read_dir(configs_dir()).expect("examples/configs exists")
+    {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let spec = ScenarioSpec::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        if spec.overhead.enabled() {
+            continue; // no pre-engine equivalent exists by design
+        }
+        let spec = quick(spec, 800);
+        let name = spec.name.clone();
+        checked += 1;
+
+        let engine = SpecScenario::new(spec.clone())
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let reference = SpecScenario::new(spec)
+            .unwrap()
+            .with_reference_runner()
+            .unwrap();
+        let cfg = |threads| SweepConfig { replicates: 2, seed: 77, threads };
+        let digests = [
+            run_sweep(&engine, &cfg(1)).unwrap().digest(),
+            run_sweep(&engine, &cfg(8)).unwrap().digest(),
+            run_sweep(&reference, &cfg(1)).unwrap().digest(),
+            run_sweep(&reference, &cfg(8)).unwrap().digest(),
+        ];
+        assert!(
+            digests.iter().all(|d| *d == digests[0]),
+            "{name}: engine/reference x threads digests diverge: {digests:x?}"
+        );
+    }
+    assert!(checked >= 5, "expected >= 5 overhead-free presets, {checked}");
+}
+
+#[test]
+fn checkpoint_grid_runs_thread_deterministic_with_sane_ledger() {
+    let mut spec = presets::spec("checkpoint_grid").unwrap();
+    spec.job.j = 400; // quick; the shipped default is 2000
+    let sc = SpecScenario::new(spec).unwrap();
+    assert_eq!(sc.points(), 9);
+
+    let base = SweepConfig { replicates: 2, seed: 13, threads: 1 };
+    let serial = run_sweep(&sc, &base).unwrap();
+    let par =
+        run_sweep(&sc, &SweepConfig { threads: 8, ..base }).unwrap();
+    assert_eq!(serial.digest(), par.digest());
+
+    let idx = |name: &str| {
+        serial
+            .metric_names
+            .iter()
+            .position(|m| m == name)
+            .unwrap_or_else(|| panic!("missing metric {name}"))
+    };
+    let mean = |p: usize, m: &str| serial.points[p].stats[idx(m)].mean();
+    // layout: q slowest, delay fastest -> points 0..3 are q=0.1
+    // work loss and recomputation grow with q at fixed delay=0
+    assert!(mean(0, "lost_iters") < mean(6, "lost_iters"));
+    // recovery lag is billed only when the delay axis switches it on
+    assert_eq!(mean(3, "restart_time"), 0.0);
+    assert!(mean(4, "restart_time") > 0.0);
+    // ledger identity: restart_time = delay x restarts, and every
+    // interruption but possibly the trailing one restarts
+    let pe = mean(5, "preempt_events");
+    assert!(pe > 0.0);
+    assert!(mean(5, "restart_time") >= 120.0 * (pe - 1.0).max(0.0) - 1e-9);
+    assert!(mean(5, "restart_time") <= 120.0 * pe + 1e-9);
+    // the discount erosion headline: same net work, much higher cost
+    // at the high-churn corner than the calm one
+    assert!(mean(8, "cost") > mean(0, "cost"));
+    for p in 0..9 {
+        assert!(mean(p, "checkpoint_time") > 0.0, "point {p}");
+        assert!(
+            serial.points[p].stats[idx("iters")].mean() > 0.0,
+            "point {p}"
+        );
+    }
+}
