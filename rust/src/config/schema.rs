@@ -61,6 +61,15 @@ pub enum StrategyKind {
     StaticWorkers,
     /// Sec. V dynamic n_j = ceil(n0 eta^{j-1}) (Theorem 5)
     DynamicWorkers { eta: f64 },
+    /// Event-native (`sim::policy`, DESIGN.md §6): rebid after every
+    /// preemption, bids scaled by `rebid_factor`
+    NoticeRebid { rebid_factor: f64 },
+    /// Event-native: resize the fleet at each price revision to keep
+    /// expected spend under `budget_rate` $/unit-time
+    ElasticFleet { budget_rate: f64 },
+    /// Event-native: escalate to on-demand (bid = ∞) when the
+    /// completion proxy drops below `escalate_threshold`
+    DeadlineAware { escalate_threshold: f64 },
 }
 
 impl StrategyKind {
@@ -75,7 +84,24 @@ impl StrategyKind {
             StrategyKind::DynamicBids { .. } => "dynamic",
             StrategyKind::StaticWorkers => "static_workers",
             StrategyKind::DynamicWorkers { .. } => "dynamic_workers",
+            StrategyKind::NoticeRebid { .. } => "notice_rebid",
+            StrategyKind::ElasticFleet { .. } => "elastic_fleet",
+            StrategyKind::DeadlineAware { .. } => "deadline_aware",
         }
+    }
+
+    /// True for the event-native policy kinds (`sim::policy`): they
+    /// implement `Policy` directly, so they run only on the event
+    /// engine — the pre-engine reference lockstep loop cannot model
+    /// them, and `simulate`/sweeps build them via
+    /// `PlannedStrategy::build_policy`.
+    pub fn event_native(&self) -> bool {
+        matches!(
+            self,
+            StrategyKind::NoticeRebid { .. }
+                | StrategyKind::ElasticFleet { .. }
+                | StrategyKind::DeadlineAware { .. }
+        )
     }
 
     /// Parse a kind name into a `StrategyKind` with defaults scaled to a
@@ -97,10 +123,18 @@ impl StrategyKind {
             }
             "static_workers" => StrategyKind::StaticWorkers,
             "dynamic_workers" => StrategyKind::DynamicWorkers { eta: 1.0004 },
+            "notice_rebid" => StrategyKind::NoticeRebid { rebid_factor: 1.5 },
+            "elastic_fleet" => {
+                StrategyKind::ElasticFleet { budget_rate: 2.0 }
+            }
+            "deadline_aware" => {
+                StrategyKind::DeadlineAware { escalate_threshold: 0.5 }
+            }
             other => bail!(
                 "unknown strategy kind '{other}' (no_interruption | one_bid \
                  | two_bids | bid_fractions | dynamic | static_workers | \
-                 dynamic_workers)"
+                 dynamic_workers | notice_rebid | elastic_fleet | \
+                 deadline_aware)"
             ),
         })
     }
@@ -228,6 +262,41 @@ impl ExperimentConfig {
             }
             StrategyKind::DynamicWorkers { eta } => {
                 *eta = doc.f64_or("strategy.eta", *eta);
+            }
+            StrategyKind::NoticeRebid { rebid_factor } => {
+                *rebid_factor =
+                    doc.f64_or("strategy.rebid_factor", *rebid_factor);
+                if !rebid_factor.is_finite() || *rebid_factor < 1.0 {
+                    bail!(
+                        "strategy.rebid_factor must be >= 1, got \
+                         {rebid_factor}"
+                    );
+                }
+            }
+            StrategyKind::ElasticFleet { budget_rate } => {
+                *budget_rate =
+                    doc.f64_or("strategy.budget_rate", *budget_rate);
+                if !budget_rate.is_finite() || *budget_rate <= 0.0 {
+                    bail!(
+                        "strategy.budget_rate must be finite and > 0, got \
+                         {budget_rate}"
+                    );
+                }
+            }
+            StrategyKind::DeadlineAware { escalate_threshold } => {
+                *escalate_threshold = doc.f64_or(
+                    "strategy.escalate_threshold",
+                    *escalate_threshold,
+                );
+                if !escalate_threshold.is_finite()
+                    || *escalate_threshold <= 0.0
+                    || *escalate_threshold > 1.0
+                {
+                    bail!(
+                        "strategy.escalate_threshold must be in (0, 1], \
+                         got {escalate_threshold}"
+                    );
+                }
             }
             _ => {}
         }
@@ -412,9 +481,20 @@ n1 = 4
             "dynamic",
             "static_workers",
             "dynamic_workers",
+            "notice_rebid",
+            "elastic_fleet",
+            "deadline_aware",
         ] {
             let k = StrategyKind::from_name(name, 8).unwrap();
             assert_eq!(k.canonical_name(), name);
+            assert_eq!(
+                k.event_native(),
+                matches!(
+                    name,
+                    "notice_rebid" | "elastic_fleet" | "deadline_aware"
+                ),
+                "{name}"
+            );
         }
         // figure-label alias
         assert_eq!(
@@ -422,6 +502,36 @@ n1 = 4
             StrategyKind::NoInterruption
         );
         assert!(StrategyKind::from_name("zzz", 8).is_err());
+    }
+
+    #[test]
+    fn event_native_kind_params_parse_and_validate() {
+        let c = ExperimentConfig::from_str(
+            "[strategy]\nkind = \"notice_rebid\"\nrebid_factor = 2.0\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.strategy,
+            StrategyKind::NoticeRebid { rebid_factor: 2.0 }
+        );
+        let c = ExperimentConfig::from_str(
+            "[strategy]\nkind = \"elastic_fleet\"\nbudget_rate = 0.8\n",
+        )
+        .unwrap();
+        assert_eq!(c.strategy, StrategyKind::ElasticFleet { budget_rate: 0.8 });
+        // out-of-range policy knobs are config errors, not panics
+        assert!(ExperimentConfig::from_str(
+            "[strategy]\nkind = \"notice_rebid\"\nrebid_factor = 0.5\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_str(
+            "[strategy]\nkind = \"elastic_fleet\"\nbudget_rate = 0.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_str(
+            "[strategy]\nkind = \"deadline_aware\"\nescalate_threshold = 1.5\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -297,20 +297,44 @@ impl<'a> TrackedDoc<'a> {
             .collect()
     }
 
-    /// Reject any key the schema never consumed, naming the offenders.
-    pub fn finish(&self) -> Result<()> {
+    /// Every key the schema never consumed, in document (sorted path)
+    /// order — for loaders that want to phrase their own rejection
+    /// (e.g. `exp::spec` names the lineup position of a strategy
+    /// table's stray key).
+    pub fn unknown_keys(&self) -> Vec<String> {
         let used = self.used.borrow();
-        let unknown: Vec<&str> = self
-            .doc
+        self.doc
             .entries
             .keys()
             .filter(|k| !used.contains(*k))
-            .map(String::as_str)
-            .collect();
+            .cloned()
+            .collect()
+    }
+
+    /// Reject any key the schema never consumed, naming each offender
+    /// with its enclosing table (`'epss' in [job]`), not just the bare
+    /// key.
+    pub fn finish(&self) -> Result<()> {
+        let unknown = self.unknown_keys();
         if !unknown.is_empty() {
-            bail!("unknown key(s) in spec: '{}'", unknown.join("', '"));
+            let described: Vec<String> =
+                unknown.iter().map(|k| describe_key(k)).collect();
+            bail!("unknown key(s) in spec: {}", described.join(", "));
         }
         Ok(())
+    }
+}
+
+/// `"job.epss"` -> `"'job.epss' ('epss' in table [job])"`; a top-level
+/// key stays bare. Unknown-key rejections name the enclosing table so
+/// a typo inside `[strategy.rebid]` cannot be mistaken for a stray
+/// top-level key.
+pub fn describe_key(path: &str) -> String {
+    match path.rsplit_once('.') {
+        Some((table, key)) => {
+            format!("'{path}' ('{key}' in table [{table}])")
+        }
+        None => format!("'{path}' (top level)"),
     }
 }
 
@@ -444,11 +468,15 @@ weights = [1, 2.5, 3]
 
     #[test]
     fn tracked_doc_rejects_unconsumed_keys_by_name() {
-        let doc = Doc::parse("a = 1\n[job]\nepss = 0.3\n").unwrap();
+        let doc = Doc::parse("a = 1\nzz = 2\n[job]\nepss = 0.3\n").unwrap();
         let d = TrackedDoc::new(&doc);
         assert_eq!(d.u64_or("a", 0).unwrap(), 1);
+        assert_eq!(d.unknown_keys(), vec!["job.epss", "zz"]);
         let err = d.finish().unwrap_err().to_string();
         assert!(err.contains("job.epss"), "should name the key: {err}");
+        // the enclosing table is named, not just the bare key
+        assert!(err.contains("in table [job]"), "{err}");
+        assert!(err.contains("'zz' (top level)"), "{err}");
     }
 
     #[test]

@@ -139,6 +139,23 @@ impl Scheduler {
         Scheduler { params }
     }
 
+    /// Run an event-reactive [`crate::sim::Policy`] through the engine
+    /// under this scheduler's loop knobs — the coordinator-level entry
+    /// for the `sim::policy` suite (DESIGN.md §6). Classic strategies
+    /// keep using [`Scheduler::run`], which is this method through the
+    /// lockstep adapter.
+    pub fn run_policy(
+        &self,
+        policy: &mut dyn crate::sim::Policy,
+        backend: &mut dyn TrainingBackend,
+        prices: &PriceSource,
+        rng: &mut Rng,
+    ) -> Result<RunResult> {
+        let engine = Engine::new(self.params.to_engine_params());
+        let res = engine.run(policy, backend, prices, rng, &mut [])?;
+        Ok(res.into())
+    }
+
     /// Run the paper's lockstep loop through the event engine
     /// (RNG-identical to [`Scheduler::run_reference`]; pinned by the
     /// engine-equivalence tests).
@@ -149,10 +166,7 @@ impl Scheduler {
         prices: &PriceSource,
         rng: &mut Rng,
     ) -> Result<RunResult> {
-        let engine = Engine::new(self.params.to_engine_params());
-        let mut policy = LockstepPolicy(strategy);
-        let res = engine.run(&mut policy, backend, prices, rng, &mut [])?;
-        Ok(res.into())
+        self.run_policy(&mut LockstepPolicy(strategy), backend, prices, rng)
     }
 
     /// The pre-engine lockstep loop, kept verbatim as the determinism

@@ -37,9 +37,10 @@ use crate::coordinator::strategy::{
     Strategy,
 };
 use crate::market::BidVector;
-use crate::preempt::PreemptionModel;
+use crate::preempt::{PreemptionModel, RecipTable};
 use crate::sim::{
-    Engine, EngineParams, EngineResult, LockstepPolicy, PriceSource,
+    DeadlineAware, ElasticFleet, Engine, EngineParams, EngineResult,
+    LockstepPolicy, NoticeRebid, Policy, PriceSource,
 };
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::ErrorBound;
@@ -56,11 +57,13 @@ pub use spec::{build_plan, PlanInputs, ScenarioSpec, SpecScenario};
 /// shipped preset digest bit-identical.
 pub type RunParams = EngineParams;
 
-/// Run one strategy on the event engine against the synthetic
-/// (Theorem-1) backend — the full-fidelity entry point: overhead
-/// modelling and the engine's event ledger included.
-pub fn run_synthetic_engine(
-    strategy: &mut dyn Strategy,
+/// Run one event-reactive [`Policy`] on the engine against the
+/// synthetic (Theorem-1) backend — the full-fidelity entry point:
+/// overhead modelling and the engine's event ledger included. Classic
+/// strategies reach this through [`run_synthetic_engine`] /
+/// [`PlannedStrategy::build_policy`] via the `LockstepPolicy` adapter.
+pub fn run_policy_engine(
+    policy: &mut dyn Policy,
     bound: ErrorBound,
     prices: &PriceSource,
     params: &RunParams,
@@ -68,12 +71,25 @@ pub fn run_synthetic_engine(
 ) -> Result<EngineResult> {
     let engine = Engine::new(*params);
     let mut backend = SyntheticBackend::new(bound);
-    engine.run(
+    engine.run(policy, &mut backend, prices, rng, &mut [])
+}
+
+/// Run one strategy on the event engine against the synthetic
+/// (Theorem-1) backend: [`run_policy_engine`] through the lockstep
+/// adapter.
+pub fn run_synthetic_engine(
+    strategy: &mut dyn Strategy,
+    bound: ErrorBound,
+    prices: &PriceSource,
+    params: &RunParams,
+    rng: &mut Rng,
+) -> Result<EngineResult> {
+    run_policy_engine(
         &mut LockstepPolicy(strategy),
-        &mut backend,
+        bound,
         prices,
+        params,
         rng,
-        &mut [],
     )
 }
 
@@ -181,6 +197,35 @@ pub enum PlannedStrategy {
         unit_price: f64,
         cap: usize,
     },
+    /// Event-native (`sim::policy`): rebid by `rebid_factor` after
+    /// every preemption, saturating at `bid_cap`.
+    NoticeRebid {
+        name: String,
+        bids: BidVector,
+        j: u64,
+        rebid_factor: f64,
+        bid_cap: f64,
+    },
+    /// Event-native: budget-constrained fleet resizing at each price
+    /// revision; the exact `E[1/y]` table is computed once per grid
+    /// point (in `prepare`) and cloned into each replicate's policy.
+    ElasticFleet {
+        name: String,
+        j: u64,
+        table: RecipTable,
+        budget_rate: f64,
+    },
+    /// Event-native: escalate to on-demand (bid = ∞) when the
+    /// completion proxy falls below `threshold`.
+    DeadlineAware {
+        name: String,
+        bids: BidVector,
+        j: u64,
+        theta: f64,
+        p_active: f64,
+        slot_time: f64,
+        threshold: f64,
+    },
 }
 
 impl PlannedStrategy {
@@ -189,7 +234,10 @@ impl PlannedStrategy {
             PlannedStrategy::Fixed { name, .. }
             | PlannedStrategy::Dynamic { name, .. }
             | PlannedStrategy::StaticWorkers { name, .. }
-            | PlannedStrategy::DynamicWorkers { name, .. } => name,
+            | PlannedStrategy::DynamicWorkers { name, .. }
+            | PlannedStrategy::NoticeRebid { name, .. }
+            | PlannedStrategy::ElasticFleet { name, .. }
+            | PlannedStrategy::DeadlineAware { name, .. } => name,
         }
     }
 
@@ -199,12 +247,87 @@ impl PlannedStrategy {
             PlannedStrategy::Fixed { j, .. }
             | PlannedStrategy::Dynamic { j, .. }
             | PlannedStrategy::StaticWorkers { j, .. }
-            | PlannedStrategy::DynamicWorkers { j, .. } => *j,
+            | PlannedStrategy::DynamicWorkers { j, .. }
+            | PlannedStrategy::NoticeRebid { j, .. }
+            | PlannedStrategy::ElasticFleet { j, .. }
+            | PlannedStrategy::DeadlineAware { j, .. } => *j,
         }
     }
 
-    /// Instantiate a fresh strategy for one run.
+    /// True for the event-native policy plans, which have no lockstep
+    /// [`Strategy`] form: [`PlannedStrategy::build`] rejects them and
+    /// the pre-engine reference runner cannot execute them.
+    pub fn event_native(&self) -> bool {
+        matches!(
+            self,
+            PlannedStrategy::NoticeRebid { .. }
+                | PlannedStrategy::ElasticFleet { .. }
+                | PlannedStrategy::DeadlineAware { .. }
+        )
+    }
+
+    /// Instantiate a fresh event-reactive [`Policy`] for one run — the
+    /// engine-native entry every runner uses: classic plans adapt
+    /// through [`LockstepPolicy`] (identical RNG/accounting order, so
+    /// digests are unchanged), event-native plans build their
+    /// `sim::policy` implementation directly.
+    pub fn build_policy(&self) -> Result<Box<dyn Policy>> {
+        Ok(match self {
+            PlannedStrategy::NoticeRebid {
+                name,
+                bids,
+                j,
+                rebid_factor,
+                bid_cap,
+            } => Box::new(NoticeRebid::new(
+                name.clone(),
+                bids.clone(),
+                *j,
+                *rebid_factor,
+                *bid_cap,
+            )),
+            PlannedStrategy::ElasticFleet {
+                name,
+                j,
+                table,
+                budget_rate,
+            } => Box::new(ElasticFleet::new(
+                name.clone(),
+                *j,
+                table.clone(),
+                *budget_rate,
+            )),
+            PlannedStrategy::DeadlineAware {
+                name,
+                bids,
+                j,
+                theta,
+                p_active,
+                slot_time,
+                threshold,
+            } => Box::new(DeadlineAware::new(
+                name.clone(),
+                bids.clone(),
+                *j,
+                *theta,
+                *p_active,
+                *slot_time,
+                *threshold,
+            )),
+            classic => Box::new(LockstepPolicy(classic.build()?)),
+        })
+    }
+
+    /// Instantiate a fresh lockstep strategy for one run. Errors for
+    /// the event-native plans (use [`PlannedStrategy::build_policy`]).
     pub fn build(&self) -> Result<Box<dyn Strategy>> {
+        ensure!(
+            !self.event_native(),
+            "plan '{}' is an event-native policy with no lockstep \
+             Strategy form; build it with build_policy() and run it on \
+             the event engine",
+            self.name()
+        );
         Ok(match self {
             PlannedStrategy::Fixed { name, bids, j } => {
                 Box::new(FixedBids::new(name.clone(), bids.clone(), *j))
@@ -243,6 +366,11 @@ impl PlannedStrategy {
                 *unit_price,
                 *cap,
             )),
+            PlannedStrategy::NoticeRebid { .. }
+            | PlannedStrategy::ElasticFleet { .. }
+            | PlannedStrategy::DeadlineAware { .. } => {
+                unreachable!("rejected by the event_native guard above")
+            }
         })
     }
 }

@@ -11,8 +11,15 @@ use anyhow::{bail, Result};
 use super::spec::{ScenarioSpec, SpecScenario};
 
 /// Preset names: the figures, then the engine-era scenarios.
-pub const PRESET_NAMES: [&str; 5] =
-    ["fig2", "fig3", "fig4", "fig5", "checkpoint_grid"];
+pub const PRESET_NAMES: [&str; 7] = [
+    "fig2",
+    "fig3",
+    "fig4",
+    "fig5",
+    "checkpoint_grid",
+    "adaptive_grid",
+    "notice_grid",
+];
 
 /// The embedded TOML text of a preset (accepts `fig3` or bare `3`).
 pub fn preset_toml(name: &str) -> Result<&'static str> {
@@ -24,9 +31,15 @@ pub fn preset_toml(name: &str) -> Result<&'static str> {
         "checkpoint_grid" => {
             include_str!("../../../examples/configs/checkpoint_grid.toml")
         }
+        "adaptive_grid" => {
+            include_str!("../../../examples/configs/adaptive_grid.toml")
+        }
+        "notice_grid" => {
+            include_str!("../../../examples/configs/notice_grid.toml")
+        }
         other => bail!(
             "unknown preset '{other}' (available: fig2, fig3, fig4, fig5, \
-             checkpoint_grid)"
+             checkpoint_grid, adaptive_grid, notice_grid)"
         ),
     })
 }
@@ -80,6 +93,30 @@ mod tests {
 
     fn spec_is_overhead(name: &str) -> bool {
         spec(name).unwrap().overhead.enabled()
+    }
+
+    /// The two event-native presets (DESIGN.md §6): point spaces,
+    /// labels, and the policy/overhead wiring each demonstrates.
+    #[test]
+    fn policy_presets_ship_event_native_lineups() {
+        let sc = scenario("adaptive_grid").unwrap();
+        assert_eq!(sc.points(), 24); // 4 budget x 3 q x 2 strategies
+        assert_eq!(sc.label(0), "budget=0.6 q=0.1/elastic");
+        assert_eq!(sc.label(23), "budget=4.8 q=0.7/one_bid");
+        assert!(
+            sc.spec().strategies.iter().any(|e| e.kind.event_native()),
+            "adaptive_grid must line up an event-native policy"
+        );
+        assert!(!sc.spec().overhead.enabled());
+
+        let sc = scenario("notice_grid").unwrap();
+        assert_eq!(sc.points(), 18); // 3 notice x 3 factor x 2 strategies
+        assert_eq!(sc.label(0), "notice=0 factor=1.1/rebid");
+        assert_eq!(sc.label(17), "notice=30 factor=2.5/checkpoint_only");
+        assert!(sc.spec().strategies.iter().any(|e| e.kind.event_native()));
+        assert!(sc.spec().overhead.enabled());
+        assert!(sc.spec().overhead.lost_work_on_preempt);
+        assert_eq!(sc.spec().overhead.checkpoint_every_iters, 4);
     }
 
     /// The fig3 preset must reproduce the pre-redesign `sweep --fig 3`

@@ -27,9 +27,41 @@
 //! RNGs are pure functions of job identity, and results are
 //! bit-identical at any thread count.
 //!
-//! A new scenario is a TOML file, not a new Rust module — the fig2–fig5
-//! presets under `examples/configs/` are ordinary spec files (see
-//! [`super::presets`]); schema details are documented in DESIGN.md §4.
+//! A new scenario is a TOML file, not a new Rust module — all seven
+//! shipped presets under `examples/configs/` are ordinary spec files
+//! (see [`super::presets`]); schema details are documented in
+//! DESIGN.md §4, the event-native policy kinds (`notice_rebid`,
+//! `elastic_fleet`, `deadline_aware`) in §6.
+//!
+//! # Example
+//!
+//! ```
+//! use volatile_sgd::exp::{ScenarioSpec, SpecScenario};
+//! use volatile_sgd::sweep::{run_sweep, Scenario, SweepConfig};
+//!
+//! let spec = ScenarioSpec::from_str(r#"
+//! name = "doc"
+//! strategies = ["static_workers"]
+//! metrics = ["cost", "recip_exact"]
+//!
+//! [job]
+//! n = 4
+//! j = 50
+//! preempt_q = 0.3
+//!
+//! [runtime]
+//! kind = "deterministic"
+//! r = 10.0
+//!
+//! [market]
+//! kind = "fixed"
+//! "#).unwrap();
+//! let scenario = SpecScenario::new(spec).unwrap();   // --check-grade
+//! assert_eq!(scenario.points(), 1);
+//! let cfg = SweepConfig { replicates: 2, seed: 1, threads: 2 };
+//! let results = run_sweep(&scenario, &cfg).unwrap();
+//! assert_eq!(results.points.len(), 1);
+//! ```
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -47,7 +79,7 @@ use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
 
 use super::{
-    accuracy_for_error, run_synthetic_engine, run_synthetic_reference,
+    accuracy_for_error, run_policy_engine, run_synthetic_reference,
     PlannedStrategy, RunParams,
 };
 
@@ -350,7 +382,31 @@ impl ScenarioSpec {
              names)"
         );
 
-        d.finish()?;
+        // unknown-key rejection names the enclosing table path, and
+        // for strategy tables also the lineup position — a misspelled
+        // `rebid_factor` inside `[strategy.rebid]` reads back as
+        // `strategy[2].rebid_facto`, not as a stray bare key
+        let unknown = d.unknown_keys();
+        if !unknown.is_empty() {
+            let described: Vec<String> = unknown
+                .iter()
+                .map(|k| {
+                    let base = crate::config::toml::describe_key(k);
+                    let lineup = k
+                        .strip_prefix("strategy.")
+                        .and_then(|rest| rest.split_once('.'))
+                        .and_then(|(label, field)| {
+                            labels
+                                .iter()
+                                .position(|l| l == label)
+                                .map(|i| format!(" = strategy[{i}].{field}"))
+                        })
+                        .unwrap_or_default();
+                    format!("{base}{lineup}")
+                })
+                .collect();
+            bail!("unknown key(s) in spec: {}", described.join(", "));
+        }
         Ok(ScenarioSpec {
             name,
             mode,
@@ -496,6 +552,33 @@ fn parse_strategy(
             ensure!(
                 *eta > 1.0,
                 "strategy '{label}': Theorem 5 requires eta > 1"
+            );
+        }
+        StrategyKind::NoticeRebid { rebid_factor } => {
+            *rebid_factor = d.f64_or(&key("rebid_factor"), *rebid_factor)?;
+            ensure!(
+                rebid_factor.is_finite() && *rebid_factor >= 1.0,
+                "strategy '{label}': rebid_factor must be >= 1, got \
+                 {rebid_factor}"
+            );
+        }
+        StrategyKind::ElasticFleet { budget_rate } => {
+            *budget_rate = d.f64_or(&key("budget_rate"), *budget_rate)?;
+            ensure!(
+                budget_rate.is_finite() && *budget_rate > 0.0,
+                "strategy '{label}': budget_rate must be finite and > 0, \
+                 got {budget_rate}"
+            );
+        }
+        StrategyKind::DeadlineAware { escalate_threshold } => {
+            *escalate_threshold =
+                d.f64_or(&key("escalate_threshold"), *escalate_threshold)?;
+            ensure!(
+                escalate_threshold.is_finite()
+                    && *escalate_threshold > 0.0
+                    && *escalate_threshold <= 1.0,
+                "strategy '{label}': escalate_threshold must be in (0, 1], \
+                 got {escalate_threshold}"
             );
         }
         _ => {}
@@ -655,6 +738,47 @@ pub fn build_plan(
                 cap: 100_000,
             }
         }
+        StrategyKind::NoticeRebid { rebid_factor } => {
+            let pb = need_pb()?;
+            let plan = pb.optimal_one_bid().with_context(|| {
+                format!("notice-rebid base plan for '{label}'")
+            })?;
+            // rebids saturate at the support max, above which every
+            // worker is admitted at any realizable price
+            PlannedStrategy::NoticeRebid {
+                name: label.to_string(),
+                bids: BidVector::uniform(pb.n, plan.b),
+                j: plan.j,
+                rebid_factor: *rebid_factor,
+                bid_cap: pb.price.support().1,
+            }
+        }
+        StrategyKind::ElasticFleet { budget_rate } => {
+            // the exact E[1/y] table is the policy's resize oracle,
+            // computed once per grid point right here in prepare
+            let model = preemption_model(inp.preempt_q);
+            PlannedStrategy::ElasticFleet {
+                name: label.to_string(),
+                j: inp.j,
+                table: RecipTable::build(&model, inp.n),
+                budget_rate: *budget_rate,
+            }
+        }
+        StrategyKind::DeadlineAware { escalate_threshold } => {
+            let pb = need_pb()?;
+            let plan = pb.optimal_one_bid().with_context(|| {
+                format!("deadline-aware base plan for '{label}'")
+            })?;
+            PlannedStrategy::DeadlineAware {
+                name: label.to_string(),
+                bids: BidVector::uniform(pb.n, plan.b),
+                j: plan.j,
+                theta: pb.theta,
+                p_active: pb.price.cdf(plan.b),
+                slot_time: pb.runtime.expected(pb.n),
+                threshold: *escalate_threshold,
+            }
+        }
     })
 }
 
@@ -674,6 +798,8 @@ fn kind_bids(kind: &StrategyKind) -> bool {
             | StrategyKind::TwoBids { .. }
             | StrategyKind::BidFractions { .. }
             | StrategyKind::DynamicBids { .. }
+            | StrategyKind::NoticeRebid { .. }
+            | StrategyKind::DeadlineAware { .. }
     )
 }
 
@@ -991,8 +1117,9 @@ impl SpecScenario {
 
     /// Switch the replicate runner to the pre-engine reference loop —
     /// the oracle half of the engine-equivalence tests. Errors when the
-    /// spec configures `[overhead]`, which the reference loop cannot
-    /// model.
+    /// spec configures `[overhead]` or lines up an event-native policy
+    /// (`notice_rebid` / `elastic_fleet` / `deadline_aware`), neither
+    /// of which the reference loop can model.
     pub fn with_reference_runner(mut self) -> Result<Self> {
         ensure!(
             !self.spec.overhead.enabled(),
@@ -1000,6 +1127,17 @@ impl SpecScenario {
              cannot model it",
             self.spec.name
         );
+        if let Some(e) =
+            self.spec.strategies.iter().find(|e| e.kind.event_native())
+        {
+            bail!(
+                "spec '{}': strategy '{}' ({}) is event-native; the \
+                 reference lockstep loop cannot run it",
+                self.spec.name,
+                e.label,
+                e.kind.canonical_name()
+            );
+        }
         self.runner = RunnerKind::Reference;
         Ok(self)
     }
@@ -1332,28 +1470,35 @@ impl Scenario for SpecScenario {
                 .collect());
         }
         // one runner switch for both modes: the engine is the
-        // production path, the reference loop the equivalence oracle
-        // (overhead-incapable; ledger fields come back zero)
+        // production path (every plan becomes a Policy — classic kinds
+        // through the lockstep adapter, so digests are unchanged), the
+        // reference loop the equivalence oracle (overhead- and
+        // policy-incapable; ledger fields come back zero)
         let execute = |plan: &PlannedStrategy,
                        rng: &mut Rng|
          -> Result<EngineResult> {
-            let mut s = plan.build()?;
             match self.runner {
-                RunnerKind::Engine => run_synthetic_engine(
-                    s.as_mut(),
-                    ctx.bound,
-                    &ctx.prices,
-                    &ctx.params,
-                    rng,
-                ),
-                RunnerKind::Reference => run_synthetic_reference(
-                    s.as_mut(),
-                    ctx.bound,
-                    &ctx.prices,
-                    &ctx.params,
-                    rng,
-                )
-                .map(EngineResult::from),
+                RunnerKind::Engine => {
+                    let mut p = plan.build_policy()?;
+                    run_policy_engine(
+                        p.as_mut(),
+                        ctx.bound,
+                        &ctx.prices,
+                        &ctx.params,
+                        rng,
+                    )
+                }
+                RunnerKind::Reference => {
+                    let mut s = plan.build()?;
+                    run_synthetic_reference(
+                        s.as_mut(),
+                        ctx.bound,
+                        &ctx.prices,
+                        &ctx.params,
+                        rng,
+                    )
+                    .map(EngineResult::from)
+                }
             }
         };
         match self.spec.mode {
@@ -1710,6 +1855,30 @@ fn set_strategy(
             ensure!(v > 1.0, "'{path}' requires eta > 1, got {v}");
             *eta = v;
         }
+        (StrategyKind::NoticeRebid { rebid_factor }, "rebid_factor") => {
+            ensure!(
+                v.is_finite() && v >= 1.0,
+                "'{path}' must be >= 1, got {v}"
+            );
+            *rebid_factor = v;
+        }
+        (StrategyKind::ElasticFleet { budget_rate }, "budget_rate") => {
+            ensure!(
+                v.is_finite() && v > 0.0,
+                "'{path}' must be finite and > 0, got {v}"
+            );
+            *budget_rate = v;
+        }
+        (
+            StrategyKind::DeadlineAware { escalate_threshold },
+            "escalate_threshold",
+        ) => {
+            ensure!(
+                v.is_finite() && v > 0.0 && v <= 1.0,
+                "'{path}' must be in (0, 1], got {v}"
+            );
+            *escalate_threshold = v;
+        }
         _ => bail!(
             "axis path '{path}' does not match strategy '{}' (kind {})",
             e.label,
@@ -1791,6 +1960,42 @@ values = [0.3, 0.6]
         let bad = MINI.replace("[job]", "[job]\nepss = 0.2");
         let err = ScenarioSpec::from_str(&bad).unwrap_err().to_string();
         assert!(err.contains("job.epss"), "{err}");
+        // the enclosing table path is part of the message
+        assert!(err.contains("in table [job]"), "{err}");
+    }
+
+    /// A typo inside a `[strategy.<label>]` table is reported with the
+    /// enclosing table path *and* the lineup position, so a spec with
+    /// several entries pinpoints which one carries the stray key.
+    #[test]
+    fn strategy_table_unknown_keys_name_lineup_position() {
+        let text = r#"
+name = "typo"
+strategies = ["one_bid", "static", "rebid"]
+metrics = ["total_cost"]
+
+[job]
+n = 8
+
+[market]
+kind = "uniform"
+
+[strategy.static]
+kind = "static_workers"
+
+[strategy.rebid]
+kind = "notice_rebid"
+rebid_facto = 2.0
+"#;
+        let err = ScenarioSpec::from_str(text).unwrap_err().to_string();
+        assert!(err.contains("strategy.rebid.rebid_facto"), "{err}");
+        assert!(err.contains("in table [strategy.rebid]"), "{err}");
+        assert!(err.contains("strategy[2].rebid_facto"), "{err}");
+        // a stray key in an unrelated table gets the table, no index
+        let bad = MINI.replace("[runtime]", "[runtime]\nkindd = 1");
+        let err = ScenarioSpec::from_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("in table [runtime]"), "{err}");
+        assert!(!err.contains("strategy["), "{err}");
     }
 
     #[test]
@@ -1862,10 +2067,13 @@ kind = "uniform"
 kind = "two_bids"
 n1 = 8
 "#;
-        let err =
+        // load-time dry-run errors carry a "market, grid point" context;
+        // the root cause shows in the {:#} chain
+        let err = format!(
+            "{:#}",
             SpecScenario::new(ScenarioSpec::from_str(bad_split).unwrap())
                 .unwrap_err()
-                .to_string();
+        );
         assert!(err.contains("n1"), "{err}");
 
         // an axis that inverts the market support is caught at load too
@@ -1887,10 +2095,11 @@ hi = 1.0
 path = "market.hi"
 values = [0.1, 1.0]
 "#;
-        let err =
+        let err = format!(
+            "{:#}",
             SpecScenario::new(ScenarioSpec::from_str(inverted).unwrap())
                 .unwrap_err()
-                .to_string();
+        );
         assert!(err.contains("lo < hi"), "{err}");
     }
 
@@ -2151,6 +2360,147 @@ values = [0.0, 30.0]
         // recovery lag is billed only where the axis switches it on
         assert_eq!(serial.points[0].stats[idx("restart_time")].mean(), 0.0);
         assert!(serial.points[1].stats[idx("restart_time")].mean() > 0.0);
+    }
+
+    const POLICIES: &str = r#"
+name = "policies"
+strategies = ["rebid", "elastic", "deadline"]
+metrics = ["total_cost", "iters", "final_error", "preempt_events"]
+
+[job]
+n = 8
+eps = 0.35
+j = 10000
+preempt_q = 0.4
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+
+[strategy.rebid]
+kind = "notice_rebid"
+rebid_factor = 2.0
+
+[strategy.elastic]
+kind = "elastic_fleet"
+budget_rate = 1.2
+
+[strategy.deadline]
+kind = "deadline_aware"
+escalate_threshold = 0.6
+"#;
+
+    /// All three event-native policies are reachable from a TOML
+    /// lineup, plan through `build_plan` with their per-entry keys
+    /// applied, and sweep digest-identically across thread counts.
+    #[test]
+    fn policy_kinds_parse_plan_and_run_deterministically() {
+        let sc = SpecScenario::new(ScenarioSpec::from_str(POLICIES).unwrap())
+            .unwrap();
+        assert_eq!(sc.points(), 3);
+        let rebid = sc.prepare(0).unwrap();
+        match &rebid.plans()[0] {
+            PlannedStrategy::NoticeRebid {
+                rebid_factor,
+                bid_cap,
+                bids,
+                ..
+            } => {
+                assert_eq!(*rebid_factor, 2.0);
+                assert_eq!(*bid_cap, 1.0, "support max of Uniform[0.2, 1]");
+                assert!(bids.b1 > 0.2 && bids.b1 < 1.0);
+            }
+            other => panic!("expected a notice-rebid plan, got {other:?}"),
+        }
+        let elastic = sc.prepare(1).unwrap();
+        match &elastic.plans()[0] {
+            PlannedStrategy::ElasticFleet { table, budget_rate, .. } => {
+                assert_eq!(*budget_rate, 1.2);
+                assert_eq!(table.n_max(), 8);
+                // the cached table carries the entry's preemption model
+                let want = PreemptionModel::Bernoulli { q: 0.4 }
+                    .expected_recip(8);
+                assert_eq!(table.recip(8).to_bits(), want.to_bits());
+            }
+            other => panic!("expected an elastic-fleet plan, got {other:?}"),
+        }
+        let deadline = sc.prepare(2).unwrap();
+        match &deadline.plans()[0] {
+            PlannedStrategy::DeadlineAware {
+                threshold,
+                p_active,
+                theta,
+                slot_time,
+                ..
+            } => {
+                assert_eq!(*threshold, 0.6);
+                assert!(*p_active > 0.0 && *p_active <= 1.0);
+                assert!(theta.is_finite());
+                assert_eq!(*slot_time, 10.0);
+            }
+            other => panic!("expected a deadline-aware plan, got {other:?}"),
+        }
+        // event-native plans have no lockstep Strategy form...
+        assert!(rebid.plans()[0].build().is_err());
+        // ...but build as engine policies
+        assert_eq!(rebid.plans()[0].build_policy().unwrap().name(), "rebid");
+        // thread count is a pure throughput knob for reactive runs too
+        let base = SweepConfig { replicates: 2, seed: 11, threads: 1 };
+        let serial = run_sweep(&sc, &base).unwrap();
+        let par =
+            run_sweep(&sc, &SweepConfig { threads: 8, ..base }).unwrap();
+        assert_eq!(serial.digest(), par.digest());
+        // the reference lockstep loop refuses event-native lineups
+        let err = SpecScenario::new(ScenarioSpec::from_str(POLICIES).unwrap())
+            .unwrap()
+            .with_reference_runner()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("event-native"), "{err}");
+    }
+
+    #[test]
+    fn policy_kind_params_validated_at_check_time() {
+        for (needle, replacement) in [
+            ("rebid_factor = 2.0", "rebid_factor = 0.9"),
+            ("budget_rate = 1.2", "budget_rate = 0.0"),
+            ("budget_rate = 1.2", "budget_rate = -3.0"),
+            ("escalate_threshold = 0.6", "escalate_threshold = 1.5"),
+            ("escalate_threshold = 0.6", "escalate_threshold = 0.0"),
+        ] {
+            let bad = POLICIES.replace(needle, replacement);
+            assert!(
+                ScenarioSpec::from_str(&bad).is_err(),
+                "{replacement} should be rejected at parse/--check time"
+            );
+        }
+        // axis values over the policy knobs are range-checked at load
+        let lineup = "strategies = [\"rebid\", \"elastic\", \"deadline\"]";
+        let axis_table = "[axis.factor]\n\
+                          path = \"strategy.rebid.rebid_factor\"\n\
+                          values = [0.5, 2.0]\n\n[strategy.rebid]";
+        let with_axis = POLICIES
+            .replace(lineup, &format!("{lineup}\naxes = [\"factor\"]"))
+            .replace("[strategy.rebid]", axis_table);
+        let spec = ScenarioSpec::from_str(&with_axis).unwrap();
+        // the range failure sits under the "market, grid point" context:
+        // assert on the {:#} chain, not the outermost message alone
+        let err = format!("{:#}", SpecScenario::new(spec).unwrap_err());
+        assert!(err.contains(">= 1"), "{err}");
+        // bidding policy kinds are rejected on fixed-price markets
+        let fixed = POLICIES.replace(
+            "kind = \"uniform\"\nlo = 0.2\nhi = 1.0",
+            "kind = \"fixed\"\nprice = 0.1",
+        );
+        let err = SpecScenario::new(ScenarioSpec::from_str(&fixed).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fixed-price"), "{err}");
     }
 
     #[test]

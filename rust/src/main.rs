@@ -6,12 +6,14 @@
 //! volatile-sgd simulate    [--config FILE] [--strategy one_bid|two_bids|...]
 //!                          [--checkpoint-every N] [--checkpoint-cost S]
 //!                          [--restart-delay S] [--lost-work]
+//!                          [--rebid-factor X] [--budget-rate X]
+//!                          [--escalate-threshold X]
 //! volatile-sgd optimal-bid [--market uniform|gaussian] [--n 8] [--n1 4]
 //!                          [--eps 0.35] [--theta 120000] [--two-bids]
 //! volatile-sgd plan-workers [--eps 0.1] [--q 0.5] [--chi 1.0] [--theta-iters 40000]
 //! volatile-sgd fig2|fig3|fig4|fig5  [--out out/] [--threads N]
 //! volatile-sgd sweep       [--spec FILE | --preset fig2..fig5|checkpoint_grid
-//!                           | --fig 2|3|4|5]
+//!                           |adaptive_grid|notice_grid | --fig 2|3|4|5]
 //!                          [--threads N] [--replicates R] [--seed S] [--j J]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
 //! ```
@@ -63,18 +65,20 @@ fn print_help() {
          subcommands:\n  \
          info          show artifacts / platform\n  \
          train         real PJRT training on the synthetic dataset\n  \
-         simulate      run one strategy simulation from a config (the\n                \
-         [overhead] checkpoint/restart model via the event\n                \
-         engine; --checkpoint-every/--checkpoint-cost/\n                \
-         --restart-delay/--lost-work override it)\n  \
+         simulate      run one strategy or event-reactive policy from a\n                \
+         config via the event engine ([overhead] checkpoint/\n                \
+         restart model; --checkpoint-every/--checkpoint-cost/\n                \
+         --restart-delay/--lost-work override it; policy knobs:\n                \
+         --rebid-factor/--budget-rate/--escalate-threshold)\n  \
          optimal-bid   Theorem 2 / Theorem 3 bid calculator\n  \
          plan-workers  Theorem 4 / Theorem 5 provisioning planner\n  \
          fig2..fig5    regenerate the paper's figures (CSV + summary)\n  \
          sweep         replicated Monte-Carlo sweep of a declarative\n                \
-         scenario spec (--spec file.toml | --preset fig2..fig5\n                \
-         | --fig N; --out results.csv / --json for machine-readable\n                \
-         output; --check validates without running; deterministic\n                \
-         for a fixed --seed at any --threads)\n"
+         scenario spec (--spec file.toml | --preset fig2..fig5,\n                \
+         checkpoint_grid, adaptive_grid, notice_grid | --fig N;\n                \
+         --out results.csv / --json for machine-readable output;\n                \
+         --check validates without running; deterministic for a\n                \
+         fixed --seed at any --threads)\n"
     );
 }
 
@@ -183,6 +187,26 @@ fn describe_plan(plan: &PlannedStrategy) {
         PlannedStrategy::DynamicWorkers { name, eta, j, .. } => {
             println!("plan {name}: eta={eta}  J'={j}")
         }
+        PlannedStrategy::NoticeRebid {
+            name, bids, j, rebid_factor, ..
+        } => println!(
+            "plan {name}: J={j}  base bid {:.4}  rebid x{rebid_factor} on \
+             preemption",
+            bids.b1
+        ),
+        PlannedStrategy::ElasticFleet { name, j, table, budget_rate } => {
+            println!(
+                "plan {name}: J={j}  fleet 1..={}  budget \
+                 ${budget_rate}/unit-time",
+                table.n_max()
+            )
+        }
+        PlannedStrategy::DeadlineAware { name, bids, j, threshold, .. } => {
+            println!(
+                "plan {name}: J={j}  bid {:.4}  escalate below {threshold}",
+                bids.b1
+            )
+        }
     }
 }
 
@@ -206,6 +230,48 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             _ => bail!(
                 "--n1 only applies to two_bids / bid_fractions / dynamic"
             ),
+        }
+    }
+    // event-native policy knobs (DESIGN.md §6)
+    if let Some(v) = args.f64_opt("rebid-factor")? {
+        match &mut kind {
+            StrategyKind::NoticeRebid { rebid_factor }
+                if v.is_finite() && v >= 1.0 =>
+            {
+                *rebid_factor = v;
+            }
+            StrategyKind::NoticeRebid { .. } => {
+                bail!("--rebid-factor must be finite and >= 1, got {v}")
+            }
+            _ => bail!("--rebid-factor only applies to notice_rebid"),
+        }
+    }
+    if let Some(v) = args.f64_opt("budget-rate")? {
+        match &mut kind {
+            StrategyKind::ElasticFleet { budget_rate }
+                if v.is_finite() && v > 0.0 =>
+            {
+                *budget_rate = v;
+            }
+            StrategyKind::ElasticFleet { .. } => {
+                bail!("--budget-rate must be finite and > 0, got {v}")
+            }
+            _ => bail!("--budget-rate only applies to elastic_fleet"),
+        }
+    }
+    if let Some(v) = args.f64_opt("escalate-threshold")? {
+        match &mut kind {
+            StrategyKind::DeadlineAware { escalate_threshold }
+                if v.is_finite() && v > 0.0 && v <= 1.0 =>
+            {
+                *escalate_threshold = v;
+            }
+            StrategyKind::DeadlineAware { .. } => {
+                bail!("--escalate-threshold must be in (0, 1], got {v}")
+            }
+            _ => {
+                bail!("--escalate-threshold only applies to deadline_aware")
+            }
         }
     }
     let name = kind.canonical_name();
@@ -241,7 +307,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         },
     )?;
     describe_plan(&plan);
-    let mut strategy = plan.build()?;
+    // every plan runs as an engine Policy: classic kinds through the
+    // lockstep adapter (bit-identical to the old path), event-native
+    // kinds (notice_rebid / elastic_fleet / deadline_aware) directly
+    let mut policy = plan.build_policy()?;
     // [overhead] from the config, with CLI overrides, executed by the
     // event engine; without either this is exactly the lockstep run
     let mut overhead = cfg.overhead;
@@ -263,8 +332,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut params = exp::RunParams::lockstep(cfg.runtime, cap);
     params.overhead = overhead;
     let mut rng = Rng::new(cfg.seed);
-    let result = exp::run_synthetic_engine(
-        strategy.as_mut(),
+    let result = exp::run_policy_engine(
+        policy.as_mut(),
         cfg.bound,
         &prices,
         &params,

@@ -11,6 +11,26 @@
 //! Provides exact `E[1/y]` evaluators (log-space binomial pmf; validated
 //! against the Chao–Strawderman closed form for `E[1/(z+1)]` and against
 //! Monte-Carlo in the tests) plus the Jensen penalty of Remark 1.
+//!
+//! # Example
+//!
+//! The exact statistics behind Theorem 4 / Lemma 3, and the memoised
+//! table sweeps and budget policies consult:
+//!
+//! ```
+//! use volatile_sgd::preempt::{PreemptionModel, RecipTable};
+//!
+//! let m = PreemptionModel::Bernoulli { q: 0.5 };
+//! assert_eq!(m.p_zero(4), 0.0625);        // all four preempted
+//! assert_eq!(m.mean_active(4), 2.0);      // unconditional E[y]
+//! let table = RecipTable::build(&m, 8);   // E[1/y | y > 0], n = 1..=8
+//! assert_eq!(
+//!     table.recip(4).to_bits(),
+//!     m.expected_recip(4).to_bits(),
+//! );
+//! // more provisioned workers -> better conditional averaging
+//! assert!(table.recip(8) < table.recip(2));
+//! ```
 
 use crate::util::rng::Rng;
 use crate::util::{harmonic, ln_binomial};
@@ -61,6 +81,19 @@ impl PreemptionModel {
             PreemptionModel::None => 0.0,
             PreemptionModel::Bernoulli { q } => q.powi(n as i32),
             PreemptionModel::Uniform => 0.0,
+        }
+    }
+
+    /// Unconditional mean active count E[y_j] (zero slots included) —
+    /// the per-unit-time billing rate a fleet of `n` actually incurs,
+    /// which is what budget-constrained policies size against
+    /// (`ElasticFleet` in `sim::policy`).
+    pub fn mean_active(&self, n: usize) -> f64 {
+        match self {
+            PreemptionModel::None => n as f64,
+            PreemptionModel::Bernoulli { q } => n as f64 * (1.0 - q),
+            // y is uniform on {1..n}: never zero
+            PreemptionModel::Uniform => (n as f64 + 1.0) / 2.0,
         }
     }
 
@@ -284,9 +317,10 @@ mod tests {
             let q = g.f64_in(0.05, 0.95);
             let m = PreemptionModel::Bernoulli { q };
             close(m.p_zero(n), q.powi(n as i32), 1e-12, "p_zero")?;
-            // unconditional mean: E[y * 1{y>0}] = n(1-q)
+            // unconditional mean: E[y * 1{y>0}] = n(1-q) = mean_active
             let uncond = m.expected_active(n) * (1.0 - m.p_zero(n));
-            close(uncond, n as f64 * (1.0 - q), 1e-9, "unconditional mean")
+            close(uncond, n as f64 * (1.0 - q), 1e-9, "unconditional mean")?;
+            close(m.mean_active(n), n as f64 * (1.0 - q), 1e-12, "mean_active")
         });
     }
 

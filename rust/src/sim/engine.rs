@@ -29,6 +29,45 @@
 //! after the redesign. `Scheduler::run_reference` keeps the verbatim
 //! pre-engine loop as the oracle this equivalence is tested against
 //! (`tests/integration_engine.rs`).
+//!
+//! # Example
+//!
+//! A classic strategy on the engine via the lockstep adapter, with an
+//! [`EventLog`] observing the run:
+//!
+//! ```
+//! use volatile_sgd::coordinator::backend::SyntheticBackend;
+//! use volatile_sgd::coordinator::strategy::FixedBids;
+//! use volatile_sgd::market::BidVector;
+//! use volatile_sgd::sim::{
+//!     Engine, EngineParams, EventLog, LockstepPolicy, PriceSource,
+//! };
+//! use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
+//! use volatile_sgd::theory::runtime_model::RuntimeModel;
+//! use volatile_sgd::util::rng::Rng;
+//!
+//! let mut strategy = FixedBids::new("demo", BidVector::uniform(2, 1.0), 20);
+//! let mut backend = SyntheticBackend::new(ErrorBound::new(SgdHyper::paper_cnn()));
+//! let params = EngineParams {
+//!     runtime: RuntimeModel::Deterministic { r: 10.0 },
+//!     ..EngineParams::default()
+//! };
+//! let mut log = EventLog::new();
+//! let result = Engine::new(params)
+//!     .run(
+//!         &mut LockstepPolicy(&mut strategy),
+//!         &mut backend,
+//!         &PriceSource::Fixed(0.5),
+//!         &mut Rng::new(1),
+//!         &mut [&mut log],
+//!     )
+//!     .unwrap();
+//! assert_eq!(result.iters, 20);
+//! assert_eq!(
+//!     log.kinds().iter().filter(|k| **k == "iteration_done").count(),
+//!     20,
+//! );
+//! ```
 
 use anyhow::{ensure, Result};
 

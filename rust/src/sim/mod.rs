@@ -1,9 +1,11 @@
 //! Virtual-clock simulation substrate: price sources over time, the
-//! cost meter, and the discrete-event engine driving a run as typed
-//! events through policies and observers (DESIGN.md §5).
+//! cost meter, the discrete-event engine driving a run as typed events
+//! through policies and observers (DESIGN.md §5), and the suite of
+//! event-reactive adaptive policies built on it (DESIGN.md §6).
 
 pub mod cost;
 pub mod engine;
+pub mod policy;
 pub mod price_source;
 
 pub use cost::CostMeter;
@@ -11,4 +13,5 @@ pub use engine::{
     Engine, EngineParams, EngineResult, EngineState, Event, EventLog,
     LockstepPolicy, Observer, OverheadModel, Policy, SeriesRecorder,
 };
+pub use policy::{DeadlineAware, ElasticFleet, NoticeRebid};
 pub use price_source::PriceSource;

@@ -1,0 +1,602 @@
+//! Event-reactive adaptive policies: first-class [`Policy`] impls that
+//! *use* the engine's event stream instead of ignoring it (DESIGN.md §6).
+//!
+//! The paper's Sec. V strategies fix their bids and fleet plans before
+//! the run starts; every classic `StrategyKind` therefore runs through
+//! the blanket [`LockstepPolicy`](super::LockstepPolicy) wrapper and
+//! reacts only to completed iterations. These three policies implement
+//! [`Policy`] directly and react to the events the lockstep API could
+//! not express:
+//!
+//! * [`NoticeRebid`] — on [`Event::WorkerPreempted`], re-enters the
+//!   market with its bids bumped by a configurable factor (the engine's
+//!   `[overhead]` notice window emergency-checkpoints first, so no work
+//!   is lost when the notice covers the checkpoint cost) — the
+//!   Parcae-style proactive reaction to preemption notices;
+//! * [`ElasticFleet`] — on [`Event::PriceRevision`], resizes its active
+//!   worker target to keep the expected spend rate under a budget,
+//!   picking the fleet size with the best exact `E[1/y | y > 0]` from a
+//!   precomputed [`RecipTable`] — Scavenger-style cost/progress
+//!   co-optimisation, online;
+//! * [`DeadlineAware`] — tracks remaining iterations against the
+//!   deadline horizon and escalates to on-demand (bid = ∞, every worker
+//!   active at any price) when its completion proxy drops below a
+//!   threshold — the paper's Sec. V-B dynamic strategy generalised to
+//!   event time.
+//!
+//! **RNG-consumption contract (DESIGN.md §6).** `Policy::on_event` must
+//! not draw randomness; all three policies make *deterministic*
+//! decisions from the event stream and confine their stochastic choices
+//! to `decide` (where [`ElasticFleet`] draws its preemption subset,
+//! exactly like `StaticWorkers`). That is what keeps sweep digests
+//! bit-identical at any thread count even for reactive runs.
+//!
+//! # Example
+//!
+//! An [`ElasticFleet`] retargets as soon as a price revision arrives —
+//! no simulation required to see the arithmetic:
+//!
+//! ```
+//! use volatile_sgd::preempt::{PreemptionModel, RecipTable};
+//! use volatile_sgd::sim::policy::ElasticFleet;
+//! use volatile_sgd::sim::{Event, EngineState, Policy};
+//!
+//! let model = PreemptionModel::Bernoulli { q: 0.5 };
+//! let table = RecipTable::build(&model, 16);
+//! // spend rate per worker = (1 - q) * price = 0.125; budget 0.6
+//! let mut fleet = ElasticFleet::new("elastic", 100, table, 0.6);
+//! let state = EngineState {
+//!     iter: 0, target: 100, clock: 0.0, cost: 0.0, idle_time: 0.0,
+//!     error: 1.0, accuracy: 0.0, active: 0, price: 0.25,
+//! };
+//! fleet.on_event(&Event::PriceRevision { price: 0.25 }, &state).unwrap();
+//! assert_eq!(fleet.target(), 4); // 4 * 0.125 = 0.5 <= 0.6 < 5 * 0.125
+//! ```
+
+use anyhow::Result;
+
+use crate::coordinator::strategy::ActiveDecision;
+use crate::market::BidVector;
+use crate::preempt::{PreemptionModel, RecipTable};
+use crate::util::rng::Rng;
+
+use super::engine::{EngineState, Event, Policy};
+
+// ===================================================================
+// NoticeRebid
+// ===================================================================
+
+/// Re-enter the market at a higher bid after every full interruption.
+///
+/// Starts from a fixed bid vector (typically the Theorem-2 optimal
+/// one-bid plan). On [`Event::WorkerPreempted`] — the active set fell
+/// to zero after running — both bid groups are multiplied by
+/// `rebid_factor` (capped at `bid_cap`, normally the price-support
+/// maximum, above which a bid keeps every worker active at any
+/// realizable price). Workers always pay the *spot* price, never the
+/// bid, so rebidding trades preemption frequency against admission at
+/// higher prices.
+///
+/// Pair it with an `[overhead]` table whose `preempt_notice_s` covers
+/// `checkpoint_cost_s`: the engine then emergency-checkpoints inside
+/// the notice window ([`Event::CheckpointDone`] fires *before* the
+/// `WorkerPreempted` that triggers the rebid), so no work is lost while
+/// the policy repositions itself.
+pub struct NoticeRebid {
+    label: String,
+    bids: BidVector,
+    j: u64,
+    rebid_factor: f64,
+    bid_cap: f64,
+    rebids: u64,
+}
+
+impl NoticeRebid {
+    /// `bids` is the starting vector; `rebid_factor >= 1` scales both
+    /// groups on every preemption; `bid_cap` saturates the growth.
+    pub fn new(
+        label: impl Into<String>,
+        bids: BidVector,
+        j: u64,
+        rebid_factor: f64,
+        bid_cap: f64,
+    ) -> Self {
+        assert!(rebid_factor >= 1.0, "rebid_factor must be >= 1");
+        assert!(bid_cap > 0.0, "bid_cap must be > 0");
+        NoticeRebid {
+            label: label.into(),
+            bids,
+            j,
+            rebid_factor,
+            bid_cap,
+            rebids: 0,
+        }
+    }
+
+    /// Current (b1, b2) — grows monotonically, saturating at the cap.
+    pub fn current_bids(&self) -> (f64, f64) {
+        (self.bids.b1, self.bids.b2)
+    }
+
+    /// Number of preemption-triggered rebids so far.
+    pub fn rebids(&self) -> u64 {
+        self.rebids
+    }
+}
+
+impl Policy for NoticeRebid {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn max_workers(&self) -> usize {
+        self.bids.n()
+    }
+
+    fn decide(&mut self, price: f64, _rng: &mut Rng) -> ActiveDecision {
+        ActiveDecision { active: self.bids.active_set(price), price }
+    }
+
+    fn on_event(&mut self, ev: &Event, _state: &EngineState) -> Result<()> {
+        if matches!(ev, Event::WorkerPreempted { .. }) {
+            let b1 = (self.bids.b1 * self.rebid_factor).min(self.bid_cap);
+            let b2 = (self.bids.b2 * self.rebid_factor).min(self.bid_cap);
+            self.bids =
+                BidVector::two_group(self.bids.n(), self.bids.n1, b1, b2);
+            self.rebids += 1;
+        }
+        Ok(())
+    }
+}
+
+// ===================================================================
+// ElasticFleet
+// ===================================================================
+
+/// Resize the provisioned fleet on every price revision to keep the
+/// expected spend rate under a budget.
+///
+/// The platform still preempts each provisioned worker per the
+/// preemption model (the Sec. V setting); what the policy controls is
+/// the provisioning *target*. At each [`Event::PriceRevision`] it
+/// scans fleet sizes `1..=n_max` and keeps the one with the smallest
+/// exact `E[1/y | y > 0]` (the Theorem-1 convergence driver, read from
+/// the precomputed [`RecipTable`]) among those whose expected spend
+/// rate — unconditional mean active workers times the prevailing price
+/// — fits the budget. A fleet of 1 is always admissible: the job keeps
+/// making progress even when the budget is momentarily blown, it just
+/// refuses to scale.
+///
+/// Unlike `StaticWorkers` (which carries its own `unit_price`), the
+/// fleet is billed at the *prevailing market price* — that is the
+/// signal it reacts to. On a fixed-price market the target moves only
+/// when an axis or override moves the price or budget.
+pub struct ElasticFleet {
+    label: String,
+    j: u64,
+    model: PreemptionModel,
+    table: RecipTable,
+    budget_rate: f64,
+    n_target: usize,
+}
+
+impl ElasticFleet {
+    /// `table` caps the fleet at `table.n_max()` and carries the
+    /// preemption model; `budget_rate` is $/unit-time.
+    pub fn new(
+        label: impl Into<String>,
+        j: u64,
+        table: RecipTable,
+        budget_rate: f64,
+    ) -> Self {
+        assert!(
+            budget_rate.is_finite() && budget_rate > 0.0,
+            "budget_rate must be finite and > 0"
+        );
+        ElasticFleet {
+            label: label.into(),
+            j,
+            model: table.model().clone(),
+            table,
+            budget_rate,
+            n_target: 1,
+        }
+    }
+
+    /// The current provisioning target (updated at each price revision;
+    /// the engine emits `PriceRevision` before calling `decide`, so the
+    /// target always reflects the slot's price).
+    pub fn target(&self) -> usize {
+        self.n_target
+    }
+
+    /// The budget-feasible fleet size with the best exact `E[1/y]`:
+    /// the resize arithmetic the unit tests pin against the table.
+    fn retarget(&mut self, price: f64) {
+        let mut best = 1usize;
+        let mut best_recip = self.table.recip(1);
+        for n in 2..=self.table.n_max() {
+            let spend = self.model.mean_active(n) * price;
+            if spend > self.budget_rate {
+                continue;
+            }
+            let recip = self.table.recip(n);
+            if recip < best_recip {
+                best = n;
+                best_recip = recip;
+            }
+        }
+        self.n_target = best;
+    }
+}
+
+impl Policy for ElasticFleet {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn max_workers(&self) -> usize {
+        self.table.n_max()
+    }
+
+    fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision {
+        ActiveDecision {
+            active: self.model.draw_active(self.n_target, rng),
+            price,
+        }
+    }
+
+    fn on_event(&mut self, ev: &Event, _state: &EngineState) -> Result<()> {
+        if let Event::PriceRevision { price } = ev {
+            self.retarget(*price);
+        }
+        Ok(())
+    }
+}
+
+// ===================================================================
+// DeadlineAware
+// ===================================================================
+
+/// Escalate to on-demand when finishing by the deadline looks unlikely.
+///
+/// Runs a fixed bid vector (typically the Theorem-2 plan) and, on every
+/// [`Event::PriceRevision`] and [`Event::IterationDone`], compares the
+/// time left before `theta` against the Lemma-1 estimate of the time
+/// still needed, `remaining_j * E[R(n)] / F(b)`. The ratio of the two,
+/// clamped to `[0, 1]`, is a deterministic completion proxy; when it
+/// drops below `threshold` the policy escalates — bids become infinite,
+/// every worker is admitted at any price (the repo's "bid above the
+/// cap" on-demand convention: workers still pay the spot price). The
+/// escalation is one-way, mirroring the paper's Sec. V-B dynamic
+/// strategy, which only ever adds capacity as the deadline nears.
+pub struct DeadlineAware {
+    label: String,
+    bids: BidVector,
+    j: u64,
+    theta: f64,
+    p_active: f64,
+    slot_time: f64,
+    threshold: f64,
+    escalated: bool,
+}
+
+impl DeadlineAware {
+    /// `p_active` is `F(b1)` of the starting bids (the per-slot
+    /// iteration probability), `slot_time` the expected iteration
+    /// runtime `E[R(n)]`, `threshold` the completion-proxy floor in
+    /// `(0, 1]`.
+    pub fn new(
+        label: impl Into<String>,
+        bids: BidVector,
+        j: u64,
+        theta: f64,
+        p_active: f64,
+        slot_time: f64,
+        threshold: f64,
+    ) -> Self {
+        assert!(
+            threshold > 0.0 && threshold <= 1.0,
+            "threshold must be in (0, 1]"
+        );
+        assert!(slot_time > 0.0, "slot_time must be > 0");
+        DeadlineAware {
+            label: label.into(),
+            bids,
+            j,
+            theta,
+            p_active: p_active.clamp(1e-9, 1.0),
+            slot_time,
+            threshold,
+            escalated: false,
+        }
+    }
+
+    /// True once the policy has switched to on-demand.
+    pub fn escalated(&self) -> bool {
+        self.escalated
+    }
+
+    /// The deterministic completion proxy at (iter, clock):
+    /// `min(1, time_left / est_time_needed)`.
+    pub fn completion_proxy(&self, iter: u64, clock: f64) -> f64 {
+        let remaining = self.j.saturating_sub(iter);
+        if remaining == 0 {
+            return 1.0;
+        }
+        let p = if self.escalated { 1.0 } else { self.p_active };
+        let needed = remaining as f64 * self.slot_time / p;
+        ((self.theta - clock) / needed).clamp(0.0, 1.0)
+    }
+}
+
+impl Policy for DeadlineAware {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn max_workers(&self) -> usize {
+        self.bids.n()
+    }
+
+    fn decide(&mut self, price: f64, _rng: &mut Rng) -> ActiveDecision {
+        let active = if self.escalated {
+            (0..self.bids.n()).collect()
+        } else {
+            self.bids.active_set(price)
+        };
+        ActiveDecision { active, price }
+    }
+
+    fn on_event(&mut self, ev: &Event, state: &EngineState) -> Result<()> {
+        if self.escalated {
+            return Ok(());
+        }
+        if matches!(ev, Event::PriceRevision { .. } | Event::IterationDone)
+            && self.completion_proxy(state.iter, state.clock)
+                < self.threshold
+        {
+            self.escalated = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SyntheticBackend;
+    use crate::market::SpotTrace;
+    use crate::sim::{
+        Engine, EngineParams, EventLog, OverheadModel, PriceSource,
+    };
+    use crate::theory::bounds::{ErrorBound, SgdHyper};
+    use crate::theory::runtime_model::RuntimeModel;
+
+    fn bound() -> ErrorBound {
+        ErrorBound::new(SgdHyper::paper_cnn())
+    }
+
+    fn state(iter: u64, clock: f64) -> EngineState {
+        EngineState {
+            iter,
+            target: 0,
+            clock,
+            cost: 0.0,
+            idle_time: 0.0,
+            error: 1.0,
+            accuracy: 0.0,
+            active: 0,
+            price: 0.5,
+        }
+    }
+
+    fn params(overhead: OverheadModel) -> EngineParams {
+        EngineParams {
+            runtime: RuntimeModel::Deterministic { r: 10.0 },
+            idle_step: 4.0,
+            theta_cap: f64::INFINITY,
+            stride: 1,
+            max_slots: 10_000,
+            overhead,
+        }
+    }
+
+    // ------------------------------------------------- NoticeRebid
+
+    #[test]
+    fn notice_rebid_bumps_and_saturates() {
+        let mut p = NoticeRebid::new(
+            "rebid",
+            BidVector::uniform(4, 0.5),
+            100,
+            2.0,
+            1.0,
+        );
+        assert_eq!(p.current_bids(), (0.5, 0.5));
+        let ev = Event::WorkerPreempted { notice: 0.0 };
+        p.on_event(&ev, &state(10, 100.0)).unwrap();
+        assert_eq!(p.current_bids(), (1.0, 1.0));
+        p.on_event(&ev, &state(20, 200.0)).unwrap();
+        assert_eq!(p.current_bids(), (1.0, 1.0)); // capped
+        assert_eq!(p.rebids(), 2);
+        // non-preemption events never move the bids
+        p.on_event(&Event::IterationDone, &state(21, 210.0)).unwrap();
+        assert_eq!(p.rebids(), 2);
+    }
+
+    /// On a crafted trace (price spikes above the initial bid, then
+    /// falls back), the engine's notice window emergency-checkpoints
+    /// *before* the preemption event that triggers the rebid, and the
+    /// bumped bid survives the next spike: the rebid ordering contract.
+    #[test]
+    fn notice_window_checkpoint_precedes_rebid() {
+        // bid 0.5; spike to 0.8 at t in [40, 60): one full interruption
+        // for the original bid, none after the rebid lifts b to 1.0
+        let trace = SpotTrace::new(
+            vec![0.0, 40.0, 60.0, 200.0, 260.0],
+            vec![0.3, 0.8, 0.3, 0.8, 0.3],
+        )
+        .unwrap();
+        let ov = OverheadModel {
+            checkpoint_every_iters: 0,
+            checkpoint_cost_s: 5.0,
+            restart_delay_s: 0.0,
+            lost_work_on_preempt: true,
+            preempt_notice_s: 30.0, // covers the checkpoint cost
+        };
+        let mut policy = NoticeRebid::new(
+            "rebid",
+            BidVector::uniform(1, 0.5),
+            40,
+            2.0,
+            1.0,
+        );
+        let mut b = SyntheticBackend::new(bound());
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut log = EventLog::new();
+        let r = Engine::new(params(ov))
+            .run(
+                &mut policy,
+                &mut b,
+                &PriceSource::Trace(trace),
+                &mut rng,
+                &mut [&mut log],
+            )
+            .unwrap();
+        assert_eq!(r.iters, 40);
+        assert_eq!(r.preemptions, 1, "the rebid prevents the second spike");
+        assert_eq!(policy.rebids(), 1);
+        assert_eq!(policy.current_bids(), (1.0, 1.0));
+        assert_eq!(r.lost_iters, 0, "notice covered the checkpoint");
+        let kinds = log.kinds();
+        let ck = kinds.iter().position(|k| *k == "checkpoint_done").unwrap();
+        let pre = kinds.iter().position(|k| *k == "worker_preempted").unwrap();
+        assert!(ck < pre, "emergency save precedes the rebid: {kinds:?}");
+        // during the second spike the (rebid) worker keeps running
+        assert_eq!(
+            kinds.iter().filter(|k| **k == "worker_preempted").count(),
+            1
+        );
+    }
+
+    // ------------------------------------------------- ElasticFleet
+
+    #[test]
+    fn elastic_fleet_resize_matches_recip_table() {
+        let model = PreemptionModel::Bernoulli { q: 0.5 };
+        let table = RecipTable::build(&model, 16);
+        let mut p = ElasticFleet::new("elastic", 100, table, 0.6);
+        // per-worker spend at price 0.25: (1 - 0.5) * 0.25 = 0.125
+        p.on_event(&Event::PriceRevision { price: 0.25 }, &state(0, 0.0))
+            .unwrap();
+        assert_eq!(p.target(), 4, "4 * 0.125 = 0.5 <= 0.6 < 5 * 0.125");
+        // the chosen n is the feasible argmin of the exact E[1/y] table
+        for n in 1..=16usize {
+            let feasible = model.mean_active(n) * 0.25 <= 0.6;
+            if feasible {
+                assert!(
+                    model.expected_recip(p.target())
+                        <= model.expected_recip(n) + 1e-15,
+                    "n={n} beats the chosen target"
+                );
+            }
+        }
+        // cheaper prices admit the full fleet; dearer ones shrink to 1
+        p.on_event(&Event::PriceRevision { price: 0.01 }, &state(0, 0.0))
+            .unwrap();
+        assert_eq!(p.target(), 16);
+        p.on_event(&Event::PriceRevision { price: 10.0 }, &state(0, 0.0))
+            .unwrap();
+        assert_eq!(p.target(), 1, "floor: never stop making progress");
+    }
+
+    #[test]
+    fn elastic_fleet_draws_within_target() {
+        let model = PreemptionModel::Bernoulli { q: 0.3 };
+        let table = RecipTable::build(&model, 8);
+        let mut p = ElasticFleet::new("elastic", 100, table, 0.7);
+        p.on_event(&Event::PriceRevision { price: 0.25 }, &state(0, 0.0))
+            .unwrap();
+        let target = p.target(); // 0.7 * 0.25 = 0.175/worker -> n = 4
+        assert_eq!(target, 4);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..200 {
+            let d = p.decide(0.25, &mut rng);
+            assert!(d.active.len() <= target);
+            assert!(d.active.iter().all(|&w| w < target));
+            assert_eq!(d.price, 0.25, "billed at the market price");
+        }
+    }
+
+    // ------------------------------------------------ DeadlineAware
+
+    #[test]
+    fn deadline_aware_escalates_at_threshold_crossing() {
+        // 100 iters at 10 s, F(b) = 0.5: needs 2000 s of slack
+        let mk = || {
+            DeadlineAware::new(
+                "deadline",
+                BidVector::uniform(2, 0.5),
+                100,
+                10_000.0,
+                0.5,
+                10.0,
+                0.5,
+            )
+        };
+        let mut p = mk();
+        // comfortable: 50 left -> needed 1000 s, 5000 s remain
+        p.on_event(&Event::IterationDone, &state(50, 5_000.0)).unwrap();
+        assert!(!p.escalated());
+        // proxy exactly at the threshold does not trip (strictly below)
+        let mut q = mk();
+        q.on_event(&Event::IterationDone, &state(50, 9_500.0)).unwrap();
+        assert!((q.completion_proxy(50, 9_500.0) - 0.5).abs() < 1e-12);
+        assert!(!q.escalated());
+        // 50 left, 400 s remain: proxy 0.4 < 0.5 -> escalate
+        p.on_event(&Event::PriceRevision { price: 0.9 }, &state(50, 9_600.0))
+            .unwrap();
+        assert!(p.escalated());
+        // escalated: every worker active at any price
+        let mut rng = crate::util::rng::Rng::new(1);
+        let d = p.decide(100.0, &mut rng);
+        assert_eq!(d.active.len(), 2);
+        // one-way: a later comfortable state does not de-escalate
+        p.on_event(&Event::IterationDone, &state(99, 9_601.0)).unwrap();
+        assert!(p.escalated());
+    }
+
+    #[test]
+    fn deadline_aware_proxy_accounts_for_escalation() {
+        let mut p = DeadlineAware::new(
+            "deadline",
+            BidVector::uniform(2, 0.5),
+            100,
+            1_000.0,
+            0.5,
+            10.0,
+            0.5,
+        );
+        // pre-escalation the estimate divides by F(b)
+        assert!((p.completion_proxy(0, 0.0) - 0.5).abs() < 1e-12);
+        p.on_event(&Event::PriceRevision { price: 0.6 }, &state(0, 200.0))
+            .unwrap();
+        assert!(p.escalated());
+        // post-escalation every slot runs: needed halves
+        assert!((p.completion_proxy(0, 0.0) - 1.0).abs() < 1e-12);
+        assert_eq!(p.completion_proxy(100, 999.0), 1.0, "done is done");
+    }
+}

@@ -20,6 +20,29 @@
 //!
 //! Seeding guarantee: `(seed, grid, replicates)` fully determine the
 //! results; `--threads` is a pure throughput knob. See DESIGN.md §3.
+//!
+//! # Example
+//!
+//! The two building blocks scenarios see — grids and pure replicate
+//! streams:
+//!
+//! ```
+//! use volatile_sgd::sweep::Grid;
+//! use volatile_sgd::util::rng::Rng;
+//!
+//! let grid = Grid::new()
+//!     .axis("n", vec![2.0, 4.0])
+//!     .axis("q", vec![0.1, 0.5]);
+//! assert_eq!(grid.num_points(), 4);
+//! assert_eq!(grid.point(3), vec![4.0, 0.5]); // first axis slowest
+//! assert_eq!(grid.label(3), "n=4 q=0.5");
+//!
+//! // a replicate's generator is a pure function of (seed, stream id):
+//! // no parent state, no ordering dependence — thread-safe by value
+//! let a = Rng::stream(2020, 3).next_u64();
+//! assert_eq!(a, Rng::stream(2020, 3).next_u64());
+//! assert_ne!(a, Rng::stream(2020, 4).next_u64());
+//! ```
 
 pub mod grid;
 pub mod planner;

@@ -76,6 +76,63 @@ fn simulate_one_bid_writes_series() {
     assert!(text.lines().count() > 10);
 }
 
+/// The event-native policies run from the `simulate` surface with
+/// their dedicated flags (DESIGN.md §6).
+#[test]
+fn simulate_event_native_policies_run() {
+    let out = run_ok(&[
+        "simulate",
+        "--strategy",
+        "elastic_fleet",
+        "--budget-rate",
+        "2.5",
+    ]);
+    assert!(out.contains("elastic_fleet"), "{out}");
+    assert!(out.contains("budget"), "{out}");
+    assert!(out.contains("series ->"), "{out}");
+
+    let out = run_ok(&[
+        "simulate",
+        "--strategy",
+        "notice_rebid",
+        "--rebid-factor",
+        "2.0",
+        "--checkpoint-every",
+        "25",
+        "--checkpoint-cost",
+        "5",
+        "--lost-work",
+    ]);
+    assert!(out.contains("notice_rebid"), "{out}");
+    assert!(out.contains("rebid x2"), "{out}");
+    assert!(out.contains("overhead:"), "{out}");
+
+    // knob misuse is a clean error, not a panic
+    let out = bin()
+        .args(["simulate", "--strategy", "one_bid", "--budget-rate", "1.0"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr)
+        .contains("only applies to elastic_fleet"));
+    // non-finite knob values are clean errors too (f64 parses "inf")
+    let out = bin()
+        .args([
+            "simulate",
+            "--strategy",
+            "elastic_fleet",
+            "--budget-rate",
+            "inf",
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr)
+        .contains("must be finite"));
+}
+
 #[test]
 fn sweep_preset_equals_legacy_fig_flag_and_is_thread_deterministic() {
     // figure-default J keeps the Theorem 2/3 plans feasible (theta

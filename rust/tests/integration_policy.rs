@@ -1,0 +1,114 @@
+//! Event-reactive policy presets end to end: both shipped policy
+//! grids (`adaptive_grid`, `notice_grid`) run through the sweep
+//! harness at 1 and 8 threads with identical digests — the DESIGN.md
+//! §6 determinism contract for reactive runs (policies mutate state on
+//! events but consume no RNG outside `decide`) — and their headline
+//! behaviours hold: the elastic fleet's spend tracks its budget, the
+//! rebid policy escapes repeated preemptions, and a notice window
+//! covering the checkpoint cost eliminates lost work entirely.
+
+use volatile_sgd::exp::presets;
+use volatile_sgd::sweep::{run_sweep, SweepConfig};
+
+fn collate(
+    name: &str,
+    threads: usize,
+    seed: u64,
+) -> volatile_sgd::sweep::SweepResults {
+    let sc = presets::scenario(name).unwrap();
+    run_sweep(&sc, &SweepConfig { replicates: 2, seed, threads }).unwrap()
+}
+
+#[test]
+fn adaptive_grid_thread_deterministic_and_budget_scales_the_fleet() {
+    let serial = collate("adaptive_grid", 1, 41);
+    let par = collate("adaptive_grid", 8, 41);
+    assert_eq!(serial.digest(), par.digest(), "threads must be pure");
+
+    let idx = |name: &str| {
+        serial
+            .metric_names
+            .iter()
+            .position(|m| m == name)
+            .unwrap_or_else(|| panic!("missing metric {name}"))
+    };
+    let mean = |p: usize, m: &str| serial.points[p].stats[idx(m)].mean();
+    // layout: budget slowest, q, then strategy fastest — elastic points
+    // are even indices. At fixed q, a larger budget admits a larger
+    // fleet, so the elastic entry's spend grows with its budget.
+    let elastic = |b: usize, q: usize| (b * 3 + q) * 2;
+    assert!(
+        mean(elastic(0, 0), "cost") < mean(elastic(3, 0), "cost"),
+        "an 8x budget must buy a visibly larger fleet"
+    );
+    // the elastic fleet never idles into the deadline: it completes its
+    // full iteration budget at every grid point
+    for b in 0..4 {
+        for q in 0..3 {
+            assert_eq!(
+                mean(elastic(b, q), "iters"),
+                10_000.0,
+                "elastic budget={b} q={q}"
+            );
+        }
+    }
+    // the static Theorem-2 baseline ignores both axes but still runs
+    // at every point of the comparison grid
+    for p in (1..serial.points.len()).step_by(2) {
+        assert!(mean(p, "iters") > 0.0, "one_bid point {p}");
+    }
+}
+
+#[test]
+fn notice_grid_thread_deterministic_and_notice_eliminates_lost_work() {
+    let serial = collate("notice_grid", 1, 42);
+    let par = collate("notice_grid", 8, 42);
+    assert_eq!(serial.digest(), par.digest(), "threads must be pure");
+
+    let idx = |name: &str| {
+        serial
+            .metric_names
+            .iter()
+            .position(|m| m == name)
+            .unwrap_or_else(|| panic!("missing metric {name}"))
+    };
+    let mean = |p: usize, m: &str| serial.points[p].stats[idx(m)].mean();
+    // layout: notice slowest, factor, then strategy (rebid, then
+    // checkpoint_only) fastest
+    let point = |notice: usize, factor: usize, strat: usize| {
+        (notice * 3 + factor) * 2 + strat
+    };
+    // with no notice, the reactive policy escapes preemptions by
+    // rebidding while the checkpoint-only baseline keeps getting cut
+    // and recomputing
+    for factor in 0..3 {
+        let rebid = point(0, factor, 0);
+        let ckpt = point(0, factor, 1);
+        assert!(
+            mean(rebid, "preempt_events") < mean(ckpt, "preempt_events"),
+            "factor {factor}: rebidding must reduce interruptions"
+        );
+        assert!(
+            mean(rebid, "lost_iters") < mean(ckpt, "lost_iters"),
+            "factor {factor}: rebidding must reduce recomputation"
+        );
+    }
+    // a notice window covering the checkpoint cost (30 s >= 10 s)
+    // emergency-saves on every preemption: zero lost work, exactly,
+    // for both strategies at every factor
+    for factor in 0..3 {
+        for strat in 0..2 {
+            assert_eq!(
+                mean(point(2, factor, strat), "lost_iters"),
+                0.0,
+                "covered notice must save all work (f={factor} s={strat})"
+            );
+        }
+    }
+    // the ledger stays coherent: checkpoints are billed wherever
+    // periodic checkpointing is on
+    for p in 0..serial.points.len() {
+        assert!(mean(p, "checkpoint_time") > 0.0, "point {p}");
+        assert!(mean(p, "iters") > 0.0, "point {p}");
+    }
+}
