@@ -90,6 +90,22 @@ impl Args {
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
     }
+
+    /// Resolve the `--threads` flag: `0` — and an omitted flag — mean
+    /// "one worker per available core" via
+    /// [`std::thread::available_parallelism`] (falling back to 1 where
+    /// the platform cannot report it). Any positive value is taken
+    /// literally. Thread count is a pure throughput knob everywhere it
+    /// appears (sweep, the figure harnesses, optimize): results are
+    /// bit-identical at any value — see DESIGN.md §3.
+    pub fn threads(&self) -> Result<usize> {
+        match self.usize("threads", 0)? {
+            0 => Ok(std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)),
+            n => Ok(n),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +132,25 @@ mod tests {
         assert!(a.bool("real"));
         assert!(!a.bool("missing"));
         assert_eq!(a.str("model", "cnn"), "cnn");
+    }
+
+    #[test]
+    fn threads_zero_and_omitted_resolve_to_available_parallelism() {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let omitted = Args::parse(&sv(&["sweep"])).unwrap();
+        assert_eq!(omitted.threads().unwrap(), cores);
+        let zero =
+            Args::parse(&sv(&["sweep", "--threads", "0"])).unwrap();
+        assert_eq!(zero.threads().unwrap(), cores);
+        let three =
+            Args::parse(&sv(&["sweep", "--threads", "3"])).unwrap();
+        assert_eq!(three.threads().unwrap(), 3);
+        assert!(Args::parse(&sv(&["sweep", "--threads", "x"]))
+            .unwrap()
+            .threads()
+            .is_err());
     }
 
     #[test]

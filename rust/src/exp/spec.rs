@@ -215,6 +215,23 @@ impl ScenarioSpec {
 
     pub fn from_doc(doc: &Doc) -> Result<Self> {
         let d = TrackedDoc::new(doc);
+        let spec = Self::from_tracked(&d, true)?;
+        reject_unknown_keys(&d, &spec.strategies)?;
+        Ok(spec)
+    }
+
+    /// Parse the scenario portion of an already-tracked doc, leaving
+    /// the unknown-key audit to the caller — the hook [`crate::opt`]
+    /// uses to host a scenario beside its own `[objective]`/`[search]`
+    /// tables in one file (the caller reads its tables through the same
+    /// `TrackedDoc`, then runs [`reject_unknown_keys`] once over the
+    /// union). `require_metrics` gates the non-empty `metrics` check:
+    /// planner specs carry no metric list — the planner reports its own
+    /// cost/time/error columns.
+    pub(crate) fn from_tracked(
+        d: &TrackedDoc,
+        require_metrics: bool,
+    ) -> Result<Self> {
         let name = d.str_or("name", "scenario")?;
         let mode = match d.str_or("mode", "per_strategy")?.as_str() {
             "per_strategy" => SweepMode::PerStrategy,
@@ -323,7 +340,7 @@ impl ScenarioSpec {
                      declare a markets = [...] lineup)"
                 );
             }
-            let kind = parse_market(&d, "market")?;
+            let kind = parse_market(d, "market")?;
             vec![MarketSpec { label: market_label(&kind), kind }]
         } else {
             market_labels
@@ -337,7 +354,7 @@ impl ScenarioSpec {
                     );
                     Ok(MarketSpec {
                         label: label.clone(),
-                        kind: parse_market(&d, &prefix)?,
+                        kind: parse_market(d, &prefix)?,
                     })
                 })
                 .collect::<Result<Vec<_>>>()?
@@ -358,7 +375,7 @@ impl ScenarioSpec {
         }
         let strategies = labels
             .iter()
-            .map(|label| parse_strategy(&d, label, n))
+            .map(|label| parse_strategy(d, label, n))
             .collect::<Result<Vec<_>>>()?;
 
         // -------------------------------------------------------- axes
@@ -377,36 +394,11 @@ impl ScenarioSpec {
         // ----------------------------------------------------- metrics
         let metrics = d.str_array_or_empty("metrics")?;
         ensure!(
-            !metrics.is_empty(),
+            !require_metrics || !metrics.is_empty(),
             "missing required key 'metrics' (a non-empty array of metric \
              names)"
         );
 
-        // unknown-key rejection names the enclosing table path, and
-        // for strategy tables also the lineup position — a misspelled
-        // `rebid_factor` inside `[strategy.rebid]` reads back as
-        // `strategy[2].rebid_facto`, not as a stray bare key
-        let unknown = d.unknown_keys();
-        if !unknown.is_empty() {
-            let described: Vec<String> = unknown
-                .iter()
-                .map(|k| {
-                    let base = crate::config::toml::describe_key(k);
-                    let lineup = k
-                        .strip_prefix("strategy.")
-                        .and_then(|rest| rest.split_once('.'))
-                        .and_then(|(label, field)| {
-                            labels
-                                .iter()
-                                .position(|l| l == label)
-                                .map(|i| format!(" = strategy[{i}].{field}"))
-                        })
-                        .unwrap_or_default();
-                    format!("{base}{lineup}")
-                })
-                .collect();
-            bail!("unknown key(s) in spec: {}", described.join(", "));
-        }
         Ok(ScenarioSpec {
             name,
             mode,
@@ -423,6 +415,41 @@ impl ScenarioSpec {
             seed,
         })
     }
+}
+
+/// Unknown-key rejection over a fully-consumed [`TrackedDoc`]: names
+/// the enclosing table path, and for strategy tables also the lineup
+/// position — a misspelled `rebid_factor` inside `[strategy.rebid]`
+/// reads back as `strategy[2].rebid_facto`, not as a stray bare key.
+/// Shared by [`ScenarioSpec::from_doc`] and the planner spec parser
+/// ([`crate::opt`]), which tracks its `[objective]`/`[search]` reads on
+/// the same doc before auditing.
+pub(crate) fn reject_unknown_keys(
+    d: &TrackedDoc,
+    strategies: &[StrategyEntry],
+) -> Result<()> {
+    let unknown = d.unknown_keys();
+    if !unknown.is_empty() {
+        let described: Vec<String> = unknown
+            .iter()
+            .map(|k| {
+                let base = crate::config::toml::describe_key(k);
+                let lineup = k
+                    .strip_prefix("strategy.")
+                    .and_then(|rest| rest.split_once('.'))
+                    .and_then(|(label, field)| {
+                        strategies
+                            .iter()
+                            .position(|e| e.label == label)
+                            .map(|i| format!(" = strategy[{i}].{field}"))
+                    })
+                    .unwrap_or_default();
+                format!("{base}{lineup}")
+            })
+            .collect();
+        bail!("unknown key(s) in spec: {}", described.join(", "));
+    }
+    Ok(())
 }
 
 fn market_label(kind: &MarketKind) -> String {
@@ -970,6 +997,9 @@ pub struct SpecCtx {
     /// [bound_err, exp_cost, exp_time]
     analytic_consts: [f64; 3],
     needs_sim: bool,
+    /// the first entry's bid problem (None for fixed-price markets) —
+    /// the closed-form surface the planner prunes against
+    pb: Option<BidProblem>,
 }
 
 impl SpecCtx {
@@ -985,6 +1015,40 @@ impl SpecCtx {
     pub fn run_params(&self) -> &RunParams {
         &self.params
     }
+
+    /// The Theorem-1 bound evaluator for this point.
+    pub fn bound(&self) -> &ErrorBound {
+        &self.bound
+    }
+
+    /// The first lineup entry's bid-optimisation problem, when the
+    /// market has a price distribution — the [`crate::opt`] planner
+    /// evaluates its Theorem 2/3 closed-form surfaces on this.
+    pub fn bid_problem(&self) -> Option<&BidProblem> {
+        self.pb.as_ref()
+    }
+
+    /// True when prices are drawn i.i.d. from the configured model —
+    /// the regime where the Lemma 1/2 closed forms are exact (trace
+    /// replays only estimate F, fixed-price markets never bid). Gates
+    /// the planner's admissible-surface classification (DESIGN.md §7).
+    pub fn iid_prices(&self) -> bool {
+        matches!(self.prices, PriceSource::Iid(_))
+    }
+
+    /// Run one replicate of plan `idx` on the event engine with this
+    /// point's cached price source and run parameters — the one
+    /// engine-path executor shared by [`SpecScenario::run`] and the
+    /// planner's refinement stage, so a planner recommendation is
+    /// re-verified by exactly the simulation the sweep would run.
+    pub fn execute_engine(
+        &self,
+        idx: usize,
+        rng: &mut Rng,
+    ) -> Result<EngineResult> {
+        let mut p = self.plans[idx].build_policy()?;
+        run_policy_engine(p.as_mut(), self.bound, &self.prices, &self.params, rng)
+    }
 }
 
 /// Which replicate runner executes the simulations.
@@ -999,6 +1063,13 @@ pub enum RunnerKind {
     /// ledger metrics come back zero.
     Reference,
 }
+
+/// Largest (markets x grid) combination count the load-time dry-run
+/// resolves *exhaustively*; above it, validation falls back to
+/// per-axis-value path/range checks so `--check` stays fast. Public so
+/// the CLI's check summary can report which grade of validation
+/// actually ran.
+pub const FULL_RESOLVE_LIMIT: usize = 100_000;
 
 /// A [`Scenario`] generically driven by a [`ScenarioSpec`].
 pub struct SpecScenario {
@@ -1084,7 +1155,7 @@ impl SpecScenario {
         // checks on a fresh scratch each, so --check stays fast.
         let total = me.spec.markets.len() * me.grid.num_points();
         for m in 0..me.spec.markets.len() {
-            if total <= 100_000 {
+            if total <= FULL_RESOLVE_LIMIT {
                 for g in 0..me.grid.num_points() {
                     me.resolve(m, g).with_context(|| {
                         format!(
@@ -1151,8 +1222,10 @@ impl SpecScenario {
 
     /// point -> (market, grid point, strategy); market slowest, strategy
     /// fastest — the ordering the fig3 sweep has always used, so preset
-    /// digests match the pre-redesign harness.
-    fn decode(&self, point: usize) -> (usize, usize, usize) {
+    /// digests match the pre-redesign harness. `pub(crate)` because the
+    /// planner's lattice folding ([`crate::opt`]) must agree with this
+    /// ordering exactly — one implementation, not a copy.
+    pub(crate) fn decode(&self, point: usize) -> (usize, usize, usize) {
         let s_count = self.strategy_count();
         let g_count = self.grid.num_points();
         let s = point % s_count;
@@ -1443,6 +1516,7 @@ impl Scenario for SpecScenario {
             preempt_consts,
             analytic_consts,
             needs_sim,
+            pb: first_pb,
         })
     }
 
@@ -1474,22 +1548,11 @@ impl Scenario for SpecScenario {
         // through the lockstep adapter, so digests are unchanged), the
         // reference loop the equivalence oracle (overhead- and
         // policy-incapable; ledger fields come back zero)
-        let execute = |plan: &PlannedStrategy,
-                       rng: &mut Rng|
-         -> Result<EngineResult> {
+        let execute = |idx: usize, rng: &mut Rng| -> Result<EngineResult> {
             match self.runner {
-                RunnerKind::Engine => {
-                    let mut p = plan.build_policy()?;
-                    run_policy_engine(
-                        p.as_mut(),
-                        ctx.bound,
-                        &ctx.prices,
-                        &ctx.params,
-                        rng,
-                    )
-                }
+                RunnerKind::Engine => ctx.execute_engine(idx, rng),
                 RunnerKind::Reference => {
-                    let mut s = plan.build()?;
+                    let mut s = ctx.plans[idx].build()?;
                     run_synthetic_reference(
                         s.as_mut(),
                         ctx.bound,
@@ -1503,7 +1566,7 @@ impl Scenario for SpecScenario {
         };
         match self.spec.mode {
             SweepMode::PerStrategy => {
-                let r = execute(&ctx.plans[0], rng)?;
+                let r = execute(0, rng)?;
                 Ok(self
                     .metrics
                     .iter()
@@ -1541,8 +1604,8 @@ impl Scenario for SpecScenario {
                 // the lineup shares this replicate's stream, consumed in
                 // entry order — still a pure function of job identity
                 let mut finals = Vec::with_capacity(ctx.plans.len());
-                for plan in &ctx.plans {
-                    let r = execute(plan, rng)?;
+                for idx in 0..ctx.plans.len() {
+                    let r = execute(idx, rng)?;
                     let acc =
                         r.series.last().map(|p| p.accuracy).unwrap_or(0.0);
                     finals.push((r.cost, acc));

@@ -27,6 +27,10 @@
 //! * [`exp`] — per-figure experiment harnesses (Figs. 1–5) plus the
 //!   declarative scenario-spec API (`exp::spec`, `exp::presets`): any
 //!   sweep as a TOML file driven by one generic `Scenario`;
+//! * [`opt`] — the strategy planner: analytic Theorem-2/3 pruning over
+//!   a candidate lattice, successive-halving simulation refinement,
+//!   ranked recommendations + Pareto frontier (`volatile-sgd
+//!   optimize`);
 //! * [`config`], [`manifest`], [`metrics`], [`util`] — substrates.
 
 pub mod cli;
@@ -37,6 +41,7 @@ pub mod exp;
 pub mod manifest;
 pub mod market;
 pub mod metrics;
+pub mod opt;
 pub mod preempt;
 pub mod runtime;
 pub mod sim;

@@ -16,14 +16,21 @@
 //!                           |adaptive_grid|notice_grid | --fig 2|3|4|5]
 //!                          [--threads N] [--replicates R] [--seed S] [--j J]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
+//! volatile-sgd optimize    [--spec FILE] [--threads N] [--seed S]
+//!                          [--out DIR|results.csv] [--json [FILE]] [--check]
 //! ```
 //!
 //! `sweep` is the one entry point for every scenario: a spec file
 //! (`--spec`), a shipped preset (`--preset`, also reachable as the
 //! legacy `--fig N`), same schema either way — see DESIGN.md §4.
-//! `--threads` parallelises the simulation jobs on the work-stealing
-//! sweep pool; results are bit-identical at any thread count (every
-//! job's RNG is a pure function of its job identity — see DESIGN.md §3).
+//! `optimize` is the planner on top of it: a scenario spec plus
+//! `[objective]`/`[search]` tables (DESIGN.md §7; the shipped preset
+//! `examples/configs/optimize_deadline.toml` runs when `--spec` is
+//! omitted). `--threads` parallelises the simulation jobs on the
+//! work-stealing sweep pool — `0` (or omitting the flag) uses every
+//! available core; results are bit-identical at any thread count
+//! (every job's RNG is a pure function of its job identity — see
+//! DESIGN.md §3).
 //!
 //! Python is never invoked here: `train` runs the AOT artifacts over PJRT.
 
@@ -78,7 +85,15 @@ fn print_help() {
          checkpoint_grid, adaptive_grid, notice_grid | --fig N;\n                \
          --out results.csv / --json for machine-readable output;\n                \
          --check validates without running; deterministic for a\n                \
-         fixed --seed at any --threads)\n"
+         fixed --seed at any --threads; --threads 0 or omitted\n                \
+         = all cores)\n  \
+         optimize      strategy planner: analytic Theorem-2/3 pruning\n                \
+         over a candidate lattice + successive-halving\n                \
+         simulation refinement; ranked recommendations and\n                \
+         the Pareto frontier over (cost, time, error)\n                \
+         (--spec plan.toml with [objective]/[search] tables,\n                \
+         default: the shipped optimize_deadline preset;\n                \
+         --out/--json/--check/--seed/--threads as in sweep)\n"
     );
 }
 
@@ -95,6 +110,7 @@ fn run(argv: &[String]) -> Result<()> {
         "fig4" => cmd_fig4(&args),
         "fig5" => cmd_fig5(&args),
         "sweep" => cmd_sweep(&args),
+        "optimize" => cmd_optimize(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -441,7 +457,7 @@ fn out_dir(args: &Args) -> std::path::PathBuf {
 }
 
 fn cmd_fig2(args: &Args) -> Result<()> {
-    let out = exp::fig2::run(5_000, 8, 4, args.usize("threads", 1)?)?;
+    let out = exp::fig2::run(5_000, 8, 4, args.threads()?)?;
     let dir = out_dir(args);
     out.surfaces.write(dir.join("fig2_surfaces.csv"))?;
     out.fig1.write(dir.join("fig1_series.csv"))?;
@@ -458,7 +474,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     let p = exp::fig3::Fig3Params {
         j: args.u64("j", 10_000)?,
         seed: args.u64("seed", 2020)?,
-        threads: args.usize("threads", 1)?,
+        threads: args.threads()?,
         ..Default::default()
     };
     let dir = out_dir(args);
@@ -486,7 +502,7 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     let p = exp::fig4::Fig4Params {
         j: args.u64("j", 10_000)?,
         seed: args.u64("seed", 2020)?,
-        threads: args.usize("threads", 1)?,
+        threads: args.threads()?,
         ..Default::default()
     };
     let out = exp::fig4::run(&trace, &p)?;
@@ -508,7 +524,7 @@ fn cmd_fig5(args: &Args) -> Result<()> {
         j: args.u64("j", 10_000)?,
         q: args.f64("q", 0.5)?,
         seed: args.u64("seed", 2020)?,
-        threads: args.usize("threads", 1)?,
+        threads: args.threads()?,
         ..Default::default()
     };
     let out = exp::fig5::run(&p)?;
@@ -558,17 +574,24 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .or(spec.replicates)
             .unwrap_or(8),
         seed: args.u64_opt("seed")?.or(spec.seed).unwrap_or(2020),
-        threads: args.usize("threads", 1)?,
+        threads: args.threads()?,
     };
     let scenario = volatile_sgd::exp::SpecScenario::new(spec)?;
     let name = scenario.spec().name.clone();
 
     if args.bool("check") {
+        // the one-line audit trail CI greps for
+        let combos =
+            scenario.spec().markets.len() * scenario.grid().num_points();
         println!(
-            "spec OK: {name}  ({} points x {} metrics, {} strategies)",
+            "check OK: 1 spec validated, {combos} grid points {} \
+             ({name}: {} sweep points x {} metrics, {} strategies, \
+             {} market(s))",
+            resolution_grade(combos),
             scenario.points(),
             scenario.metrics().len(),
-            scenario.spec().strategies.len()
+            scenario.spec().strategies.len(),
+            scenario.spec().markets.len()
         );
         return Ok(());
     }
@@ -599,24 +622,108 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(jflag) = args.get("json") {
         // bare --json lands next to the CSV: the --out directory, or the
         // parent of an --out *.csv file
-        let path = if jflag == "true" {
-            let base = if out.ends_with(".csv") {
-                std::path::Path::new(&out)
-                    .parent()
-                    .filter(|p| !p.as_os_str().is_empty())
-                    .unwrap_or_else(|| std::path::Path::new("out"))
-                    .to_path_buf()
-            } else {
-                std::path::PathBuf::from(&out)
-            };
-            base.join(format!("sweep_{name}.json"))
-        } else {
-            std::path::PathBuf::from(jflag)
-        };
+        let path = json_out_path(jflag, &out, &format!("sweep_{name}.json"));
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         std::fs::write(&path, results.to_json(&name, &cfg))?;
+        println!("json -> {}", path.display());
+    }
+    Ok(())
+}
+
+/// Resolve a `--json [FILE]` flag: an explicit FILE wins; a bare flag
+/// lands `default_name` next to the CSV (the `--out` directory, or the
+/// parent of an `--out *.csv` file).
+fn json_out_path(
+    jflag: &str,
+    out: &str,
+    default_name: &str,
+) -> std::path::PathBuf {
+    if jflag == "true" {
+        let base = if out.ends_with(".csv") {
+            std::path::Path::new(out)
+                .parent()
+                .filter(|p| !p.as_os_str().is_empty())
+                .unwrap_or_else(|| std::path::Path::new("out"))
+                .to_path_buf()
+        } else {
+            std::path::PathBuf::from(out)
+        };
+        base.join(default_name)
+    } else {
+        std::path::PathBuf::from(jflag)
+    }
+}
+
+/// How thoroughly the load-time dry-run validated a spec's (market x
+/// grid) combinations — exhaustive resolution up to the `exp::spec`
+/// limit, per-axis-value checks beyond it. The `--check` audit line
+/// must not claim more than actually ran.
+fn resolution_grade(combos: usize) -> &'static str {
+    if combos <= volatile_sgd::exp::spec::FULL_RESOLVE_LIMIT {
+        "resolved"
+    } else {
+        "range-checked (grid too large to resolve exhaustively)"
+    }
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    use volatile_sgd::opt;
+
+    // --spec FILE, defaulting to the shipped optimize_deadline preset
+    let plan = match args.get("spec") {
+        Some(path) => opt::PlanSpec::from_file(path)?,
+        None => opt::PlanSpec::from_str(opt::preset_toml())?,
+    };
+    let seed = args.u64_opt("seed")?.or(plan.scenario.seed).unwrap_or(2020);
+    let threads = args.threads()?;
+
+    if args.bool("check") {
+        // the run path builds (and so validates) the scenario inside
+        // run_plan; build it here only for the check summary
+        let scenario = opt::build_scenario(&plan)?;
+        let combos =
+            scenario.spec().markets.len() * scenario.grid().num_points();
+        println!(
+            "check OK: 1 plan spec validated, {} lattice points {} \
+             ({}: {} strategies x {} grid x {} market(s); goal \
+             {}, ladder {:?})",
+            scenario.points(),
+            resolution_grade(combos),
+            scenario.spec().name,
+            scenario.spec().strategies.len(),
+            scenario.grid().num_points(),
+            scenario.spec().markets.len(),
+            plan.objective.goal.name(),
+            plan.search.ladder
+        );
+        return Ok(());
+    }
+
+    let outcome =
+        opt::run_plan(&plan, &opt::PlannerConfig { seed, threads })?;
+    let name = outcome.name.clone();
+    opt::report::print(&outcome);
+
+    // --out: a *.csv path gets the full candidate table; a directory
+    // (default "out") names it optimize_<name>.csv — same conventions
+    // as `sweep`
+    let out = args.str("out", "out");
+    let csv_path = if out.ends_with(".csv") {
+        std::path::PathBuf::from(&out)
+    } else {
+        std::path::PathBuf::from(&out).join(format!("optimize_{name}.csv"))
+    };
+    opt::report::to_csv(&outcome).write(&csv_path)?;
+    println!("recommendations -> {}", csv_path.display());
+    if let Some(jflag) = args.get("json") {
+        let path =
+            json_out_path(jflag, &out, &format!("optimize_{name}.json"));
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, opt::report::to_json(&outcome, threads))?;
         println!("json -> {}", path.display());
     }
     Ok(())

@@ -1,0 +1,107 @@
+//! Automated strategy search: analytic pruning + simulated refinement.
+//!
+//! The paper's headline deliverable is not the sweep itself but the
+//! *derived practical strategies* — "by understanding these trade-offs
+//! between preemption probability, accuracy, and training time, we
+//! derive practical strategies for configuring distributed SGD jobs."
+//! `opt` is that layer: given an objective file (a scenario spec plus
+//! `[objective]`/`[search]` tables — [`spec`]), the planner
+//!
+//! 1. **prunes analytically** ([`surface`], [`planner`] stage 1):
+//!    evaluates the closed-form Theorem 2/3 cost/time/error surfaces
+//!    (exact `E[1/y]` via `preempt`, `F(b)` via the market model) over
+//!    the candidate lattice and discards provably dominated or
+//!    constraint-violating configurations — before a single replicate
+//!    runs;
+//! 2. **refines by simulation** ([`planner`] stage 2): dispatches only
+//!    the survivors through the existing `sweep` work-stealing pool
+//!    and event engine (classic and event-native kinds alike, via
+//!    `PlannedStrategy::build_policy`), successive-halving style on a
+//!    fixed replicate ladder, shrinking the candidate set around the
+//!    incumbent.
+//!
+//! The product ([`report`]) is a ranked recommendation table plus the
+//! full Pareto frontier over (expected cost, expected time, error
+//! bound / achieved proxy), emitted via the shared CSV/JSON writers
+//! with a digest line that is bit-identical at any `--threads`
+//! (DESIGN.md §7). The `volatile-sgd optimize --spec FILE` subcommand
+//! is the CLI entry; `examples/configs/optimize_deadline.toml` ships
+//! as the worked preset (deadline-constrained cost minimisation over
+//! `one_bid` vs `elastic_fleet` vs `deadline_aware`).
+//!
+//! # Example
+//!
+//! ```
+//! use volatile_sgd::opt::{self, PlanSpec, PlannerConfig};
+//!
+//! let plan = PlanSpec::from_str(r#"
+//! name = "doc"
+//! strategies = ["static_workers"]
+//! axes = ["price"]
+//!
+//! [objective]
+//! goal = "min_cost"
+//!
+//! [search]
+//! ladder = [2]
+//! min_keep = 1
+//!
+//! [job]
+//! n = 4
+//! j = 50
+//! preempt_q = 0.3
+//!
+//! [runtime]
+//! kind = "deterministic"
+//! r = 10.0
+//!
+//! [market]
+//! kind = "fixed"
+//!
+//! [axis.price]
+//! path = "job.unit_price"
+//! values = [1.0, 2.0]
+//! "#).unwrap();
+//! let out = opt::run_plan(&plan, &PlannerConfig { seed: 7, threads: 2 }).unwrap();
+//! // the doubled unit price is provably dominated and never simulated
+//! assert_eq!(out.counts().dominated, 1);
+//! assert_eq!(out.incumbent_label(), Some("price=1"));
+//! ```
+
+pub mod planner;
+pub mod report;
+pub mod spec;
+pub mod surface;
+
+pub use planner::{
+    build_scenario, evaluate_rung, run_plan, rung_seed, Candidate, Fate,
+    FateCounts, PlanOutcome, PlannerConfig, RungRecord, SimStats,
+    SIM_METRICS,
+};
+pub use spec::{Goal, Objective, PlanSpec, SearchSpec};
+pub use surface::{admissible_surface, beats, Surface};
+
+/// The shipped planner preset, embedded like the sweep presets so
+/// `volatile-sgd optimize` works from any directory when `--spec` is
+/// omitted.
+pub fn preset_toml() -> &'static str {
+    include_str!("../../../examples/configs/optimize_deadline.toml")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shipped_preset_parses_and_validates() {
+        let plan = PlanSpec::from_str(preset_toml()).unwrap();
+        assert_eq!(plan.scenario.name, "optimize_deadline");
+        assert_eq!(plan.objective.goal, Goal::MinCost);
+        assert!(plan.objective.deadline.is_some());
+        // deadline coupling: the bid plans target the constraint
+        assert_eq!(plan.scenario.job.theta, plan.objective.deadline);
+        let sc = build_scenario(&plan).unwrap();
+        use crate::sweep::Scenario;
+        assert_eq!(sc.points(), 36); // 2 n x 3 budget x 2 thresh x 3 strategies
+    }
+}

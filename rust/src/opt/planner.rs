@@ -1,0 +1,1007 @@
+//! The two-stage deterministic planner.
+//!
+//! **Stage 0 — lattice folding.** The candidate lattice is the spec's
+//! (market × grid × strategy) point space. An axis scoped to one
+//! strategy label (`strategy.<label>.*`) leaves every *other* entry's
+//! configuration untouched, so the raw cross product contains exact
+//! duplicates; each duplicate folds into the first point with the same
+//! fingerprint (market, strategy, and the values of the axes that
+//! actually reach it).
+//!
+//! **Stage 1 — analytic pruning.** Every unique candidate is planned
+//! (`SpecScenario::prepare`; a plan that is infeasible in closed form —
+//! eps below the fleet's noise floor, a Theorem-2 deadline that cannot
+//! be met — is recorded and dropped). Candidates with an *admissible*
+//! closed-form surface ([`super::surface`]) are then checked against
+//! the `[objective]` hard constraints and against each other: a
+//! candidate weakly dominated by a surviving admissible candidate is
+//! provably not the optimum of any monotone objective and not on the
+//! Pareto frontier, so it is discarded before a single replicate runs.
+//! Heuristic candidates (adaptive policies, trace markets, overhead
+//! models) are never pruned analytically.
+//!
+//! **Stage 2 — refinement by simulation.** Survivors run through the
+//! existing sweep pool and event engine on a fixed successive-halving
+//! ladder: rung k simulates every live candidate with `ladder[k]`
+//! replicates, then keeps the best `keep_fraction` (never below
+//! `min_keep`) by (feasible, objective score, candidate order).
+//! Because the ladder is fixed and every upstream decision is a pure
+//! function of collated results, the replicate RNG streams — derived
+//! per rung from [`rung_seed`] — are pure functions of (seed, rung,
+//! candidate order): the whole plan is digest-identical at any thread
+//! count (DESIGN.md §3/§7).
+//!
+//! The outcome carries every lattice point's fate, the ranked
+//! recommendations, the incumbent, and the Pareto frontier over the
+//! simulated (cost, time, error) means at each candidate's deepest
+//! rung.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::exp::spec::SpecCtx;
+use crate::exp::SpecScenario;
+use crate::sweep::{
+    run_indexed, run_sweep, Scenario, SweepConfig, SweepResults,
+};
+use crate::util::fnv::Fnv;
+use crate::util::rng::Rng;
+
+use super::spec::{Objective, PlanSpec, SearchSpec};
+use super::surface::{admissible_surface, beats, Surface};
+
+/// The planner's internal refinement metrics, in column order.
+pub const SIM_METRICS: [&str; 4] =
+    ["total_cost", "total_time", "final_error", "iters"];
+
+/// How the planner runs: master seed and worker threads. Both are pure
+/// throughput/reproducibility knobs — the recommendation set is a
+/// function of (spec, seed) only.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerConfig {
+    pub seed: u64,
+    pub threads: usize,
+}
+
+/// Why a lattice point never reached (or left) the simulation stage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fate {
+    /// exact duplicate of an earlier lattice point (candidate index)
+    Folded { into: usize },
+    /// the closed-form plan itself is infeasible (e.g. eps below the
+    /// fleet's noise floor, deadline-infeasible bid problem)
+    PlanError { error: String },
+    /// admissible closed-form surface violates a hard constraint
+    Infeasible { violated: String },
+    /// admissible closed-form surface weakly dominated by the
+    /// surviving candidate at this index
+    Dominated { by: usize },
+    /// reached the simulation ladder; `rung` is the deepest rung run
+    Evaluated { rung: usize },
+}
+
+impl Fate {
+    /// Short machine-readable tag for tables/JSON.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Fate::Folded { .. } => "folded",
+            Fate::PlanError { .. } => "plan_error",
+            Fate::Infeasible { .. } => "infeasible",
+            Fate::Dominated { .. } => "dominated",
+            Fate::Evaluated { .. } => "evaluated",
+        }
+    }
+}
+
+/// Simulated summary statistics for one candidate at its deepest rung.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    pub replicates: u64,
+    pub cost_mean: f64,
+    pub cost_std: f64,
+    pub time_mean: f64,
+    pub time_std: f64,
+    pub err_mean: f64,
+    pub err_std: f64,
+    pub iters_mean: f64,
+}
+
+/// One lattice point, its closed-form surface (when admissible), and
+/// everything the planner decided about it.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// index into the base scenario's point space
+    pub point: usize,
+    /// the scenario's point label (market/grid/strategy parts)
+    pub label: String,
+    /// lineup entry label
+    pub strategy: String,
+    /// closed-form (cost, time, err) when admissible (DESIGN.md §7)
+    pub surface: Option<Surface>,
+    pub fate: Fate,
+    /// simulated stats at the deepest rung this candidate ran
+    pub sim: Option<SimStats>,
+    /// 1-based final ranking among evaluated candidates
+    pub rank: Option<usize>,
+    /// satisfied every declared constraint on its simulated means
+    pub feasible: bool,
+    /// on the simulated Pareto frontier over (cost, time, err)
+    pub frontier: bool,
+}
+
+/// One successive-halving rung as it actually ran — enough to replay
+/// it exactly (`evaluate_rung` with these members/replicates/seed
+/// reproduces the recorded statistics bit for bit).
+#[derive(Clone, Debug)]
+pub struct RungRecord {
+    pub replicates: u64,
+    pub seed: u64,
+    /// candidate indices (into [`PlanOutcome::candidates`]) simulated
+    pub members: Vec<usize>,
+}
+
+/// Tally of candidate fates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FateCounts {
+    pub folded: usize,
+    pub plan_errors: usize,
+    pub infeasible: usize,
+    pub dominated: usize,
+    pub evaluated: usize,
+}
+
+/// The planner's full product: every candidate's fate, the ranked
+/// recommendation list, the incumbent and the Pareto frontier.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    pub name: String,
+    pub objective: Objective,
+    pub search: SearchSpec,
+    pub seed: u64,
+    /// raw lattice size before folding
+    pub lattice_points: usize,
+    pub candidates: Vec<Candidate>,
+    /// candidate indices ranked best-first (feasible first, then
+    /// deeper-rung evidence, then objective score, then candidate
+    /// order)
+    pub recommendations: Vec<usize>,
+    /// best feasible recommendation, when any candidate is feasible
+    pub incumbent: Option<usize>,
+    pub rungs: Vec<RungRecord>,
+}
+
+impl PlanOutcome {
+    pub fn incumbent_label(&self) -> Option<&str> {
+        self.incumbent.map(|i| self.candidates[i].label.as_str())
+    }
+
+    /// Frontier labels in candidate order.
+    pub fn frontier_labels(&self) -> Vec<&str> {
+        self.candidates
+            .iter()
+            .filter(|c| c.frontier)
+            .map(|c| c.label.as_str())
+            .collect()
+    }
+
+    pub fn counts(&self) -> FateCounts {
+        let mut c = FateCounts::default();
+        for cand in &self.candidates {
+            match cand.fate {
+                Fate::Folded { .. } => c.folded += 1,
+                Fate::PlanError { .. } => c.plan_errors += 1,
+                Fate::Infeasible { .. } => c.infeasible += 1,
+                Fate::Dominated { .. } => c.dominated += 1,
+                Fate::Evaluated { .. } => c.evaluated += 1,
+            }
+        }
+        c
+    }
+
+    /// FNV-1a digest over every decision and statistic the planner
+    /// produced — the single line the CI determinism smoke diffs
+    /// across thread counts (same algorithm as the sweep digest).
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(self.name.as_bytes());
+        h.u64(self.seed);
+        h.u64(self.lattice_points as u64);
+        for c in &self.candidates {
+            h.bytes(c.label.as_bytes());
+            h.bytes(c.strategy.as_bytes());
+            match &c.fate {
+                Fate::Folded { into } => {
+                    h.u64(1);
+                    h.u64(*into as u64);
+                }
+                Fate::PlanError { error } => {
+                    h.u64(2);
+                    h.bytes(error.as_bytes());
+                }
+                Fate::Infeasible { violated } => {
+                    h.u64(3);
+                    h.bytes(violated.as_bytes());
+                }
+                Fate::Dominated { by } => {
+                    h.u64(4);
+                    h.u64(*by as u64);
+                }
+                Fate::Evaluated { rung } => {
+                    h.u64(5);
+                    h.u64(*rung as u64);
+                }
+            }
+            if let Some(s) = c.surface {
+                h.f64(s.cost);
+                h.f64(s.time);
+                h.f64(s.err);
+            }
+            if let Some(s) = c.sim {
+                h.u64(s.replicates);
+                h.f64(s.cost_mean);
+                h.f64(s.cost_std);
+                h.f64(s.time_mean);
+                h.f64(s.time_std);
+                h.f64(s.err_mean);
+                h.f64(s.err_std);
+                h.f64(s.iters_mean);
+            }
+            h.u64(c.rank.map(|r| r as u64).unwrap_or(0));
+            h.u64(c.feasible as u64);
+            h.u64(c.frontier as u64);
+        }
+        for r in &self.rungs {
+            h.u64(r.replicates);
+            h.u64(r.seed);
+            for &m in &r.members {
+                h.u64(m as u64);
+            }
+        }
+        h.u64(self.incumbent.map(|i| i as u64 + 1).unwrap_or(0));
+        h.finish()
+    }
+}
+
+/// Build the runnable candidate-lattice scenario for a plan: the
+/// spec's scenario with the planner's internal metric set, validated
+/// to `--check` grade (every lattice point resolves).
+pub fn build_scenario(plan: &PlanSpec) -> Result<SpecScenario> {
+    let mut spec = plan.scenario.clone();
+    spec.metrics = SIM_METRICS.iter().map(|s| s.to_string()).collect();
+    SpecScenario::new(spec)
+}
+
+/// Per-rung replicate seed: a SplitMix64-style mix of the master seed
+/// and the rung index, so rungs draw independent streams while staying
+/// pure functions of (seed, rung).
+pub fn rung_seed(seed: u64, rung: usize) -> u64 {
+    let mut z = seed
+        ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(rung as u64 + 1);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The refinement-stage scenario: a subset of the base scenario's
+/// points, each replicate executing the point's plan on the event
+/// engine via the one shared [`SpecCtx::execute_engine`] path. The
+/// planner passes the contexts it already prepared in stage 1 (`ctxs`)
+/// so the expensive bid-plan solves and `E[1/y]` tables are built once
+/// per candidate, not once per rung — `prepare` consumes no replicate
+/// RNG, so a cached context and a fresh one are interchangeable bit
+/// for bit (which is why the public [`evaluate_rung`] replay path can
+/// prepare fresh and still reproduce recorded statistics exactly).
+struct CandidateScenario<'a> {
+    base: &'a SpecScenario,
+    points: Vec<usize>,
+    ctxs: Option<Vec<Arc<SpecCtx>>>,
+}
+
+impl Scenario for CandidateScenario<'_> {
+    type Ctx = Arc<SpecCtx>;
+
+    fn points(&self) -> usize {
+        self.points.len()
+    }
+
+    fn label(&self, i: usize) -> String {
+        self.base.label(self.points[i])
+    }
+
+    fn metrics(&self) -> Vec<String> {
+        SIM_METRICS.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn prepare(&self, i: usize) -> Result<Arc<SpecCtx>> {
+        match &self.ctxs {
+            Some(ctxs) => Ok(ctxs[i].clone()),
+            None => self.base.prepare(self.points[i]).map(Arc::new),
+        }
+    }
+
+    fn run(
+        &self,
+        _i: usize,
+        ctx: &Arc<SpecCtx>,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>> {
+        let r = ctx.execute_engine(0, rng)?;
+        Ok(vec![r.cost, r.elapsed, r.final_error, r.iters as f64])
+    }
+}
+
+/// Run one refinement rung: simulate the given base-scenario points on
+/// the sweep pool with `replicates` replicates at `seed`. Public so
+/// the integration suite can re-verify a recommendation with exactly
+/// the planner's streams: replaying a [`RungRecord`]'s members through
+/// this function reproduces the recorded statistics bit for bit.
+pub fn evaluate_rung(
+    scenario: &SpecScenario,
+    points: &[usize],
+    replicates: u64,
+    seed: u64,
+    threads: usize,
+) -> Result<SweepResults> {
+    let cs = CandidateScenario {
+        base: scenario,
+        points: points.to_vec(),
+        ctxs: None,
+    };
+    run_sweep(&cs, &SweepConfig { replicates, seed, threads })
+}
+
+/// A candidate's configuration fingerprint: market, strategy, and the
+/// values of exactly the axes that reach its resolved configuration —
+/// global axes (`job.*`, `runtime.*`, `market.*`, `sgd.*`,
+/// `overhead.*`) reach everyone; `strategy.<label>.*` axes reach only
+/// that entry. Values are keyed by bit pattern, so folding is exact.
+fn fingerprint(sc: &SpecScenario, point: usize) -> String {
+    let (m, g, s) = sc.decode(point);
+    let spec = sc.spec();
+    let label = &spec.strategies[s].label;
+    let vals = sc.grid().point(g);
+    let mut key = format!("m{m}/s{s}");
+    for (axis, v) in spec.axes.iter().zip(&vals) {
+        let reaches = match axis.path.strip_prefix("strategy.") {
+            Some(rest) => rest
+                .split_once('.')
+                .map(|(l, _)| l == label)
+                .unwrap_or(true),
+            None => true,
+        };
+        if reaches {
+            key.push_str(&format!("/{}={:016x}", axis.name, v.to_bits()));
+        }
+    }
+    key
+}
+
+/// Run the full two-stage plan. Deterministic: the outcome (and its
+/// digest) is a pure function of (spec, seed) at any thread count.
+pub fn run_plan(plan: &PlanSpec, cfg: &PlannerConfig) -> Result<PlanOutcome> {
+    let scenario = build_scenario(plan)?;
+    let npts = scenario.points();
+    ensure!(npts > 0, "the candidate lattice is empty");
+
+    // ---- stage 0: fold exact-duplicate lattice points
+    let mut candidates: Vec<Candidate> = Vec::with_capacity(npts);
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    for p in 0..npts {
+        let (_, _, s) = scenario.decode(p);
+        let fp = fingerprint(&scenario, p);
+        let fate = match seen.get(&fp) {
+            Some(&into) => Fate::Folded { into },
+            None => {
+                seen.insert(fp, p);
+                // provisional; overwritten by stage 1/2 below
+                Fate::Evaluated { rung: 0 }
+            }
+        };
+        candidates.push(Candidate {
+            point: p,
+            label: scenario.label(p),
+            strategy: scenario.spec().strategies[s].label.clone(),
+            surface: None,
+            fate,
+            sim: None,
+            rank: None,
+            feasible: false,
+            frontier: false,
+        });
+    }
+
+    // ---- stage 1a: plan every unique candidate, extract surfaces
+    let uniq: Vec<usize> = candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| !matches!(c.fate, Fate::Folded { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let prepared: Vec<Result<(Arc<SpecCtx>, Option<Surface>)>> =
+        run_indexed(cfg.threads, uniq.len(), |i| {
+            let ctx = scenario.prepare(candidates[uniq[i]].point)?;
+            let surface = admissible_surface(
+                &ctx.plans()[0],
+                ctx.bid_problem(),
+                ctx.bound(),
+                ctx.run_params().runtime,
+                ctx.run_params().idle_step,
+                ctx.iid_prices(),
+                // the *resolved* per-point overhead: an `overhead.*`
+                // axis can switch overhead on for some lattice points
+                // even when the base spec's table is absent, and those
+                // points must be heuristic (never pruned)
+                ctx.run_params().overhead.enabled(),
+            );
+            Ok((Arc::new(ctx), surface))
+        });
+    // cache the prepared contexts: the refinement rungs reuse them, so
+    // the expensive plan solves run once per candidate, not per rung
+    let mut ctx_cache: Vec<Option<Arc<SpecCtx>>> = vec![None; npts];
+    for (i, res) in prepared.into_iter().enumerate() {
+        match res {
+            Ok((ctx, surface)) => {
+                candidates[uniq[i]].surface = surface;
+                ctx_cache[uniq[i]] = Some(ctx);
+            }
+            Err(e) => {
+                candidates[uniq[i]].fate =
+                    Fate::PlanError { error: format!("{e:#}") };
+            }
+        }
+    }
+
+    // ---- stage 1b: analytic pruning over admissible surfaces
+    if plan.search.prune {
+        // hard constraints first: these surfaces are exact expectations,
+        // so a closed-form violation is a provable one
+        for &ci in &uniq {
+            if !matches!(candidates[ci].fate, Fate::Evaluated { .. }) {
+                continue;
+            }
+            if let Some(sf) = candidates[ci].surface {
+                if let Some(v) =
+                    plan.objective.violation(sf.cost, sf.time, sf.err)
+                {
+                    candidates[ci].fate = Fate::Infeasible { violated: v };
+                }
+            }
+        }
+        // weak dominance with order tie-break (a strict partial order:
+        // every beaten candidate has an unbeaten witness)
+        let admissible: Vec<usize> = uniq
+            .iter()
+            .copied()
+            .filter(|&ci| {
+                matches!(candidates[ci].fate, Fate::Evaluated { .. })
+                    && candidates[ci].surface.is_some()
+            })
+            .collect();
+        let beats_ci = |cj: usize, ci: usize| -> bool {
+            match (&candidates[cj].surface, &candidates[ci].surface) {
+                (Some(a), Some(b)) => beats(a, cj, b, ci),
+                _ => false,
+            }
+        };
+        let beaten: Vec<usize> = admissible
+            .iter()
+            .copied()
+            .filter(|&ci| {
+                admissible
+                    .iter()
+                    .any(|&cj| cj != ci && beats_ci(cj, ci))
+            })
+            .collect();
+        let witnesses: Vec<(usize, usize)> = beaten
+            .iter()
+            .map(|&ci| {
+                let by = admissible
+                    .iter()
+                    .copied()
+                    .filter(|cj| !beaten.contains(cj))
+                    .find(|&cj| beats_ci(cj, ci))
+                    // unreachable by the partial-order argument, but
+                    // never panic over a float oddity: fall back to any
+                    // beating candidate
+                    .or_else(|| {
+                        admissible
+                            .iter()
+                            .copied()
+                            .find(|&cj| cj != ci && beats_ci(cj, ci))
+                    })
+                    .expect("beaten candidate has a beating witness");
+                (ci, by)
+            })
+            .collect();
+        for (ci, by) in witnesses {
+            candidates[ci].fate = Fate::Dominated { by };
+        }
+    }
+
+    // ---- stage 2: successive-halving refinement on the sweep pool
+    let mut alive: Vec<usize> = candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| matches!(c.fate, Fate::Evaluated { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let mut rungs: Vec<RungRecord> = Vec::new();
+    for (rung, &reps) in plan.search.ladder.iter().enumerate() {
+        if alive.is_empty() {
+            break;
+        }
+        let seed = rung_seed(cfg.seed, rung);
+        let points: Vec<usize> =
+            alive.iter().map(|&ci| candidates[ci].point).collect();
+        let ctxs: Vec<Arc<SpecCtx>> = alive
+            .iter()
+            .map(|&ci| {
+                ctx_cache[ci]
+                    .clone()
+                    .expect("alive candidates were prepared in stage 1")
+            })
+            .collect();
+        let cs = CandidateScenario {
+            base: &scenario,
+            points,
+            ctxs: Some(ctxs),
+        };
+        let res = run_sweep(
+            &cs,
+            &SweepConfig { replicates: reps, seed, threads: cfg.threads },
+        )?;
+        for (k, &ci) in alive.iter().enumerate() {
+            let stats = &res.points[k].stats;
+            let sim = SimStats {
+                replicates: reps,
+                cost_mean: stats[0].mean(),
+                cost_std: stats[0].std(),
+                time_mean: stats[1].mean(),
+                time_std: stats[1].std(),
+                err_mean: stats[2].mean(),
+                err_std: stats[2].std(),
+                iters_mean: stats[3].mean(),
+            };
+            candidates[ci].feasible = plan.objective.feasible(
+                sim.cost_mean,
+                sim.time_mean,
+                sim.err_mean,
+            );
+            candidates[ci].sim = Some(sim);
+            candidates[ci].fate = Fate::Evaluated { rung };
+        }
+        rungs.push(RungRecord { replicates: reps, seed, members: alive.clone() });
+        if rung + 1 < plan.search.ladder.len()
+            && alive.len() > plan.search.min_keep
+        {
+            let mut ranked = alive.clone();
+            ranked.sort_by(|&a, &b| rank_order(&candidates, &plan.objective, a, b));
+            let keep = ((alive.len() as f64 * plan.search.keep_fraction)
+                .ceil() as usize)
+                .max(plan.search.min_keep)
+                .min(alive.len());
+            ranked.truncate(keep);
+            ranked.sort_unstable();
+            alive = ranked;
+        }
+    }
+
+    // ---- final ranking, incumbent, frontier
+    let evaluated: Vec<usize> = candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| matches!(c.fate, Fate::Evaluated { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let mut recommendations = evaluated.clone();
+    recommendations
+        .sort_by(|&a, &b| rank_order(&candidates, &plan.objective, a, b));
+    for (r, &ci) in recommendations.iter().enumerate() {
+        candidates[ci].rank = Some(r + 1);
+    }
+    let incumbent = recommendations
+        .iter()
+        .copied()
+        .find(|&ci| candidates[ci].feasible);
+    // Pareto frontier over the deepest-rung simulated means, with the
+    // same weak-dominance order the pruner uses
+    let sim_surface = |ci: usize| -> Surface {
+        let s = candidates[ci].sim.expect("evaluated candidate has stats");
+        Surface { cost: s.cost_mean, time: s.time_mean, err: s.err_mean }
+    };
+    let on_frontier: Vec<usize> = evaluated
+        .iter()
+        .copied()
+        .filter(|&ci| {
+            !evaluated.iter().any(|&cj| {
+                cj != ci && beats(&sim_surface(cj), cj, &sim_surface(ci), ci)
+            })
+        })
+        .collect();
+    for ci in on_frontier {
+        candidates[ci].frontier = true;
+    }
+
+    Ok(PlanOutcome {
+        name: scenario.spec().name.clone(),
+        objective: plan.objective,
+        search: plan.search.clone(),
+        seed: cfg.seed,
+        lattice_points: npts,
+        candidates,
+        recommendations,
+        incumbent,
+        rungs,
+    })
+}
+
+/// Ranking order: feasible candidates first (a hard constraint
+/// outranks evidence depth — if every deep survivor turns out
+/// infeasible, a feasible shallow-rung candidate is still the best
+/// recommendation on offer, with its thin `replicates` count visible
+/// in the report), then *deeper-rung evidence first* (within a
+/// feasibility class a culled candidate never outranks a survivor
+/// whose statistics carry more replicates — the ladder's verdict
+/// stands), then ascending objective score on the simulated means,
+/// ties by candidate order. Mid-ladder culls compare members of the
+/// same rung, so the depth key is a tie there and culling stays pure
+/// score order. `total_cmp` keeps the sort deterministic even for
+/// pathological float values.
+fn rank_order(
+    candidates: &[Candidate],
+    objective: &Objective,
+    a: usize,
+    b: usize,
+) -> std::cmp::Ordering {
+    let (ca, cb) = (&candidates[a], &candidates[b]);
+    let rung = |c: &Candidate| match c.fate {
+        Fate::Evaluated { rung } => rung,
+        _ => 0,
+    };
+    cb.feasible
+        .cmp(&ca.feasible)
+        .then_with(|| rung(cb).cmp(&rung(ca)))
+        .then_with(|| {
+            let score = |c: &Candidate| {
+                let s = c.sim.expect("ranked candidate has stats");
+                objective.score(s.cost_mean, s.time_mean)
+            };
+            score(ca).total_cmp(&score(cb))
+        })
+        .then_with(|| a.cmp(&b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// static_workers on a fixed-price market with a unit-price axis:
+    /// identical dynamics, doubled price — textbook dominance.
+    const DOMINATED: &str = r#"
+name = "dominated"
+strategies = ["static_workers"]
+axes = ["price"]
+
+[objective]
+goal = "min_cost"
+
+[search]
+ladder = [2]
+min_keep = 1
+
+[job]
+n = 4
+j = 100
+preempt_q = 0.3
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[axis.price]
+path = "job.unit_price"
+values = [1.0, 2.0]
+"#;
+
+    fn run(text: &str, threads: usize) -> PlanOutcome {
+        let plan = PlanSpec::from_str(text).unwrap();
+        run_plan(&plan, &PlannerConfig { seed: 11, threads }).unwrap()
+    }
+
+    #[test]
+    fn dominated_candidate_is_pruned_with_a_surviving_witness() {
+        let out = run(DOMINATED, 2);
+        assert_eq!(out.lattice_points, 2);
+        let c = out.counts();
+        assert_eq!(c.dominated, 1);
+        assert_eq!(c.evaluated, 1);
+        // the doubled price is the dominated one; its witness survived
+        assert_eq!(out.candidates[1].fate, Fate::Dominated { by: 0 });
+        assert!(matches!(out.candidates[0].fate, Fate::Evaluated { .. }));
+        let (a, b) = (
+            out.candidates[0].surface.unwrap(),
+            out.candidates[1].surface.unwrap(),
+        );
+        assert!(beats(&a, 0, &b, 1));
+        assert_eq!(a.time, b.time);
+        assert_eq!(a.err, b.err);
+        assert!((b.cost - 2.0 * a.cost).abs() < 1e-9 * b.cost);
+        // the survivor is the incumbent and alone on the frontier
+        assert_eq!(out.incumbent, Some(0));
+        assert_eq!(out.frontier_labels(), vec!["price=1"]);
+    }
+
+    #[test]
+    fn prune_false_sends_everything_to_simulation() {
+        let text = DOMINATED.replace("[search]", "[search]\nprune = false");
+        let out = run(&text, 2);
+        let c = out.counts();
+        assert_eq!(c.dominated, 0);
+        assert_eq!(c.evaluated, 2);
+        // simulation reaches the same verdict: the cheap entry ranks
+        // first and the expensive one is off the frontier on cost
+        assert_eq!(out.recommendations[0], 0);
+        assert!(out.candidates[0].frontier);
+    }
+
+    #[test]
+    fn closed_form_constraint_violations_prune_before_simulation() {
+        let text = DOMINATED.replace(
+            "goal = \"min_cost\"",
+            "goal = \"min_cost\"\nbudget = 0.001",
+        );
+        let out = run(&text, 1);
+        let c = out.counts();
+        // both candidates exceed the budget in closed form; nothing runs
+        assert_eq!(c.infeasible, 2);
+        assert_eq!(c.evaluated, 0);
+        assert!(out.rungs.is_empty());
+        assert!(out.incumbent.is_none());
+        for cand in &out.candidates {
+            if let Fate::Infeasible { violated } = &cand.fate {
+                assert!(violated.contains("budget"), "{violated}");
+            } else {
+                panic!("expected Infeasible, got {:?}", cand.fate);
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_scoped_axes_fold_unaffected_entries() {
+        let text = r#"
+name = "folding"
+strategies = ["a", "b"]
+axes = ["eta"]
+
+[objective]
+goal = "min_cost"
+
+[search]
+ladder = [1]
+min_keep = 1
+
+[job]
+n = 4
+j = 50
+preempt_q = 0.3
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[strategy.a]
+kind = "dynamic_workers"
+eta = 1.2
+
+[strategy.b]
+kind = "static_workers"
+
+[axis.eta]
+path = "strategy.a.eta"
+values = [1.2, 1.5, 2.0]
+"#;
+        let out = run(text, 2);
+        assert_eq!(out.lattice_points, 6); // 3 eta x 2 strategies
+        let c = out.counts();
+        // b is untouched by the eta axis: 2 of its 3 points fold
+        assert_eq!(c.folded, 2);
+        assert_eq!(c.evaluated, 4);
+        for cand in &out.candidates {
+            if let Fate::Folded { into } = cand.fate {
+                assert_eq!(out.candidates[into].strategy, "b");
+                assert_eq!(cand.strategy, "b");
+            }
+        }
+        // dynamic_workers is adaptive: heuristic, never pruned, no
+        // surface; static_workers carries its exact surface
+        for cand in &out.candidates {
+            match cand.strategy.as_str() {
+                "a" => assert!(cand.surface.is_none()),
+                "b" if !matches!(cand.fate, Fate::Folded { .. }) => {
+                    assert!(cand.surface.is_some())
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_plans_are_recorded_not_fatal() {
+        // eps = 0.35 sits below the n = 4 noise floor (K/4 = 0.5): the
+        // Theorem-2 plan fails in closed form at n = 4, succeeds at 8
+        let text = r#"
+name = "floors"
+strategies = ["one_bid"]
+axes = ["n"]
+
+[objective]
+goal = "min_cost"
+deadline = 300000.0
+
+[search]
+ladder = [1]
+min_keep = 1
+
+[job]
+eps = 0.35
+j = 2000
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+
+[axis.n]
+path = "job.n"
+values = [4, 8]
+"#;
+        let out = run(text, 2);
+        let c = out.counts();
+        assert_eq!(c.plan_errors, 1);
+        assert_eq!(c.evaluated, 1);
+        match &out.candidates[0].fate {
+            Fate::PlanError { error } => {
+                assert!(error.contains("noise floor"), "{error}")
+            }
+            other => panic!("expected PlanError, got {other:?}"),
+        }
+        assert_eq!(out.incumbent_label(), Some("n=8"));
+    }
+
+    #[test]
+    fn ladder_culls_by_score_and_keeps_determinism() {
+        let text = r#"
+name = "ladder"
+strategies = ["static_workers"]
+axes = ["price"]
+
+[objective]
+goal = "min_cost"
+
+[search]
+ladder = [1, 2]
+keep_fraction = 0.5
+min_keep = 1
+prune = false
+
+[job]
+n = 4
+j = 60
+preempt_q = 0.3
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[axis.price]
+path = "job.unit_price"
+values = [1.0, 2.0, 3.0, 4.0]
+"#;
+        let serial = run(text, 1);
+        let par = run(text, 8);
+        assert_eq!(serial.digest(), par.digest());
+        assert_eq!(serial.rungs.len(), 2);
+        assert_eq!(serial.rungs[0].members, vec![0, 1, 2, 3]);
+        // ceil(4 * 0.5) = 2 survivors; min_cost keeps the cheap prices
+        assert_eq!(serial.rungs[1].members, vec![0, 1]);
+        assert_eq!(
+            serial.candidates[0].fate,
+            Fate::Evaluated { rung: 1 }
+        );
+        assert_eq!(
+            serial.candidates[3].fate,
+            Fate::Evaluated { rung: 0 }
+        );
+        // culled candidates keep their rung-0 stats and still rank —
+        // but always below the final-rung survivors: the ladder's own
+        // verdict is never overturned by shallow-replicate noise
+        assert!(serial.candidates[3].sim.is_some());
+        assert_eq!(serial.recommendations, vec![0, 1, 2, 3]);
+        assert_eq!(serial.incumbent, Some(0));
+        // replaying the recorded final rung reproduces its stats
+        let plan = PlanSpec::from_str(text).unwrap();
+        let scenario = build_scenario(&plan).unwrap();
+        let last = serial.rungs.last().unwrap();
+        let points: Vec<usize> = last
+            .members
+            .iter()
+            .map(|&ci| serial.candidates[ci].point)
+            .collect();
+        let replay = evaluate_rung(
+            &scenario,
+            &points,
+            last.replicates,
+            last.seed,
+            3,
+        )
+        .unwrap();
+        for (k, &ci) in last.members.iter().enumerate() {
+            let sim = serial.candidates[ci].sim.unwrap();
+            assert_eq!(replay.points[k].stats[0].mean(), sim.cost_mean);
+            assert_eq!(replay.points[k].stats[1].mean(), sim.time_mean);
+            assert_eq!(replay.points[k].stats[2].mean(), sim.err_mean);
+        }
+    }
+
+    #[test]
+    fn min_time_goal_reorders_recommendations() {
+        // two fleet sizes on a preemptible platform: the bigger fleet
+        // is faster (fewer dead slots at q = 0.6) but costlier
+        let text = r#"
+name = "goals"
+strategies = ["static_workers"]
+axes = ["n"]
+
+[objective]
+goal = "min_time"
+
+[search]
+ladder = [2]
+min_keep = 1
+prune = false
+
+[job]
+j = 80
+preempt_q = 0.6
+unit_price = 1.0
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[axis.n]
+path = "job.n"
+values = [1, 8]
+"#;
+        let out = run(text, 2);
+        assert_eq!(out.counts().evaluated, 2);
+        let t = |i: usize| out.candidates[i].sim.unwrap().time_mean;
+        let c = |i: usize| out.candidates[i].sim.unwrap().cost_mean;
+        assert!(t(1) < t(0), "n=8 must be faster at q=0.6");
+        assert!(c(1) > c(0), "n=8 must be costlier");
+        assert_eq!(out.recommendations[0], 1, "min_time prefers n=8");
+        let cost_text = text.replace("min_time", "min_cost");
+        let out = run(&cost_text, 2);
+        assert_eq!(out.recommendations[0], 0, "min_cost prefers n=1");
+        // both sit on the (cost, time, err) frontier
+        assert!(out.candidates[0].frontier && out.candidates[1].frontier);
+    }
+}

@@ -1,0 +1,486 @@
+//! Planner spec: `[objective]` + `[search]` on top of a scenario.
+//!
+//! A planner spec is an ordinary [`ScenarioSpec`] file — same `[job]` /
+//! `[runtime]` / `[market]` / `[strategy.*]` / `[axis.*]` schema, same
+//! strict unknown-key audit — plus two planner-only tables:
+//!
+//! * **`[objective]`** — what "best" means: `goal = "min_cost" |
+//!   "min_time" | "weighted"` (with `weight_cost` / `weight_time`),
+//!   and hard constraints on *expected* outcomes: `deadline` (time),
+//!   `budget` (cost) and `error_bound` (training-error proxy);
+//! * **`[search]`** — the successive-halving schedule: a fixed
+//!   `ladder` of replicate counts, the `keep_fraction` culled between
+//!   rungs, a `min_keep` floor, and a `prune` switch for the analytic
+//!   stage.
+//!
+//! Two deliberate differences from sweep specs: the `metrics` key is
+//! rejected (the planner reports its own cost/time/error columns), and
+//! an absent `job.theta` inherits `objective.deadline` — the deadline
+//! you constrain on is the deadline the Theorem 2/3 bid plans target.
+//!
+//! # Example
+//!
+//! ```
+//! use volatile_sgd::opt::{Goal, PlanSpec};
+//!
+//! let plan = PlanSpec::from_str(r#"
+//! name = "doc"
+//! strategies = ["static_workers"]
+//!
+//! [objective]
+//! goal = "min_cost"
+//! budget = 5000.0
+//!
+//! [search]
+//! ladder = [2, 4]
+//!
+//! [job]
+//! n = 4
+//! j = 100
+//! preempt_q = 0.3
+//!
+//! [runtime]
+//! kind = "deterministic"
+//! r = 10.0
+//!
+//! [market]
+//! kind = "fixed"
+//! "#).unwrap();
+//! assert_eq!(plan.objective.goal, Goal::MinCost);
+//! assert_eq!(plan.search.ladder, vec![2, 4]);
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::toml::{Doc, TrackedDoc};
+use crate::exp::spec::{reject_unknown_keys, SweepMode};
+use crate::exp::ScenarioSpec;
+
+/// Relative slack for constraint checks: a surface that is deadline-
+/// *tight* by construction (Theorem 2 solves `E[tau] = theta` exactly)
+/// must not be pruned over a last-bit rounding excess. Slack only ever
+/// widens the feasible set, so pruning stays sound.
+pub const CONSTRAINT_RTOL: f64 = 1e-9;
+
+/// What the planner minimises over the feasible candidates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Goal {
+    /// minimise expected cost (the paper's Sec. IV objective)
+    MinCost,
+    /// minimise expected completion time
+    MinTime,
+    /// minimise `weight_cost * cost + weight_time * time`
+    Weighted { cost: f64, time: f64 },
+}
+
+impl Goal {
+    /// The config-file name (what `objective.goal` parses).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Goal::MinCost => "min_cost",
+            Goal::MinTime => "min_time",
+            Goal::Weighted { .. } => "weighted",
+        }
+    }
+}
+
+/// The `[objective]` table: goal plus hard constraints on expected
+/// outcomes. During analytic pruning the constraints read the
+/// closed-form surfaces; during refinement and final ranking they read
+/// the simulated means — DESIGN.md §7 spells out the two semantics.
+#[derive(Clone, Copy, Debug)]
+pub struct Objective {
+    pub goal: Goal,
+    /// max expected completion time
+    pub deadline: Option<f64>,
+    /// max expected total cost
+    pub budget: Option<f64>,
+    /// max expected training-error proxy
+    pub error_bound: Option<f64>,
+}
+
+impl Objective {
+    /// The scalar the planner ranks candidates by (lower is better).
+    pub fn score(&self, cost: f64, time: f64) -> f64 {
+        match self.goal {
+            Goal::MinCost => cost,
+            Goal::MinTime => time,
+            Goal::Weighted { cost: wc, time: wt } => wc * cost + wt * time,
+        }
+    }
+
+    /// First violated hard constraint, described — `None` when the
+    /// point is feasible. Comparisons carry [`CONSTRAINT_RTOL`] slack.
+    pub fn violation(
+        &self,
+        cost: f64,
+        time: f64,
+        err: f64,
+    ) -> Option<String> {
+        let over = |v: f64, lim: f64| v > lim * (1.0 + CONSTRAINT_RTOL);
+        if let Some(t) = self.deadline {
+            if over(time, t) {
+                return Some(format!(
+                    "expected time {time} exceeds deadline {t}"
+                ));
+            }
+        }
+        if let Some(b) = self.budget {
+            if over(cost, b) {
+                return Some(format!(
+                    "expected cost {cost} exceeds budget {b}"
+                ));
+            }
+        }
+        if let Some(e) = self.error_bound {
+            if over(err, e) {
+                return Some(format!(
+                    "expected error {err} exceeds error_bound {e}"
+                ));
+            }
+        }
+        None
+    }
+
+    pub fn feasible(&self, cost: f64, time: f64, err: f64) -> bool {
+        self.violation(cost, time, err).is_none()
+    }
+}
+
+/// The `[search]` table: the successive-halving refinement schedule.
+#[derive(Clone, Debug)]
+pub struct SearchSpec {
+    /// replicate counts per rung, non-decreasing (default `[2, 4, 8]`);
+    /// a *fixed* ladder is what keeps the planner's RNG streams pure
+    /// functions of (seed, rung, candidate order) — DESIGN.md §7
+    pub ladder: Vec<u64>,
+    /// fraction of candidates kept between rungs, in (0, 1] (default 0.5)
+    pub keep_fraction: f64,
+    /// never cull below this many candidates (default 3)
+    pub min_keep: usize,
+    /// run the analytic pruning stage (default true; `false` sends the
+    /// whole folded lattice to simulation — the pruning-audit switch)
+    pub prune: bool,
+}
+
+impl Default for SearchSpec {
+    fn default() -> Self {
+        SearchSpec {
+            ladder: vec![2, 4, 8],
+            keep_fraction: 0.5,
+            min_keep: 3,
+            prune: true,
+        }
+    }
+}
+
+/// A fully-parsed planner spec: the candidate-lattice scenario, the
+/// objective, and the search schedule.
+#[derive(Clone, Debug)]
+pub struct PlanSpec {
+    pub scenario: ScenarioSpec,
+    pub objective: Objective,
+    pub search: SearchSpec,
+}
+
+impl PlanSpec {
+    pub fn from_str(text: &str) -> Result<Self> {
+        Self::from_doc(&Doc::parse(text)?)
+    }
+
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan spec {}", path.display()))?;
+        Self::from_str(&text)
+            .with_context(|| format!("parsing plan spec {}", path.display()))
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let d = TrackedDoc::new(doc);
+
+        // --------------------------------------------------- objective
+        ensure!(
+            d.has("objective.goal"),
+            "missing required [objective] table (set objective.goal = \
+             \"min_cost\" | \"min_time\" | \"weighted\")"
+        );
+        let goal = match d.require_str("objective.goal")?.as_str() {
+            "min_cost" => Goal::MinCost,
+            "min_time" => Goal::MinTime,
+            "weighted" => {
+                let cost = d.f64_or("objective.weight_cost", 1.0)?;
+                let time = d.f64_or("objective.weight_time", 1.0)?;
+                ensure!(
+                    cost >= 0.0 && time >= 0.0 && cost + time > 0.0,
+                    "objective weights must be >= 0 with a positive sum, \
+                     got weight_cost={cost} weight_time={time}"
+                );
+                Goal::Weighted { cost, time }
+            }
+            other => bail!(
+                "objective.goal must be min_cost | min_time | weighted, \
+                 got '{other}'"
+            ),
+        };
+        let positive = |key: &str, v: Option<f64>| -> Result<Option<f64>> {
+            if let Some(v) = v {
+                ensure!(v > 0.0, "objective.{key} must be > 0, got {v}");
+            }
+            Ok(v)
+        };
+        let objective = Objective {
+            goal,
+            deadline: positive("deadline", d.f64_opt("objective.deadline")?)?,
+            budget: positive("budget", d.f64_opt("objective.budget")?)?,
+            error_bound: positive(
+                "error_bound",
+                d.f64_opt("objective.error_bound")?,
+            )?,
+        };
+
+        // ------------------------------------------------------ search
+        let defaults = SearchSpec::default();
+        let ladder = if d.has("search.ladder") {
+            let vals = d.f64_array("search.ladder")?;
+            ensure!(!vals.is_empty(), "search.ladder must not be empty");
+            let mut out: Vec<u64> = Vec::with_capacity(vals.len());
+            for v in vals {
+                ensure!(
+                    v.fract() == 0.0 && v >= 1.0,
+                    "search.ladder entries must be integers >= 1, got {v}"
+                );
+                let r = v as u64;
+                if let Some(&prev) = out.last() {
+                    ensure!(
+                        r >= prev,
+                        "search.ladder must be non-decreasing, got {prev} \
+                         then {r}"
+                    );
+                }
+                out.push(r);
+            }
+            out
+        } else {
+            defaults.ladder
+        };
+        let keep_fraction =
+            d.f64_or("search.keep_fraction", defaults.keep_fraction)?;
+        ensure!(
+            keep_fraction > 0.0 && keep_fraction <= 1.0,
+            "search.keep_fraction must be in (0, 1], got {keep_fraction}"
+        );
+        let min_keep = d.usize_or("search.min_keep", defaults.min_keep)?;
+        ensure!(min_keep >= 1, "search.min_keep must be >= 1");
+        let search = SearchSpec {
+            ladder,
+            keep_fraction,
+            min_keep,
+            prune: d.bool_or("search.prune", defaults.prune)?,
+        };
+
+        // ---------------------------------------------------- scenario
+        let mut scenario = ScenarioSpec::from_tracked(&d, false)?;
+        ensure!(
+            scenario.mode == SweepMode::PerStrategy,
+            "optimize specs must use per_strategy mode: the candidate \
+             lattice is (market x grid x strategy)"
+        );
+        ensure!(
+            scenario.metrics.is_empty(),
+            "optimize specs take no 'metrics' key — the planner reports \
+             its own cost/time/error columns"
+        );
+        ensure!(
+            scenario.replicates.is_none(),
+            "optimize specs take no top-level 'replicates' key — the \
+             [search] ladder governs replicate counts"
+        );
+        // the deadline you constrain on is the deadline the Theorem 2/3
+        // bid plans target, unless the job pins its own theta
+        if scenario.job.theta.is_none() {
+            scenario.job.theta = objective.deadline;
+        }
+        reject_unknown_keys(&d, &scenario.strategies)?;
+        Ok(PlanSpec { scenario, objective, search })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"
+name = "mini_plan"
+strategies = ["static_workers"]
+
+[objective]
+goal = "min_cost"
+deadline = 9000.0
+
+[search]
+ladder = [2, 4]
+keep_fraction = 0.5
+min_keep = 1
+
+[job]
+n = 4
+j = 100
+preempt_q = 0.3
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+"#;
+
+    #[test]
+    fn parses_objective_search_and_scenario() {
+        let p = PlanSpec::from_str(MINI).unwrap();
+        assert_eq!(p.scenario.name, "mini_plan");
+        assert_eq!(p.objective.goal, Goal::MinCost);
+        assert_eq!(p.objective.deadline, Some(9000.0));
+        assert_eq!(p.objective.budget, None);
+        assert_eq!(p.search.ladder, vec![2, 4]);
+        assert_eq!(p.search.min_keep, 1);
+        assert!(p.search.prune);
+        // an absent job.theta inherits the objective deadline
+        assert_eq!(p.scenario.job.theta, Some(9000.0));
+    }
+
+    #[test]
+    fn explicit_theta_wins_over_deadline_coupling() {
+        let text = MINI.replace("j = 100", "j = 100\ntheta = 500.0");
+        let p = PlanSpec::from_str(&text).unwrap();
+        assert_eq!(p.scenario.job.theta, Some(500.0));
+        assert_eq!(p.objective.deadline, Some(9000.0));
+    }
+
+    #[test]
+    fn search_defaults_apply_without_a_table() {
+        let table =
+            "[search]\nladder = [2, 4]\nkeep_fraction = 0.5\nmin_keep = 1\n";
+        let text = MINI.replace(table, "");
+        assert_ne!(text, MINI, "the [search] table must be removed");
+        let p = PlanSpec::from_str(&text).unwrap();
+        assert_eq!(p.search.ladder, vec![2, 4, 8]);
+        assert_eq!(p.search.keep_fraction, 0.5);
+        assert_eq!(p.search.min_keep, 3);
+    }
+
+    #[test]
+    fn weighted_goal_parses_and_scores() {
+        let text = MINI.replace(
+            "goal = \"min_cost\"",
+            "goal = \"weighted\"\nweight_cost = 2.0\nweight_time = 0.5",
+        );
+        let p = PlanSpec::from_str(&text).unwrap();
+        assert_eq!(p.objective.goal, Goal::Weighted { cost: 2.0, time: 0.5 });
+        assert_eq!(p.objective.score(10.0, 4.0), 22.0);
+    }
+
+    #[test]
+    fn bad_objectives_rejected() {
+        for (needle, replacement, what) in [
+            ("goal = \"min_cost\"", "goal = \"cheapest\"", "unknown goal"),
+            ("deadline = 9000.0", "deadline = 0.0", "zero deadline"),
+            ("deadline = 9000.0", "deadline = -1.0", "negative deadline"),
+        ] {
+            let bad = MINI.replace(needle, replacement);
+            assert!(
+                PlanSpec::from_str(&bad).is_err(),
+                "{what} should be rejected"
+            );
+        }
+        // [objective] is required
+        let table = "[objective]\ngoal = \"min_cost\"\ndeadline = 9000.0";
+        let no_obj = MINI.replace(table, "");
+        let err = PlanSpec::from_str(&no_obj).unwrap_err().to_string();
+        assert!(err.contains("[objective]"), "{err}");
+        // weights must make sense
+        let bad = MINI.replace(
+            "goal = \"min_cost\"",
+            "goal = \"weighted\"\nweight_cost = 0.0\nweight_time = 0.0",
+        );
+        assert!(PlanSpec::from_str(&bad).is_err());
+    }
+
+    #[test]
+    fn bad_ladders_rejected() {
+        for (replacement, what) in [
+            ("ladder = []", "empty ladder"),
+            ("ladder = [4, 2]", "decreasing ladder"),
+            ("ladder = [0]", "zero replicates"),
+            ("ladder = [1.5]", "fractional replicates"),
+        ] {
+            let bad = MINI.replace("ladder = [2, 4]", replacement);
+            assert!(
+                PlanSpec::from_str(&bad).is_err(),
+                "{what} should be rejected"
+            );
+        }
+        let bad = MINI.replace("keep_fraction = 0.5", "keep_fraction = 0.0");
+        assert!(PlanSpec::from_str(&bad).is_err());
+        let bad = MINI.replace("min_keep = 1", "min_keep = 0");
+        assert!(PlanSpec::from_str(&bad).is_err());
+    }
+
+    #[test]
+    fn metrics_key_rejected_in_planner_specs() {
+        let bad = MINI.replace(
+            "strategies = [\"static_workers\"]",
+            "strategies = [\"static_workers\"]\nmetrics = [\"cost\"]",
+        );
+        let err = PlanSpec::from_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("metrics"), "{err}");
+    }
+
+    /// The sweep-level `replicates` key would be silently dead in a
+    /// planner spec (the ladder governs replicate counts) — reject it
+    /// so a copied-over sweep spec cannot quietly mean something else.
+    #[test]
+    fn replicates_key_rejected_in_planner_specs() {
+        let bad = MINI.replace(
+            "strategies = [\"static_workers\"]",
+            "strategies = [\"static_workers\"]\nreplicates = 32",
+        );
+        let err = PlanSpec::from_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("replicates"), "{err}");
+        assert!(err.contains("ladder"), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_name_the_planner_tables() {
+        let bad = MINI.replace("[objective]", "[objective]\ngoall = 1");
+        let err = PlanSpec::from_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("objective.goall"), "{err}");
+        assert!(err.contains("in table [objective]"), "{err}");
+        let bad = MINI.replace("[search]", "[search]\nladders = [2]");
+        let err = PlanSpec::from_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("search.ladders"), "{err}");
+        // scenario-side typos still carry the lineup position logic
+        let bad = MINI.replace("[job]", "[job]\nepss = 0.2");
+        let err = PlanSpec::from_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("job.epss"), "{err}");
+    }
+
+    #[test]
+    fn constraint_slack_spares_tight_surfaces() {
+        let o = Objective {
+            goal: Goal::MinCost,
+            deadline: Some(1000.0),
+            budget: None,
+            error_bound: None,
+        };
+        // a deadline-tight surface with one ulp of rounding excess is
+        // not a violation...
+        assert!(o.violation(1.0, 1000.0 * (1.0 + 1e-12), 0.1).is_none());
+        // ...a real excess is
+        let v = o.violation(1.0, 1001.0, 0.1).unwrap();
+        assert!(v.contains("deadline"), "{v}");
+        assert!(!o.feasible(1.0, 1001.0, 0.1));
+        assert!(o.feasible(1.0, 999.0, 0.1));
+    }
+}

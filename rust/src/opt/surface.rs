@@ -1,0 +1,345 @@
+//! Closed-form (cost, time, error) surfaces and the dominance order.
+//!
+//! Stage 1 of the planner evaluates every candidate's *analytic*
+//! surface where one exists and is **admissible** — exact, in
+//! expectation, for the process the engine simulates (DESIGN.md §7):
+//!
+//! * fixed-bid plans (`no_interruptions`, `one_bid`, `two_bids`,
+//!   `bid_fractions`) under an i.i.d. price model: the paper's
+//!   Lemma 1/2 and Theorem 2/3 forms via [`BidProblem`], with the
+//!   Theorem-1 bound at the plan's exact `E[1/y(b)]`;
+//! * `static_workers` under any preemption model: exact sums over the
+//!   active-set distribution (`E[y R(y) | y > 0]` pairs the binomial
+//!   pmf with the straggler runtime — y and R(y) are *not*
+//!   independent), the idle-slot tax `idle_step * p0 / (1 - p0)`, and
+//!   the Theorem-1 bound at the exact conditional `E[1/y]`.
+//!
+//! Everything else — staged/dynamic plans, the event-native policies,
+//! trace-estimated markets, any `[overhead]` model — is *heuristic*
+//! territory: no surface is produced, the candidate is never pruned,
+//! and simulation is its only judge.
+
+use crate::exp::PlannedStrategy;
+use crate::preempt::PreemptionModel;
+use crate::theory::bids::BidProblem;
+use crate::theory::bounds::ErrorBound;
+use crate::theory::runtime_model::RuntimeModel;
+use crate::util::ln_binomial;
+
+/// One candidate's closed-form outcome triple. Lower is better on
+/// every axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Surface {
+    /// expected total cost
+    pub cost: f64,
+    /// expected completion time
+    pub time: f64,
+    /// Theorem-1 error bound at the plan's iteration budget
+    pub err: f64,
+}
+
+/// The planner's pruning order: `a` (at candidate index `a_idx`) beats
+/// `b` when it is no worse on all three axes and either strictly
+/// better somewhere or an exact tie broken by candidate order. The
+/// tie-break folds duplicate surfaces deterministically (lowest index
+/// survives); with it, "beats" is a strict partial order, so every
+/// beaten candidate has an unbeaten witness that beats it — the
+/// soundness property `tests/integration_opt.rs` re-checks.
+pub fn beats(a: &Surface, a_idx: usize, b: &Surface, b_idx: usize) -> bool {
+    let no_worse = a.cost <= b.cost && a.time <= b.time && a.err <= b.err;
+    if !no_worse {
+        return false;
+    }
+    let strictly = a.cost < b.cost || a.time < b.time || a.err < b.err;
+    strictly || a_idx < b_idx
+}
+
+/// Active-set pmf over `y = 0..=n`, exact per model.
+fn active_pmf(model: &PreemptionModel, n: usize) -> Vec<f64> {
+    let mut pmf = vec![0.0; n + 1];
+    match model {
+        PreemptionModel::None => pmf[n] = 1.0,
+        PreemptionModel::Bernoulli { q } => {
+            // log-space binomial terms: stable for any q in (0,1) and
+            // fleets far larger than we ever provision
+            let (lq, lp) = (q.ln(), (1.0 - q).ln());
+            for (y, slot) in pmf.iter_mut().enumerate() {
+                *slot = (ln_binomial(n as u64, y as u64)
+                    + y as f64 * lp
+                    + (n - y) as f64 * lq)
+                    .exp();
+            }
+        }
+        PreemptionModel::Uniform => {
+            for slot in pmf.iter_mut().skip(1) {
+                *slot = 1.0 / n as f64;
+            }
+        }
+    }
+    pmf
+}
+
+/// The closed-form surface for one plan, `Some` only when admissible
+/// for pruning (see the module docs / DESIGN.md §7). `bound` is the
+/// point's Theorem-1 evaluator, `runtime`/`idle_step` the engine loop
+/// parameters the static-workers forms must mirror exactly.
+pub fn admissible_surface(
+    plan: &PlannedStrategy,
+    pb: Option<&BidProblem>,
+    bound: &ErrorBound,
+    runtime: RuntimeModel,
+    idle_step: f64,
+    iid_prices: bool,
+    overhead_enabled: bool,
+) -> Option<Surface> {
+    if overhead_enabled {
+        // checkpoint/restart accounting is engine-only; no closed form
+        return None;
+    }
+    match plan {
+        PlannedStrategy::Fixed { bids, j, .. } => {
+            // Lemma 1/2 are exact for i.i.d. prices only; an empirical
+            // CDF estimated from a trace replay is a heuristic stand-in
+            if !iid_prices {
+                return None;
+            }
+            let pb = pb?;
+            let (n1, b1, b2) = (bids.n1, bids.b1, bids.b2);
+            let recip = pb.expected_recip_two(n1, b1, b2);
+            Some(Surface {
+                cost: pb.expected_cost_two(*j, n1, b1, b2),
+                time: pb.expected_time_two(*j, n1, b1, b2),
+                err: bound.phi_const(*j, recip),
+            })
+        }
+        PlannedStrategy::StaticWorkers {
+            n, j, model, unit_price, ..
+        } => {
+            let pmf = active_pmf(model, *n);
+            let p0 = pmf[0];
+            let live = 1.0 - p0;
+            if live <= 0.0 {
+                return None; // q = 1 cannot happen (parser range), but
+                             // never divide by zero on a surface
+            }
+            // E[R(y) | y>0] and E[y R(y) | y>0]: y and R(y) are coupled
+            // through the straggler max, so both are pmf-weighted sums
+            let (mut er, mut yer) = (0.0, 0.0);
+            for (y, p) in pmf.iter().enumerate().skip(1) {
+                let r = runtime.expected(y);
+                er += p / live * r;
+                yer += p / live * y as f64 * r;
+            }
+            let jf = *j as f64;
+            Some(Surface {
+                // every one of the J productive slots bills the active
+                // workers at the flat preemptible price for the slot
+                cost: jf * unit_price * yer,
+                // J productive slots plus the expected idle-slot tax
+                // (negative-binomial mean: J p0 / (1 - p0) idle slots)
+                time: jf * er + jf * idle_step * p0 / live,
+                err: bound.phi_const(*j, model.expected_recip(*n)),
+            })
+        }
+        // staged bids, Theorem-5 growth and the event-native policies
+        // adapt mid-run: their closed forms are heuristic at best, so
+        // they are never pruned — simulation is their only judge
+        PlannedStrategy::Dynamic { .. }
+        | PlannedStrategy::DynamicWorkers { .. }
+        | PlannedStrategy::NoticeRebid { .. }
+        | PlannedStrategy::ElasticFleet { .. }
+        | PlannedStrategy::DeadlineAware { .. } => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::{run_policy_engine, RunParams};
+    use crate::market::BidVector;
+    use crate::sim::PriceSource;
+    use crate::theory::bounds::SgdHyper;
+    use crate::util::rng::Rng;
+
+    fn bound() -> ErrorBound {
+        ErrorBound::new(SgdHyper::paper_cnn())
+    }
+
+    #[test]
+    fn beats_is_weak_dominance_with_index_tiebreak() {
+        let a = Surface { cost: 1.0, time: 2.0, err: 0.3 };
+        let worse_cost = Surface { cost: 2.0, ..a };
+        let tie = a;
+        let tradeoff = Surface { cost: 0.5, time: 3.0, err: 0.3 };
+        assert!(beats(&a, 0, &worse_cost, 1));
+        assert!(!beats(&worse_cost, 1, &a, 0));
+        // exact ties: only the lower index wins, never both
+        assert!(beats(&a, 0, &tie, 1));
+        assert!(!beats(&tie, 1, &a, 0));
+        // a genuine tradeoff beats nobody
+        assert!(!beats(&a, 0, &tradeoff, 1));
+        assert!(!beats(&tradeoff, 1, &a, 0));
+        // infinities lose cleanly, NaN never participates
+        let inf = Surface { cost: f64::INFINITY, time: 2.0, err: 0.3 };
+        assert!(beats(&a, 0, &inf, 1));
+        let nan = Surface { cost: f64::NAN, time: 2.0, err: 0.3 };
+        assert!(!beats(&a, 0, &nan, 1));
+        assert!(!beats(&nan, 1, &a, 0));
+    }
+
+    #[test]
+    fn active_pmf_sums_to_one_and_matches_moments() {
+        let model = PreemptionModel::Bernoulli { q: 0.4 };
+        for n in [1usize, 3, 8, 40] {
+            let pmf = active_pmf(&model, n);
+            let total: f64 = pmf.iter().sum();
+            assert!((total - 1.0).abs() < 1e-12, "n={n}: sum {total}");
+            assert!((pmf[0] - model.p_zero(n)).abs() < 1e-12);
+            let mean: f64 =
+                pmf.iter().enumerate().map(|(y, p)| y as f64 * p).sum();
+            assert!((mean - model.mean_active(n)).abs() < 1e-10);
+        }
+    }
+
+    /// The static-workers surface must be exact for the engine's own
+    /// accounting: Monte-Carlo means from the real engine path converge
+    /// to the closed forms.
+    #[test]
+    fn static_workers_surface_matches_engine_monte_carlo() {
+        let model = PreemptionModel::Bernoulli { q: 0.4 };
+        let plan = PlannedStrategy::StaticWorkers {
+            name: "static".to_string(),
+            n: 3,
+            j: 200,
+            model: model.clone(),
+            unit_price: 2.0,
+        };
+        let runtime = RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 };
+        let idle_step = 4.0;
+        let sf = admissible_surface(
+            &plan,
+            None,
+            &bound(),
+            runtime,
+            idle_step,
+            false,
+            false,
+        )
+        .unwrap();
+        let params = RunParams::lockstep(runtime, f64::INFINITY);
+        let prices = PriceSource::Fixed(0.0);
+        let reps = 400;
+        let (mut cost, mut time, mut err) = (0.0, 0.0, 0.0);
+        for rep in 0..reps {
+            let mut rng = Rng::stream(7, rep);
+            let mut policy = plan.build_policy().unwrap();
+            let r = run_policy_engine(
+                policy.as_mut(),
+                bound(),
+                &prices,
+                &params,
+                &mut rng,
+            )
+            .unwrap();
+            cost += r.cost / reps as f64;
+            time += r.elapsed / reps as f64;
+            err += r.final_error / reps as f64;
+        }
+        assert!(
+            (cost - sf.cost).abs() < 0.05 * sf.cost,
+            "cost mc={cost} exact={}",
+            sf.cost
+        );
+        assert!(
+            (time - sf.time).abs() < 0.05 * sf.time,
+            "time mc={time} exact={}",
+            sf.time
+        );
+        // the err surface is the third pruning axis (error_bound
+        // constraints + dominance): the synthetic backend's recursion
+        // is linear in 1/y, so phi_const(J, E[1/y | y>0]) is exactly
+        // the expectation of the realized final error — Monte-Carlo
+        // means must converge to it just like cost and time
+        assert!(
+            (err - sf.err).abs() < 0.05 * sf.err,
+            "err mc={err} exact={}",
+            sf.err
+        );
+    }
+
+    #[test]
+    fn fixed_bid_surface_reuses_the_theorem_forms() {
+        let pb = BidProblem {
+            bound: bound(),
+            price: crate::market::PriceModel::uniform_paper(),
+            runtime: RuntimeModel::Deterministic { r: 10.0 },
+            n: 8,
+            eps: 0.35,
+            theta: 120_000.0,
+        };
+        let one = pb.optimal_one_bid().unwrap();
+        let plan = PlannedStrategy::Fixed {
+            name: "one_bid".to_string(),
+            bids: BidVector::uniform(8, one.b),
+            j: one.j,
+        };
+        let sf = admissible_surface(
+            &plan,
+            Some(&pb),
+            &bound(),
+            pb.runtime,
+            4.0,
+            true,
+            false,
+        )
+        .unwrap();
+        assert!((sf.cost - one.expected_cost).abs() < 1e-9 * one.expected_cost);
+        assert!((sf.time - one.expected_time).abs() < 1e-9 * one.expected_time);
+        assert!(sf.err <= pb.eps * (1.0 + 1e-9), "err {} vs eps", sf.err);
+        // non-iid prices demote the same plan to heuristic
+        assert!(admissible_surface(
+            &plan,
+            Some(&pb),
+            &bound(),
+            pb.runtime,
+            4.0,
+            false,
+            false
+        )
+        .is_none());
+        // any overhead model demotes everything
+        assert!(admissible_surface(
+            &plan,
+            Some(&pb),
+            &bound(),
+            pb.runtime,
+            4.0,
+            true,
+            true
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn adaptive_plans_have_no_admissible_surface() {
+        let plan = PlannedStrategy::ElasticFleet {
+            name: "elastic".to_string(),
+            j: 100,
+            table: crate::preempt::RecipTable::build(
+                &PreemptionModel::Bernoulli { q: 0.3 },
+                4,
+            ),
+            budget_rate: 1.0,
+        };
+        assert!(admissible_surface(
+            &plan,
+            None,
+            &bound(),
+            RuntimeModel::Deterministic { r: 10.0 },
+            4.0,
+            true,
+            false
+        )
+        .is_none());
+    }
+}

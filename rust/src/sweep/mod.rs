@@ -53,6 +53,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::metrics::Throughput;
+use crate::util::fnv::Fnv;
 use crate::util::rng::Rng;
 use crate::util::stats::OnlineStats;
 
@@ -244,29 +245,10 @@ impl SweepResults {
     }
 
     /// The same summary as JSON (hand-rolled: the build is offline and
-    /// dependency-free). Non-finite statistics serialise as `null`.
+    /// dependency-free, emitted via the shared [`crate::util::json`]
+    /// convention). Non-finite statistics serialise as `null`.
     pub fn to_json(&self, scenario: &str, cfg: &SweepConfig) -> String {
-        fn esc(s: &str) -> String {
-            let mut out = String::with_capacity(s.len() + 2);
-            for c in s.chars() {
-                match c {
-                    '"' => out.push_str("\\\""),
-                    '\\' => out.push_str("\\\\"),
-                    c if (c as u32) < 0x20 => {
-                        out.push_str(&format!("\\u{:04x}", c as u32));
-                    }
-                    c => out.push(c),
-                }
-            }
-            out
-        }
-        fn num(v: f64) -> String {
-            if v.is_finite() {
-                format!("{v}")
-            } else {
-                "null".to_string()
-            }
-        }
+        use crate::util::json::{esc, num};
         let mut out = String::new();
         out.push_str(&format!(
             "{{\n  \"scenario\": \"{}\",\n  \"seed\": {},\n  \
@@ -365,34 +347,6 @@ impl SweepResults {
             }
         }
         println!("  {}", self.throughput);
-    }
-}
-
-/// FNV-1a, 64-bit.
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn bytes(&mut self, bs: &[u8]) {
-        for &b in bs {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
-        }
-    }
-
-    fn u64(&mut self, x: u64) {
-        self.bytes(&x.to_le_bytes());
-    }
-
-    fn f64(&mut self, x: f64) {
-        self.bytes(&x.to_bits().to_le_bytes());
-    }
-
-    fn finish(&self) -> u64 {
-        self.0
     }
 }
 

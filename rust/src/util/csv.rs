@@ -1,8 +1,12 @@
 //! Minimal CSV reading/writing (figure series + trace files).
 //!
 //! The subset we need: comma separation, optional header row, numeric
-//! fields, `#`-prefixed comment lines. No quoting — none of our data
-//! contains commas.
+//! fields, `#`-prefixed comment lines. Numeric tables ([`Table`]) never
+//! need quoting; string-celled tables ([`StrTable`]) carry arbitrary
+//! config-defined labels (strategy lineup entries are free-form since
+//! the spec redesign) and quote them per RFC 4180: a field containing a
+//! comma, double quote, CR or LF is wrapped in double quotes with inner
+//! quotes doubled.
 
 use std::fmt::Write as _;
 use std::fs;
@@ -72,10 +76,34 @@ impl Table {
     }
 }
 
+/// Quote one field per RFC 4180 when it needs it: fields containing a
+/// comma, double quote, CR or LF are wrapped in double quotes and inner
+/// quotes are doubled; anything else passes through verbatim.
+pub fn quote_field(cell: &str) -> String {
+    if cell.contains(',')
+        || cell.contains('"')
+        || cell.contains('\n')
+        || cell.contains('\r')
+    {
+        let mut out = String::with_capacity(cell.len() + 2);
+        out.push('"');
+        for c in cell.chars() {
+            if c == '"' {
+                out.push('"');
+            }
+            out.push(c);
+        }
+        out.push('"');
+        out
+    } else {
+        cell.to_string()
+    }
+}
+
 /// A string-celled table written as CSV — for outputs that carry
 /// non-numeric columns (e.g. sweep point labels next to their
-/// statistics). Cells must not contain commas or newlines (the writer
-/// asserts; none of our labels do — the no-quoting subset above).
+/// statistics). Cells are RFC-4180-quoted on write, so config-defined
+/// labels containing commas or quotes round-trip safely.
 #[derive(Clone, Debug, Default)]
 pub struct StrTable {
     pub columns: Vec<String>,
@@ -98,22 +126,19 @@ impl StrTable {
             row.len(),
             self.columns.len()
         );
-        for cell in &row {
-            assert!(
-                !cell.contains(',') && !cell.contains('\n'),
-                "cell '{cell}' needs quoting, which this CSV subset \
-                 does not support"
-            );
-        }
         self.rows.push(row);
     }
 
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
-        out.push_str(&self.columns.join(","));
+        let quoted: Vec<String> =
+            self.columns.iter().map(|c| quote_field(c)).collect();
+        out.push_str(&quoted.join(","));
         out.push('\n');
         for row in &self.rows {
-            out.push_str(&row.join(","));
+            let quoted: Vec<String> =
+                row.iter().map(|c| quote_field(c)).collect();
+            out.push_str(&quoted.join(","));
             out.push('\n');
         }
         out
@@ -194,11 +219,33 @@ mod tests {
         assert_eq!(t.to_csv(), "label,mean\nn=2 q=0.3,1.5\n");
     }
 
+    /// Strategy lineup labels are arbitrary config strings since the
+    /// spec redesign; a label with commas/quotes must round-trip as one
+    /// RFC-4180-quoted field, not silently split the row.
     #[test]
-    #[should_panic]
-    fn str_table_rejects_commas() {
-        let mut t = StrTable::new(&["a"]);
-        t.push(vec!["x,y".to_string()]);
+    fn str_table_quotes_rfc4180() {
+        let mut t = StrTable::new(&["label", "mean"]);
+        t.push(vec!["cheap, fast".to_string(), "1.5".to_string()]);
+        t.push(vec!["say \"hi\"".to_string(), "2".to_string()]);
+        t.push(vec!["multi\nline".to_string(), "3".to_string()]);
+        let csv = t.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "label,mean");
+        assert_eq!(lines.next().unwrap(), "\"cheap, fast\",1.5");
+        assert_eq!(lines.next().unwrap(), "\"say \"\"hi\"\"\",2");
+        // the embedded newline stays inside one quoted field
+        assert!(csv.contains("\"multi\nline\",3\n"));
+        // a header cell with a comma is quoted the same way
+        let t = StrTable::new(&["a,b"]);
+        assert_eq!(t.to_csv(), "\"a,b\"\n");
+    }
+
+    #[test]
+    fn quote_field_passthrough_and_escape() {
+        assert_eq!(quote_field("plain"), "plain");
+        assert_eq!(quote_field("a,b"), "\"a,b\"");
+        assert_eq!(quote_field("q\"q"), "\"q\"\"q\"");
+        assert_eq!(quote_field(""), "");
     }
 
     #[test]

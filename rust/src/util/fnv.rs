@@ -1,0 +1,77 @@
+//! FNV-1a, 64-bit — the repo's one digest primitive.
+//!
+//! Both the sweep harness ([`crate::sweep::SweepResults::digest`]) and
+//! the planner ([`crate::opt`]) hash their collated outputs with this
+//! exact algorithm so the CI determinism smokes can diff a single
+//! `digest:` line. Floats are hashed by bit pattern: two results agree
+//! on the digest iff they agree bit for bit.
+
+/// Streaming FNV-1a hasher over bytes, integers and float bit patterns.
+#[derive(Clone, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    /// Hash the exact bit pattern (NaN payloads included).
+    pub fn f64(&mut self, x: f64) {
+        self.bytes(&x.to_bits().to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        let mut h = Fnv::new();
+        h.bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn order_sensitive_and_bit_exact() {
+        let mut a = Fnv::new();
+        a.u64(1);
+        a.f64(2.0);
+        let mut b = Fnv::new();
+        b.f64(2.0);
+        b.u64(1);
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fnv::new();
+        c.u64(1);
+        c.f64(2.0);
+        assert_eq!(a.finish(), c.finish());
+        // -0.0 and 0.0 differ in bits, so they differ in digest
+        let mut p = Fnv::new();
+        p.f64(0.0);
+        let mut m = Fnv::new();
+        m.f64(-0.0);
+        assert_ne!(p.finish(), m.finish());
+    }
+}

@@ -1,0 +1,55 @@
+//! The repo's one hand-rolled JSON emission convention (the build is
+//! offline and dependency-free): string escaping per RFC 8259 minimal
+//! rules, and numbers with non-finite values serialised as `null`.
+//! Shared by `sweep::SweepResults::to_json` and the planner report
+//! (`opt::report`) so the convention cannot drift between emitters.
+
+/// Escape a string for embedding inside JSON double quotes: `"`, `\`,
+/// and control characters below 0x20 (as `\u00XX`).
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A JSON number: finite values via `Display`, NaN/infinities as
+/// `null` (JSON has no representation for them).
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_quotes_backslashes_and_controls() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a\"b"), "a\\\"b");
+        assert_eq!(esc("a\\b"), "a\\\\b");
+        assert_eq!(esc("a\nb"), "a\\u000ab");
+        assert_eq!(esc("a\tb"), "a\\u0009b");
+    }
+
+    #[test]
+    fn non_finite_numbers_are_null() {
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(0.0), "0");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+        assert_eq!(num(f64::NEG_INFINITY), "null");
+    }
+}

@@ -8,6 +8,8 @@
 pub mod convex;
 pub mod csv;
 pub mod erf;
+pub mod fnv;
+pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -201,7 +201,12 @@ fn sweep_spec_file_with_machine_readable_output() {
 #[test]
 fn sweep_check_validates_without_running() {
     let out = run_ok(&["sweep", "--preset", "fig5", "--check"]);
-    assert!(out.contains("spec OK: fig5"), "{out}");
+    // the auditable one-line summary: spec count + resolved grid points
+    assert!(
+        out.contains("check OK: 1 spec validated, 12 grid points resolved"),
+        "{out}"
+    );
+    assert!(out.contains("fig5:"), "{out}");
     assert!(!out.contains("digest"), "--check must not run the sweep");
     // a broken spec fails loudly, naming the problem
     let bad = bin()
@@ -217,6 +222,75 @@ fn sweep_check_validates_without_running() {
 fn help_mentions_sweep() {
     let out = run_ok(&["help"]);
     assert!(out.contains("sweep"), "help missing sweep:\n{out}");
+    assert!(out.contains("optimize"), "help missing optimize:\n{out}");
+}
+
+#[test]
+fn optimize_check_validates_the_shipped_preset() {
+    // --spec omitted: the embedded optimize_deadline preset
+    let out = run_ok(&["optimize", "--check"]);
+    assert!(
+        out.contains(
+            "check OK: 1 plan spec validated, 36 lattice points resolved"
+        ),
+        "{out}"
+    );
+    assert!(out.contains("optimize_deadline:"), "{out}");
+    assert!(!out.contains("digest"), "--check must not run the planner");
+    // the explicit --spec path validates the same file
+    let out = run_ok(&[
+        "optimize",
+        "--spec",
+        "../examples/configs/optimize_deadline.toml",
+        "--check",
+    ]);
+    assert!(out.contains("36 lattice points resolved"), "{out}");
+    // a sweep-only spec (no [objective]) fails loudly
+    let bad = bin()
+        .args(["optimize", "--spec", "../examples/configs/fig5.toml"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("[objective]"),
+        "{}",
+        String::from_utf8_lossy(&bad.stderr)
+    );
+}
+
+#[test]
+fn optimize_writes_csv_and_json_outputs() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let dir = root.join("out/opt_cli_smoke");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = run_ok(&[
+        "optimize",
+        "--seed",
+        "7",
+        "--threads",
+        "2",
+        "--out",
+        "out/opt_cli_smoke",
+        "--json",
+    ]);
+    assert!(out.contains("== optimize optimize_deadline"), "{out}");
+    assert!(out.contains("incumbent:"), "{out}");
+    assert!(out.contains("pareto frontier"), "{out}");
+    assert!(out.contains("digest:"), "{out}");
+    let csv = std::fs::read_to_string(
+        dir.join("optimize_optimize_deadline.csv"),
+    )
+    .unwrap();
+    assert!(csv.starts_with("rank,label,strategy,fate"), "{csv}");
+    assert!(csv.lines().count() > 36, "every lattice point reported");
+    let json = std::fs::read_to_string(
+        dir.join("optimize_optimize_deadline.json"),
+    )
+    .unwrap();
+    assert!(json.contains("\"planner\": \"optimize_deadline\""));
+    assert!(json.contains("\"frontier\""));
+    assert!(json.contains("\"rungs\""));
 }
 
 #[test]
