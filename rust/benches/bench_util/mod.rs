@@ -1,8 +1,86 @@
 //! Shared harness for the `harness = false` benches (criterion is not
-//! available offline): warmup + timed repetitions with mean/p50/p99.
+//! available offline): warmup + timed repetitions with mean/p50/p99,
+//! plus a counting global allocator so benches can report allocation
+//! churn (calls + bytes) alongside wall time.
 #![allow(dead_code)]
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::time::Instant;
+
+// ---- counting allocator -------------------------------------------
+// Every bench binary that does `mod bench_util;` gets this as its
+// global allocator: two relaxed atomic adds per allocation on top of
+// the system allocator, cheap enough to leave on for timing runs while
+// making `Vec` churn visible as a first-class bench metric.
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+pub struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`; the counters never affect the
+// returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AllocCounts {
+    pub calls: u64,
+    pub bytes: u64,
+}
+
+/// Cumulative allocation counters since process start.
+pub fn alloc_counts() -> AllocCounts {
+    AllocCounts {
+        calls: ALLOC_CALLS.load(Relaxed),
+        bytes: ALLOC_BYTES.load(Relaxed),
+    }
+}
+
+/// Run `f` and return its result plus the allocations it performed
+/// (process-wide, so keep other threads quiet while measuring).
+pub fn alloc_delta<T>(f: impl FnOnce() -> T) -> (T, AllocCounts) {
+    let before = alloc_counts();
+    let out = f();
+    let after = alloc_counts();
+    (
+        out,
+        AllocCounts {
+            calls: after.calls - before.calls,
+            bytes: after.bytes - before.bytes,
+        },
+    )
+}
 
 pub struct BenchResult {
     pub name: String,

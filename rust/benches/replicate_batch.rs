@@ -1,0 +1,246 @@
+//! Batched replicate executor bench + digest smoke (§Perf deliverable
+//! for the `sim::batch` structure-of-arrays engine).
+//!
+//! Two jobs in one binary:
+//!
+//! * **digest smoke** — every shipped preset, reduced to bench size,
+//!   run through both `run_sweep` (scalar oracle) and
+//!   `run_sweep_batched` at 1 thread and at the machine's parallelism.
+//!   Any digest divergence prints the offending preset and exits
+//!   nonzero, so CI's bench-smoke job doubles as an equivalence gate.
+//! * **timing** — jobs/s, per-replicate ns and allocation counts
+//!   (via the counting allocator in `bench_util`) for scalar vs
+//!   batched on a representative frictionless preset.
+//!
+//! Results land in `BENCH_6.json` (override with `BENCH_OUT=path`);
+//! `BENCH_SMOKE=1` shrinks the workload for CI.
+//!
+//! Run: `cargo bench --bench replicate_batch`
+
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::{alloc_delta, default_threads, fmt_ns, AllocCounts};
+use volatile_sgd::exp::presets;
+use volatile_sgd::exp::SpecScenario;
+use volatile_sgd::sweep::{
+    run_sweep, run_sweep_batched, SweepConfig, SweepResults,
+};
+use volatile_sgd::util::json::num;
+
+/// A shipped preset cut down to bench size: first market only, two
+/// values per axis, iteration budget capped where that cannot change
+/// plan feasibility (fixed-price markets only — Theorem-2/3 deadlines
+/// couple to J elsewhere). Reductions only shrink the point space —
+/// they never change what a single replicate does, so the
+/// scalar-vs-batched contract being checked is the production one.
+fn reduced_scenario(name: &str, j_cap: u64) -> SpecScenario {
+    use volatile_sgd::exp::spec::MarketKind;
+    let mut spec = presets::spec(name).expect("shipped preset parses");
+    if spec
+        .markets
+        .iter()
+        .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
+    {
+        spec.job.j = spec.job.j.min(j_cap);
+    }
+    if spec.markets.len() > 1 {
+        spec.markets.truncate(1);
+    }
+    for ax in &mut spec.axes {
+        if ax.values.len() > 2 {
+            ax.values.truncate(2);
+        }
+    }
+    SpecScenario::new(spec).expect("reduced preset validates")
+}
+
+struct DigestRow {
+    preset: &'static str,
+    threads: usize,
+    scalar: u64,
+    batched: u64,
+}
+
+impl DigestRow {
+    fn matches(&self) -> bool {
+        self.scalar == self.batched
+    }
+}
+
+fn digest_smoke(j_cap: u64, replicates: u64) -> Vec<DigestRow> {
+    println!("--- digest smoke: batched vs scalar, every preset ---");
+    let mut rows = Vec::new();
+    let thread_counts = {
+        let t = default_threads();
+        if t == 1 {
+            vec![1]
+        } else {
+            vec![1, t]
+        }
+    };
+    for &preset in presets::PRESET_NAMES.iter() {
+        let scenario = reduced_scenario(preset, j_cap);
+        for &threads in &thread_counts {
+            let cfg = SweepConfig { replicates, seed: 2020, threads };
+            let scalar = run_sweep(&scenario, &cfg).unwrap().digest();
+            let batched =
+                run_sweep_batched(&scenario, &cfg).unwrap().digest();
+            let row = DigestRow { preset, threads, scalar, batched };
+            println!(
+                "  {:<16} threads={threads}  scalar={scalar:016x}  \
+                 batched={batched:016x}  {}",
+                preset,
+                if row.matches() { "ok" } else { "DIVERGED" }
+            );
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+struct TimedRun {
+    elapsed_s: f64,
+    jobs: u64,
+    alloc: AllocCounts,
+    digest: u64,
+}
+
+impl TimedRun {
+    fn jobs_per_s(&self) -> f64 {
+        self.jobs as f64 / self.elapsed_s.max(1e-12)
+    }
+
+    fn per_replicate_ns(&self) -> f64 {
+        self.elapsed_s * 1e9 / self.jobs.max(1) as f64
+    }
+}
+
+fn timed<F: FnMut() -> SweepResults>(mut f: F) -> TimedRun {
+    let t0 = Instant::now();
+    let (results, alloc) = alloc_delta(&mut f);
+    TimedRun {
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        jobs: results.throughput.jobs,
+        alloc,
+        digest: results.digest(),
+    }
+}
+
+fn timing(j: u64, replicates: u64) -> (TimedRun, TimedRun) {
+    let threads = default_threads();
+    println!(
+        "--- timing: fig3 (reduced), j={j}, {replicates} replicates, \
+         {threads} threads ---"
+    );
+    let scenario = reduced_scenario("fig3", j);
+    let cfg = SweepConfig { replicates, seed: 2020, threads };
+    // warm both paths once so neither pays first-touch costs
+    run_sweep(&scenario, &cfg).unwrap();
+    run_sweep_batched(&scenario, &cfg).unwrap();
+    let scalar = timed(|| run_sweep(&scenario, &cfg).unwrap());
+    let batched = timed(|| run_sweep_batched(&scenario, &cfg).unwrap());
+    assert_eq!(
+        scalar.digest, batched.digest,
+        "timing runs must agree bit-for-bit"
+    );
+    for (label, r) in [("scalar", &scalar), ("batched", &batched)] {
+        println!(
+            "  {label:<8} {:>8.1} jobs/s  {:>12}/replicate  \
+             {} allocs / {} bytes",
+            r.jobs_per_s(),
+            fmt_ns(r.per_replicate_ns()),
+            r.alloc.calls,
+            r.alloc.bytes
+        );
+    }
+    println!(
+        "  speedup {:.2}x, alloc ratio {:.2}x",
+        scalar.elapsed_s / batched.elapsed_s.max(1e-12),
+        scalar.alloc.calls as f64 / batched.alloc.calls.max(1) as f64
+    );
+    (scalar, batched)
+}
+
+fn timed_json(r: &TimedRun) -> String {
+    format!(
+        "{{\"elapsed_s\": {}, \"jobs\": {}, \"jobs_per_s\": {}, \
+         \"per_replicate_ns\": {}, \"alloc_calls\": {}, \
+         \"alloc_bytes\": {}}}",
+        num(r.elapsed_s),
+        r.jobs,
+        num(r.jobs_per_s()),
+        num(r.per_replicate_ns()),
+        r.alloc.calls,
+        r.alloc.bytes
+    )
+}
+
+fn write_json(
+    path: &str,
+    smoke: bool,
+    rows: &[DigestRow],
+    scalar: &TimedRun,
+    batched: &TimedRun,
+) {
+    let checks: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"preset\": \"{}\", \"threads\": {}, \
+                 \"scalar\": \"{:016x}\", \"batched\": \"{:016x}\", \
+                 \"match\": {}}}",
+                r.preset,
+                r.threads,
+                r.scalar,
+                r.batched,
+                r.matches()
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"replicate_batch\",\n  \"schema\": 1,\n  \
+         \"recorded\": true,\n  \"smoke\": {smoke},\n  \
+         \"threads\": {},\n  \"digest_checks\": [\n{}\n  ],\n  \
+         \"timing\": {{\n    \"preset\": \"fig3_reduced\",\n    \
+         \"scalar\": {},\n    \"batched\": {},\n    \
+         \"speedup\": {}\n  }}\n}}\n",
+        default_threads(),
+        checks.join(",\n"),
+        timed_json(scalar),
+        timed_json(batched),
+        num(scalar.elapsed_s / batched.elapsed_s.max(1e-12))
+    );
+    std::fs::write(path, json).unwrap();
+    println!("json -> {path}");
+}
+
+fn main() {
+    println!("=== batched replicate executor ===");
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    // smoke keeps CI under a minute; the full run is the recorded bench
+    let (j_smoke, j_time, reps_smoke, reps_time) = if smoke {
+        (1_000, 2_000, 3, 8)
+    } else {
+        (4_000, 20_000, 5, 32)
+    };
+    let rows = digest_smoke(j_smoke, reps_smoke);
+    let (scalar, batched) = timing(j_time, reps_time);
+    let out = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_6.json".to_string());
+    write_json(&out, smoke, &rows, &scalar, &batched);
+    let diverged: Vec<&DigestRow> =
+        rows.iter().filter(|r| !r.matches()).collect();
+    if !diverged.is_empty() {
+        for r in &diverged {
+            eprintln!(
+                "DIGEST DIVERGENCE: preset {} at {} thread(s): \
+                 scalar {:016x} != batched {:016x}",
+                r.preset, r.threads, r.scalar, r.batched
+            );
+        }
+        std::process::exit(1);
+    }
+    println!("all presets: batched digest == scalar digest");
+}

@@ -60,6 +60,24 @@ pub trait Strategy {
     /// charge their own fixed rate).
     fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision;
 
+    /// [`Strategy::decide`] into a caller-owned buffer, returning the
+    /// charged price — the allocation-free form the batched replicate
+    /// executor (`sim::batch`) calls on its per-slot hot path. Must
+    /// consume the RNG and fill `active` exactly as `decide` would; the
+    /// default delegates, concrete strategies override with their
+    /// `*_into` primitives.
+    fn decide_into(
+        &mut self,
+        price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        let d = self.decide(price, rng);
+        active.clear();
+        active.extend_from_slice(&d.active);
+        d.price
+    }
+
     /// Called after every completed iteration; strategies may re-plan.
     fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
         let _ = state;
@@ -85,6 +103,15 @@ impl<S: Strategy + ?Sized> Strategy for Box<S> {
         (**self).decide(price, rng)
     }
 
+    fn decide_into(
+        &mut self,
+        price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        (**self).decide_into(price, rng, active)
+    }
+
     fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
         (**self).on_iteration(state)
     }
@@ -105,6 +132,15 @@ impl<S: Strategy + ?Sized> Strategy for &mut S {
 
     fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision {
         (**self).decide(price, rng)
+    }
+
+    fn decide_into(
+        &mut self,
+        price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        (**self).decide_into(price, rng, active)
     }
 
     fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
@@ -144,6 +180,16 @@ impl Strategy for FixedBids {
 
     fn decide(&mut self, price: f64, _rng: &mut Rng) -> ActiveDecision {
         ActiveDecision { active: self.bids.active_set(price), price }
+    }
+
+    fn decide_into(
+        &mut self,
+        price: f64,
+        _rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        self.bids.active_set_into(price, active);
+        price
     }
 
     fn max_workers(&self) -> usize {
@@ -254,6 +300,16 @@ impl Strategy for DynamicBids {
         ActiveDecision { active: self.bids.active_set(price), price }
     }
 
+    fn decide_into(
+        &mut self,
+        price: f64,
+        _rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        self.bids.active_set_into(price, active);
+        price
+    }
+
     fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
         if self.current + 1 < self.stages.len()
             && state.iter >= self.stages[self.current].until_iter
@@ -297,6 +353,16 @@ impl Strategy for StaticWorkers {
             active: self.model.draw_active(self.n, rng),
             price: self.unit_price,
         }
+    }
+
+    fn decide_into(
+        &mut self,
+        _price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        self.model.draw_active_into(self.n, rng, active);
+        self.unit_price
     }
 
     fn max_workers(&self) -> usize {
@@ -364,6 +430,17 @@ impl Strategy for DynamicWorkers {
         }
     }
 
+    fn decide_into(
+        &mut self,
+        _price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        let n = self.n_at(self.iter);
+        self.model.draw_active_into(n, rng, active);
+        self.unit_price
+    }
+
     fn on_iteration(&mut self, state: &StrategyState) -> Result<()> {
         self.iter = state.iter;
         Ok(())
@@ -390,6 +467,77 @@ mod tests {
             eps: 0.35,
             theta: 150_000.0,
         }
+    }
+
+    /// Twin instances on twin RNG streams: `decide_into` must yield the
+    /// same active set and charged price as `decide`, clear stale buffer
+    /// contents, and leave the stream in the same state — the batched
+    /// executor's per-slot contract (DESIGN.md §8).
+    fn assert_decide_into_equiv(
+        mut a: Box<dyn Strategy>,
+        mut b: Box<dyn Strategy>,
+        seed: u64,
+    ) {
+        let mut ra = Rng::new(seed);
+        let mut rb = Rng::new(seed);
+        let mut buf = vec![usize::MAX; 2]; // stale junk must vanish
+        for &p in &[0.1, 0.45, 0.62, 0.9, 0.3, 0.75] {
+            let d = a.decide(p, &mut ra);
+            let charged = b.decide_into(p, &mut rb, &mut buf);
+            assert_eq!(buf, d.active, "{}: price {p}", a.name());
+            assert_eq!(
+                charged.to_bits(),
+                d.price.to_bits(),
+                "{}: price {p}",
+                a.name()
+            );
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "{}: RNG diverged", a.name());
+    }
+
+    #[test]
+    fn decide_into_matches_decide_for_all_classic_strategies() {
+        let bids = || BidVector::two_group(8, 4, 0.8, 0.4);
+        assert_decide_into_equiv(
+            Box::new(FixedBids::new("fixed", bids(), 100)),
+            Box::new(FixedBids::new("fixed", bids(), 100)),
+            7,
+        );
+        let stages = || {
+            vec![
+                StageSpec { n: 4, n1: 2, until_iter: 100 },
+                StageSpec { n: 8, n1: 4, until_iter: u64::MAX },
+            ]
+        };
+        assert_decide_into_equiv(
+            Box::new(
+                DynamicBids::new("dyn", problem(), stages(), 2_000).unwrap(),
+            ),
+            Box::new(
+                DynamicBids::new("dyn", problem(), stages(), 2_000).unwrap(),
+            ),
+            11,
+        );
+        let sw = || StaticWorkers {
+            label: "static".to_string(),
+            n: 6,
+            j: 50,
+            model: PreemptionModel::Bernoulli { q: 0.4 },
+            unit_price: 0.3,
+        };
+        assert_decide_into_equiv(Box::new(sw()), Box::new(sw()), 13);
+        let dw = || {
+            DynamicWorkers::new(
+                "dyn_n",
+                5,
+                1.01,
+                10_000,
+                PreemptionModel::Uniform,
+                0.1,
+                64,
+            )
+        };
+        assert_decide_into_equiv(Box::new(dw()), Box::new(dw()), 17);
     }
 
     #[test]

@@ -71,7 +71,10 @@ use crate::coordinator::strategy::StageSpec;
 use crate::market::process::PriceDist;
 use crate::market::{BidVector, PriceModel, SpotTrace, TraceGenConfig};
 use crate::preempt::{jensen_penalty, PreemptionModel, RecipTable};
-use crate::sim::{EngineResult, OverheadModel, PriceSource};
+use crate::coordinator::backend::SyntheticBackend;
+use crate::sim::{
+    run_batch, BatchLane, EngineResult, OverheadModel, PriceSource,
+};
 use crate::sweep::{Grid, Scenario};
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
@@ -1049,6 +1052,28 @@ impl SpecCtx {
         let mut p = self.plans[idx].build_policy()?;
         run_policy_engine(p.as_mut(), self.bound, &self.prices, &self.params, rng)
     }
+
+    /// Run one replicate *block* of plan `idx` through the batched
+    /// structure-of-arrays executor (`sim::batch`) — lane `r` draws
+    /// from `rngs[r]`. Bit-identical to one [`SpecCtx::execute_engine`]
+    /// call per stream; the scalar path stays on as the equivalence
+    /// oracle (`tests/integration_batch.rs` pins every shipped preset).
+    pub fn execute_engine_batch(
+        &self,
+        idx: usize,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<EngineResult>> {
+        let lanes = rngs
+            .iter()
+            .map(|_| {
+                Ok(BatchLane {
+                    policy: self.plans[idx].build_policy()?,
+                    backend: Box::new(SyntheticBackend::new(self.bound)),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        run_batch(&self.params, lanes, &self.prices, rngs)
+    }
 }
 
 /// Which replicate runner executes the simulations.
@@ -1349,6 +1374,88 @@ fn build_market(
     })
 }
 
+impl SpecScenario {
+    /// Point-constant (analytic) metric values; NAN for run-derived
+    /// kinds, which the callers below handle first.
+    fn const_value(ctx: &SpecCtx, k: MetricKind) -> f64 {
+        match k {
+            MetricKind::RecipExact => ctx.preempt_consts[0],
+            MetricKind::PZero => ctx.preempt_consts[1],
+            MetricKind::JensenPenalty => ctx.preempt_consts[2],
+            MetricKind::NMatchExact => ctx.preempt_consts[3],
+            MetricKind::BoundErr => ctx.analytic_consts[0],
+            MetricKind::ExpCost => ctx.analytic_consts[1],
+            MetricKind::ExpTime => ctx.analytic_consts[2],
+            _ => f64::NAN,
+        }
+    }
+
+    /// Per-strategy metric extraction from one engine result. Shared
+    /// verbatim by the scalar `run` path and the batched `run_block`
+    /// path, so the two can only diverge inside the executor itself —
+    /// never in the metric math.
+    fn per_strategy_metrics(
+        &self,
+        ctx: &SpecCtx,
+        r: &EngineResult,
+    ) -> Vec<f64> {
+        self.metrics
+            .iter()
+            .map(|&k| match k {
+                MetricKind::CostAtTarget => r
+                    .series
+                    .cost_at_accuracy(ctx.target_acc)
+                    .unwrap_or(f64::NAN),
+                MetricKind::TimeAtTarget => r
+                    .series
+                    .time_at_accuracy(ctx.target_acc)
+                    .unwrap_or(f64::NAN),
+                MetricKind::TotalCost => r.cost,
+                MetricKind::TotalTime => r.elapsed,
+                MetricKind::FinalError => r.final_error,
+                MetricKind::FinalAccuracy => r.final_accuracy,
+                MetricKind::Iters => r.iters as f64,
+                MetricKind::IdleTime => r.idle_time,
+                MetricKind::AccPerDollar => {
+                    if r.cost > 0.0 {
+                        r.final_accuracy / r.cost
+                    } else {
+                        0.0
+                    }
+                }
+                MetricKind::PreemptEvents => r.preemptions as f64,
+                MetricKind::LostIters => r.lost_iters as f64,
+                MetricKind::CheckpointTime => r.checkpoint_time,
+                MetricKind::RestartTime => r.restart_time,
+                other => Self::const_value(ctx, other),
+            })
+            .collect()
+    }
+
+    /// Lineup metric math over one replicate's `(cost, final accuracy)`
+    /// per entry. Shared by `run` and `run_block` like
+    /// [`SpecScenario::per_strategy_metrics`].
+    fn lineup_metrics(
+        &self,
+        ctx: &SpecCtx,
+        finals: &[(f64, f64)],
+    ) -> Vec<f64> {
+        let (base_cost, base_acc) = finals[0];
+        let base_acc = base_acc.max(1e-9);
+        self.metrics
+            .iter()
+            .map(|&k| match k {
+                MetricKind::LineupCost(i) => finals[i].0,
+                MetricKind::LineupSavingPct(i) => {
+                    100.0 * (base_cost - finals[i].0) / base_cost.max(1e-9)
+                }
+                MetricKind::LineupAccRatio(i) => finals[i].1 / base_acc,
+                other => Self::const_value(ctx, other),
+            })
+            .collect()
+    }
+}
+
 impl Scenario for SpecScenario {
     type Ctx = SpecCtx;
 
@@ -1526,21 +1633,11 @@ impl Scenario for SpecScenario {
         ctx: &SpecCtx,
         rng: &mut Rng,
     ) -> Result<Vec<f64>> {
-        let const_value = |k: MetricKind| match k {
-            MetricKind::RecipExact => ctx.preempt_consts[0],
-            MetricKind::PZero => ctx.preempt_consts[1],
-            MetricKind::JensenPenalty => ctx.preempt_consts[2],
-            MetricKind::NMatchExact => ctx.preempt_consts[3],
-            MetricKind::BoundErr => ctx.analytic_consts[0],
-            MetricKind::ExpCost => ctx.analytic_consts[1],
-            MetricKind::ExpTime => ctx.analytic_consts[2],
-            _ => f64::NAN,
-        };
         if !ctx.needs_sim {
             return Ok(self
                 .metrics
                 .iter()
-                .map(|&k| const_value(k))
+                .map(|&k| Self::const_value(ctx, k))
                 .collect());
         }
         // one runner switch for both modes: the engine is the
@@ -1567,38 +1664,7 @@ impl Scenario for SpecScenario {
         match self.spec.mode {
             SweepMode::PerStrategy => {
                 let r = execute(0, rng)?;
-                Ok(self
-                    .metrics
-                    .iter()
-                    .map(|&k| match k {
-                        MetricKind::CostAtTarget => r
-                            .series
-                            .cost_at_accuracy(ctx.target_acc)
-                            .unwrap_or(f64::NAN),
-                        MetricKind::TimeAtTarget => r
-                            .series
-                            .time_at_accuracy(ctx.target_acc)
-                            .unwrap_or(f64::NAN),
-                        MetricKind::TotalCost => r.cost,
-                        MetricKind::TotalTime => r.elapsed,
-                        MetricKind::FinalError => r.final_error,
-                        MetricKind::FinalAccuracy => r.final_accuracy,
-                        MetricKind::Iters => r.iters as f64,
-                        MetricKind::IdleTime => r.idle_time,
-                        MetricKind::AccPerDollar => {
-                            if r.cost > 0.0 {
-                                r.final_accuracy / r.cost
-                            } else {
-                                0.0
-                            }
-                        }
-                        MetricKind::PreemptEvents => r.preemptions as f64,
-                        MetricKind::LostIters => r.lost_iters as f64,
-                        MetricKind::CheckpointTime => r.checkpoint_time,
-                        MetricKind::RestartTime => r.restart_time,
-                        other => const_value(other),
-                    })
-                    .collect())
+                Ok(self.per_strategy_metrics(ctx, &r))
             }
             SweepMode::Lineup => {
                 // the lineup shares this replicate's stream, consumed in
@@ -1610,22 +1676,57 @@ impl Scenario for SpecScenario {
                         r.series.last().map(|p| p.accuracy).unwrap_or(0.0);
                     finals.push((r.cost, acc));
                 }
-                let (base_cost, base_acc) = finals[0];
-                let base_acc = base_acc.max(1e-9);
-                Ok(self
-                    .metrics
+                Ok(self.lineup_metrics(ctx, &finals))
+            }
+        }
+    }
+
+    fn run_block(
+        &self,
+        point: usize,
+        ctx: &SpecCtx,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<Vec<f64>>> {
+        // The reference runner stays on the scalar oracle, and
+        // const-only points consume no RNG either way — both take the
+        // default per-replicate loop. Everything else goes through the
+        // batched structure-of-arrays executor; bit-identical digests
+        // are pinned by tests/integration_batch.rs.
+        if !ctx.needs_sim || self.runner == RunnerKind::Reference {
+            return rngs
+                .iter_mut()
+                .map(|rng| self.run(point, ctx, rng))
+                .collect();
+        }
+        match self.spec.mode {
+            SweepMode::PerStrategy => {
+                let results = ctx.execute_engine_batch(0, rngs)?;
+                Ok(results
                     .iter()
-                    .map(|&k| match k {
-                        MetricKind::LineupCost(i) => finals[i].0,
-                        MetricKind::LineupSavingPct(i) => {
-                            100.0 * (base_cost - finals[i].0)
-                                / base_cost.max(1e-9)
-                        }
-                        MetricKind::LineupAccRatio(i) => {
-                            finals[i].1 / base_acc
-                        }
-                        other => const_value(other),
-                    })
+                    .map(|r| self.per_strategy_metrics(ctx, r))
+                    .collect())
+            }
+            SweepMode::Lineup => {
+                // entry-major over the same lane streams reproduces the
+                // scalar order exactly: lane r consumes its stream in
+                // entry order because each entry's batch reads from the
+                // very same `rngs[r]` the previous entry left behind
+                let mut finals: Vec<Vec<(f64, f64)>> =
+                    vec![Vec::with_capacity(ctx.plans.len()); rngs.len()];
+                for idx in 0..ctx.plans.len() {
+                    let results = ctx.execute_engine_batch(idx, rngs)?;
+                    for (lane, r) in results.into_iter().enumerate() {
+                        let acc = r
+                            .series
+                            .last()
+                            .map(|p| p.accuracy)
+                            .unwrap_or(0.0);
+                        finals[lane].push((r.cost, acc));
+                    }
+                }
+                Ok(finals
+                    .iter()
+                    .map(|f| self.lineup_metrics(ctx, f))
                     .collect())
             }
         }

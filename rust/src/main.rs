@@ -16,6 +16,7 @@
 //!                           |adaptive_grid|notice_grid | --fig 2|3|4|5]
 //!                          [--threads N] [--replicates R] [--seed S] [--j J]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
+//!                          [--no-batch]
 //! volatile-sgd optimize    [--spec FILE] [--threads N] [--seed S]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
 //! ```
@@ -549,7 +550,7 @@ fn cmd_fig5(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use volatile_sgd::sweep::{run_sweep, SweepConfig};
+    use volatile_sgd::sweep::{run_sweep, run_sweep_batched, SweepConfig};
 
     // resolve the spec: --spec FILE > --preset NAME > --fig N (legacy
     // alias; default fig3). Every path yields the same ScenarioSpec
@@ -596,7 +597,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let results = run_sweep(&scenario, &cfg)?;
+    // the batched SoA replicate executor is the default; --no-batch
+    // drops to the scalar per-replicate path (digests are identical by
+    // contract, so this is a triage knob, not a results knob)
+    let results = if args.bool("no-batch") {
+        run_sweep(&scenario, &cfg)?
+    } else {
+        run_sweep_batched(&scenario, &cfg)?
+    };
     println!(
         "== sweep {name}  ({} points x {} replicates, seed {})",
         results.points.len(),

@@ -62,6 +62,17 @@ impl BidVector {
             .collect()
     }
 
+    /// [`BidVector::active_set`] into a caller-owned buffer (cleared
+    /// first) — the allocation-free form the batched replicate executor
+    /// uses on its per-slot hot path. Consumes no RNG, fills `out` with
+    /// exactly the indices `active_set` would return.
+    pub fn active_set_into(&self, price: f64, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(
+            (0..self.bids.len()).filter(|&i| self.bids[i].bid >= price),
+        );
+    }
+
     /// Number of active workers at price `p` (paper's y(b) for this p).
     pub fn active_count(&self, price: f64) -> usize {
         self.bids.iter().filter(|b| b.bid >= price).count()
@@ -85,6 +96,25 @@ mod tests {
         assert_eq!(v.active_count(0.4), 4);
         assert_eq!(v.active_count(0.5), 4);
         assert_eq!(v.active_count(0.51), 0);
+    }
+
+    #[test]
+    fn active_set_into_matches_active_set_and_clears_stale_contents() {
+        for_all("active_set_into == active_set", |g: &mut Gen| {
+            let n = g.u64_in(1, 16) as usize;
+            let n1 = g.u64_in(1, n as u64) as usize;
+            let b2 = g.f64_in(0.0, 1.0);
+            let b1 = g.f64_in(b2, 1.0);
+            let v = BidVector::two_group(n, n1, b1, b2);
+            let p = g.f64_in(0.0, 1.3);
+            let mut out = vec![usize::MAX; 5]; // stale junk must vanish
+            v.active_set_into(p, &mut out);
+            if out == v.active_set(p) {
+                Ok(())
+            } else {
+                Err(format!("into={out:?} != {:?}", v.active_set(p)))
+            }
+        });
     }
 
     #[test]

@@ -64,6 +64,35 @@ impl PreemptionModel {
         }
     }
 
+    /// [`PreemptionModel::draw_active`] into a caller-owned buffer
+    /// (cleared first) — the allocation-free form the batched replicate
+    /// executor uses on its per-slot hot path. Consumes the RNG in
+    /// *exactly* the same order as `draw_active` (Bernoulli: one bool
+    /// per provisioned worker; Uniform: one `below` draw then the same
+    /// Fisher–Yates shuffle `sample_indices` performs), so digests are
+    /// unchanged.
+    pub fn draw_active_into(
+        &self,
+        n: usize,
+        rng: &mut Rng,
+        out: &mut Vec<usize>,
+    ) {
+        assert!(n > 0);
+        out.clear();
+        match self {
+            PreemptionModel::None => out.extend(0..n),
+            PreemptionModel::Bernoulli { q } => {
+                out.extend((0..n).filter(|_| !rng.bool(*q)));
+            }
+            PreemptionModel::Uniform => {
+                let y = 1 + rng.below(n as u64) as usize;
+                out.extend(0..n);
+                rng.shuffle(out);
+                out.truncate(y);
+            }
+        }
+    }
+
     /// Exact E[1/y_j | y_j > 0] for n provisioned workers.
     pub fn expected_recip(&self, n: usize) -> f64 {
         match self {
@@ -204,6 +233,35 @@ mod tests {
         assert_eq!(jensen_penalty(&m, 8), 0.0);
         let mut rng = Rng::new(1);
         assert_eq!(m.draw_active(5, &mut rng).len(), 5);
+    }
+
+    /// `draw_active_into` must be `draw_active` with a caller buffer:
+    /// same set AND the same number of RNG draws (the batched executor
+    /// relies on bit-identical stream consumption), with stale buffer
+    /// contents cleared.
+    #[test]
+    fn draw_active_into_matches_draw_active_and_rng_stream() {
+        for_all("draw_active_into == draw_active", |g: &mut Gen| {
+            let n = g.u64_in(1, 12) as usize;
+            let m = match g.u64_in(0, 2) {
+                0 => PreemptionModel::None,
+                1 => PreemptionModel::Bernoulli { q: g.f64_in(0.0, 0.9) },
+                _ => PreemptionModel::Uniform,
+            };
+            let seed = g.u64_in(0, u64::MAX - 1);
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let want = m.draw_active(n, &mut a);
+            let mut got = vec![usize::MAX; 3]; // stale junk must vanish
+            m.draw_active_into(n, &mut b, &mut got);
+            if got != want {
+                return Err(format!("{m:?}: {got:?} != {want:?}"));
+            }
+            if a.next_u64() != b.next_u64() {
+                return Err(format!("{m:?}: RNG streams diverged"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

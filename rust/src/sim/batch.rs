@@ -1,0 +1,549 @@
+//! Batched replicate executor: all N replicates of one grid point run
+//! as *lanes stepping together* through one structure-of-arrays kernel,
+//! instead of N independent scalar [`Engine::run`] calls (DESIGN.md §8).
+//!
+//! Replicates at a grid point share everything pure — the planned
+//! strategies, the price source (CDF estimates, traces), `E[1/y]`
+//! tables — and differ only in their counter-based `Rng::stream`. The
+//! batch exploits that: one call sets up shared state once, then
+//! advances every live lane one slot per round. The per-slot hot path
+//! is allocation-free — `Policy::decide_into` fills a scratch buffer
+//! owned by a per-worker [`BatchArena`] (a `thread_local`, so one pool
+//! worker reuses the same buffers across every replicate block it
+//! executes) instead of allocating a fresh `active` vector per slot the
+//! way `ActiveDecision` does.
+//!
+//! **Determinism contract.** Lanes never exchange data: each lane's
+//! trajectory is a pure function of its own RNG stream, the shared
+//! (immutable) point context and the engine parameters, so the lane
+//! interleaving cannot change any per-lane result. Within a lane the
+//! kernel consumes RNG and performs `CostMeter` operations in *exactly*
+//! the scalar engine's per-slot order — price draw, `decide`, runtime
+//! sample, backend step — and emits the same events to the policy in
+//! the same order, so batched and scalar sweeps produce bit-identical
+//! digests (`tests/integration_batch.rs` pins this for every shipped
+//! preset at threads 1 and 8).
+//!
+//! The lockstep kernel covers every frictionless run, including the
+//! event-native policies (it emits the full event stream, so
+//! `NoticeRebid`/`ElasticFleet`/`DeadlineAware` react exactly as under
+//! the scalar engine). Overhead-enabled runs (`[overhead]` presets)
+//! fall back to one scalar [`Engine::run`] per lane inside the same
+//! batch job — digest-identical trivially, and still amortizing the
+//! shared per-point context.
+
+use std::cell::RefCell;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::backend::TrainingBackend;
+use crate::metrics::{Point, Series};
+use crate::util::rng::Rng;
+
+use super::engine::{
+    Engine, EngineParams, EngineResult, EngineState, Event, Policy,
+};
+use super::{CostMeter, PriceSource};
+
+/// One replicate's mutable executors: a fresh policy and backend, built
+/// per lane by the caller (plans and bounds are shared, instances are
+/// not).
+pub struct BatchLane {
+    pub policy: Box<dyn Policy>,
+    pub backend: Box<dyn TrainingBackend>,
+}
+
+/// Per-worker scratch reused across replicates and across batch jobs:
+/// the `decide_into` active-set buffer plus the structure-of-arrays
+/// lane state. Lives in a `thread_local`, so each sweep-pool worker
+/// allocates its buffers once and then runs every replicate block it
+/// steals out of them.
+#[derive(Default)]
+struct BatchArena {
+    /// shared active-set scratch (only its *length* feeds the kernel,
+    /// exactly like the scalar engine, which reads `decision.active.len()`)
+    active: Vec<usize>,
+    soa: LaneSoa,
+}
+
+/// Structure-of-arrays lane state: one entry per replicate, hot fields
+/// packed by kind rather than by lane.
+#[derive(Default)]
+struct LaneSoa {
+    meter: Vec<CostMeter>,
+    iter: Vec<u64>,
+    slots: Vec<u64>,
+    target: Vec<u64>,
+    last_err: Vec<f64>,
+    last_acc: Vec<f64>,
+    prev_price: Vec<f64>,
+    was_active: Vec<bool>,
+    interrupted: Vec<bool>,
+    done: Vec<bool>,
+    truncated: Vec<bool>,
+    preemptions: Vec<u64>,
+    restarts: Vec<u64>,
+    series: Vec<Series>,
+}
+
+impl LaneSoa {
+    /// Reset to `n` fresh lanes, reusing the vectors' capacity.
+    fn reset(&mut self, n: usize, targets: &[u64], last: &[(f64, f64)]) {
+        self.meter.clear();
+        self.meter.resize(n, CostMeter::new());
+        self.iter.clear();
+        self.iter.resize(n, 0);
+        self.slots.clear();
+        self.slots.resize(n, 0);
+        self.target.clear();
+        self.target.extend_from_slice(targets);
+        self.last_err.clear();
+        self.last_acc.clear();
+        for &(e, a) in last {
+            self.last_err.push(e);
+            self.last_acc.push(a);
+        }
+        self.prev_price.clear();
+        self.prev_price.resize(n, 0.0);
+        self.was_active.clear();
+        self.was_active.resize(n, false);
+        self.interrupted.clear();
+        self.interrupted.resize(n, false);
+        self.done.clear();
+        // target 0 never enters the scalar while-loop either
+        self.done.extend(targets.iter().map(|&t| t == 0));
+        self.truncated.clear();
+        self.truncated.resize(n, false);
+        self.preemptions.clear();
+        self.preemptions.resize(n, 0);
+        self.restarts.clear();
+        self.restarts.resize(n, 0);
+        self.series.clear();
+        self.series.resize_with(n, Series::default);
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<BatchArena> = RefCell::new(BatchArena::default());
+}
+
+/// Run one replicate block — lane `i` draws from `rngs[i]` — and return
+/// per-lane [`EngineResult`]s, bit-identical to running each lane
+/// through the scalar engine with the same RNG. RNGs are borrowed (not
+/// consumed) so lineup-mode callers can thread the same streams through
+/// successive entries, exactly as the scalar path does.
+pub fn run_batch(
+    params: &EngineParams,
+    lanes: Vec<BatchLane>,
+    prices: &PriceSource,
+    rngs: &mut [Rng],
+) -> Result<Vec<EngineResult>> {
+    ensure!(
+        lanes.len() == rngs.len(),
+        "run_batch: {} lanes but {} rng streams",
+        lanes.len(),
+        rngs.len()
+    );
+    if lanes.is_empty() {
+        return Ok(Vec::new());
+    }
+    ensure!(params.idle_step > 0.0, "idle_step must be > 0");
+    ensure!(params.stride >= 1, "stride must be >= 1");
+    params.overhead.validate()?;
+
+    if params.overhead.enabled() {
+        // checkpoint/rollback state is inherently per-lane and branchy;
+        // run the full scalar engine per lane (same batch job, shared
+        // point context — digest-identical by construction)
+        let engine = Engine::new(*params);
+        return lanes
+            .into_iter()
+            .zip(rngs.iter_mut())
+            .map(|(mut lane, rng)| {
+                engine.run(
+                    lane.policy.as_mut(),
+                    lane.backend.as_mut(),
+                    prices,
+                    rng,
+                    &mut [],
+                )
+            })
+            .collect();
+    }
+
+    ARENA.with(|cell| {
+        let arena = &mut *cell.borrow_mut();
+        run_lockstep(params, lanes, prices, rngs, arena)
+    })
+}
+
+/// The frictionless structure-of-arrays kernel. Per lane and slot this
+/// reproduces `Engine::run` with `OverheadModel::none()` semantics
+/// verbatim: same RNG draws, same `CostMeter` calls, same event stream
+/// (so event-native policies behave identically), same series stride.
+fn run_lockstep(
+    params: &EngineParams,
+    mut lanes: Vec<BatchLane>,
+    prices: &PriceSource,
+    rngs: &mut [Rng],
+    arena: &mut BatchArena,
+) -> Result<Vec<EngineResult>> {
+    let n = lanes.len();
+    let targets: Vec<u64> =
+        lanes.iter().map(|l| l.policy.target_iters()).collect();
+    let last: Vec<(f64, f64)> = lanes
+        .iter()
+        .map(|l| (l.backend.error(), l.backend.accuracy()))
+        .collect();
+    let st = &mut arena.soa;
+    st.reset(n, &targets, &last);
+    let scratch = &mut arena.active;
+
+    let mut live = st.done.iter().filter(|&&d| !d).count();
+    while live > 0 {
+        for i in 0..n {
+            if st.done[i] {
+                continue;
+            }
+            advance_slot(
+                params,
+                &mut lanes[i],
+                prices,
+                &mut rngs[i],
+                st,
+                i,
+                scratch,
+            )?;
+            if st.done[i] {
+                live -= 1;
+            }
+        }
+    }
+
+    Ok((0..n)
+        .map(|i| EngineResult {
+            series: std::mem::take(&mut st.series[i]),
+            iters: st.iter[i],
+            cost: st.meter[i].cost(),
+            elapsed: st.meter[i].elapsed(),
+            idle_time: st.meter[i].idle_time(),
+            final_error: st.last_err[i],
+            final_accuracy: st.last_acc[i],
+            truncated: st.truncated[i],
+            preemptions: st.preemptions[i],
+            restarts: st.restarts[i],
+            checkpoints: 0,
+            checkpoint_time: 0.0,
+            restart_time: 0.0,
+            lost_iters: 0,
+        })
+        .collect())
+}
+
+/// Advance lane `i` by one slot: the body of the scalar engine's while
+/// loop, frictionless specialisation (no checkpoint/rollback arms).
+#[allow(clippy::too_many_arguments)]
+fn advance_slot(
+    params: &EngineParams,
+    lane: &mut BatchLane,
+    prices: &PriceSource,
+    rng: &mut Rng,
+    st: &mut LaneSoa,
+    i: usize,
+    scratch: &mut Vec<usize>,
+) -> Result<()> {
+    // one emit point, mirroring the engine's policy-then-recorder order
+    macro_rules! emit {
+        ($ev:expr, $active:expr, $price:expr) => {{
+            let ev: Event = $ev;
+            let state = EngineState {
+                iter: st.iter[i],
+                target: st.target[i],
+                clock: st.meter[i].elapsed(),
+                cost: st.meter[i].cost(),
+                idle_time: st.meter[i].idle_time(),
+                error: st.last_err[i],
+                accuracy: st.last_acc[i],
+                active: $active,
+                price: $price,
+            };
+            lane.policy.on_event(&ev, &state)?;
+            if matches!(ev, Event::IterationDone)
+                && (state.iter % params.stride == 0
+                    || state.iter == state.target)
+            {
+                st.series[i].push(Point {
+                    clock: state.clock,
+                    iter: state.iter,
+                    cost: state.cost,
+                    error: state.error,
+                    accuracy: state.accuracy,
+                    active: state.active,
+                });
+            }
+        }};
+    }
+
+    st.slots[i] += 1;
+    if st.slots[i] > params.max_slots
+        || st.meter[i].elapsed() >= params.theta_cap
+    {
+        st.truncated[i] = true;
+        emit!(Event::DeadlineHit, 0, st.prev_price[i]);
+        st.done[i] = true;
+        return Ok(());
+    }
+    let price = prices.price_at(st.meter[i].elapsed(), rng);
+    emit!(Event::PriceRevision { price }, 0, price);
+    let charged = lane.policy.decide_into(price, rng, scratch);
+    let y = scratch.len();
+    if y == 0 {
+        if st.was_active[i] {
+            st.preemptions[i] += 1;
+            st.was_active[i] = false;
+            st.interrupted[i] = true;
+            emit!(
+                Event::WorkerPreempted {
+                    notice: params.overhead.preempt_notice_s
+                },
+                0,
+                price
+            );
+        }
+        st.meter[i].idle(params.idle_step);
+        return Ok(());
+    }
+    if st.interrupted[i] {
+        st.restarts[i] += 1;
+        st.interrupted[i] = false;
+        emit!(Event::WorkerRestored, y, charged);
+    }
+    let dur = params.runtime.sample(y, rng);
+    let stats = lane.backend.step(y, rng)?;
+    st.meter[i].charge(y, charged, dur);
+    st.iter[i] += 1;
+    st.last_err[i] = stats.error;
+    st.last_acc[i] = stats.accuracy;
+    st.was_active[i] = true;
+    st.prev_price[i] = charged;
+    emit!(Event::IterationDone, y, charged);
+    if st.iter[i] >= st.target[i] {
+        st.done[i] = true;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SyntheticBackend;
+    use crate::coordinator::strategy::{FixedBids, StaticWorkers, Strategy};
+    use crate::market::{BidVector, PriceModel};
+    use crate::preempt::{PreemptionModel, RecipTable};
+    use crate::sim::policy::ElasticFleet;
+    use crate::sim::{LockstepPolicy, OverheadModel};
+    use crate::theory::bounds::{ErrorBound, SgdHyper};
+    use crate::theory::runtime_model::RuntimeModel;
+
+    fn bound() -> ErrorBound {
+        ErrorBound::new(SgdHyper::paper_cnn())
+    }
+
+    fn params() -> EngineParams {
+        EngineParams::lockstep(
+            RuntimeModel::ExpStragglers { lambda: 0.25, delta: 0.5 },
+            f64::INFINITY,
+        )
+    }
+
+    fn assert_results_identical(a: &EngineResult, b: &EngineResult) {
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.elapsed.to_bits(), b.elapsed.to_bits());
+        assert_eq!(a.idle_time.to_bits(), b.idle_time.to_bits());
+        assert_eq!(a.final_error.to_bits(), b.final_error.to_bits());
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+        assert_eq!(a.truncated, b.truncated);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.restarts, b.restarts);
+        assert_eq!(a.series.len(), b.series.len());
+        for (p, q) in a.series.points.iter().zip(&b.series.points) {
+            assert_eq!(p.clock.to_bits(), q.clock.to_bits());
+            assert_eq!(p.iter, q.iter);
+            assert_eq!(p.cost.to_bits(), q.cost.to_bits());
+            assert_eq!(p.active, q.active);
+        }
+    }
+
+    /// Scalar oracle: one engine run per lane with the same streams.
+    fn scalar<F>(mk: F, seeds: &[u64], p: &EngineParams, src: &PriceSource)
+        -> (Vec<EngineResult>, Vec<Rng>)
+    where
+        F: Fn() -> BatchLane,
+    {
+        let engine = Engine::new(*p);
+        let mut rngs: Vec<Rng> =
+            seeds.iter().map(|&s| Rng::stream(7, s)).collect();
+        let results = rngs
+            .iter_mut()
+            .map(|rng| {
+                let mut lane = mk();
+                engine
+                    .run(
+                        lane.policy.as_mut(),
+                        lane.backend.as_mut(),
+                        src,
+                        rng,
+                        &mut [],
+                    )
+                    .unwrap()
+            })
+            .collect();
+        (results, rngs)
+    }
+
+    fn batched<F>(mk: F, seeds: &[u64], p: &EngineParams, src: &PriceSource)
+        -> (Vec<EngineResult>, Vec<Rng>)
+    where
+        F: Fn() -> BatchLane,
+    {
+        let mut rngs: Vec<Rng> =
+            seeds.iter().map(|&s| Rng::stream(7, s)).collect();
+        let lanes = seeds.iter().map(|_| mk()).collect();
+        let results = run_batch(p, lanes, src, &mut rngs).unwrap();
+        (results, rngs)
+    }
+
+    fn check_equivalence<F>(mk: F, lanes: usize, src: &PriceSource)
+    where
+        F: Fn() -> BatchLane,
+    {
+        let seeds: Vec<u64> = (0..lanes as u64).collect();
+        let p = params();
+        let (want, mut want_rngs) = scalar(&mk, &seeds, &p, src);
+        let (got, mut got_rngs) = batched(&mk, &seeds, &p, src);
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_results_identical(a, b);
+        }
+        // post-run RNG states match too: the batch consumed the streams
+        // in exactly the scalar order
+        for (a, b) in want_rngs.iter_mut().zip(got_rngs.iter_mut()) {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    fn fixed_bids_lane() -> BatchLane {
+        BatchLane {
+            policy: Box::new(LockstepPolicy(Box::new(FixedBids::new(
+                "two_bids",
+                BidVector::two_group(8, 4, 0.8, 0.4),
+                300,
+            ))
+                as Box<dyn Strategy>)),
+            backend: Box::new(SyntheticBackend::new(bound())),
+        }
+    }
+
+    #[test]
+    fn batched_matches_scalar_fixed_bids_iid_prices() {
+        let src = PriceSource::Iid(PriceModel::uniform_paper());
+        for lanes in [1usize, 3, 8] {
+            check_equivalence(fixed_bids_lane, lanes, &src);
+        }
+    }
+
+    #[test]
+    fn batched_matches_scalar_static_workers_bernoulli() {
+        let mk = || BatchLane {
+            policy: Box::new(LockstepPolicy(Box::new(StaticWorkers {
+                label: "static".to_string(),
+                n: 6,
+                j: 200,
+                model: PreemptionModel::Bernoulli { q: 0.4 },
+                unit_price: 0.2,
+            })
+                as Box<dyn Strategy>)),
+            backend: Box::new(SyntheticBackend::new(bound())),
+        };
+        check_equivalence(mk, 5, &PriceSource::Fixed(0.3));
+    }
+
+    #[test]
+    fn batched_matches_scalar_uniform_preemption_model() {
+        let mk = || BatchLane {
+            policy: Box::new(LockstepPolicy(Box::new(StaticWorkers {
+                label: "uniform".to_string(),
+                n: 7,
+                j: 150,
+                model: PreemptionModel::Uniform,
+                unit_price: 0.15,
+            })
+                as Box<dyn Strategy>)),
+            backend: Box::new(SyntheticBackend::new(bound())),
+        };
+        check_equivalence(mk, 4, &PriceSource::Fixed(0.3));
+    }
+
+    #[test]
+    fn batched_matches_scalar_event_native_elastic_fleet() {
+        let model = PreemptionModel::Bernoulli { q: 0.3 };
+        let table = RecipTable::build(&model, 12);
+        let mk = move || BatchLane {
+            policy: Box::new(ElasticFleet::new(
+                "elastic",
+                250,
+                table.clone(),
+                0.8,
+            )),
+            backend: Box::new(SyntheticBackend::new(bound())),
+        };
+        check_equivalence(mk, 5, &PriceSource::Iid(PriceModel::uniform_paper()));
+    }
+
+    #[test]
+    fn batched_matches_scalar_with_theta_cap_truncation() {
+        let src = PriceSource::Iid(PriceModel::uniform_paper());
+        let seeds: Vec<u64> = (0..4).collect();
+        let mut p = params();
+        p.theta_cap = 500.0; // some lanes truncate mid-run
+        let (want, _) = scalar(fixed_bids_lane, &seeds, &p, &src);
+        let (got, _) = batched(fixed_bids_lane, &seeds, &p, &src);
+        assert!(want.iter().any(|r| r.truncated));
+        for (a, b) in want.iter().zip(&got) {
+            assert_results_identical(a, b);
+        }
+    }
+
+    #[test]
+    fn overhead_fallback_matches_scalar_engine() {
+        let src = PriceSource::Iid(PriceModel::uniform_paper());
+        let seeds: Vec<u64> = (0..3).collect();
+        let mut p = params();
+        p.overhead = OverheadModel {
+            checkpoint_every_iters: 25,
+            checkpoint_cost_s: 2.0,
+            restart_delay_s: 3.0,
+            lost_work_on_preempt: true,
+            preempt_notice_s: 0.0,
+        };
+        assert!(p.overhead.enabled());
+        let (want, _) = scalar(fixed_bids_lane, &seeds, &p, &src);
+        let (got, _) = batched(fixed_bids_lane, &seeds, &p, &src);
+        for (a, b) in want.iter().zip(&got) {
+            assert_results_identical(a, b);
+            assert_eq!(a.checkpoints, b.checkpoints);
+            assert_eq!(a.lost_iters, b.lost_iters);
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_lane_rng_mismatch() {
+        let src = PriceSource::Fixed(0.5);
+        let out =
+            run_batch(&params(), Vec::new(), &src, &mut []).unwrap();
+        assert!(out.is_empty());
+        let mut rngs = vec![Rng::new(1)];
+        assert!(run_batch(&params(), Vec::new(), &src, &mut rngs).is_err());
+    }
+}

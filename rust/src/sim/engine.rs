@@ -159,6 +159,22 @@ pub trait Policy {
     /// Resolve the active set for the slot whose price is `price`.
     fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision;
 
+    /// [`Policy::decide`] into a caller-owned buffer, returning the
+    /// charged price — the allocation-free form the batched replicate
+    /// executor (`sim::batch`) calls per slot. Must consume the RNG and
+    /// fill `active` exactly as `decide` would.
+    fn decide_into(
+        &mut self,
+        price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        let d = self.decide(price, rng);
+        active.clear();
+        active.extend_from_slice(&d.active);
+        d.price
+    }
+
     /// React to an engine event. Must not consume RNG (the §3 stream
     /// contract leaves all stochastic choices to `decide` and the
     /// engine itself).
@@ -191,6 +207,15 @@ impl<S: Strategy> Policy for LockstepPolicy<S> {
 
     fn decide(&mut self, price: f64, rng: &mut Rng) -> ActiveDecision {
         self.0.decide(price, rng)
+    }
+
+    fn decide_into(
+        &mut self,
+        price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        self.0.decide_into(price, rng, active)
     }
 
     fn on_event(&mut self, ev: &Event, state: &EngineState) -> Result<()> {

@@ -1,13 +1,16 @@
 //! Virtual-clock simulation substrate: price sources over time, the
 //! cost meter, the discrete-event engine driving a run as typed events
-//! through policies and observers (DESIGN.md §5), and the suite of
-//! event-reactive adaptive policies built on it (DESIGN.md §6).
+//! through policies and observers (DESIGN.md §5), the suite of
+//! event-reactive adaptive policies built on it (DESIGN.md §6), and the
+//! batched structure-of-arrays replicate executor (DESIGN.md §8).
 
+pub mod batch;
 pub mod cost;
 pub mod engine;
 pub mod policy;
 pub mod price_source;
 
+pub use batch::{run_batch, BatchLane};
 pub use cost::CostMeter;
 pub use engine::{
     Engine, EngineParams, EngineResult, EngineState, Event, EventLog,

@@ -141,6 +141,16 @@ impl Policy for NoticeRebid {
         ActiveDecision { active: self.bids.active_set(price), price }
     }
 
+    fn decide_into(
+        &mut self,
+        price: f64,
+        _rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        self.bids.active_set_into(price, active);
+        price
+    }
+
     fn on_event(&mut self, ev: &Event, _state: &EngineState) -> Result<()> {
         if matches!(ev, Event::WorkerPreempted { .. }) {
             let b1 = (self.bids.b1 * self.rebid_factor).min(self.bid_cap);
@@ -254,6 +264,16 @@ impl Policy for ElasticFleet {
         }
     }
 
+    fn decide_into(
+        &mut self,
+        price: f64,
+        rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        self.model.draw_active_into(self.n_target, rng, active);
+        price
+    }
+
     fn on_event(&mut self, ev: &Event, _state: &EngineState) -> Result<()> {
         if let Event::PriceRevision { price } = ev {
             self.retarget(*price);
@@ -358,6 +378,21 @@ impl Policy for DeadlineAware {
             self.bids.active_set(price)
         };
         ActiveDecision { active, price }
+    }
+
+    fn decide_into(
+        &mut self,
+        price: f64,
+        _rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        if self.escalated {
+            active.clear();
+            active.extend(0..self.bids.n());
+        } else {
+            self.bids.active_set_into(price, active);
+        }
+        price
     }
 
     fn on_event(&mut self, ev: &Event, state: &EngineState) -> Result<()> {

@@ -106,6 +106,25 @@ pub trait Scenario: Sync {
     /// accuracy) rather than poisoning the statistics.
     fn run(&self, point: usize, ctx: &Self::Ctx, rng: &mut Rng)
         -> Result<Vec<f64>>;
+
+    /// Run a whole replicate block at a grid point — `rngs[r]` is
+    /// replicate `r`'s stream — returning one metric vector per
+    /// replicate, in stream order. The default is the scalar loop (one
+    /// [`Scenario::run`] per stream), so every scenario is batchable;
+    /// implementations may override with a genuinely batched executor
+    /// (e.g. [`crate::sim::batch`]) provided the results stay
+    /// bit-identical to the default — [`run_sweep_batched`] relies on
+    /// that to keep digests equal to [`run_sweep`]'s.
+    fn run_block(
+        &self,
+        point: usize,
+        ctx: &Self::Ctx,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<Vec<f64>>> {
+        rngs.iter_mut()
+            .map(|rng| self.run(point, ctx, rng))
+            .collect()
+    }
 }
 
 /// Collated statistics for one grid point.
@@ -183,6 +202,88 @@ pub fn run_sweep<S: Scenario>(
         points,
         throughput: Throughput {
             jobs: plan.len() as u64,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            threads: cfg.threads.max(1),
+        },
+    })
+}
+
+/// Run a scenario with one pool job per *grid point* instead of one per
+/// (point, replicate): each job hands the point's whole replicate block
+/// to [`Scenario::run_block`], which batched scenarios execute through
+/// the structure-of-arrays kernel (`sim::batch`).
+///
+/// Digest-equal to [`run_sweep`] by construction: replicate `r` of
+/// point `p` still draws from `Rng::stream(seed, p * replicates + r)`
+/// (the same stream ids [`JobPlan`] assigns), blocks return metric
+/// vectors in stream order, and collation folds them in the same
+/// point-major job order. `throughput.jobs` keeps counting replicates
+/// so jobs/s stays comparable across the two paths.
+pub fn run_sweep_batched<S: Scenario>(
+    scenario: &S,
+    cfg: &SweepConfig,
+) -> Result<SweepResults> {
+    let t0 = Instant::now();
+    let npts = scenario.points();
+    let metric_names = scenario.metrics();
+    let nmetrics = metric_names.len();
+
+    // phase 1: per-point contexts, once per sweep (same as run_sweep)
+    let ctxs: Vec<S::Ctx> =
+        run_indexed(cfg.threads, npts, |p| scenario.prepare(p))
+            .into_iter()
+            .collect::<Result<_>>()?;
+
+    // phase 2: one job per grid point, owning the point's whole
+    // replicate block
+    let blocks = run_indexed(cfg.threads, npts, |p| {
+        let mut rngs: Vec<Rng> = (0..cfg.replicates)
+            .map(|r| {
+                Rng::stream(cfg.seed, p as u64 * cfg.replicates + r)
+            })
+            .collect();
+        scenario.run_block(p, &ctxs[p], &mut rngs)
+    });
+
+    // phase 3: deterministic collation — point-major, replicate order
+    // within each point: exactly run_sweep's job order
+    let mut points: Vec<PointSummary> = (0..npts)
+        .map(|p| PointSummary {
+            label: scenario.label(p),
+            stats: vec![OnlineStats::new(); nmetrics],
+            missing: vec![0; nmetrics],
+        })
+        .collect();
+    for (p, block) in blocks.into_iter().enumerate() {
+        let block = block?;
+        ensure!(
+            block.len() as u64 == cfg.replicates,
+            "scenario returned {} replicate outputs, expected {}",
+            block.len(),
+            cfg.replicates
+        );
+        let summary = &mut points[p];
+        for vals in &block {
+            ensure!(
+                vals.len() == nmetrics,
+                "scenario returned {} metrics, declared {nmetrics}",
+                vals.len()
+            );
+            for (m, &v) in vals.iter().enumerate() {
+                if v.is_finite() {
+                    summary.stats[m].push(v);
+                } else {
+                    summary.missing[m] += 1;
+                }
+            }
+        }
+    }
+
+    Ok(SweepResults {
+        metric_names,
+        points,
+        throughput: Throughput {
+            jobs: npts as u64 * cfg.replicates,
             elapsed_s: t0.elapsed().as_secs_f64(),
             threads: cfg.threads.max(1),
         },
@@ -425,6 +526,24 @@ mod tests {
             );
         }
         assert_eq!(out.throughput.jobs, 400);
+    }
+
+    #[test]
+    fn batched_harness_digest_equals_scalar() {
+        let toy = Toy { offsets: vec![1.0, 2.0, 3.0] };
+        let base = SweepConfig { replicates: 5, seed: 42, threads: 1 };
+        let scalar = run_sweep(&toy, &base).unwrap();
+        for threads in [1usize, 4, 8] {
+            let cfg = SweepConfig { threads, ..base };
+            let b = run_sweep_batched(&toy, &cfg).unwrap();
+            assert_eq!(scalar.digest(), b.digest(), "threads={threads}");
+            // jobs still counts replicates for cross-path comparability
+            assert_eq!(b.throughput.jobs, 15);
+            assert_eq!(
+                scalar.to_labeled_table().to_csv(),
+                b.to_labeled_table().to_csv()
+            );
+        }
     }
 
     #[test]

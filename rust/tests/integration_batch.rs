@@ -1,0 +1,136 @@
+//! Batched-vs-scalar determinism contract (DESIGN.md §8): for every
+//! shipped preset — frictionless, overhead-enabled, and event-native
+//! alike — `run_sweep_batched` must collate to the *bit-identical*
+//! digest `run_sweep` produces, at 1 and 8 threads. The scalar path is
+//! the oracle; digests are never re-pinned to the batched executor.
+//! Lane edge cases (one replicate, replicate counts that don't divide
+//! evenly, lineup mode) ride along.
+
+use volatile_sgd::exp::spec::MarketKind;
+use volatile_sgd::exp::{presets, ScenarioSpec, SpecScenario};
+use volatile_sgd::sweep::{run_sweep, run_sweep_batched, SweepConfig};
+
+/// A shipped preset reduced for test speed: first market only, at most
+/// two values per axis, iteration budget capped where that cannot
+/// change plan feasibility (fixed-price markets have no Theorem-2/3
+/// deadline coupling). Reductions shrink the point space without
+/// changing what any single replicate does, and both executors see the
+/// identical spec.
+fn reduced(name: &str, j_cap: u64) -> SpecScenario {
+    let mut spec = presets::spec(name).unwrap();
+    if spec
+        .markets
+        .iter()
+        .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
+    {
+        spec.job.j = spec.job.j.min(j_cap);
+    }
+    if spec.markets.len() > 1 {
+        spec.markets.truncate(1);
+    }
+    for ax in &mut spec.axes {
+        if ax.values.len() > 2 {
+            ax.values.truncate(2);
+        }
+    }
+    SpecScenario::new(spec)
+        .unwrap_or_else(|e| panic!("reduced {name}: {e:#}"))
+}
+
+fn assert_batched_equals_scalar(
+    name: &str,
+    sc: &SpecScenario,
+    cfg: &SweepConfig,
+) {
+    let scalar = run_sweep(sc, cfg).unwrap();
+    let batched = run_sweep_batched(sc, cfg).unwrap();
+    assert_eq!(
+        scalar.digest(),
+        batched.digest(),
+        "{name}: batched digest diverges from the scalar oracle \
+         (replicates={}, threads={})",
+        cfg.replicates,
+        cfg.threads
+    );
+    // digests hash labels + collated stats; pin throughput bookkeeping
+    // separately since it is deliberately excluded from the hash
+    assert_eq!(scalar.throughput.jobs, batched.throughput.jobs);
+}
+
+#[test]
+fn every_preset_batched_digest_matches_scalar_at_1_and_8_threads() {
+    for name in presets::PRESET_NAMES {
+        let sc = reduced(name, 600);
+        let base = SweepConfig { replicates: 3, seed: 2020, threads: 1 };
+        assert_batched_equals_scalar(name, &sc, &base);
+        assert_batched_equals_scalar(
+            name,
+            &sc,
+            &SweepConfig { threads: 8, ..base },
+        );
+    }
+}
+
+/// Replicate-count edge cases on a frictionless per-strategy preset
+/// (fast path) and the overhead preset (scalar-fallback path): a single
+/// lane, and a count chosen not to divide any plausible lane width.
+#[test]
+fn lane_count_edge_cases() {
+    for name in ["fig3", "checkpoint_grid"] {
+        let sc = reduced(name, 400);
+        for replicates in [1, 7] {
+            let cfg = SweepConfig { replicates, seed: 5, threads: 1 };
+            assert_batched_equals_scalar(name, &sc, &cfg);
+        }
+    }
+}
+
+/// Lineup mode consumes one stream per replicate across the whole
+/// strategy lineup in entry order; the batched executor must reproduce
+/// that interleaving exactly (fig4 is the shipped lineup preset).
+#[test]
+fn lineup_mode_preserves_per_replicate_stream_order() {
+    let sc = reduced("fig4", 600);
+    let cfg = SweepConfig { replicates: 4, seed: 11, threads: 8 };
+    assert_batched_equals_scalar("fig4", &sc, &cfg);
+}
+
+/// The event-native presets exercise the lockstep kernel's full event
+/// stream (rebids on preemption notices, price-revision fleet
+/// resizing); a digest match here means the batched kernel's event
+/// emission order is the engine's, not an approximation of it.
+#[test]
+fn event_native_presets_take_the_batched_path_bit_identically() {
+    for name in ["adaptive_grid", "notice_grid"] {
+        let sc = reduced(name, 600);
+        let cfg = SweepConfig { replicates: 3, seed: 23, threads: 8 };
+        assert_batched_equals_scalar(name, &sc, &cfg);
+    }
+}
+
+/// The reference runner stays on the scalar oracle inside
+/// `run_sweep_batched` — same digest by construction, pinned here so a
+/// future fast path for it cannot silently change results.
+#[test]
+fn reference_runner_is_unchanged_under_the_batched_harness() {
+    let mut spec = presets::spec("fig3").unwrap();
+    spec.markets.truncate(1);
+    let sc = SpecScenario::new(spec)
+        .unwrap()
+        .with_reference_runner()
+        .unwrap();
+    let cfg = SweepConfig { replicates: 2, seed: 7, threads: 1 };
+    assert_batched_equals_scalar("fig3(reference)", &sc, &cfg);
+}
+
+/// Const-only points (no simulation) go through `run_block`'s fallback
+/// too; a spec that never simulates must still collate identically.
+#[test]
+fn const_only_spec_survives_the_batched_harness() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/configs/fig2.toml");
+    let spec = ScenarioSpec::from_file(&dir).unwrap();
+    let sc = SpecScenario::new(spec).unwrap();
+    let cfg = SweepConfig { replicates: 2, seed: 3, threads: 1 };
+    assert_batched_equals_scalar("fig2(file)", &sc, &cfg);
+}

@@ -169,3 +169,77 @@ fn fig4_preset_lineup_mode_produces_comparisons() {
     );
     assert!(metric("one_bid_acc_ratio") > 0.0);
 }
+
+/// A minimal JSON well-formedness scan: balanced braces/brackets
+/// outside strings, and no bare `inf`/`NaN` float tokens (both invalid
+/// JSON — `util::json::num` must emit `null` instead).
+fn assert_valid_json(json: &str, what: &str) {
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in json.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0, "{what}: unbalanced close");
+    }
+    assert_eq!(depth, 0, "{what}: unbalanced JSON");
+    assert!(!in_str, "{what}: unterminated string");
+    assert!(!json.contains("inf"), "{what}: bare inf token:\n{json}");
+    assert!(!json.contains("NaN"), "{what}: bare NaN token:\n{json}");
+}
+
+/// Regression (float formatting audit): the fig3 preset's
+/// no-interruptions strategy plans bids at +inf ("above any price"),
+/// the historical way non-finite floats leaked toward `--json`. The
+/// end-to-end payload must stay parseable, and non-finite *statistics*
+/// (all replicates missing) must serialise as `null`, not `NaN`/`inf`.
+#[test]
+fn sweep_json_stays_valid_with_inf_bids_and_missing_metrics() {
+    use volatile_sgd::sweep::{PointSummary, SweepResults};
+    use volatile_sgd::util::stats::OnlineStats;
+
+    // end to end: inf-bid lineup through the production JSON writer
+    let mut spec = presets::spec("fig3").unwrap();
+    spec.markets.truncate(1);
+    let sc = SpecScenario::new(spec).unwrap();
+    let cfg = SweepConfig { replicates: 2, seed: 2020, threads: 1 };
+    let results = run_sweep(&sc, &cfg).unwrap();
+    let json = results.to_json("fig3", &cfg);
+    assert_valid_json(&json, "fig3 --json");
+    assert!(json.contains("\"no_interruptions\""));
+
+    // adversarial: force non-finite collated statistics directly
+    let mut poisoned = OnlineStats::new();
+    poisoned.push(f64::INFINITY);
+    let hostile = SweepResults {
+        metric_names: vec!["m".to_string()],
+        points: vec![
+            PointSummary {
+                label: "empty".to_string(),
+                stats: vec![OnlineStats::new()], // n = 0: mean undefined
+                missing: vec![2],
+            },
+            PointSummary {
+                label: "poisoned".to_string(),
+                stats: vec![poisoned],
+                missing: vec![0],
+            },
+        ],
+        throughput: results.throughput,
+    };
+    let json = hostile.to_json("hostile", &cfg);
+    assert_valid_json(&json, "hostile --json");
+    assert!(json.contains("null"), "non-finite stats must null out");
+}
