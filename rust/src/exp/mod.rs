@@ -47,7 +47,10 @@ use crate::theory::bounds::ErrorBound;
 use crate::theory::runtime_model::RuntimeModel;
 use crate::util::rng::Rng;
 
-pub use spec::{build_plan, PlanInputs, ScenarioSpec, SpecScenario};
+pub use spec::{
+    build_plan, CachedSpecScenario, PlanInputs, PrepareCache, ScenarioSpec,
+    SpecScenario,
+};
 
 /// How one synthetic run executes: the engine loop knobs (now
 /// spec-configurable under `[runtime]`) plus the `[overhead]`

@@ -63,6 +63,10 @@
 //! assert_eq!(results.points.len(), 1);
 //! ```
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::toml::{Doc, TrackedDoc};
@@ -79,6 +83,7 @@ use crate::sweep::{Grid, Scenario};
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::{ErrorBound, SgdHyper};
 use crate::theory::runtime_model::RuntimeModel;
+use crate::util::fnv::Fnv;
 use crate::util::rng::Rng;
 
 use super::{
@@ -2052,6 +2057,358 @@ fn set_strategy(
     Ok(())
 }
 
+// ===================================================================
+// Content-addressed fingerprints + the tier-B prepare-artifact cache
+// ===================================================================
+//
+// `prepare` is RNG-free and a pure function of the point-resolved spec
+// (DESIGN.md §3): CDF estimates, generated traces, Theorem-2/3 plans
+// and `RecipTable`s depend only on resolved field values. That purity
+// makes prepare output *content-addressable*: hash every resolved
+// field with the repo's one digest primitive (`util::fnv`) and two
+// points with equal keys have interchangeable `SpecCtx`s — the serve
+// daemon's tier-B warm cache (`crate::serve`) and the planner's shared
+// prepare stage (`crate::opt::run_plan_cached`) both key on this.
+
+fn hash_job(h: &mut Fnv, j: &JobSpec) {
+    h.u64(j.n as u64);
+    h.f64(j.eps);
+    h.opt_f64(j.theta);
+    h.f64(j.deadline_slack);
+    h.u64(j.j);
+    h.f64(j.preempt_q);
+    h.u64(j.n_baseline as u64);
+    h.f64(j.unit_price);
+}
+
+fn hash_runtime(h: &mut Fnv, r: &RuntimeModel) {
+    match r {
+        RuntimeModel::ExpStragglers { lambda, delta } => {
+            h.u64(0);
+            h.f64(*lambda);
+            h.f64(*delta);
+        }
+        RuntimeModel::Deterministic { r } => {
+            h.u64(1);
+            h.f64(*r);
+        }
+    }
+}
+
+fn hash_sched(h: &mut Fnv, s: &SchedKnobs) {
+    h.f64(s.idle_step);
+    h.u64(s.stride);
+    h.u64(s.max_slots);
+}
+
+fn hash_overhead(h: &mut Fnv, o: &OverheadModel) {
+    h.u64(o.checkpoint_every_iters);
+    h.f64(o.checkpoint_cost_s);
+    h.f64(o.restart_delay_s);
+    h.bool(o.lost_work_on_preempt);
+    h.f64(o.preempt_notice_s);
+}
+
+fn hash_sgd(h: &mut Fnv, s: &SgdHyper) {
+    h.f64(s.alpha);
+    h.f64(s.c);
+    h.f64(s.mu);
+    h.f64(s.l);
+    h.f64(s.m);
+    h.f64(s.a0);
+}
+
+fn hash_market(h: &mut Fnv, m: &MarketSpec) {
+    h.str(&m.label);
+    match &m.kind {
+        MarketKind::Uniform { lo, hi } => {
+            h.u64(0);
+            h.f64(*lo);
+            h.f64(*hi);
+        }
+        MarketKind::Gaussian { mean, std, lo, hi } => {
+            h.u64(1);
+            h.f64(*mean);
+            h.f64(*std);
+            h.f64(*lo);
+            h.f64(*hi);
+        }
+        MarketKind::Fixed { price } => {
+            h.u64(2);
+            h.f64(*price);
+        }
+        // the *path* is the identity: a warm cache assumes trace files
+        // do not mutate under a running daemon (DESIGN.md §9)
+        MarketKind::TraceFile { path, cdf_resolution } => {
+            h.u64(3);
+            h.str(path);
+            h.f64(*cdf_resolution);
+        }
+        MarketKind::TraceGen { cfg, seed, cdf_resolution } => {
+            h.u64(4);
+            h.f64(cfg.horizon);
+            h.f64(cfg.revision_interval);
+            h.f64(cfg.floor);
+            h.f64(cfg.cap);
+            h.f64(cfg.base);
+            h.f64(cfg.regime_switch_prob);
+            h.f64(cfg.contended_mult);
+            h.f64(cfg.spike_prob);
+            h.f64(cfg.reversion);
+            h.f64(cfg.noise);
+            h.u64(*seed);
+            h.f64(*cdf_resolution);
+        }
+    }
+}
+
+fn hash_strategy_kind(h: &mut Fnv, k: &StrategyKind) {
+    h.str(k.canonical_name());
+    match k {
+        StrategyKind::NoInterruption
+        | StrategyKind::OneBid
+        | StrategyKind::StaticWorkers => {}
+        StrategyKind::TwoBids { n1 } => h.u64(*n1 as u64),
+        StrategyKind::BidFractions { n1, f1, gamma } => {
+            h.u64(*n1 as u64);
+            h.f64(*f1);
+            h.f64(*gamma);
+        }
+        StrategyKind::DynamicBids { n1, stage_iters } => {
+            h.u64(*n1 as u64);
+            h.u64(*stage_iters);
+        }
+        StrategyKind::DynamicWorkers { eta } => h.f64(*eta),
+        StrategyKind::NoticeRebid { rebid_factor } => h.f64(*rebid_factor),
+        StrategyKind::ElasticFleet { budget_rate } => h.f64(*budget_rate),
+        StrategyKind::DeadlineAware { escalate_threshold } => {
+            h.f64(*escalate_threshold)
+        }
+    }
+}
+
+fn hash_entry(h: &mut Fnv, e: &StrategyEntry) {
+    h.str(&e.label);
+    hash_strategy_kind(h, &e.kind);
+    match e.n {
+        None => h.u64(0),
+        Some(n) => {
+            h.u64(1);
+            h.u64(n as u64);
+        }
+    }
+    h.opt_f64(e.preempt_q);
+    h.opt_f64(e.unit_price);
+}
+
+impl ScenarioSpec {
+    /// Content-addressed identity of the *work* this spec describes: an
+    /// FNV-1a digest over every parsed field — name, mode, job /
+    /// runtime / sched / overhead / sgd knobs, the full market and
+    /// strategy lineups, all axes, and the metric list.
+    ///
+    /// Two properties the cache-key tests pin:
+    ///
+    /// * it is a function of the parsed value, not the TOML text —
+    ///   reordering tables or reformatting cannot change it;
+    /// * `replicates` / `seed` are deliberately **excluded**: they are
+    ///   only defaults the CLI (or a serve request) may override, so
+    ///   the *effective* values are hashed separately into the request
+    ///   key (`crate::serve`).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(b"scenario-spec/v1");
+        h.str(&self.name);
+        h.u64(match self.mode {
+            SweepMode::PerStrategy => 0,
+            SweepMode::Lineup => 1,
+        });
+        hash_job(&mut h, &self.job);
+        hash_runtime(&mut h, &self.runtime);
+        hash_sched(&mut h, &self.sched);
+        hash_overhead(&mut h, &self.overhead);
+        hash_sgd(&mut h, &self.sgd);
+        h.u64(self.markets.len() as u64);
+        for m in &self.markets {
+            hash_market(&mut h, m);
+        }
+        h.u64(self.strategies.len() as u64);
+        for e in &self.strategies {
+            hash_entry(&mut h, e);
+        }
+        h.u64(self.axes.len() as u64);
+        for a in &self.axes {
+            h.str(&a.name);
+            h.str(&a.path);
+            h.u64(a.values.len() as u64);
+            for &v in &a.values {
+                h.f64(v);
+            }
+        }
+        h.u64(self.metrics.len() as u64);
+        for m in &self.metrics {
+            h.str(m);
+        }
+        h.finish()
+    }
+}
+
+impl SpecScenario {
+    /// Content-addressed identity of one point's prepare artifact: an
+    /// FNV-1a digest over everything [`Scenario::prepare`] reads — the
+    /// sweep mode, the metric list (it gates which point constants are
+    /// computed), every point-resolved field and, in per-strategy mode,
+    /// only the one selected lineup entry (so overlapping grids — even
+    /// from different specs — share artifacts whenever a point resolves
+    /// identically). Equal keys mean interchangeable [`SpecCtx`]s,
+    /// because prepare is RNG-free and pure per point (DESIGN.md §3).
+    pub fn point_fingerprint(&self, point: usize) -> Result<u64> {
+        let (m, g, s) = self.decode(point);
+        let r = self.resolve(m, g)?;
+        let mut h = Fnv::new();
+        h.bytes(b"prepare-artifact/v1");
+        h.u64(self.spec.metrics.len() as u64);
+        for name in &self.spec.metrics {
+            h.str(name);
+        }
+        hash_job(&mut h, &r.job);
+        hash_runtime(&mut h, &r.runtime);
+        hash_sched(&mut h, &r.sched);
+        hash_overhead(&mut h, &r.overhead);
+        hash_sgd(&mut h, &r.sgd);
+        hash_market(&mut h, &r.market);
+        match self.spec.mode {
+            SweepMode::PerStrategy => {
+                h.u64(0);
+                hash_entry(&mut h, &r.strategies[s]);
+            }
+            SweepMode::Lineup => {
+                h.u64(1);
+                h.u64(r.strategies.len() as u64);
+                for e in &r.strategies {
+                    hash_entry(&mut h, e);
+                }
+            }
+        }
+        Ok(h.finish())
+    }
+}
+
+/// The tier-B warm artifact cache: prepared [`SpecCtx`]s behind [`Arc`],
+/// keyed by [`SpecScenario::point_fingerprint`]. One instance is shared
+/// by the serve daemon across every submission (`crate::serve`) and by
+/// the planner's prepare stage (`crate::opt::run_plan_cached`), so an
+/// overlapping grid recomputes only its novel points. Thread-safe; on a
+/// concurrent miss the first insert wins, so every caller observes one
+/// stable `Arc` identity per key.
+#[derive(Default)]
+pub struct PrepareCache {
+    map: Mutex<HashMap<u64, Arc<SpecCtx>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PrepareCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the prepared artifact for `point`, preparing (and caching)
+    /// it on a miss. The prepare itself runs outside the map lock so
+    /// concurrent novel points never serialise; two racers on the same
+    /// novel key both prepare (both count as misses) but the loser
+    /// adopts the winner's `Arc`.
+    pub fn get_or_prepare(
+        &self,
+        scenario: &SpecScenario,
+        point: usize,
+    ) -> Result<Arc<SpecCtx>> {
+        let key = scenario.point_fingerprint(point)?;
+        if let Some(ctx) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(ctx));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(scenario.prepare(point)?);
+        let mut map = self.map.lock().unwrap();
+        Ok(Arc::clone(map.entry(key).or_insert(fresh)))
+    }
+
+    /// Artifact reuses served so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Artifacts prepared from scratch so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct artifacts currently cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A [`Scenario`] adapter running a [`SpecScenario`] with its prepare
+/// phase routed through a shared [`PrepareCache`]. Digest-identical to
+/// the bare scenario at any thread count: prepare is pure, `run` /
+/// `run_block` delegate verbatim, and replicate RNG streams are pure
+/// functions of job identity — the cache can change *when* an artifact
+/// is built, never what it contains.
+pub struct CachedSpecScenario<'a> {
+    inner: &'a SpecScenario,
+    cache: &'a PrepareCache,
+}
+
+impl<'a> CachedSpecScenario<'a> {
+    pub fn new(inner: &'a SpecScenario, cache: &'a PrepareCache) -> Self {
+        CachedSpecScenario { inner, cache }
+    }
+}
+
+impl Scenario for CachedSpecScenario<'_> {
+    type Ctx = Arc<SpecCtx>;
+
+    fn points(&self) -> usize {
+        self.inner.points()
+    }
+
+    fn label(&self, point: usize) -> String {
+        self.inner.label(point)
+    }
+
+    fn metrics(&self) -> Vec<String> {
+        self.inner.metrics()
+    }
+
+    fn prepare(&self, point: usize) -> Result<Arc<SpecCtx>> {
+        self.cache.get_or_prepare(self.inner, point)
+    }
+
+    fn run(
+        &self,
+        point: usize,
+        ctx: &Arc<SpecCtx>,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>> {
+        self.inner.run(point, ctx, rng)
+    }
+
+    fn run_block(
+        &self,
+        point: usize,
+        ctx: &Arc<SpecCtx>,
+        rngs: &mut [Rng],
+    ) -> Result<Vec<Vec<f64>>> {
+        self.inner.run_block(point, ctx, rngs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2686,5 +3043,137 @@ escalate_threshold = 0.6
         let sc =
             SpecScenario::new(ScenarioSpec::from_str(CKPT).unwrap()).unwrap();
         assert!(sc.with_reference_runner().is_err());
+    }
+
+    // ---- content-addressed fingerprints + tier-B cache ----
+
+    /// MINI with its tables and keys permuted: the parsed value is
+    /// identical, only the TOML text layout differs.
+    const MINI_REORDERED: &str = r#"
+metrics = ["cost", "final_error", "recip_exact", "p_zero"]
+axes = ["n", "q"]
+strategies = ["static_workers"]
+name = "mini"
+
+[axis.q]
+values = [0.3, 0.6]
+path = "job.preempt_q"
+
+[market]
+price = 0.0
+kind = "fixed"
+
+[runtime]
+r = 10.0
+kind = "deterministic"
+
+[axis.n]
+values = [2, 4]
+path = "job.n"
+
+[job]
+j = 400
+eps = 0.35
+n = 4
+"#;
+
+    #[test]
+    fn fingerprint_is_layout_invariant_and_field_sensitive() {
+        let base = ScenarioSpec::from_str(MINI).unwrap().fingerprint();
+        // reordered tables, same parsed value -> same fingerprint
+        let reordered =
+            ScenarioSpec::from_str(MINI_REORDERED).unwrap().fingerprint();
+        assert_eq!(base, reordered);
+        // replicates/seed are CLI-overridable defaults: excluded
+        let seeded = format!("replicates = 3\nseed = 42\n{MINI}");
+        assert_eq!(
+            ScenarioSpec::from_str(&seeded).unwrap().fingerprint(),
+            base
+        );
+        // every resolved-field change must move the fingerprint
+        for (needle, replacement) in [
+            ("name = \"mini\"", "name = \"mini2\""),
+            ("n = 4", "n = 8"),
+            ("eps = 0.35", "eps = 0.36"),
+            ("j = 400", "j = 401"),
+            ("r = 10.0", "r = 10.5"),
+            ("price = 0.0", "price = 0.01"),
+            ("values = [2, 4]", "values = [2, 5]"),
+            ("values = [0.3, 0.6]", "values = [0.3]"),
+            ("\"p_zero\"]", "\"p_zero\", \"jensen_penalty\"]"),
+            ("strategies = [\"static_workers\"]",
+             "strategies = [\"dynamic_workers\"]"),
+        ] {
+            let mutated = MINI.replace(needle, replacement);
+            assert_ne!(mutated, MINI, "needle '{needle}' not found");
+            assert_ne!(
+                ScenarioSpec::from_str(&mutated).unwrap().fingerprint(),
+                base,
+                "mutating '{needle}' -> '{replacement}' kept the key"
+            );
+        }
+    }
+
+    #[test]
+    fn point_fingerprints_shared_across_overlapping_grids() {
+        // two grids over job.preempt_q overlapping at q = 0.6
+        let a = SpecScenario::new(ScenarioSpec::from_str(MINI).unwrap())
+            .unwrap();
+        let b = SpecScenario::new(
+            ScenarioSpec::from_str(
+                &MINI.replace("values = [0.3, 0.6]", "values = [0.6, 0.9]"),
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        // A's points are (n, q) = (2,.3) (2,.6) (4,.3) (4,.6);
+        // B's are (2,.6) (2,.9) (4,.6) (4,.9): 1A=0B and 3A=2B overlap
+        assert_eq!(
+            a.point_fingerprint(1).unwrap(),
+            b.point_fingerprint(0).unwrap()
+        );
+        assert_eq!(
+            a.point_fingerprint(3).unwrap(),
+            b.point_fingerprint(2).unwrap()
+        );
+        assert_ne!(
+            a.point_fingerprint(0).unwrap(),
+            b.point_fingerprint(1).unwrap()
+        );
+        // shared cache: the overlap reuses the same Arc, novel points
+        // are prepared fresh
+        let cache = PrepareCache::new();
+        for p in 0..a.points() {
+            cache.get_or_prepare(&a, p).unwrap();
+        }
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.len(), 4);
+        let shared = cache.get_or_prepare(&b, 0).unwrap();
+        assert!(Arc::ptr_eq(&shared, &cache.get_or_prepare(&a, 1).unwrap()));
+        for p in 0..b.points() {
+            cache.get_or_prepare(&b, p).unwrap();
+        }
+        // b contributed 2 novel artifacts (q=0.9 at n=2,4)
+        assert_eq!(cache.len(), 6);
+        assert!(cache.hits() >= 3);
+    }
+
+    #[test]
+    fn cached_scenario_digest_identical_to_bare() {
+        let cfg = SweepConfig { replicates: 3, seed: 5, threads: 2 };
+        let bare =
+            SpecScenario::new(ScenarioSpec::from_str(MINI).unwrap()).unwrap();
+        let cold = run_sweep(&bare, &cfg).unwrap();
+        let cache = PrepareCache::new();
+        let cached = CachedSpecScenario::new(&bare, &cache);
+        // cold pass fills the cache, warm pass runs entirely off it;
+        // both collate to the bare scenario's digest
+        let first = run_sweep(&cached, &cfg).unwrap();
+        assert_eq!(cache.hits(), 0);
+        let warm = run_sweep(&cached, &cfg).unwrap();
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.hits(), 4);
+        assert_eq!(cold.digest(), first.digest());
+        assert_eq!(cold.digest(), warm.digest());
     }
 }

@@ -31,6 +31,10 @@
 //!   a candidate lattice, successive-halving simulation refinement,
 //!   ranked recommendations + Pareto frontier (`volatile-sgd
 //!   optimize`);
+//! * [`serve`] — planner-as-a-service: a resident daemon (`volatile-sgd
+//!   serve`) with a newline-delimited JSON protocol, a FIFO admission
+//!   queue onto one shared pool, and a two-tier content-addressed warm
+//!   cache (finished reports + prepared per-point artifacts);
 //! * [`config`], [`manifest`], [`metrics`], [`util`] — substrates.
 
 pub mod cli;
@@ -44,6 +48,7 @@ pub mod metrics;
 pub mod opt;
 pub mod preempt;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod theory;

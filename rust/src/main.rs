@@ -19,6 +19,15 @@
 //!                          [--no-batch]
 //! volatile-sgd optimize    [--spec FILE] [--threads N] [--seed S]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
+//! volatile-sgd serve       [--listen 127.0.0.1:2020] [--threads N] [--check]
+//! volatile-sgd submit      [--addr HOST:PORT] [--preset NAME | --spec FILE]
+//!                          [--kind sweep|optimize] [--seed S]
+//!                          [--replicates R] [--j J] [--wait]
+//!                          [--timeout SECS] [--out FILE]
+//! volatile-sgd status      [--addr HOST:PORT] --job N
+//! volatile-sgd result      [--addr HOST:PORT] --job N [--out FILE]
+//! volatile-sgd stats       [--addr HOST:PORT]
+//! volatile-sgd shutdown    [--addr HOST:PORT]
 //! ```
 //!
 //! `sweep` is the one entry point for every scenario: a spec file
@@ -27,7 +36,11 @@
 //! `optimize` is the planner on top of it: a scenario spec plus
 //! `[objective]`/`[search]` tables (DESIGN.md §7; the shipped preset
 //! `examples/configs/optimize_deadline.toml` runs when `--spec` is
-//! omitted). `--threads` parallelises the simulation jobs on the
+//! omitted). `serve` keeps the same machinery resident: a daemon with a
+//! two-tier content-addressed warm cache and one shared pool, driven by
+//! the `submit`/`status`/`result`/`stats`/`shutdown` client subcommands
+//! over newline-delimited JSON (DESIGN.md §9). `--threads`
+//! parallelises the simulation jobs on the
 //! work-stealing sweep pool — `0` (or omitting the flag) uses every
 //! available core; results are bit-identical at any thread count
 //! (every job's RNG is a pure function of its job identity — see
@@ -94,7 +107,21 @@ fn print_help() {
          the Pareto frontier over (cost, time, error)\n                \
          (--spec plan.toml with [objective]/[search] tables,\n                \
          default: the shipped optimize_deadline preset;\n                \
-         --out/--json/--check/--seed/--threads as in sweep)\n"
+         --out/--json/--check/--seed/--threads as in sweep)\n  \
+         serve         resident planner service: sweep/optimize\n                \
+         submissions over newline-delimited JSON, one shared\n                \
+         pool, two-tier content-addressed warm cache\n                \
+         (--listen 127.0.0.1:2020; --check validates the\n                \
+         listener and every shipped preset without binding)\n  \
+         submit        send a spec to a running daemon (--preset NAME\n                \
+         | --spec FILE; --seed/--replicates/--j as in sweep;\n                \
+         --wait polls and prints the offline-identical\n                \
+         digest line; --out FILE saves the result)\n  \
+         status|result poll a submitted job / fetch its report\n                \
+         (--job N)\n  \
+         stats         service counters: cache hit rates per tier,\n                \
+         queue depth, jobs/sec\n  \
+         shutdown      ask the daemon to drain and exit\n"
     );
 }
 
@@ -112,6 +139,12 @@ fn run(argv: &[String]) -> Result<()> {
         "fig5" => cmd_fig5(&args),
         "sweep" => cmd_sweep(&args),
         "optimize" => cmd_optimize(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "status" => cmd_job_query(&args, "status"),
+        "result" => cmd_job_query(&args, "result"),
+        "stats" => cmd_stats(&args),
+        "shutdown" => cmd_shutdown(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -734,5 +767,132 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         std::fs::write(&path, opt::report::to_json(&outcome, threads))?;
         println!("json -> {}", path.display());
     }
+    Ok(())
+}
+
+/// Where the client subcommands look for a daemon unless --addr says
+/// otherwise (2020: the paper's year).
+const DEFAULT_ADDR: &str = "127.0.0.1:2020";
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use volatile_sgd::serve;
+
+    let listen = args.str("listen", DEFAULT_ADDR);
+    if args.bool("check") {
+        println!("{}", serve::check(&listen)?);
+        return Ok(());
+    }
+    let cfg = serve::ServeConfig { listen, threads: args.threads()? };
+    let server = serve::Server::bind(&cfg)?;
+    serve::install_sigint_handler();
+    println!(
+        "serve: listening on {} ({} worker threads); SIGINT or the \
+         shutdown command drains",
+        server.local_addr()?,
+        cfg.threads
+    );
+    let report = server.run()?;
+    println!(
+        "serve: drained after {:.1}s — {} jobs done, {} failed, \
+         {} pool jobs executed",
+        report.uptime_s, report.jobs_done, report.jobs_failed,
+        report.pool_jobs
+    );
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    use volatile_sgd::serve::{client, protocol};
+    use volatile_sgd::util::json::JsonValue;
+
+    let addr = args.str("addr", DEFAULT_ADDR);
+    let spec_toml = match args.get("spec") {
+        Some(path) => Some(
+            std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?,
+        ),
+        None => None,
+    };
+    let req = protocol::SubmitReq {
+        kind: args.get("kind").map(str::to_string),
+        preset: args.get("preset").map(str::to_string),
+        spec_toml,
+        seed: args.u64_opt("seed")?,
+        replicates: args.u64_opt("replicates")?,
+        j: args.u64_opt("j")?,
+    };
+    let ack =
+        client::roundtrip(&addr, &protocol::submit_request_json(&req))?;
+    let job = ack
+        .get("job")
+        .and_then(JsonValue::as_u64)
+        .context("malformed submit acknowledgement")?;
+    let state =
+        ack.get("state").and_then(JsonValue::as_str).unwrap_or("?");
+    let mut notes = String::new();
+    if ack.get("cached").and_then(JsonValue::as_bool) == Some(true) {
+        notes.push_str(" (tier-A cache hit)");
+    }
+    if ack.get("coalesced").and_then(JsonValue::as_bool) == Some(true) {
+        notes.push_str(" (coalesced onto an identical in-flight job)");
+    }
+    println!("submitted job {job}: {state}{notes}");
+    if args.bool("wait") {
+        let timeout =
+            std::time::Duration::from_secs(args.u64("timeout", 600)?);
+        let (result, raw) = client::wait_result(&addr, job, timeout)?;
+        let digest = result
+            .get("digest")
+            .and_then(JsonValue::as_str)
+            .context("result carried no digest")?;
+        // the exact line the offline `sweep`/`optimize` runs print, so
+        // daemon-vs-CLI determinism is a plain `diff`
+        println!("  digest: {digest}");
+        if let Some(out) = args.get("out") {
+            std::fs::write(out, format!("{raw}\n"))
+                .with_context(|| format!("writing {out}"))?;
+            println!("result -> {out}");
+        }
+    }
+    Ok(())
+}
+
+/// `status` / `result`: one request line out, the response line printed
+/// verbatim (it is already a single machine-readable JSON line).
+fn cmd_job_query(args: &Args, cmd: &str) -> Result<()> {
+    use volatile_sgd::serve::{client, protocol};
+
+    let addr = args.str("addr", DEFAULT_ADDR);
+    let job = args
+        .u64_opt("job")?
+        .context("--job N is required (the id `submit` printed)")?;
+    let (_, raw) =
+        client::roundtrip_raw(&addr, &protocol::job_request_json(cmd, job))?;
+    if let (true, Some(out)) = (cmd == "result", args.get("out")) {
+        std::fs::write(out, format!("{raw}\n"))
+            .with_context(|| format!("writing {out}"))?;
+        println!("result -> {out}");
+    } else {
+        println!("{raw}");
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    use volatile_sgd::serve::{client, protocol};
+
+    let addr = args.str("addr", DEFAULT_ADDR);
+    let (_, raw) =
+        client::roundtrip_raw(&addr, &protocol::bare_request_json("stats"))?;
+    println!("{raw}");
+    Ok(())
+}
+
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    use volatile_sgd::serve::{client, protocol};
+
+    let addr = args.str("addr", DEFAULT_ADDR);
+    client::roundtrip(&addr, &protocol::bare_request_json("shutdown"))?;
+    println!("shutdown: daemon at {addr} is draining");
     Ok(())
 }

@@ -41,7 +41,7 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
-use crate::exp::spec::SpecCtx;
+use crate::exp::spec::{PrepareCache, SpecCtx};
 use crate::exp::SpecScenario;
 use crate::sweep::{
     run_indexed, run_sweep, Scenario, SweepConfig, SweepResults,
@@ -381,6 +381,21 @@ fn fingerprint(sc: &SpecScenario, point: usize) -> String {
 /// Run the full two-stage plan. Deterministic: the outcome (and its
 /// digest) is a pure function of (spec, seed) at any thread count.
 pub fn run_plan(plan: &PlanSpec, cfg: &PlannerConfig) -> Result<PlanOutcome> {
+    run_plan_cached(plan, cfg, &PrepareCache::new())
+}
+
+/// [`run_plan`] with the stage-1 plan solves routed through a shared
+/// tier-B [`PrepareCache`]: the serve daemon (`crate::serve`) passes
+/// its process-wide cache so repeated or overlapping submissions solve
+/// only their novel lattice points. Digest-identical to a fresh
+/// [`run_plan`] at any thread count — prepare is pure per point
+/// (DESIGN.md §3), so a shared cache changes *when* an artifact is
+/// built, never what it contains.
+pub fn run_plan_cached(
+    plan: &PlanSpec,
+    cfg: &PlannerConfig,
+    cache: &PrepareCache,
+) -> Result<PlanOutcome> {
     let scenario = build_scenario(plan)?;
     let npts = scenario.points();
     ensure!(npts > 0, "the candidate lattice is empty");
@@ -421,7 +436,8 @@ pub fn run_plan(plan: &PlanSpec, cfg: &PlannerConfig) -> Result<PlanOutcome> {
         .collect();
     let prepared: Vec<Result<(Arc<SpecCtx>, Option<Surface>)>> =
         run_indexed(cfg.threads, uniq.len(), |i| {
-            let ctx = scenario.prepare(candidates[uniq[i]].point)?;
+            let ctx =
+                cache.get_or_prepare(&scenario, candidates[uniq[i]].point)?;
             let surface = admissible_surface(
                 &ctx.plans()[0],
                 ctx.bid_problem(),
@@ -435,7 +451,7 @@ pub fn run_plan(plan: &PlanSpec, cfg: &PlannerConfig) -> Result<PlanOutcome> {
                 // points must be heuristic (never pruned)
                 ctx.run_params().overhead.enabled(),
             );
-            Ok((Arc::new(ctx), surface))
+            Ok((ctx, surface))
         });
     // cache the prepared contexts: the refinement rungs reuse them, so
     // the expensive plan solves run once per candidate, not per rung

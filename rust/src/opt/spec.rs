@@ -55,6 +55,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::config::toml::{Doc, TrackedDoc};
 use crate::exp::spec::{reject_unknown_keys, SweepMode};
 use crate::exp::ScenarioSpec;
+use crate::util::fnv::Fnv;
 
 /// Relative slack for constraint checks: a surface that is deadline-
 /// *tight* by construction (Theorem 2 solves `E[tau] = theta` exactly)
@@ -184,6 +185,34 @@ pub struct PlanSpec {
 }
 
 impl PlanSpec {
+    /// Content-addressed identity of the planner work this spec
+    /// describes: the scenario fingerprint
+    /// ([`ScenarioSpec::fingerprint`] — layout-invariant, seed-exempt)
+    /// extended with every `[objective]` and `[search]` field. The
+    /// serve daemon (`crate::serve`) keys its tier-A report cache on
+    /// this plus the effective seed.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(b"plan-spec/v1");
+        h.u64(self.scenario.fingerprint());
+        h.str(self.objective.goal.name());
+        if let Goal::Weighted { cost, time } = self.objective.goal {
+            h.f64(cost);
+            h.f64(time);
+        }
+        h.opt_f64(self.objective.deadline);
+        h.opt_f64(self.objective.budget);
+        h.opt_f64(self.objective.error_bound);
+        h.u64(self.search.ladder.len() as u64);
+        for &r in &self.search.ladder {
+            h.u64(r);
+        }
+        h.f64(self.search.keep_fraction);
+        h.u64(self.search.min_keep as u64);
+        h.bool(self.search.prune);
+        h.finish()
+    }
+
     pub fn from_str(text: &str) -> Result<Self> {
         Self::from_doc(&Doc::parse(text)?)
     }

@@ -1,0 +1,75 @@
+//! Thin daemon client: one TCP connection per request, one JSON line
+//! each way. Backs the `submit` / `status` / `result` / `stats` /
+//! `shutdown` CLI subcommands and the integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::JsonValue;
+
+use super::protocol::job_request_json;
+
+/// Send one request line, read the single response line, enforce the
+/// `ok` flag (a server-side error becomes an `Err` carrying the
+/// server's message) and hand back the parsed body plus the raw line
+/// (which the CLI prints verbatim).
+pub fn roundtrip_raw(addr: &str, line: &str) -> Result<(JsonValue, String)> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut response = String::new();
+    BufReader::new(stream)
+        .read_line(&mut response)
+        .context("reading response")?;
+    let raw = response.trim().to_string();
+    let v = JsonValue::parse(&raw)
+        .with_context(|| format!("parsing response line {raw:?}"))?;
+    match v.get("ok").and_then(JsonValue::as_bool) {
+        Some(true) => Ok((v, raw)),
+        Some(false) => {
+            let msg = v
+                .get("error")
+                .and_then(JsonValue::as_str)
+                .unwrap_or("unknown error");
+            bail!("server: {msg}")
+        }
+        None => bail!("malformed response (no 'ok' flag): {raw}"),
+    }
+}
+
+/// [`roundtrip_raw`] when only the parsed body matters.
+pub fn roundtrip(addr: &str, line: &str) -> Result<JsonValue> {
+    roundtrip_raw(addr, line).map(|(v, _)| v)
+}
+
+/// Poll `status` until the job settles, then fetch `result`. A failed
+/// job surfaces as an `Err` carrying the server's failure message (the
+/// `result` command reports it).
+pub fn wait_result(
+    addr: &str,
+    job: u64,
+    timeout: Duration,
+) -> Result<(JsonValue, String)> {
+    let t0 = Instant::now();
+    loop {
+        let status = roundtrip(addr, &job_request_json("status", job))?;
+        if matches!(
+            status.get("state").and_then(JsonValue::as_str),
+            Some("done" | "failed")
+        ) {
+            return roundtrip_raw(addr, &job_request_json("result", job));
+        }
+        if t0.elapsed() > timeout {
+            bail!("timed out after {timeout:?} waiting for job {job}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}

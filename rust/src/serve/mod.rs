@@ -1,0 +1,311 @@
+//! Planner-as-a-service: a resident daemon with a warm artifact cache.
+//!
+//! `volatile-sgd serve --listen 127.0.0.1:2020` turns the offline
+//! sweep/optimize machinery into a long-lived service (DESIGN.md §9).
+//! Clients submit spec TOML (inline or a shipped preset name) over a
+//! newline-delimited JSON protocol ([`protocol`]); every submission is
+//! validated with the same machinery as `--check`, fingerprinted
+//! content-addressably, and admitted FIFO to ONE shared sweep pool.
+//! Repeat work never recomputes:
+//!
+//! * **tier A** — finished reports, keyed by the full request
+//!   fingerprint (spec fingerprint + effective seed/replicates);
+//! * **tier B** — prepared per-grid-point artifacts
+//!   ([`crate::exp::PrepareCache`]), keyed by point fingerprint and
+//!   shared behind `Arc` across *overlapping* grids, so a submission
+//!   that moves one axis value only prepares the novel points.
+//!
+//! Determinism contract: a daemon result — cold, warm or partially
+//! warm — carries the same FNV digest line as the offline CLI run of
+//! the same spec and seed, at any `--threads` (the executor reuses
+//! `run_sweep_batched` / `run_plan_cached`, whose digests are already
+//! thread-count-invariant, and caching only short-circuits pure
+//! recomputation). Shutdown (SIGINT or the `shutdown` command) drains:
+//! open connections finish, admitted jobs complete, new submissions are
+//! rejected, and a [`DrainReport`] summarises the session.
+
+pub mod client;
+pub mod protocol;
+pub mod state;
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::exp::presets::PRESET_NAMES;
+use crate::exp::{ScenarioSpec, SpecScenario};
+use crate::opt::{self, PlanSpec};
+use crate::sweep::Scenario;
+
+use protocol::{
+    err_response, parse_request, result_response, stats_response,
+    status_response, submit_response, Request,
+};
+use state::{executor_loop, preset_text, ServerState, WorkItem};
+
+/// How the daemon listens and executes.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// listen address, e.g. `127.0.0.1:2020` (`:0` picks an ephemeral
+    /// port — the bound address is reported by [`Server::local_addr`])
+    pub listen: String,
+    /// worker threads for the one shared sweep pool
+    pub threads: usize,
+}
+
+/// What a drained daemon hands back to its caller.
+#[derive(Clone, Copy, Debug)]
+pub struct DrainReport {
+    pub jobs_done: u64,
+    pub jobs_failed: u64,
+    pub pool_jobs: u64,
+    pub uptime_s: f64,
+}
+
+/// Set by the SIGINT handler; the accept loop polls it.
+static SIGINT_HIT: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_signum: i32) {
+    SIGINT_HIT.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT to a graceful drain instead of process death. Raw
+/// `signal(2)` through the libc std already links — no new crates.
+#[cfg(unix)]
+pub fn install_sigint_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    unsafe {
+        signal(SIGINT, on_sigint);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigint_handler() {}
+
+/// A bound, not-yet-running daemon: the listener plus the executor
+/// thread consuming the admission queue.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    executor: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind the listener and start the executor thread. The accept
+    /// loop itself runs in [`Server::run`].
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        ensure!(cfg.threads > 0, "serve needs at least one worker thread");
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        listener
+            .set_nonblocking(true)
+            .context("making the listener non-blocking")?;
+        let (state, rx) = ServerState::new(cfg.threads);
+        let executor = spawn_executor(&state, rx)?;
+        Ok(Server { listener, state, executor: Some(executor) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading bound address")
+    }
+
+    /// Shared state handle (in-process tests drive the daemon and read
+    /// its metrics through this).
+    pub fn state(&self) -> Arc<ServerState> {
+        Arc::clone(&self.state)
+    }
+
+    /// Accept until shutdown (SIGINT or the `shutdown` command), then
+    /// drain: join open connections, close the admission queue so the
+    /// executor finishes every admitted job, and report the session.
+    pub fn run(mut self) -> Result<DrainReport> {
+        let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if SIGINT_HIT.load(Ordering::SeqCst)
+                || self.state.shutdown.load(Ordering::SeqCst)
+            {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let state = Arc::clone(&self.state);
+                    conns.push(thread::spawn(move || {
+                        handle_conn(&state, stream);
+                    }));
+                    conns.retain(|h| !h.is_finished());
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("accepting a connection"),
+            }
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        self.state.close_queue();
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+        let s = self.state.stats_view();
+        Ok(DrainReport {
+            jobs_done: s.jobs_done,
+            jobs_failed: s.jobs_failed,
+            pool_jobs: s.pool_jobs,
+            uptime_s: s.uptime_s,
+        })
+    }
+}
+
+fn spawn_executor(
+    state: &Arc<ServerState>,
+    rx: Receiver<WorkItem>,
+) -> Result<thread::JoinHandle<()>> {
+    let state = Arc::clone(state);
+    thread::Builder::new()
+        .name("serve-executor".into())
+        .spawn(move || executor_loop(&state, rx))
+        .context("spawning the executor thread")
+}
+
+/// One connection: read one request line, write one response line.
+/// I/O failures only cost this connection, never the daemon.
+fn handle_conn(state: &Arc<ServerState>, stream: TcpStream) {
+    let _ = serve_one(state, stream);
+}
+
+fn serve_one(state: &Arc<ServerState>, stream: TcpStream) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.trim().is_empty() {
+        return Ok(());
+    }
+    let response = dispatch(state, &line);
+    let mut stream = reader.into_inner();
+    stream.write_all(response.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()
+}
+
+/// Route one request line to the state machine; every outcome —
+/// including a parse or validation error — is a single `ok`-flagged
+/// response line.
+pub fn dispatch(state: &Arc<ServerState>, line: &str) -> String {
+    state.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let req = match parse_request(line) {
+        Ok(req) => req,
+        Err(e) => return err_response(&format!("{e:#}")),
+    };
+    match req {
+        Request::Submit(req) => match state.submit(req) {
+            Ok(ack) => submit_response(&ack.view),
+            Err(e) => err_response(&format!("{e:#}")),
+        },
+        Request::Status { job } => match state.job_view(job) {
+            Ok(view) => status_response(&view),
+            Err(e) => err_response(&format!("{e:#}")),
+        },
+        Request::Result { job } => match state.job_view(job) {
+            Ok(view) => result_response(&view),
+            Err(e) => err_response(&format!("{e:#}")),
+        },
+        Request::Stats => stats_response(&state.stats_view()),
+        Request::Shutdown => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            "{\"ok\": true, \"draining\": true}".to_string()
+        }
+    }
+}
+
+/// `volatile-sgd serve --check`: validate the listener address and
+/// prove every shipped preset loads, resolves and fingerprints —
+/// without binding a socket or running a single replicate. Returns the
+/// auditable one-line summary.
+pub fn check(listen: &str) -> Result<String> {
+    let addrs: Vec<SocketAddr> = listen
+        .to_socket_addrs()
+        .with_context(|| format!("listen address '{listen}'"))?
+        .collect();
+    ensure!(
+        !addrs.is_empty(),
+        "listen address '{listen}' resolves to no socket address"
+    );
+    let mut points = 0usize;
+    for name in PRESET_NAMES {
+        let spec = ScenarioSpec::from_str(preset_text(name)?)
+            .with_context(|| format!("preset '{name}'"))?;
+        let scenario = SpecScenario::new(spec)
+            .with_context(|| format!("preset '{name}'"))?;
+        for p in 0..scenario.points() {
+            scenario
+                .point_fingerprint(p)
+                .with_context(|| format!("preset '{name}' point {p}"))?;
+        }
+        points += scenario.points();
+    }
+    let plan = PlanSpec::from_str(preset_text("optimize_deadline")?)
+        .context("preset 'optimize_deadline'")?;
+    opt::build_scenario(&plan).context("preset 'optimize_deadline'")?;
+    let _ = plan.fingerprint();
+    Ok(format!(
+        "check OK: listen '{listen}' resolves to {} address(es); \
+         {} sweep presets ({points} points fingerprinted) + 1 planner \
+         preset validate; protocol v1",
+        addrs.len(),
+        PRESET_NAMES.len(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_validates_every_shipped_preset() {
+        let line = check("127.0.0.1:2020").unwrap();
+        assert!(line.starts_with("check OK:"), "{line}");
+        assert!(line.contains("7 sweep presets"), "{line}");
+        assert!(line.contains("1 planner preset"), "{line}");
+        // an unresolvable listen address fails loudly
+        assert!(check("not an address").is_err());
+    }
+
+    #[test]
+    fn dispatch_turns_every_failure_into_an_ok_false_line() {
+        let (state, _rx) = ServerState::new(1);
+        for bad in [
+            "not json",
+            "{\"cmd\": \"frobnicate\"}",
+            "{\"cmd\": \"status\", \"job\": 99}",
+            "{\"cmd\": \"submit\", \"preset\": \"fig9\"}",
+        ] {
+            let resp = dispatch(&state, bad);
+            let v = crate::util::json::JsonValue::parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+            assert!(!resp.contains('\n'));
+        }
+        assert_eq!(state.stats_view().requests, 4);
+    }
+
+    #[test]
+    fn shutdown_request_flips_the_drain_flag() {
+        let (state, _rx) = ServerState::new(1);
+        let resp = dispatch(&state, "{\"cmd\": \"shutdown\"}");
+        assert!(resp.contains("\"draining\": true"), "{resp}");
+        assert!(state.shutdown.load(Ordering::SeqCst));
+    }
+}

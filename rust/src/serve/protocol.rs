@@ -1,0 +1,459 @@
+//! The serve wire protocol: newline-delimited JSON over TCP.
+//!
+//! One request per connection, one line each way (DESIGN.md §9 has the
+//! full grammar):
+//!
+//! ```text
+//! request  := submit | status | result | stats | shutdown
+//! submit   := {"cmd": "submit", "kind"?, "preset"? | "spec_toml"?,
+//!              "seed"?, "replicates"?, "j"?}
+//! status   := {"cmd": "status", "job": N}
+//! result   := {"cmd": "result", "job": N}
+//! stats    := {"cmd": "stats"}
+//! shutdown := {"cmd": "shutdown"}
+//! response := {"ok": true, ...} | {"ok": false, "error": "..."}
+//! ```
+//!
+//! Requests are parsed with the strict [`crate::util::json`] reader and
+//! audited like the spec loader: unknown keys are rejected *by name*
+//! per command, so a typo (`"sede"`) fails loudly instead of being
+//! silently ignored. Responses are built with the shared emission
+//! convention ([`crate::util::json::esc`] / [`crate::util::json::num`])
+//! and are always a single line — multi-line payloads (sweep / planner
+//! reports) are flattened by [`compact_json`] before embedding.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{esc, num, JsonValue};
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Submit(SubmitReq),
+    Status { job: u64 },
+    Result { job: u64 },
+    Stats,
+    Shutdown,
+}
+
+/// The body of a `submit` request. Exactly one of `preset` /
+/// `spec_toml` carries the spec; `seed` / `replicates` / `j` override
+/// the spec's defaults the same way the offline CLI flags do (so a
+/// daemon submission and a CLI run describe identical work).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SubmitReq {
+    /// `"sweep"` | `"optimize"`; absent = auto-detect (a spec with an
+    /// `[objective]` table is a planner spec)
+    pub kind: Option<String>,
+    pub preset: Option<String>,
+    pub spec_toml: Option<String>,
+    pub seed: Option<u64>,
+    pub replicates: Option<u64>,
+    pub j: Option<u64>,
+}
+
+fn str_field(v: &JsonValue, key: &str) -> Result<Option<String>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(f) => Ok(Some(
+            f.as_str()
+                .with_context(|| format!("'{key}' must be a string"))?
+                .to_string(),
+        )),
+    }
+}
+
+fn u64_field(v: &JsonValue, key: &str) -> Result<Option<u64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(f) => Ok(Some(f.as_u64().with_context(|| {
+            format!("'{key}' must be a non-negative integer")
+        })?)),
+    }
+}
+
+/// Parse one request line (strict; see module docs).
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = JsonValue::parse(line.trim())?;
+    let JsonValue::Obj(fields) = &v else {
+        bail!("request must be a JSON object");
+    };
+    let cmd = v
+        .get("cmd")
+        .context("missing 'cmd'")?
+        .as_str()
+        .context("'cmd' must be a string")?;
+    let allowed: &[&str] = match cmd {
+        "submit" => &[
+            "cmd",
+            "kind",
+            "preset",
+            "spec_toml",
+            "seed",
+            "replicates",
+            "j",
+        ],
+        "status" | "result" => &["cmd", "job"],
+        "stats" | "shutdown" => &["cmd"],
+        other => bail!(
+            "unknown cmd '{other}' (expected submit, status, result, \
+             stats or shutdown)"
+        ),
+    };
+    for (k, _) in fields {
+        ensure!(
+            allowed.contains(&k.as_str()),
+            "unknown key '{k}' for cmd '{cmd}'"
+        );
+    }
+    let job = |v: &JsonValue| -> Result<u64> {
+        u64_field(v, "job")?.context("'job' is required")
+    };
+    Ok(match cmd {
+        "submit" => Request::Submit(SubmitReq {
+            kind: str_field(&v, "kind")?,
+            preset: str_field(&v, "preset")?,
+            spec_toml: str_field(&v, "spec_toml")?,
+            seed: u64_field(&v, "seed")?,
+            replicates: u64_field(&v, "replicates")?,
+            j: u64_field(&v, "j")?,
+        }),
+        "status" => Request::Status { job: job(&v)? },
+        "result" => Request::Result { job: job(&v)? },
+        "stats" => Request::Stats,
+        _ => Request::Shutdown,
+    })
+}
+
+// ---------------------------------------------------- request builders
+
+/// Render a submit request line (the client half of `parse_request`).
+pub fn submit_request_json(req: &SubmitReq) -> String {
+    let mut out = String::from("{\"cmd\": \"submit\"");
+    for (key, val) in [
+        ("kind", &req.kind),
+        ("preset", &req.preset),
+        ("spec_toml", &req.spec_toml),
+    ] {
+        if let Some(s) = val {
+            out.push_str(&format!(", \"{key}\": \"{}\"", esc(s)));
+        }
+    }
+    for (key, val) in
+        [("seed", req.seed), ("replicates", req.replicates), ("j", req.j)]
+    {
+        if let Some(n) = val {
+            out.push_str(&format!(", \"{key}\": {n}"));
+        }
+    }
+    out.push('}');
+    out
+}
+
+/// Render a `status` / `result` request line.
+pub fn job_request_json(cmd: &str, job: u64) -> String {
+    format!("{{\"cmd\": \"{cmd}\", \"job\": {job}}}")
+}
+
+/// Render a `stats` / `shutdown` request line.
+pub fn bare_request_json(cmd: &str) -> String {
+    format!("{{\"cmd\": \"{cmd}\"}}")
+}
+
+// --------------------------------------------------- response builders
+
+/// Everything a response needs to say about one job — a plain snapshot
+/// so rendering happens outside the registry lock.
+#[derive(Clone, Debug)]
+pub struct JobView {
+    pub id: u64,
+    pub state: &'static str,
+    pub name: String,
+    pub fingerprint: u64,
+    pub cached: bool,
+    pub coalesced: bool,
+    pub digest: Option<u64>,
+    pub payload: Option<Arc<String>>,
+    pub error: Option<String>,
+}
+
+/// Service counters for the `stats` response, already sampled.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatsView {
+    pub uptime_s: f64,
+    pub requests: u64,
+    pub submits: u64,
+    pub tier_a_hits: u64,
+    pub tier_a_misses: u64,
+    pub tier_a_entries: u64,
+    pub tier_b_hits: u64,
+    pub tier_b_misses: u64,
+    pub tier_b_entries: u64,
+    pub coalesced: u64,
+    pub queue_depth: u64,
+    pub jobs_done: u64,
+    pub jobs_failed: u64,
+    pub pool_jobs: u64,
+    pub exec_seconds: f64,
+}
+
+pub fn err_response(msg: &str) -> String {
+    format!("{{\"ok\": false, \"error\": \"{}\"}}", esc(msg))
+}
+
+fn job_head(j: &JobView) -> String {
+    format!(
+        "\"job\": {}, \"state\": \"{}\", \"name\": \"{}\", \
+         \"fingerprint\": \"{:016x}\", \"cached\": {}",
+        j.id,
+        j.state,
+        esc(&j.name),
+        j.fingerprint,
+        j.cached
+    )
+}
+
+pub fn submit_response(j: &JobView) -> String {
+    let mut out =
+        format!("{{\"ok\": true, {}, \"coalesced\": {}", job_head(j), j.coalesced);
+    if let Some(d) = j.digest {
+        out.push_str(&format!(", \"digest\": \"{d:016x}\""));
+    }
+    out.push('}');
+    out
+}
+
+pub fn status_response(j: &JobView) -> String {
+    let mut out = format!("{{\"ok\": true, {}", job_head(j));
+    if let Some(d) = j.digest {
+        out.push_str(&format!(", \"digest\": \"{d:016x}\""));
+    }
+    if let Some(e) = &j.error {
+        out.push_str(&format!(", \"error\": \"{}\"", esc(e)));
+    }
+    out.push('}');
+    out
+}
+
+pub fn result_response(j: &JobView) -> String {
+    match (j.state, &j.payload, &j.error) {
+        ("done", Some(payload), _) => format!(
+            "{{\"ok\": true, {}, \"digest\": \"{:016x}\", \"result\": {}}}",
+            job_head(j),
+            j.digest.unwrap_or(0),
+            payload
+        ),
+        ("failed", _, Some(e)) => {
+            err_response(&format!("job {} failed: {e}", j.id))
+        }
+        (state, _, _) => err_response(&format!(
+            "job {} is still {state}; poll status until it is done",
+            j.id
+        )),
+    }
+}
+
+pub fn stats_response(s: &StatsView) -> String {
+    let executed = s.jobs_done + s.jobs_failed;
+    let jobs_per_sec = if s.exec_seconds > 1e-12 {
+        s.pool_jobs as f64 / s.exec_seconds
+    } else {
+        0.0
+    };
+    let avg_exec_s = if executed > 0 {
+        s.exec_seconds / executed as f64
+    } else {
+        0.0
+    };
+    format!(
+        "{{\"ok\": true, \"uptime_s\": {}, \"requests\": {}, \
+         \"submits\": {}, \"tier_a_hits\": {}, \"tier_a_misses\": {}, \
+         \"tier_a_entries\": {}, \"tier_b_hits\": {}, \
+         \"tier_b_misses\": {}, \"tier_b_entries\": {}, \
+         \"coalesced\": {}, \"queue_depth\": {}, \"jobs_done\": {}, \
+         \"jobs_failed\": {}, \"pool_jobs\": {}, \"exec_seconds\": {}, \
+         \"jobs_per_sec\": {}, \"avg_exec_s\": {}}}",
+        num(s.uptime_s),
+        s.requests,
+        s.submits,
+        s.tier_a_hits,
+        s.tier_a_misses,
+        s.tier_a_entries,
+        s.tier_b_hits,
+        s.tier_b_misses,
+        s.tier_b_entries,
+        s.coalesced,
+        s.queue_depth,
+        s.jobs_done,
+        s.jobs_failed,
+        s.pool_jobs,
+        num(s.exec_seconds),
+        num(jobs_per_sec),
+        num(avg_exec_s),
+    )
+}
+
+/// Flatten a multi-line JSON document to one wire line: newlines (and
+/// the indentation that follows them) are dropped *outside* strings.
+/// Safe for every payload this crate emits — `esc` never leaves a raw
+/// newline inside a string literal.
+pub fn compact_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut in_str = false;
+    let mut escaped = false;
+    let mut chars = s.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_str {
+            out.push(c);
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => {
+                in_str = true;
+                out.push(c);
+            }
+            '\n' | '\r' => {
+                while matches!(chars.peek(), Some(' ' | '\t')) {
+                    chars.next();
+                }
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_builders_round_trip_through_parse() {
+        let req = SubmitReq {
+            kind: Some("sweep".into()),
+            preset: Some("fig3".into()),
+            spec_toml: None,
+            seed: Some(7),
+            replicates: Some(2),
+            j: None,
+        };
+        let line = submit_request_json(&req);
+        assert_eq!(parse_request(&line).unwrap(), Request::Submit(req));
+        // an inline spec body with newlines and quotes survives the wire
+        let req = SubmitReq {
+            spec_toml: Some("name = \"x\"\n[job]\nn = 4\n".into()),
+            ..Default::default()
+        };
+        let line = submit_request_json(&req);
+        assert!(!line.contains('\n'), "wire lines must be single-line");
+        assert_eq!(parse_request(&line).unwrap(), Request::Submit(req));
+        assert_eq!(
+            parse_request(&job_request_json("status", 3)).unwrap(),
+            Request::Status { job: 3 }
+        );
+        assert_eq!(
+            parse_request(&job_request_json("result", 0)).unwrap(),
+            Request::Result { job: 0 }
+        );
+        assert_eq!(
+            parse_request(&bare_request_json("stats")).unwrap(),
+            Request::Stats
+        );
+        assert_eq!(
+            parse_request(&bare_request_json("shutdown")).unwrap(),
+            Request::Shutdown
+        );
+    }
+
+    #[test]
+    fn unknown_cmds_and_keys_rejected_by_name() {
+        let e = parse_request("{\"cmd\": \"frobnicate\"}")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown cmd 'frobnicate'"), "{e}");
+        let e = parse_request("{\"cmd\": \"submit\", \"sede\": 1}")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown key 'sede'"), "{e}");
+        let e = parse_request("{\"cmd\": \"stats\", \"job\": 1}")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown key 'job'"), "{e}");
+        // missing / mistyped required fields
+        assert!(parse_request("{\"cmd\": \"status\"}")
+            .unwrap_err()
+            .to_string()
+            .contains("'job' is required"));
+        assert!(parse_request("{\"cmd\": \"status\", \"job\": -1}")
+            .unwrap_err()
+            .to_string()
+            .contains("non-negative integer"));
+        assert!(parse_request("[1]").unwrap_err().to_string().contains(
+            "JSON object"
+        ));
+        // malformed JSON surfaces the reader's byte-offset errors
+        assert!(parse_request("{\"cmd\": ")
+            .unwrap_err()
+            .to_string()
+            .contains("byte"));
+    }
+
+    #[test]
+    fn compact_json_is_string_aware() {
+        let doc = "{\n  \"a\": \"ke\\\"ep\",\n  \"b\": [1,\n    2]\n}\n";
+        assert_eq!(compact_json(doc), "{\"a\": \"ke\\\"ep\", \"b\": [1,2]}");
+        // a \n *escape* inside a string is content, not layout
+        let doc = "{\n  \"s\": \"line\\u000abreak\"\n}";
+        assert_eq!(compact_json(doc), "{\"s\": \"line\\u000abreak\"}");
+    }
+
+    #[test]
+    fn responses_are_single_line_and_parse_back() {
+        let view = JobView {
+            id: 2,
+            state: "done",
+            name: "fig3".into(),
+            fingerprint: 0xabc,
+            cached: true,
+            coalesced: false,
+            digest: Some(0x1234),
+            payload: Some(Arc::new("{\"scenario\": \"fig3\"}".into())),
+            error: None,
+        };
+        for line in [
+            submit_response(&view),
+            status_response(&view),
+            result_response(&view),
+            err_response("bad \"spec\""),
+            stats_response(&StatsView::default()),
+        ] {
+            assert!(!line.contains('\n'), "{line}");
+            let v = JsonValue::parse(&line).unwrap();
+            assert!(v.get("ok").is_some(), "{line}");
+        }
+        let v = JsonValue::parse(&result_response(&view)).unwrap();
+        assert_eq!(v.get("digest").unwrap().as_str(), Some("0000000000001234"));
+        assert_eq!(
+            v.get("result").unwrap().get("scenario").unwrap().as_str(),
+            Some("fig3")
+        );
+        // result on an unfinished job is a clean error, not a panic
+        let queued = JobView {
+            state: "queued",
+            digest: None,
+            payload: None,
+            ..view
+        };
+        let v = JsonValue::parse(&result_response(&queued)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    }
+}

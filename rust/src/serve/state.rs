@@ -1,0 +1,619 @@
+//! Shared daemon state: the job registry, the tier-A report cache, the
+//! admission queue's sending half, and the service metrics.
+//!
+//! Cache keying (DESIGN.md §9): a submission's **request fingerprint**
+//! is the spec's content-addressed fingerprint
+//! ([`crate::exp::ScenarioSpec::fingerprint`] /
+//! [`crate::opt::PlanSpec::fingerprint`] — layout-invariant, seed- and
+//! replicate-exempt) extended with the *effective* seed and replicate
+//! count after CLI-style overrides. Tier A maps request fingerprints to
+//! finished single-line reports; tier B is the process-wide
+//! [`PrepareCache`] shared by every sweep and planner execution.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::toml::Doc;
+use crate::exp::spec::{CachedSpecScenario, PrepareCache};
+use crate::exp::{presets, ScenarioSpec, SpecScenario};
+use crate::opt::{self, PlanSpec, PlannerConfig};
+use crate::sweep::{run_sweep_batched, SweepConfig};
+use crate::util::fnv::Fnv;
+
+use super::protocol::{compact_json, JobView, StatsView, SubmitReq};
+
+/// Lifecycle of one submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// One submission's registry entry. `payload` is the finished
+/// single-line report, shared (`Arc`) with the tier-A cache.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: u64,
+    pub name: String,
+    pub fingerprint: u64,
+    pub state: JobState,
+    pub cached: bool,
+    pub digest: Option<u64>,
+    pub payload: Option<Arc<String>>,
+    pub error: Option<String>,
+}
+
+impl JobRecord {
+    pub fn view(&self, coalesced: bool) -> JobView {
+        JobView {
+            id: self.id,
+            state: self.state.name(),
+            name: self.name.clone(),
+            fingerprint: self.fingerprint,
+            cached: self.cached,
+            coalesced,
+            digest: self.digest,
+            payload: self.payload.clone(),
+            error: self.error.clone(),
+        }
+    }
+}
+
+/// A finished report in the tier-A cache.
+#[derive(Clone, Debug)]
+struct TierAEntry {
+    payload: Arc<String>,
+    digest: u64,
+    name: String,
+}
+
+/// One unit of admitted work, executed FIFO by the single executor
+/// thread (the admission queue *is* the `mpsc` channel: submissions are
+/// served in arrival order, and every execution runs on the one shared
+/// sweep pool at the daemon's `--threads`).
+pub enum WorkItem {
+    Sweep { id: u64, spec: ScenarioSpec, cfg: SweepConfig },
+    Optimize { id: u64, plan: Box<PlanSpec>, seed: u64 },
+}
+
+impl WorkItem {
+    fn id(&self) -> u64 {
+        match self {
+            WorkItem::Sweep { id, .. } | WorkItem::Optimize { id, .. } => *id,
+        }
+    }
+}
+
+/// First-class service metrics, all monotonic counters (wall-clock
+/// only ever feeds *metrics*, never results — digests stay pure).
+#[derive(Debug)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub submits: AtomicU64,
+    pub tier_a_hits: AtomicU64,
+    pub tier_a_misses: AtomicU64,
+    pub coalesced: AtomicU64,
+    pub jobs_done: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    /// replicate jobs executed on the shared pool (sweep replicates +
+    /// planner rung simulations) — frozen across a tier-A hit, which is
+    /// what the CI warm-hit smoke asserts
+    pub pool_jobs: AtomicU64,
+    pub exec_micros: AtomicU64,
+}
+
+/// The state shared by the accept loop, every connection handler and
+/// the executor thread.
+pub struct ServerState {
+    pub threads: usize,
+    pub started: Instant,
+    pub jobs: Mutex<Vec<JobRecord>>,
+    tier_a: Mutex<HashMap<u64, TierAEntry>>,
+    pub prepare_cache: PrepareCache,
+    pub metrics: Metrics,
+    /// sending half of the admission queue; `None` once draining —
+    /// dropping it is what lets the executor finish the queue and exit
+    tx: Mutex<Option<Sender<WorkItem>>>,
+    pub shutdown: AtomicBool,
+}
+
+/// Acknowledgement for a submit: the job's view plus whether this
+/// submission coalesced onto an already-admitted identical job.
+pub struct SubmitAck {
+    pub view: JobView,
+}
+
+impl ServerState {
+    pub fn new(threads: usize) -> (Arc<ServerState>, Receiver<WorkItem>) {
+        let (tx, rx) = mpsc::channel();
+        let state = Arc::new(ServerState {
+            threads,
+            started: Instant::now(),
+            jobs: Mutex::new(Vec::new()),
+            tier_a: Mutex::new(HashMap::new()),
+            prepare_cache: PrepareCache::new(),
+            metrics: Metrics {
+                requests: AtomicU64::new(0),
+                submits: AtomicU64::new(0),
+                tier_a_hits: AtomicU64::new(0),
+                tier_a_misses: AtomicU64::new(0),
+                coalesced: AtomicU64::new(0),
+                jobs_done: AtomicU64::new(0),
+                jobs_failed: AtomicU64::new(0),
+                pool_jobs: AtomicU64::new(0),
+                exec_micros: AtomicU64::new(0),
+            },
+            tx: Mutex::new(Some(tx)),
+            shutdown: AtomicBool::new(false),
+        });
+        (state, rx)
+    }
+
+    /// Stop admitting: drop the queue's sender so the executor drains
+    /// what is already admitted and exits.
+    pub fn close_queue(&self) {
+        *self.tx.lock().unwrap() = None;
+    }
+
+    pub fn job_view(&self, id: u64) -> Result<JobView> {
+        let jobs = self.jobs.lock().unwrap();
+        match jobs.get(id as usize) {
+            Some(rec) => Ok(rec.view(false)),
+            None => bail!(
+                "unknown job {id} ({} submitted so far)",
+                jobs.len()
+            ),
+        }
+    }
+
+    pub fn stats_view(&self) -> StatsView {
+        let m = &self.metrics;
+        let queue_depth = self
+            .jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|j| j.state == JobState::Queued)
+            .count() as u64;
+        StatsView {
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            requests: m.requests.load(Ordering::Relaxed),
+            submits: m.submits.load(Ordering::Relaxed),
+            tier_a_hits: m.tier_a_hits.load(Ordering::Relaxed),
+            tier_a_misses: m.tier_a_misses.load(Ordering::Relaxed),
+            tier_a_entries: self.tier_a.lock().unwrap().len() as u64,
+            tier_b_hits: self.prepare_cache.hits(),
+            tier_b_misses: self.prepare_cache.misses(),
+            tier_b_entries: self.prepare_cache.len() as u64,
+            coalesced: m.coalesced.load(Ordering::Relaxed),
+            queue_depth,
+            jobs_done: m.jobs_done.load(Ordering::Relaxed),
+            jobs_failed: m.jobs_failed.load(Ordering::Relaxed),
+            pool_jobs: m.pool_jobs.load(Ordering::Relaxed),
+            exec_seconds: m.exec_micros.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+
+    /// Validate, fingerprint and admit one submission. Tier-A hits are
+    /// answered synchronously (a new `done` record pointing at the
+    /// cached report, zero recomputation); identical in-flight work is
+    /// coalesced (the twin's job id comes back); everything else is
+    /// queued.
+    pub fn submit(&self, req: SubmitReq) -> Result<SubmitAck> {
+        self.metrics.submits.fetch_add(1, Ordering::Relaxed);
+        let (name, fingerprint, item_for) = build_work(self.threads, req)?;
+
+        let mut jobs = self.jobs.lock().unwrap();
+        // tier A: the finished report is already content-addressed
+        if let Some(entry) = self.tier_a.lock().unwrap().get(&fingerprint) {
+            self.metrics.tier_a_hits.fetch_add(1, Ordering::Relaxed);
+            let id = jobs.len() as u64;
+            let rec = JobRecord {
+                id,
+                name: entry.name.clone(),
+                fingerprint,
+                state: JobState::Done,
+                cached: true,
+                digest: Some(entry.digest),
+                payload: Some(Arc::clone(&entry.payload)),
+                error: None,
+            };
+            let view = rec.view(false);
+            jobs.push(rec);
+            return Ok(SubmitAck { view });
+        }
+        self.metrics.tier_a_misses.fetch_add(1, Ordering::Relaxed);
+
+        // coalesce onto an identical queued/running submission instead
+        // of admitting duplicate work
+        if let Some(twin) = jobs.iter().find(|j| {
+            j.fingerprint == fingerprint
+                && matches!(j.state, JobState::Queued | JobState::Running)
+        }) {
+            self.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+            return Ok(SubmitAck { view: twin.view(true) });
+        }
+
+        let id = jobs.len() as u64;
+        let rec = JobRecord {
+            id,
+            name,
+            fingerprint,
+            state: JobState::Queued,
+            cached: false,
+            digest: None,
+            payload: None,
+            error: None,
+        };
+        let view = rec.view(false);
+        jobs.push(rec);
+        drop(jobs);
+
+        let sent = match self.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.send(item_for(id)).is_ok(),
+            None => false,
+        };
+        if !sent {
+            let mut jobs = self.jobs.lock().unwrap();
+            jobs[id as usize].state = JobState::Failed;
+            jobs[id as usize].error =
+                Some("server is draining; submission rejected".into());
+            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            bail!("server is draining; submission rejected");
+        }
+        Ok(SubmitAck { view })
+    }
+}
+
+fn sweep_request_fingerprint(
+    spec: &ScenarioSpec,
+    seed: u64,
+    replicates: u64,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(b"serve-req/sweep/v1");
+    h.u64(spec.fingerprint());
+    h.u64(seed);
+    h.u64(replicates);
+    h.finish()
+}
+
+fn optimize_request_fingerprint(plan: &PlanSpec, seed: u64) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(b"serve-req/optimize/v1");
+    h.u64(plan.fingerprint());
+    h.u64(seed);
+    h.finish()
+}
+
+/// Resolve a preset name to its embedded TOML: the seven sweep presets
+/// plus the shipped planner preset.
+pub fn preset_text(name: &str) -> Result<&'static str> {
+    if name == "optimize_deadline" {
+        return Ok(opt::preset_toml());
+    }
+    presets::preset_toml(name).map_err(|e| {
+        anyhow::anyhow!("{e}; the planner preset is optimize_deadline")
+    })
+}
+
+type ItemFor = Box<dyn FnOnce(u64) -> WorkItem>;
+
+/// Resolve, validate (the same machinery `--check` runs) and
+/// fingerprint one submission, deferring only the job id. The spec
+/// defaults and CLI-flag precedence mirror `cmd_sweep` / `cmd_optimize`
+/// exactly — that equivalence is what makes a daemon digest comparable
+/// to an offline run.
+fn build_work(
+    threads: usize,
+    req: SubmitReq,
+) -> Result<(String, u64, ItemFor)> {
+    let text: String = match (&req.preset, &req.spec_toml) {
+        (Some(_), Some(_)) => {
+            bail!("give either 'preset' or 'spec_toml', not both")
+        }
+        (Some(p), None) => preset_text(p)?.to_string(),
+        (None, Some(t)) => t.clone(),
+        (None, None) => bail!("submit needs 'preset' or 'spec_toml'"),
+    };
+    let doc = Doc::parse(&text)?;
+    let is_plan = doc
+        .entries
+        .keys()
+        .any(|k| k == "objective" || k.starts_with("objective."));
+    let optimize = match req.kind.as_deref() {
+        None => is_plan,
+        Some("sweep") => {
+            ensure!(
+                !is_plan,
+                "spec has an [objective] table; submit it with kind = \
+                 \"optimize\""
+            );
+            false
+        }
+        Some("optimize") => {
+            ensure!(
+                is_plan,
+                "kind \"optimize\" needs a spec with an [objective] table"
+            );
+            true
+        }
+        Some(other) => {
+            bail!("kind must be \"sweep\" or \"optimize\", got '{other}'")
+        }
+    };
+
+    if optimize {
+        ensure!(
+            req.replicates.is_none(),
+            "the [search] ladder governs planner evidence; 'replicates' \
+             is not accepted for optimize submissions"
+        );
+        ensure!(
+            req.j.is_none(),
+            "set job.j in the plan spec; 'j' is not accepted for optimize \
+             submissions"
+        );
+        let plan = PlanSpec::from_str(&text)?;
+        let seed = req.seed.or(plan.scenario.seed).unwrap_or(2020);
+        // --check-grade validation before admission
+        opt::build_scenario(&plan).context("validating plan spec")?;
+        let fingerprint = optimize_request_fingerprint(&plan, seed);
+        let name = plan.scenario.name.clone();
+        let plan = Box::new(plan);
+        Ok((
+            name,
+            fingerprint,
+            Box::new(move |id| WorkItem::Optimize { id, plan, seed }),
+        ))
+    } else {
+        let mut spec = ScenarioSpec::from_str(&text)?;
+        if let Some(j) = req.j {
+            ensure!(j > 0, "'j' must be > 0");
+            spec.job.j = j;
+        }
+        let replicates = req.replicates.or(spec.replicates).unwrap_or(8);
+        ensure!(replicates > 0, "'replicates' must be > 0");
+        let seed = req.seed.or(spec.seed).unwrap_or(2020);
+        // --check-grade validation before admission
+        SpecScenario::new(spec.clone()).context("validating spec")?;
+        let fingerprint = sweep_request_fingerprint(&spec, seed, replicates);
+        let name = spec.name.clone();
+        let cfg = SweepConfig { replicates, seed, threads };
+        Ok((
+            name,
+            fingerprint,
+            Box::new(move |id| WorkItem::Sweep { id, spec, cfg }),
+        ))
+    }
+}
+
+/// The executor thread: drains the admission queue FIFO until every
+/// sender is gone (drain = `close_queue` + queue empty), publishing
+/// each finished report to the registry and the tier-A cache.
+pub fn executor_loop(state: &Arc<ServerState>, rx: Receiver<WorkItem>) {
+    while let Ok(item) = rx.recv() {
+        let id = item.id();
+        state.jobs.lock().unwrap()[id as usize].state = JobState::Running;
+        let t0 = Instant::now();
+        let outcome = match item {
+            WorkItem::Sweep { spec, cfg, .. } => exec_sweep(state, spec, &cfg),
+            WorkItem::Optimize { plan, seed, .. } => {
+                exec_optimize(state, &plan, seed)
+            }
+        };
+        state
+            .metrics
+            .exec_micros
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        match outcome {
+            Ok((payload, digest)) => {
+                let (fp, name) = {
+                    let mut jobs = state.jobs.lock().unwrap();
+                    let rec = &mut jobs[id as usize];
+                    rec.state = JobState::Done;
+                    rec.digest = Some(digest);
+                    rec.payload = Some(Arc::clone(&payload));
+                    (rec.fingerprint, rec.name.clone())
+                };
+                state.metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                state
+                    .tier_a
+                    .lock()
+                    .unwrap()
+                    .insert(fp, TierAEntry { payload, digest, name });
+            }
+            Err(e) => {
+                let mut jobs = state.jobs.lock().unwrap();
+                let rec = &mut jobs[id as usize];
+                rec.state = JobState::Failed;
+                rec.error = Some(format!("{e:#}"));
+                state.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn exec_sweep(
+    state: &ServerState,
+    spec: ScenarioSpec,
+    cfg: &SweepConfig,
+) -> Result<(Arc<String>, u64)> {
+    let scenario = SpecScenario::new(spec)?;
+    let name = scenario.spec().name.clone();
+    let warm = CachedSpecScenario::new(&scenario, &state.prepare_cache);
+    let results = run_sweep_batched(&warm, cfg)?;
+    state
+        .metrics
+        .pool_jobs
+        .fetch_add(results.throughput.jobs, Ordering::Relaxed);
+    let digest = results.digest();
+    let payload = Arc::new(compact_json(&results.to_json(&name, cfg)));
+    Ok((payload, digest))
+}
+
+fn exec_optimize(
+    state: &ServerState,
+    plan: &PlanSpec,
+    seed: u64,
+) -> Result<(Arc<String>, u64)> {
+    let cfg = PlannerConfig { seed, threads: state.threads };
+    let outcome = opt::run_plan_cached(plan, &cfg, &state.prepare_cache)?;
+    let sims: u64 = outcome
+        .rungs
+        .iter()
+        .map(|r| r.replicates * r.members.len() as u64)
+        .sum();
+    state.metrics.pool_jobs.fetch_add(sims, Ordering::Relaxed);
+    let digest = outcome.digest();
+    let payload =
+        Arc::new(compact_json(&opt::report::to_json(&outcome, state.threads)));
+    Ok((payload, digest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+name = "serve-state"
+strategies = ["static_workers"]
+metrics = ["cost", "recip_exact"]
+
+[job]
+n = 4
+j = 50
+preempt_q = 0.3
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+"#;
+
+    fn drain(state: &Arc<ServerState>, rx: Receiver<WorkItem>) {
+        state.close_queue();
+        executor_loop(state, rx);
+    }
+
+    #[test]
+    fn submit_executes_and_second_submission_hits_tier_a() {
+        let (state, rx) = ServerState::new(1);
+        let req = SubmitReq {
+            spec_toml: Some(SPEC.into()),
+            seed: Some(11),
+            replicates: Some(3),
+            ..Default::default()
+        };
+        let ack = state.submit(req.clone()).unwrap();
+        assert_eq!(ack.view.state, "queued");
+        drain(&state, rx);
+        let done = state.job_view(ack.view.id).unwrap();
+        assert_eq!(done.state, "done");
+        let digest = done.digest.unwrap();
+        let pool_before = state.stats_view().pool_jobs;
+        assert_eq!(pool_before, 3); // one point x 3 replicates
+
+        // warm repeat: answered from tier A, no work admitted
+        let warm = state.submit(req).unwrap();
+        assert_eq!(warm.view.state, "done");
+        assert!(warm.view.cached);
+        assert_eq!(warm.view.digest, Some(digest));
+        let s = state.stats_view();
+        assert_eq!(s.tier_a_hits, 1);
+        assert_eq!(s.pool_jobs, pool_before);
+        assert_eq!(s.jobs_done, 1);
+    }
+
+    #[test]
+    fn effective_seed_and_replicates_key_the_request() {
+        let (state, _rx) = ServerState::new(1);
+        let base = SubmitReq {
+            spec_toml: Some(SPEC.into()),
+            seed: Some(11),
+            replicates: Some(3),
+            ..Default::default()
+        };
+        let a = state.submit(base.clone()).unwrap();
+        let b = state
+            .submit(SubmitReq { seed: Some(12), ..base.clone() })
+            .unwrap();
+        let c = state
+            .submit(SubmitReq { replicates: Some(4), ..base.clone() })
+            .unwrap();
+        assert_ne!(a.view.fingerprint, b.view.fingerprint);
+        assert_ne!(a.view.fingerprint, c.view.fingerprint);
+        // identical effective work coalesces onto the in-flight twin
+        let twin = state.submit(base).unwrap();
+        assert!(twin.view.coalesced);
+        assert_eq!(twin.view.id, a.view.id);
+        assert_eq!(state.stats_view().coalesced, 1);
+    }
+
+    #[test]
+    fn invalid_submissions_fail_before_admission() {
+        let (state, _rx) = ServerState::new(1);
+        // unknown preset
+        let e = state
+            .submit(SubmitReq {
+                preset: Some("fig9".into()),
+                ..Default::default()
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown preset"), "{e}");
+        // bad spec body: the --check machinery rejects it by key name
+        let e = state
+            .submit(SubmitReq {
+                spec_toml: Some(SPEC.replace("[job]", "[job]\nepss = 1")),
+                ..Default::default()
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("job.epss"), "{e}");
+        // neither body nor preset
+        assert!(state
+            .submit(SubmitReq::default())
+            .unwrap_err()
+            .to_string()
+            .contains("'preset' or 'spec_toml'"));
+        // nothing was admitted or executed
+        let s = state.stats_view();
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.jobs_done + s.jobs_failed, 0);
+    }
+
+    #[test]
+    fn draining_rejects_new_submissions() {
+        let (state, rx) = ServerState::new(1);
+        drain(&state, rx);
+        let e = state
+            .submit(SubmitReq {
+                spec_toml: Some(SPEC.into()),
+                ..Default::default()
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("draining"), "{e}");
+    }
+}

@@ -37,6 +37,32 @@ impl Fnv {
         self.bytes(&x.to_bits().to_le_bytes());
     }
 
+    /// Hash a string unambiguously: length prefix, then bytes. Without
+    /// the prefix, ("ab","c") and ("a","bc") would collide when hashed
+    /// back to back — content-addressed cache keys (`exp::spec`
+    /// fingerprints, `serve`) depend on this framing.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    /// Hash an optional float with a presence tag, so `None` followed
+    /// by `x` cannot alias `Some(y)` for any `y`.
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            None => self.u64(0),
+            Some(x) => {
+                self.u64(1);
+                self.f64(x);
+            }
+        }
+    }
+
+    /// Hash a bool as a full tag byte sequence (via `u64`).
+    pub fn bool(&mut self, b: bool) {
+        self.u64(b as u64);
+    }
+
     pub fn finish(&self) -> u64 {
         self.0
     }
@@ -73,5 +99,25 @@ mod tests {
         let mut m = Fnv::new();
         m.f64(-0.0);
         assert_ne!(p.finish(), m.finish());
+    }
+
+    #[test]
+    fn str_and_option_framing_is_unambiguous() {
+        // length prefix: ("ab","c") must not alias ("a","bc")
+        let mut a = Fnv::new();
+        a.str("ab");
+        a.str("c");
+        let mut b = Fnv::new();
+        b.str("a");
+        b.str("bc");
+        assert_ne!(a.finish(), b.finish());
+        // presence tag: None then 1.0 must not alias Some(1.0)
+        let mut n = Fnv::new();
+        n.opt_f64(None);
+        n.f64(1.0);
+        let mut s = Fnv::new();
+        s.opt_f64(Some(1.0));
+        s.f64(1.0);
+        assert_ne!(n.finish(), s.finish());
     }
 }

@@ -1,8 +1,20 @@
-//! The repo's one hand-rolled JSON emission convention (the build is
-//! offline and dependency-free): string escaping per RFC 8259 minimal
-//! rules, and numbers with non-finite values serialised as `null`.
+//! The repo's one hand-rolled JSON convention (the build is offline
+//! and dependency-free).
+//!
+//! *Emission*: string escaping per RFC 8259 minimal rules ([`esc`]),
+//! and numbers with non-finite values serialised as `null` ([`num`]).
 //! Shared by `sweep::SweepResults::to_json` and the planner report
 //! (`opt::report`) so the convention cannot drift between emitters.
+//!
+//! *Reading*: a strict recursive-descent parser ([`JsonValue::parse`])
+//! for the serve wire protocol (`crate::serve`). Strictness is the
+//! point — this parses requests from arbitrary clients, so every
+//! deviation is a named error with a byte offset: truncated input,
+//! bad escapes, control characters inside strings, leading zeros,
+//! trailing junk, and duplicate object keys (rejected by name, the
+//! same contract `config::toml::TrackedDoc` enforces for specs).
+
+use anyhow::{bail, ensure, Result};
 
 /// Escape a string for embedding inside JSON double quotes: `"`, `\`,
 /// and control characters below 0x20 (as `\u00XX`).
@@ -31,6 +43,382 @@ pub fn num(v: f64) -> String {
     }
 }
 
+/// A parsed JSON value. Objects preserve insertion order (a `Vec` of
+/// pairs, not a map) so responses can be rendered back deterministically
+/// and duplicate keys can be rejected at parse time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Parse exactly one JSON value from `text`. Anything after the
+    /// value other than whitespace is an error ("trailing data").
+    pub fn parse(text: &str) -> Result<JsonValue> {
+        let mut p = Parser { src: text, pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        ensure!(
+            p.pos == p.src.len(),
+            "json: trailing data at byte {}",
+            p.pos
+        );
+        Ok(v)
+    }
+
+    /// Object field lookup (first match; duplicates cannot exist in a
+    /// parsed value). `None` for missing keys and for non-objects.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Integer view of a number: exact (no fractional part) and inside
+    /// the f64-safe range `0 ..= 2^53`.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(v)
+                if v.fract() == 0.0
+                    && *v >= 0.0
+                    && *v <= 9_007_199_254_740_992.0 =>
+            {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, JsonValue::Null)
+    }
+}
+
+/// Nesting depth cap: the wire protocol never nests past ~3 levels, so
+/// 64 is pure paranoia against stack-smashing inputs like `[[[[...`.
+const MAX_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    src: &'a str,
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn bytes(&self) -> &[u8] {
+        self.src.as_bytes()
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes().get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        match self.peek() {
+            Some(c) if c == b => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(c) => bail!(
+                "json: expected '{}' at byte {}, found '{}'",
+                b as char,
+                self.pos,
+                c as char
+            ),
+            None => bail!(
+                "json: expected '{}' at byte {}, found end of input",
+                b as char,
+                self.pos
+            ),
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue> {
+        ensure!(
+            depth < MAX_DEPTH,
+            "json: nesting deeper than {MAX_DEPTH} at byte {}",
+            self.pos
+        );
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(b'-' | b'0'..=b'9') => Ok(JsonValue::Num(self.number()?)),
+            Some(c) => bail!(
+                "json: unexpected '{}' at byte {}",
+                c as char,
+                self.pos
+            ),
+            None => bail!("json: unexpected end of input at byte {}", self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue> {
+        if self.src[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("json: invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut fields: Vec<(String, JsonValue)> = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key_at = self.pos;
+            ensure!(
+                self.peek() == Some(b'"'),
+                "json: expected object key at byte {}",
+                self.pos
+            );
+            let key = self.string()?;
+            ensure!(
+                !fields.iter().any(|(k, _)| *k == key),
+                "json: duplicate key '{key}' at byte {key_at}"
+            );
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value(depth + 1)?;
+            fields.push((key, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(fields));
+                }
+                _ => bail!(
+                    "json: expected ',' or '}}' at byte {}",
+                    self.pos
+                ),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                _ => bail!(
+                    "json: expected ',' or ']' at byte {}",
+                    self.pos
+                ),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // raw run up to the next quote, escape, or control byte
+            while let Some(c) = self.peek() {
+                if c == b'"' || c == b'\\' || c < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(&self.src[start..self.pos]);
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    out.push(self.escape()?);
+                }
+                Some(_) => bail!(
+                    "json: unescaped control character at byte {}",
+                    self.pos
+                ),
+                None => bail!(
+                    "json: unterminated string at byte {}",
+                    self.pos
+                ),
+            }
+        }
+    }
+
+    fn escape(&mut self) -> Result<char> {
+        let at = self.pos - 1;
+        let c = match self.peek() {
+            Some(c) => c,
+            None => bail!("json: truncated escape at byte {at}"),
+        };
+        self.pos += 1;
+        Ok(match c {
+            b'"' => '"',
+            b'\\' => '\\',
+            b'/' => '/',
+            b'b' => '\u{0008}',
+            b'f' => '\u{000c}',
+            b'n' => '\n',
+            b'r' => '\r',
+            b't' => '\t',
+            b'u' => {
+                let hi = self.hex4(at)?;
+                if (0xd800..0xdc00).contains(&hi) {
+                    // high surrogate: a \uDC00-\uDFFF pair must follow
+                    ensure!(
+                        self.peek() == Some(b'\\'),
+                        "json: unpaired surrogate \\u{hi:04x} at byte {at}"
+                    );
+                    self.pos += 1;
+                    ensure!(
+                        self.peek() == Some(b'u'),
+                        "json: unpaired surrogate \\u{hi:04x} at byte {at}"
+                    );
+                    self.pos += 1;
+                    let lo = self.hex4(at)?;
+                    ensure!(
+                        (0xdc00..0xe000).contains(&lo),
+                        "json: invalid low surrogate \\u{lo:04x} at byte {at}"
+                    );
+                    let cp = 0x10000
+                        + ((hi - 0xd800) << 10)
+                        + (lo - 0xdc00);
+                    char::from_u32(cp).expect("surrogate pair arithmetic")
+                } else if (0xdc00..0xe000).contains(&hi) {
+                    bail!("json: stray low surrogate \\u{hi:04x} at byte {at}")
+                } else {
+                    char::from_u32(hi).expect("BMP non-surrogate")
+                }
+            }
+            _ => bail!(
+                "json: invalid escape '\\{}' at byte {at}",
+                c as char
+            ),
+        })
+    }
+
+    fn hex4(&mut self, at: usize) -> Result<u32> {
+        let mut v: u32 = 0;
+        for _ in 0..4 {
+            let d = match self.peek() {
+                Some(c @ b'0'..=b'9') => (c - b'0') as u32,
+                Some(c @ b'a'..=b'f') => (c - b'a' + 10) as u32,
+                Some(c @ b'A'..=b'F') => (c - b'A' + 10) as u32,
+                _ => bail!("json: bad \\u escape at byte {at}"),
+            };
+            self.pos += 1;
+            v = (v << 4) | d;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // integer part: 0 | [1-9][0-9]*  (leading zeros rejected)
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(b'0'..=b'9')) {
+                    bail!("json: leading zero at byte {start}");
+                }
+            }
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => bail!("json: invalid number at byte {start}"),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            ensure!(
+                matches!(self.peek(), Some(b'0'..=b'9')),
+                "json: digit required after '.' at byte {}",
+                self.pos
+            );
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            ensure!(
+                matches!(self.peek(), Some(b'0'..=b'9')),
+                "json: digit required in exponent at byte {}",
+                self.pos
+            );
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        self.src[start..self.pos]
+            .parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("json: bad number at byte {start}: {e}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -51,5 +439,120 @@ mod tests {
         assert_eq!(num(f64::NAN), "null");
         assert_eq!(num(f64::INFINITY), "null");
         assert_eq!(num(f64::NEG_INFINITY), "null");
+    }
+
+    // ---- reader ----
+
+    fn parse_err(text: &str) -> String {
+        JsonValue::parse(text).unwrap_err().to_string()
+    }
+
+    #[test]
+    fn parses_scalars_arrays_and_objects() {
+        assert_eq!(JsonValue::parse("null").unwrap(), JsonValue::Null);
+        assert_eq!(
+            JsonValue::parse(" true ").unwrap(),
+            JsonValue::Bool(true)
+        );
+        assert_eq!(
+            JsonValue::parse("-12.5e2").unwrap(),
+            JsonValue::Num(-1250.0)
+        );
+        assert_eq!(
+            JsonValue::parse("\"a b\"").unwrap(),
+            JsonValue::Str("a b".into())
+        );
+        let v = JsonValue::parse(
+            "{\"cmd\": \"submit\", \"seed\": 7, \"flags\": [1, 2], \"x\": null}",
+        )
+        .unwrap();
+        assert_eq!(v.get("cmd").unwrap().as_str(), Some("submit"));
+        assert_eq!(v.get("seed").unwrap().as_u64(), Some(7));
+        assert!(v.get("x").unwrap().is_null());
+        assert_eq!(
+            v.get("flags").unwrap(),
+            &JsonValue::Arr(vec![JsonValue::Num(1.0), JsonValue::Num(2.0)])
+        );
+        assert!(v.get("missing").is_none());
+        // empty containers
+        assert_eq!(JsonValue::parse("[]").unwrap(), JsonValue::Arr(vec![]));
+        assert_eq!(JsonValue::parse("{}").unwrap(), JsonValue::Obj(vec![]));
+    }
+
+    #[test]
+    fn string_escapes_round_trip_through_esc() {
+        // everything esc() emits must come back bit-identical
+        for s in ["a\"b", "a\\b", "a\nb", "a\tb", "nested {\"k\": 1}"] {
+            let wire = format!("\"{}\"", esc(s));
+            assert_eq!(
+                JsonValue::parse(&wire).unwrap(),
+                JsonValue::Str(s.to_string())
+            );
+        }
+        // \u escapes, including a surrogate pair (U+1F600)
+        assert_eq!(
+            JsonValue::parse("\"\\u0041\\uD83D\\uDE00\"").unwrap(),
+            JsonValue::Str("A\u{1F600}".into())
+        );
+    }
+
+    #[test]
+    fn truncated_inputs_are_named_errors_with_offsets() {
+        assert!(parse_err("").contains("end of input"));
+        assert!(parse_err("{\"a\": ").contains("end of input"));
+        assert!(parse_err("[1, 2").contains("at byte 5"));
+        assert!(parse_err("\"abc").contains("unterminated string"));
+        assert!(parse_err("tru").contains("invalid literal"));
+        assert!(parse_err("{\"a\" 1}").contains("expected ':'"));
+    }
+
+    #[test]
+    fn bad_escapes_and_controls_rejected() {
+        assert!(parse_err("\"\\x\"").contains("invalid escape"));
+        assert!(parse_err("\"\\u12\"").contains("bad \\u escape"));
+        assert!(parse_err("\"\\uD83D\"").contains("unpaired surrogate"));
+        assert!(parse_err("\"\\uDE00\"").contains("stray low surrogate"));
+        assert!(
+            parse_err("\"\\uD83D\\u0041\"").contains("invalid low surrogate")
+        );
+        assert!(parse_err("\"a\nb\"").contains("unescaped control"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected_by_name() {
+        let e = parse_err("{\"seed\": 1, \"seed\": 2}");
+        assert!(e.contains("duplicate key 'seed'"), "{e}");
+        // nested objects get their own duplicate check
+        let e = parse_err("{\"a\": {\"k\": 1, \"k\": 1}}");
+        assert!(e.contains("duplicate key 'k'"), "{e}");
+    }
+
+    #[test]
+    fn strict_number_grammar() {
+        assert!(parse_err("01").contains("leading zero"));
+        assert!(parse_err("1.").contains("digit required after '.'"));
+        assert!(parse_err("1e").contains("digit required in exponent"));
+        assert!(parse_err("-").contains("invalid number"));
+        assert!(parse_err("+1").contains("unexpected '+'"));
+        // valid edge forms
+        assert_eq!(JsonValue::parse("0").unwrap(), JsonValue::Num(0.0));
+        assert_eq!(JsonValue::parse("-0.5").unwrap(), JsonValue::Num(-0.5));
+        assert_eq!(JsonValue::parse("2E+1").unwrap(), JsonValue::Num(20.0));
+    }
+
+    #[test]
+    fn trailing_junk_and_deep_nesting_rejected() {
+        assert!(parse_err("1 2").contains("trailing data"));
+        assert!(parse_err("{} x").contains("trailing data"));
+        let deep = "[".repeat(80) + &"]".repeat(80);
+        assert!(parse_err(&deep).contains("nesting deeper"));
+    }
+
+    #[test]
+    fn as_u64_is_exact_integer_only() {
+        assert_eq!(JsonValue::parse("7").unwrap().as_u64(), Some(7));
+        assert_eq!(JsonValue::parse("7.5").unwrap().as_u64(), None);
+        assert_eq!(JsonValue::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(JsonValue::parse("1e3").unwrap().as_u64(), Some(1000));
     }
 }

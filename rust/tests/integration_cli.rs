@@ -226,6 +226,38 @@ fn help_mentions_sweep() {
 }
 
 #[test]
+fn help_mentions_the_service_subcommands() {
+    let out = run_ok(&["help"]);
+    for cmd in ["serve", "submit", "status", "stats", "shutdown"] {
+        assert!(out.contains(cmd), "help missing {cmd}:\n{out}");
+    }
+}
+
+/// `serve --check` validates the listener address and every shipped
+/// preset without binding a socket or running a replicate.
+#[test]
+fn serve_check_validates_listener_and_presets() {
+    let out =
+        run_ok(&["serve", "--listen", "127.0.0.1:2020", "--check"]);
+    assert!(out.contains("check OK:"), "{out}");
+    assert!(out.contains("7 sweep presets"), "{out}");
+    assert!(out.contains("1 planner preset"), "{out}");
+    assert!(!out.contains("listening"), "--check must not bind");
+    // a garbage listen address is a clean error, not a bind attempt
+    let bad = bin()
+        .args(["serve", "--listen", "not an address", "--check"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("listen address"),
+        "{}",
+        String::from_utf8_lossy(&bad.stderr)
+    );
+}
+
+#[test]
 fn optimize_check_validates_the_shipped_preset() {
     // --spec omitted: the embedded optimize_deadline preset
     let out = run_ok(&["optimize", "--check"]);

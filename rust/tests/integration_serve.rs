@@ -1,0 +1,307 @@
+//! End-to-end daemon tests: an in-process server on an ephemeral port,
+//! driven through the real TCP client.
+//!
+//! The load-bearing contract is ISSUE-grade determinism: a daemon
+//! result — cold, warm or partially warm — carries the same FNV digest
+//! as the offline CLI run of the same spec and seed, at any thread
+//! count.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use volatile_sgd::exp::{ScenarioSpec, SpecScenario};
+use volatile_sgd::opt::{self, PlanSpec, PlannerConfig};
+use volatile_sgd::serve::client;
+use volatile_sgd::serve::protocol::{
+    bare_request_json, submit_request_json, SubmitReq,
+};
+use volatile_sgd::serve::state::ServerState;
+use volatile_sgd::serve::{DrainReport, ServeConfig, Server};
+use volatile_sgd::sweep::{run_sweep_batched, SweepConfig};
+use volatile_sgd::util::json::JsonValue;
+
+const SPEC: &str = r#"
+name = "serve-e2e"
+strategies = ["static_workers"]
+axes = ["q"]
+metrics = ["cost", "iters", "recip_exact"]
+
+[job]
+n = 4
+j = 40
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[axis.q]
+path = "job.preempt_q"
+values = [0.2, 0.4]
+"#;
+
+/// SPEC with its grid shifted one value: the 0.4 point overlaps.
+const SPEC_SHIFTED: &str = r#"
+name = "serve-e2e"
+strategies = ["static_workers"]
+axes = ["q"]
+metrics = ["cost", "iters", "recip_exact"]
+
+[job]
+n = 4
+j = 40
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[axis.q]
+path = "job.preempt_q"
+values = [0.4, 0.6]
+"#;
+
+const PLAN: &str = r#"
+name = "serve-plan"
+strategies = ["static_workers"]
+axes = ["price"]
+
+[objective]
+goal = "min_cost"
+
+[search]
+ladder = [2]
+min_keep = 1
+
+[job]
+n = 4
+j = 50
+preempt_q = 0.3
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[market]
+kind = "fixed"
+
+[axis.price]
+path = "job.unit_price"
+values = [1.0, 2.0]
+"#;
+
+struct Daemon {
+    addr: String,
+    state: Arc<ServerState>,
+    handle: thread::JoinHandle<DrainReport>,
+}
+
+fn start(threads: usize) -> Daemon {
+    let server = Server::bind(&ServeConfig {
+        listen: "127.0.0.1:0".into(),
+        threads,
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let state = server.state();
+    let handle = thread::spawn(move || server.run().unwrap());
+    Daemon { addr, state, handle }
+}
+
+impl Daemon {
+    /// Submit, wait for completion, return (job id, digest hex).
+    fn submit_and_wait(&self, req: &SubmitReq) -> (u64, String) {
+        let ack = client::roundtrip(&self.addr, &submit_request_json(req))
+            .unwrap();
+        let job = ack.get("job").and_then(JsonValue::as_u64).unwrap();
+        let (result, _) =
+            client::wait_result(&self.addr, job, Duration::from_secs(120))
+                .unwrap();
+        let digest = result
+            .get("digest")
+            .and_then(JsonValue::as_str)
+            .expect("result digest")
+            .to_string();
+        (job, digest)
+    }
+
+    fn stats(&self) -> JsonValue {
+        client::roundtrip(&self.addr, &bare_request_json("stats")).unwrap()
+    }
+
+    fn shutdown(self) -> DrainReport {
+        client::roundtrip(&self.addr, &bare_request_json("shutdown"))
+            .unwrap();
+        self.handle.join().unwrap()
+    }
+}
+
+fn stat(v: &JsonValue, key: &str) -> u64 {
+    v.get(key).and_then(JsonValue::as_u64).unwrap_or_else(|| {
+        panic!("stats field {key} missing or not an integer")
+    })
+}
+
+#[test]
+fn daemon_digest_matches_offline_cold_and_warm_at_any_thread_count() {
+    // ground truth: the offline CLI path at threads = 1
+    let spec = ScenarioSpec::from_str(SPEC).unwrap();
+    let cfg = SweepConfig { replicates: 3, seed: 11, threads: 1 };
+    let offline =
+        run_sweep_batched(&SpecScenario::new(spec).unwrap(), &cfg).unwrap();
+    let want = format!("{:016x}", offline.digest());
+
+    // the daemon runs the same work at threads = 4
+    let daemon = start(4);
+    let req = SubmitReq {
+        spec_toml: Some(SPEC.into()),
+        seed: Some(11),
+        replicates: Some(3),
+        ..Default::default()
+    };
+    let (job0, cold) = daemon.submit_and_wait(&req);
+    assert_eq!(cold, want, "cold daemon digest != offline digest");
+
+    let pool_after_cold = stat(&daemon.stats(), "pool_jobs");
+    assert_eq!(pool_after_cold, offline.throughput.jobs);
+
+    // warm repeat: tier-A hit — same digest, no new pool work
+    let (job1, warm) = daemon.submit_and_wait(&req);
+    assert_ne!(job0, job1, "a hit still gets its own job record");
+    assert_eq!(warm, want, "warm daemon digest != offline digest");
+    let s = daemon.stats();
+    assert_eq!(stat(&s, "tier_a_hits"), 1);
+    assert_eq!(stat(&s, "pool_jobs"), pool_after_cold);
+    assert_eq!(stat(&s, "jobs_done"), 1, "the hit never reached the pool");
+
+    let report = daemon.shutdown();
+    assert_eq!(report.jobs_done, 1);
+    assert_eq!(report.jobs_failed, 0);
+    assert_eq!(report.pool_jobs, pool_after_cold);
+}
+
+#[test]
+fn overlapping_grids_share_tier_b_artifacts_with_unchanged_digests() {
+    // offline truth for the shifted grid
+    let cfg = SweepConfig { replicates: 2, seed: 5, threads: 1 };
+    let offline = |text: &str| {
+        let sc =
+            SpecScenario::new(ScenarioSpec::from_str(text).unwrap()).unwrap();
+        format!("{:016x}", run_sweep_batched(&sc, &cfg).unwrap().digest())
+    };
+
+    let daemon = start(2);
+    let req = |text: &str| SubmitReq {
+        spec_toml: Some(text.into()),
+        seed: Some(5),
+        replicates: Some(2),
+        ..Default::default()
+    };
+    let (_, first) = daemon.submit_and_wait(&req(SPEC));
+    assert_eq!(first, offline(SPEC));
+    let s = daemon.stats();
+    assert_eq!(stat(&s, "tier_b_misses"), 2, "cold grid: both points novel");
+    assert_eq!(stat(&s, "tier_b_entries"), 2);
+
+    // shifted grid: different request fingerprint (no tier-A hit), but
+    // the overlapping q = 0.4 point is served from tier B — and the
+    // partially-warm digest still equals the offline run's
+    let (_, second) = daemon.submit_and_wait(&req(SPEC_SHIFTED));
+    assert_eq!(second, offline(SPEC_SHIFTED));
+    assert_ne!(first, second);
+    let s = daemon.stats();
+    assert_eq!(stat(&s, "tier_a_hits"), 0);
+    assert_eq!(stat(&s, "tier_b_hits"), 1, "shared point reused");
+    assert_eq!(stat(&s, "tier_b_misses"), 3, "only the novel point prepared");
+    assert_eq!(stat(&s, "tier_b_entries"), 3);
+    daemon.shutdown();
+}
+
+#[test]
+fn optimize_submissions_match_the_offline_planner() {
+    let plan = PlanSpec::from_str(PLAN).unwrap();
+    let outcome =
+        opt::run_plan(&plan, &PlannerConfig { seed: 7, threads: 1 }).unwrap();
+    let want = format!("{:016x}", outcome.digest());
+
+    let daemon = start(2);
+    // kind auto-detected from the [objective] table
+    let req = SubmitReq {
+        spec_toml: Some(PLAN.into()),
+        seed: Some(7),
+        ..Default::default()
+    };
+    let (_, cold) = daemon.submit_and_wait(&req);
+    assert_eq!(cold, want, "daemon planner digest != offline digest");
+    let (_, warm) = daemon.submit_and_wait(&req);
+    assert_eq!(warm, want);
+    let s = daemon.stats();
+    assert_eq!(stat(&s, "tier_a_hits"), 1);
+    // planner pool work: rung replicates x surviving members
+    let sims: u64 = outcome
+        .rungs
+        .iter()
+        .map(|r| r.replicates * r.members.len() as u64)
+        .sum();
+    assert_eq!(stat(&s, "pool_jobs"), sims);
+    daemon.shutdown();
+}
+
+#[test]
+fn invalid_submissions_and_unknown_jobs_are_clean_server_errors() {
+    let daemon = start(1);
+    let e = client::roundtrip(
+        &daemon.addr,
+        &submit_request_json(&SubmitReq {
+            preset: Some("fig9".into()),
+            ..Default::default()
+        }),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("server:"), "{e}");
+    assert!(e.contains("unknown preset"), "{e}");
+
+    let e = client::roundtrip(&daemon.addr, "{\"cmd\": \"status\", \"job\": 42}")
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("unknown job 42"), "{e}");
+
+    // a rejected submission leaves no queued or executed work behind
+    let s = daemon.stats();
+    assert_eq!(stat(&s, "queue_depth"), 0);
+    assert_eq!(stat(&s, "jobs_done") + stat(&s, "jobs_failed"), 0);
+    let report = daemon.shutdown();
+    assert_eq!(report.jobs_done + report.jobs_failed, 0);
+}
+
+#[test]
+fn shutdown_drains_already_admitted_work() {
+    let daemon = start(1);
+    // queue two jobs, then immediately ask for shutdown: both must
+    // still complete (drain finishes admitted work, rejects new work)
+    let submit = |seed: u64| {
+        let ack = client::roundtrip(
+            &daemon.addr,
+            &submit_request_json(&SubmitReq {
+                spec_toml: Some(SPEC.into()),
+                seed: Some(seed),
+                replicates: Some(2),
+                ..Default::default()
+            }),
+        )
+        .unwrap();
+        ack.get("job").and_then(JsonValue::as_u64).unwrap()
+    };
+    let a = submit(1);
+    let b = submit(2);
+    assert_ne!(a, b);
+    let report = daemon.shutdown();
+    assert_eq!(report.jobs_done, 2, "drain must finish admitted jobs");
+    assert_eq!(report.jobs_failed, 0);
+}
