@@ -13,6 +13,9 @@
 //!   batched on a representative frictionless preset.
 //!
 //! Results land in `BENCH_6.json` (override with `BENCH_OUT=path`);
+//! the portfolio-preset rows plus a `portfolio_grid` timing — which
+//! exercises the scalar fallback inside `run_sweep_batched`, not a
+//! lane kernel — land in `BENCH_8.json` (`BENCH8_OUT=path`).
 //! `BENCH_SMOKE=1` shrinks the workload for CI.
 //!
 //! Run: `cargo bench --bench replicate_batch`
@@ -38,10 +41,14 @@ use volatile_sgd::util::json::num;
 fn reduced_scenario(name: &str, j_cap: u64) -> SpecScenario {
     use volatile_sgd::exp::spec::MarketKind;
     let mut spec = presets::spec(name).expect("shipped preset parses");
-    if spec
-        .markets
-        .iter()
-        .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
+    // `.all()` is vacuously true on an empty lineup, and portfolio
+    // specs keep `markets` empty — their bid-coupled entries must not
+    // be j-capped either
+    if !spec.markets.is_empty()
+        && spec
+            .markets
+            .iter()
+            .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
     {
         spec.job.j = spec.job.j.min(j_cap);
     }
@@ -56,11 +63,24 @@ fn reduced_scenario(name: &str, j_cap: u64) -> SpecScenario {
     SpecScenario::new(spec).expect("reduced preset validates")
 }
 
+#[derive(Clone, Copy)]
 struct DigestRow {
     preset: &'static str,
     threads: usize,
     scalar: u64,
     batched: u64,
+}
+
+/// The rows for a named subset of presets (BENCH_8.json carries only
+/// the portfolio presets' equivalence rows).
+fn digest_smoke_rows_for(
+    rows: &[DigestRow],
+    presets: &[&str],
+) -> Vec<DigestRow> {
+    rows.iter()
+        .filter(|r| presets.contains(&r.preset))
+        .copied()
+        .collect()
 }
 
 impl DigestRow {
@@ -128,13 +148,13 @@ fn timed<F: FnMut() -> SweepResults>(mut f: F) -> TimedRun {
     }
 }
 
-fn timing(j: u64, replicates: u64) -> (TimedRun, TimedRun) {
+fn timing(name: &str, j: u64, replicates: u64) -> (TimedRun, TimedRun) {
     let threads = default_threads();
     println!(
-        "--- timing: fig3 (reduced), j={j}, {replicates} replicates, \
+        "--- timing: {name} (reduced), j={j}, {replicates} replicates, \
          {threads} threads ---"
     );
-    let scenario = reduced_scenario("fig3", j);
+    let scenario = reduced_scenario(name, j);
     let cfg = SweepConfig { replicates, seed: 2020, threads };
     // warm both paths once so neither pays first-touch costs
     run_sweep(&scenario, &cfg).unwrap();
@@ -180,6 +200,7 @@ fn timed_json(r: &TimedRun) -> String {
 fn write_json(
     path: &str,
     smoke: bool,
+    timing_preset: &str,
     rows: &[DigestRow],
     scalar: &TimedRun,
     batched: &TimedRun,
@@ -203,7 +224,7 @@ fn write_json(
         "{{\n  \"bench\": \"replicate_batch\",\n  \"schema\": 1,\n  \
          \"recorded\": true,\n  \"smoke\": {smoke},\n  \
          \"threads\": {},\n  \"digest_checks\": [\n{}\n  ],\n  \
-         \"timing\": {{\n    \"preset\": \"fig3_reduced\",\n    \
+         \"timing\": {{\n    \"preset\": \"{timing_preset}\",\n    \
          \"scalar\": {},\n    \"batched\": {},\n    \
          \"speedup\": {}\n  }}\n}}\n",
         default_threads(),
@@ -226,10 +247,30 @@ fn main() {
         (4_000, 20_000, 5, 32)
     };
     let rows = digest_smoke(j_smoke, reps_smoke);
-    let (scalar, batched) = timing(j_time, reps_time);
+    let (scalar, batched) = timing("fig3", j_time, reps_time);
     let out = std::env::var("BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_6.json".to_string());
-    write_json(&out, smoke, &rows, &scalar, &batched);
+    write_json(&out, smoke, "fig3_reduced", &rows, &scalar, &batched);
+    // the portfolio presets ride the scalar fallback inside
+    // `run_sweep_batched` (a migrating fleet has no SoA kernel yet),
+    // so this records the fallback's cost honestly rather than a
+    // lane speedup — BENCH_8.json is that trajectory's file
+    let port_rows: Vec<DigestRow> = digest_smoke_rows_for(
+        &rows,
+        &["portfolio_grid", "spot_replay"],
+    );
+    let (pscalar, pbatched) =
+        timing("portfolio_grid", j_time, reps_time.min(16));
+    let out8 = std::env::var("BENCH8_OUT")
+        .unwrap_or_else(|_| "BENCH_8.json".to_string());
+    write_json(
+        &out8,
+        smoke,
+        "portfolio_grid_reduced",
+        &port_rows,
+        &pscalar,
+        &pbatched,
+    );
     let diverged: Vec<&DigestRow> =
         rows.iter().filter(|r| !r.matches()).collect();
     if !diverged.is_empty() {

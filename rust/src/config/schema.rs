@@ -70,6 +70,13 @@ pub enum StrategyKind {
     /// Event-native: escalate to on-demand (bid = ∞) when the
     /// completion proxy drops below `escalate_threshold`
     DeadlineAware { escalate_threshold: f64 },
+    /// Portfolio-only (`market::portfolio`, DESIGN.md §10): keep the
+    /// fleet on the portfolio entry with the lowest effective price
+    /// (`price / speed`), migrating on `PriceRevision` when the best
+    /// entry undercuts the current one by more than `hysteresis`;
+    /// each migration is billed as checkpoint + restart via
+    /// `[overhead]`. Only valid in specs with a `[[portfolio]]` array.
+    PortfolioMigrate { hysteresis: f64 },
 }
 
 impl StrategyKind {
@@ -87,6 +94,7 @@ impl StrategyKind {
             StrategyKind::NoticeRebid { .. } => "notice_rebid",
             StrategyKind::ElasticFleet { .. } => "elastic_fleet",
             StrategyKind::DeadlineAware { .. } => "deadline_aware",
+            StrategyKind::PortfolioMigrate { .. } => "portfolio_migrate",
         }
     }
 
@@ -101,6 +109,7 @@ impl StrategyKind {
             StrategyKind::NoticeRebid { .. }
                 | StrategyKind::ElasticFleet { .. }
                 | StrategyKind::DeadlineAware { .. }
+                | StrategyKind::PortfolioMigrate { .. }
         )
     }
 
@@ -130,11 +139,14 @@ impl StrategyKind {
             "deadline_aware" => {
                 StrategyKind::DeadlineAware { escalate_threshold: 0.5 }
             }
+            "portfolio_migrate" => {
+                StrategyKind::PortfolioMigrate { hysteresis: 0.05 }
+            }
             other => bail!(
                 "unknown strategy kind '{other}' (no_interruption | one_bid \
                  | two_bids | bid_fractions | dynamic | static_workers | \
                  dynamic_workers | notice_rebid | elastic_fleet | \
-                 deadline_aware)"
+                 deadline_aware | portfolio_migrate)"
             ),
         })
     }
@@ -295,6 +307,16 @@ impl ExperimentConfig {
                     bail!(
                         "strategy.escalate_threshold must be in (0, 1], \
                          got {escalate_threshold}"
+                    );
+                }
+            }
+            StrategyKind::PortfolioMigrate { hysteresis } => {
+                *hysteresis = doc.f64_or("strategy.hysteresis", *hysteresis);
+                if !hysteresis.is_finite() || !(0.0..1.0).contains(hysteresis)
+                {
+                    bail!(
+                        "strategy.hysteresis must be in [0, 1), got \
+                         {hysteresis}"
                     );
                 }
             }
@@ -484,6 +506,7 @@ n1 = 4
             "notice_rebid",
             "elastic_fleet",
             "deadline_aware",
+            "portfolio_migrate",
         ] {
             let k = StrategyKind::from_name(name, 8).unwrap();
             assert_eq!(k.canonical_name(), name);
@@ -491,7 +514,10 @@ n1 = 4
                 k.event_native(),
                 matches!(
                     name,
-                    "notice_rebid" | "elastic_fleet" | "deadline_aware"
+                    "notice_rebid"
+                        | "elastic_fleet"
+                        | "deadline_aware"
+                        | "portfolio_migrate"
                 ),
                 "{name}"
             );

@@ -1,10 +1,14 @@
 //! Minimal TOML-subset parser (serde/toml are unavailable offline).
 //!
-//! Supported: `[section]` / `[a.b]` headers, `key = value` with string
-//! ("..."), bool, integer, float, and flat arrays of those; `#` comments.
+//! Supported: `[section]` / `[a.b]` headers, `[[section]]`
+//! array-of-tables headers, `key = value` with string ("..."), bool,
+//! integer, float, and flat arrays of those; `#` comments.
 //! Keys are flattened to dotted paths: `[market] kind = "uniform"` becomes
-//! `market.kind`. That covers every experiment config in this repo; the
-//! parser rejects anything outside the subset loudly rather than guessing.
+//! `market.kind`; the i-th `[[portfolio]]` table becomes `portfolio.<i>.*`
+//! (0-based), so array entries are addressable by the same dotted-path
+//! grammar the sweep axes use. That covers every experiment config in this
+//! repo; the parser rejects anything outside the subset loudly rather than
+//! guessing.
 
 use std::collections::BTreeMap;
 
@@ -69,12 +73,27 @@ impl Doc {
     pub fn parse(text: &str) -> Result<Self> {
         let mut entries = BTreeMap::new();
         let mut prefix = String::new();
+        // per-name element counter for `[[name]]` array-of-tables
+        let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim().to_string();
             if line.is_empty() {
                 continue;
             }
             let at = || format!("config line {}", lineno + 1);
+            if line.starts_with("[[") {
+                if !line.ends_with("]]") {
+                    bail!("{}: unterminated array-of-tables header", at());
+                }
+                let name = line[2..line.len() - 2].trim().to_string();
+                if name.is_empty() {
+                    bail!("{}: empty section name", at());
+                }
+                let idx = array_counts.entry(name.clone()).or_insert(0);
+                prefix = format!("{name}.{idx}");
+                *idx += 1;
+                continue;
+            }
             if line.starts_with('[') {
                 if !line.ends_with(']') {
                     bail!("{}: unterminated section header", at());
@@ -433,6 +452,48 @@ weights = [1, 2.5, 3]
         let w = doc.get("strategy.two_bids.weights").unwrap();
         assert_eq!(w.as_array().unwrap().len(), 3);
         assert_eq!(w.as_array().unwrap()[1].as_float(), Some(2.5));
+    }
+
+    #[test]
+    fn array_of_tables_flattens_to_indexed_prefixes() {
+        let doc = Doc::parse(
+            r#"
+[[portfolio]]
+label = "cheap"
+speed = 1.0
+
+[[portfolio]]
+label = "fast"
+speed = 1.6
+
+[market]
+kind = "uniform"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.require_str("portfolio.0.label").unwrap(), "cheap");
+        assert_eq!(doc.require_f64("portfolio.0.speed").unwrap(), 1.0);
+        assert_eq!(doc.require_str("portfolio.1.label").unwrap(), "fast");
+        assert_eq!(doc.require_f64("portfolio.1.speed").unwrap(), 1.6);
+        // a plain header after the array resets the prefix as usual
+        assert_eq!(doc.require_str("market.kind").unwrap(), "uniform");
+    }
+
+    #[test]
+    fn array_of_tables_counters_are_per_name() {
+        let doc = Doc::parse("[[a]]\nx = 1\n[[b]]\nx = 2\n[[a]]\nx = 3\n")
+            .unwrap();
+        assert_eq!(doc.i64_or("a.0.x", 0), 1);
+        assert_eq!(doc.i64_or("b.0.x", 0), 2);
+        assert_eq!(doc.i64_or("a.1.x", 0), 3);
+    }
+
+    #[test]
+    fn array_of_tables_rejects_malformed_headers() {
+        assert!(Doc::parse("[[unclosed]\nx = 1\n").is_err());
+        assert!(Doc::parse("[[ ]]\nx = 1\n").is_err());
+        // duplicate keys inside one element are still duplicates
+        assert!(Doc::parse("[[a]]\nx = 1\nx = 2\n").is_err());
     }
 
     #[test]

@@ -28,19 +28,20 @@ pub mod fig5;
 pub mod presets;
 pub mod spec;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::coordinator::backend::SyntheticBackend;
+use crate::coordinator::backend::{SyntheticBackend, TrainingBackend};
 use crate::coordinator::scheduler::{RunResult, Scheduler, SchedulerParams};
 use crate::coordinator::strategy::{
-    DynamicBids, DynamicWorkers, FixedBids, StageSpec, StaticWorkers,
-    Strategy,
+    ActiveDecision, DynamicBids, DynamicWorkers, FixedBids, StageSpec,
+    StaticWorkers, Strategy,
 };
-use crate::market::BidVector;
+use crate::market::{BidVector, MarketPortfolio, MigrationRule};
 use crate::preempt::{PreemptionModel, RecipTable};
 use crate::sim::{
-    DeadlineAware, ElasticFleet, Engine, EngineParams, EngineResult,
-    LockstepPolicy, NoticeRebid, Policy, PriceSource,
+    CostMeter, DeadlineAware, ElasticFleet, Engine, EngineParams,
+    EngineResult, EngineState, Event, LockstepPolicy, NoticeRebid, Observer,
+    Policy, PriceSource, SeriesRecorder,
 };
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::ErrorBound;
@@ -158,6 +159,298 @@ pub fn run_synthetic(
     run_synthetic_rng(strategy, bound, prices, runtime, theta_cap, &mut rng)
 }
 
+/// One portfolio run's immutable inputs: the validated entry set and a
+/// per-entry [`PriceSource`], index-aligned with the entries.
+pub struct PortfolioRun<'a> {
+    pub port: &'a MarketPortfolio,
+    pub sources: &'a [PriceSource],
+}
+
+/// The fleet the `portfolio_migrate` plan moves between markets: all
+/// `n` workers active every slot at the quoted price, consuming no RNG
+/// (placement is the migration rule's job, not a bid resolution).
+struct FleetPolicy {
+    name: String,
+    n: usize,
+    j: u64,
+}
+
+impl Policy for FleetPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn max_workers(&self) -> usize {
+        self.n
+    }
+
+    fn decide(&mut self, price: f64, _rng: &mut Rng) -> ActiveDecision {
+        ActiveDecision { active: (0..self.n).collect(), price }
+    }
+}
+
+/// Run one plan across a market portfolio — the multi-market sibling of
+/// [`run_policy_engine`] (DESIGN.md §10).
+///
+/// **RNG-stream-per-market contract.** One `next_u64` off the caller's
+/// replicate stream seeds the run; market `i` draws its price and its
+/// market-level interruption from `Rng::stream(root, i)` and the policy
+/// (decide / runtime sample / backend step) from `Rng::stream(root, m)`.
+/// Every stream is a pure function of the replicate identity, so sweep
+/// digests stay bit-identical at any thread count.
+///
+/// **Slot order.** Per slot: deadline check; every market's price +
+/// availability draw (index order); migration (`portfolio_migrate`
+/// only — billed as a checkpoint at the old market's price plus a
+/// restart at the new one's, consuming the slot); `PriceRevision` on
+/// the current market; unavailable market -> preemption episode + idle;
+/// otherwise decide / restore / iterate exactly as the single-market
+/// engine, with the iteration runtime divided by the current entry's
+/// `speed`.
+///
+/// Periodic checkpointing and `lost_work_on_preempt` are rejected: in a
+/// portfolio the `[overhead]` knobs price *migrations* (and restart
+/// recovery), and silently double-charging them would corrupt the
+/// comparison against single-market baselines.
+pub fn run_portfolio_engine(
+    plan: &PlannedStrategy,
+    run: &PortfolioRun<'_>,
+    bound: ErrorBound,
+    params: &RunParams,
+    rng: &mut Rng,
+) -> Result<EngineResult> {
+    let m = run.port.len();
+    ensure!(m > 0, "portfolio run with no entries");
+    ensure!(
+        run.sources.len() == m,
+        "portfolio run needs one price source per entry ({} != {m})",
+        run.sources.len()
+    );
+    ensure!(
+        portfolio_overhead_ok(params),
+        "portfolio runs price migrations through [overhead]; \
+         checkpoint_every_iters and lost_work_on_preempt are not supported"
+    );
+    run.port.validate()?;
+    ensure!(params.idle_step > 0.0, "idle_step must be > 0");
+    ensure!(params.stride >= 1, "stride must be >= 1");
+    params.overhead.validate()?;
+    let ov = params.overhead;
+
+    let root = rng.next_u64();
+    let mut market_rngs: Vec<Rng> =
+        (0..m).map(|i| Rng::stream(root, i as u64)).collect();
+    let mut policy_rng = Rng::stream(root, m as u64);
+
+    let (mut policy, migrate): (Box<dyn Policy>, Option<MigrationRule>) =
+        match plan {
+            PlannedStrategy::PortfolioMigrate { name, n, j, hysteresis } => {
+                let rule = MigrationRule { hysteresis: *hysteresis };
+                rule.validate()?;
+                (
+                    Box::new(FleetPolicy {
+                        name: name.clone(),
+                        n: *n,
+                        j: *j,
+                    }),
+                    Some(rule),
+                )
+            }
+            // classic / event-native plans are pinned to entry 0 (the
+            // "home" market) and never migrate
+            classic => (classic.build_policy()?, None),
+        };
+
+    let mut backend = SyntheticBackend::new(bound);
+    let mut meter = CostMeter::new();
+    let mut recorder = SeriesRecorder::new(params.stride);
+    let mut iter = 0u64;
+    let mut slots = 0u64;
+    let target = policy.target_iters();
+    let mut truncated = false;
+    let mut last = (backend.error(), backend.accuracy());
+    let mut current = 0usize;
+    let mut was_active = false;
+    let mut interrupted = false;
+    let mut prev_price = 0.0f64;
+    let (mut preemptions, mut restarts, mut checkpoints) = (0u64, 0u64, 0u64);
+    let (mut checkpoint_time, mut restart_time) = (0.0f64, 0.0f64);
+    let mut prices = vec![0.0f64; m];
+    let mut avail = vec![true; m];
+
+    fn emit(
+        policy: &mut dyn Policy,
+        recorder: &mut SeriesRecorder,
+        ev: Event,
+        st: EngineState,
+    ) -> Result<()> {
+        policy.on_event(&ev, &st)?;
+        recorder.on_event(&ev, &st);
+        Ok(())
+    }
+    macro_rules! state {
+        ($active:expr, $price:expr) => {
+            EngineState {
+                iter,
+                target,
+                clock: meter.elapsed(),
+                cost: meter.cost(),
+                idle_time: meter.idle_time(),
+                error: last.0,
+                accuracy: last.1,
+                active: $active,
+                price: $price,
+            }
+        };
+    }
+
+    while iter < target {
+        slots += 1;
+        if slots > params.max_slots || meter.elapsed() >= params.theta_cap {
+            truncated = true;
+            emit(
+                policy.as_mut(),
+                &mut recorder,
+                Event::DeadlineHit,
+                state!(0, prev_price),
+            )?;
+            break;
+        }
+        // every market's slot draws, in index order, each off its own
+        // stream — so the set of draws per slot is fixed regardless of
+        // which market the fleet occupies
+        for i in 0..m {
+            prices[i] =
+                run.sources[i].price_at(meter.elapsed(), &mut market_rngs[i]);
+            avail[i] = !market_rngs[i].bool(run.port.entries[i].q);
+        }
+        if let Some(rule) = &migrate {
+            if let Some(to) = rule.target(run.port, current, &prices, &avail)
+            {
+                // the move consumes the slot: checkpoint on the market
+                // being left, restart lag on the one being entered
+                let n_move = policy.max_workers();
+                meter.charge(n_move, prices[current], ov.checkpoint_cost_s);
+                checkpoint_time += ov.checkpoint_cost_s;
+                checkpoints += 1;
+                emit(
+                    policy.as_mut(),
+                    &mut recorder,
+                    Event::CheckpointDone,
+                    state!(n_move, prices[current]),
+                )?;
+                meter.charge(n_move, prices[to], ov.restart_delay_s);
+                restart_time += ov.restart_delay_s;
+                restarts += 1;
+                current = to;
+                prev_price = prices[current];
+                emit(
+                    policy.as_mut(),
+                    &mut recorder,
+                    Event::WorkerRestored,
+                    state!(n_move, prices[current]),
+                )?;
+                continue;
+            }
+        }
+        emit(
+            policy.as_mut(),
+            &mut recorder,
+            Event::PriceRevision { price: prices[current] },
+            state!(0, prices[current]),
+        )?;
+        if !avail[current] {
+            // market-level interruption: the whole fleet loses the slot
+            if was_active {
+                preemptions += 1;
+                was_active = false;
+                interrupted = true;
+                emit(
+                    policy.as_mut(),
+                    &mut recorder,
+                    Event::WorkerPreempted { notice: ov.preempt_notice_s },
+                    state!(0, prices[current]),
+                )?;
+            }
+            meter.idle(params.idle_step);
+            continue;
+        }
+        let decision = policy.decide(prices[current], &mut policy_rng);
+        let y = decision.active.len();
+        if y == 0 {
+            if was_active {
+                preemptions += 1;
+                was_active = false;
+                interrupted = true;
+                emit(
+                    policy.as_mut(),
+                    &mut recorder,
+                    Event::WorkerPreempted { notice: ov.preempt_notice_s },
+                    state!(0, prices[current]),
+                )?;
+            }
+            meter.idle(params.idle_step);
+            continue;
+        }
+        if interrupted {
+            if ov.restart_delay_s > 0.0 {
+                meter.charge(y, decision.price, ov.restart_delay_s);
+                restart_time += ov.restart_delay_s;
+            }
+            restarts += 1;
+            interrupted = false;
+            emit(
+                policy.as_mut(),
+                &mut recorder,
+                Event::WorkerRestored,
+                state!(y, decision.price),
+            )?;
+        }
+        let dur = params.runtime.sample(y, &mut policy_rng)
+            / run.port.entries[current].speed;
+        let stats = backend.step(y, &mut policy_rng)?;
+        meter.charge(y, decision.price, dur);
+        iter += 1;
+        last = (stats.error, stats.accuracy);
+        was_active = true;
+        prev_price = decision.price;
+        emit(
+            policy.as_mut(),
+            &mut recorder,
+            Event::IterationDone,
+            state!(y, decision.price),
+        )?;
+    }
+
+    Ok(EngineResult {
+        series: recorder.into_series(),
+        iters: iter,
+        cost: meter.cost(),
+        elapsed: meter.elapsed(),
+        idle_time: meter.idle_time(),
+        final_error: last.0,
+        final_accuracy: last.1,
+        truncated,
+        preemptions,
+        restarts,
+        checkpoints,
+        checkpoint_time,
+        restart_time,
+        lost_iters: 0,
+    })
+}
+
+/// The `[overhead]` knobs a portfolio run can express: migration and
+/// restart billing only (see [`run_portfolio_engine`]).
+fn portfolio_overhead_ok(params: &RunParams) -> bool {
+    params.overhead.checkpoint_every_iters == 0
+        && !params.overhead.lost_work_on_preempt
+}
+
 /// A fully-planned strategy: the pure, cacheable product of the (often
 /// expensive) Theorem 2/3 bid optimisation, from which a fresh mutable
 /// [`Strategy`] can be built per replicate. Plans are `Send + Sync`, so
@@ -229,6 +522,12 @@ pub enum PlannedStrategy {
         slot_time: f64,
         threshold: f64,
     },
+    /// Portfolio-native: place the whole fleet on one `[[portfolio]]`
+    /// entry and follow the cheapest effective price (price / speed)
+    /// across entries, with hysteresis; each migration is billed as a
+    /// checkpoint + restart via `[overhead]` (DESIGN.md §10). Only
+    /// [`run_portfolio_engine`] can execute this plan.
+    PortfolioMigrate { name: String, n: usize, j: u64, hysteresis: f64 },
 }
 
 impl PlannedStrategy {
@@ -240,7 +539,8 @@ impl PlannedStrategy {
             | PlannedStrategy::DynamicWorkers { name, .. }
             | PlannedStrategy::NoticeRebid { name, .. }
             | PlannedStrategy::ElasticFleet { name, .. }
-            | PlannedStrategy::DeadlineAware { name, .. } => name,
+            | PlannedStrategy::DeadlineAware { name, .. }
+            | PlannedStrategy::PortfolioMigrate { name, .. } => name,
         }
     }
 
@@ -253,7 +553,8 @@ impl PlannedStrategy {
             | PlannedStrategy::DynamicWorkers { j, .. }
             | PlannedStrategy::NoticeRebid { j, .. }
             | PlannedStrategy::ElasticFleet { j, .. }
-            | PlannedStrategy::DeadlineAware { j, .. } => *j,
+            | PlannedStrategy::DeadlineAware { j, .. }
+            | PlannedStrategy::PortfolioMigrate { j, .. } => *j,
         }
     }
 
@@ -266,6 +567,7 @@ impl PlannedStrategy {
             PlannedStrategy::NoticeRebid { .. }
                 | PlannedStrategy::ElasticFleet { .. }
                 | PlannedStrategy::DeadlineAware { .. }
+                | PlannedStrategy::PortfolioMigrate { .. }
         )
     }
 
@@ -317,6 +619,11 @@ impl PlannedStrategy {
                 *slot_time,
                 *threshold,
             )),
+            PlannedStrategy::PortfolioMigrate { name, .. } => bail!(
+                "plan '{name}' places workers across a portfolio; it has \
+                 no single-market Policy form — run it through \
+                 run_portfolio_engine"
+            ),
             classic => Box::new(LockstepPolicy(classic.build()?)),
         })
     }
@@ -371,7 +678,8 @@ impl PlannedStrategy {
             )),
             PlannedStrategy::NoticeRebid { .. }
             | PlannedStrategy::ElasticFleet { .. }
-            | PlannedStrategy::DeadlineAware { .. } => {
+            | PlannedStrategy::DeadlineAware { .. }
+            | PlannedStrategy::PortfolioMigrate { .. } => {
                 unreachable!("rejected by the event_native guard above")
             }
         })

@@ -10,8 +10,9 @@ use anyhow::{bail, Result};
 
 use super::spec::{ScenarioSpec, SpecScenario};
 
-/// Preset names: the figures, then the engine-era scenarios.
-pub const PRESET_NAMES: [&str; 7] = [
+/// Preset names: the figures, then the engine-era scenarios, then the
+/// portfolio demos.
+pub const PRESET_NAMES: [&str; 9] = [
     "fig2",
     "fig3",
     "fig4",
@@ -19,6 +20,8 @@ pub const PRESET_NAMES: [&str; 7] = [
     "checkpoint_grid",
     "adaptive_grid",
     "notice_grid",
+    "portfolio_grid",
+    "spot_replay",
 ];
 
 /// The embedded TOML text of a preset (accepts `fig3` or bare `3`).
@@ -37,9 +40,16 @@ pub fn preset_toml(name: &str) -> Result<&'static str> {
         "notice_grid" => {
             include_str!("../../../examples/configs/notice_grid.toml")
         }
+        "portfolio_grid" => {
+            include_str!("../../../examples/configs/portfolio_grid.toml")
+        }
+        "spot_replay" => {
+            include_str!("../../../examples/configs/spot_replay.toml")
+        }
         other => bail!(
             "unknown preset '{other}' (available: fig2, fig3, fig4, fig5, \
-             checkpoint_grid, adaptive_grid, notice_grid)"
+             checkpoint_grid, adaptive_grid, notice_grid, portfolio_grid, \
+             spot_replay)"
         ),
     })
 }
@@ -165,6 +175,44 @@ mod tests {
         assert_eq!(sc.label(11), "n=16 q=0.7");
         assert_eq!(sc.metrics()[0], "cost");
         assert_eq!(sc.metrics()[4], "recip_exact");
+    }
+
+    /// The two portfolio-era presets (DESIGN.md §10): point spaces,
+    /// labels, and the multi-market wiring each demonstrates.
+    #[test]
+    fn portfolio_presets_ship_multi_market_lineups() {
+        let sc = scenario("portfolio_grid").unwrap();
+        assert_eq!(sc.points(), 6); // 3 q x 2 strategies
+        assert_eq!(sc.label(0), "q1=0.02/one_bid");
+        assert_eq!(sc.label(5), "q1=0.25/migrate");
+        let spec = sc.spec();
+        let entries = spec.portfolio.as_ref().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].label, "cheap");
+        assert_eq!(entries[1].label, "fast");
+        assert_eq!(entries[1].speed, 1.6);
+        assert!(spec.markets.is_empty(), "portfolio replaces [market]");
+        assert_eq!(spec.market_dim(), 1);
+        assert!(spec.overhead.enabled(), "migration must be billed");
+        assert_eq!(spec.overhead.checkpoint_every_iters, 0);
+
+        let sc = scenario("spot_replay").unwrap();
+        assert_eq!(sc.points(), 4); // 2 markets x 2 strategies
+        assert_eq!(sc.label(0), "replay/one_bid");
+        assert_eq!(sc.label(3), "synthetic/no_interruption");
+        assert!(sc.spec().portfolio.is_none());
+        // the replay market is the strict content-hashed loader
+        assert!(matches!(
+            sc.spec().markets[0].kind,
+            crate::exp::spec::MarketKind::TraceStrict {
+                ref path,
+                resample_s,
+                content_fnv,
+                ..
+            } if path.ends_with("ec2_c5xlarge_uswest2a.csv")
+                && resample_s == 7200.0
+                && content_fnv != 0
+        ));
     }
 
     #[test]

@@ -73,7 +73,10 @@ use crate::config::toml::{Doc, TrackedDoc};
 use crate::config::StrategyKind;
 use crate::coordinator::strategy::StageSpec;
 use crate::market::process::PriceDist;
-use crate::market::{BidVector, PriceModel, SpotTrace, TraceGenConfig};
+use crate::market::{
+    tracefile, BidVector, MarketPortfolio, PortfolioEntry, PriceModel,
+    SpotTrace, TraceGenConfig,
+};
 use crate::preempt::{jensen_penalty, PreemptionModel, RecipTable};
 use crate::coordinator::backend::SyntheticBackend;
 use crate::sim::{
@@ -87,8 +90,8 @@ use crate::util::fnv::Fnv;
 use crate::util::rng::Rng;
 
 use super::{
-    accuracy_for_error, run_policy_engine, run_synthetic_reference,
-    PlannedStrategy, RunParams,
+    accuracy_for_error, run_policy_engine, run_portfolio_engine,
+    run_synthetic_reference, PlannedStrategy, PortfolioRun, RunParams,
 };
 
 // ===================================================================
@@ -139,11 +142,38 @@ pub enum MarketKind {
     Gaussian { mean: f64, std: f64, lo: f64, hi: f64 },
     /// Preemptible-platform case: a constant price, no bidding.
     Fixed { price: f64 },
-    /// Replay a trace loaded from CSV; F estimated from it.
-    TraceFile { path: String, cdf_resolution: f64 },
+    /// Replay a trace loaded from CSV; F estimated from it. Identity
+    /// is the file's *content* hash, never its path (DESIGN.md §9).
+    TraceFile { path: String, cdf_resolution: f64, content_fnv: u64 },
     /// Generate a regime-switching trace (DESIGN.md §2), seeded
     /// deterministically; F estimated from the generated path.
     TraceGen { cfg: TraceGenConfig, seed: u64, cdf_resolution: f64 },
+    /// `kind = "tracefile"`: the strict CSV/JSON spot-history loader
+    /// (`market::tracefile`) — validated at parse/`--check` time,
+    /// optionally resampled onto a fixed revision grid, identified by
+    /// content hash (DESIGN.md §10).
+    TraceStrict {
+        path: String,
+        cdf_resolution: f64,
+        /// resample interval in seconds (0 = replay raw timestamps)
+        resample_s: f64,
+        content_fnv: u64,
+    },
+}
+
+/// One `[[portfolio]]` entry as parsed: the market kind plus the
+/// portfolio-level knobs. `q` is the *market-level* per-slot
+/// interruption probability — independent of `job.preempt_q` (which
+/// models per-worker preemption inside a market) and defaulting to 0:
+/// a portfolio entry interrupts only when it says so.
+#[derive(Clone, Debug)]
+pub struct PortfolioEntrySpec {
+    pub label: String,
+    pub kind: MarketKind,
+    /// per-iteration runtime is divided by this (1.0 = paper baseline)
+    pub speed: f64,
+    /// market-level per-slot interruption probability, in [0, 1)
+    pub q: f64,
 }
 
 /// One strategy lineup entry: an owned label, a kind, and optional
@@ -200,6 +230,12 @@ pub struct ScenarioSpec {
     pub overhead: OverheadModel,
     pub sgd: SgdHyper,
     pub markets: Vec<MarketSpec>,
+    /// the `[[portfolio]]` entry set; `Some` makes this a multi-market
+    /// portfolio spec (one point per grid x strategy; `markets` stays
+    /// empty). A one-entry portfolio with default speed/q lowers to a
+    /// classic `markets` lineup at parse time, so its digest is
+    /// bit-identical to the equivalent `[market]` spec by construction.
+    pub portfolio: Option<Vec<PortfolioEntrySpec>>,
     pub strategies: Vec<StrategyEntry>,
     pub axes: Vec<AxisSpec>,
     pub metrics: Vec<String>,
@@ -341,32 +377,72 @@ impl ScenarioSpec {
 
         // --------------------------------------------------- markets
         let market_labels = d.str_array_or_empty("markets")?;
-        let markets = if market_labels.is_empty() {
-            if !d.has("market.kind") {
-                bail!(
-                    "missing required [market] table (set market.kind, or \
-                     declare a markets = [...] lineup)"
-                );
-            }
-            let kind = parse_market(d, "market")?;
-            vec![MarketSpec { label: market_label(&kind), kind }]
+        let mut portfolio = if d.has("portfolio.0.kind") {
+            ensure!(
+                market_labels.is_empty() && !d.has("market.kind"),
+                "[[portfolio]] replaces the [market] table / markets \
+                 lineup; declare one or the other"
+            );
+            Some(parse_portfolio(d)?)
         } else {
-            market_labels
-                .iter()
-                .map(|label| {
-                    let prefix = format!("market.{label}");
-                    ensure!(
-                        d.has(&format!("{prefix}.kind")),
-                        "market '{label}' needs a [market.{label}] table \
-                         with a kind"
-                    );
-                    Ok(MarketSpec {
-                        label: label.clone(),
-                        kind: parse_market(d, &prefix)?,
-                    })
-                })
-                .collect::<Result<Vec<_>>>()?
+            None
         };
+        // degenerate lowering: a one-entry portfolio with default
+        // speed/q IS the classic single-market spec — lower it so the
+        // digest is bit-identical to the `[market]` form
+        let mut markets = Vec::new();
+        if let Some(entries) = &portfolio {
+            if entries.len() == 1
+                && entries[0].speed == 1.0
+                && entries[0].q == 0.0
+            {
+                let e = &entries[0];
+                let label = if e.label == "m0" {
+                    market_label(&e.kind)
+                } else {
+                    e.label.clone()
+                };
+                markets = vec![MarketSpec { label, kind: e.kind.clone() }];
+                portfolio = None;
+            }
+        }
+        // the restriction only binds on portfolios that survive
+        // lowering: a degenerate one-entry portfolio IS a classic
+        // market table, so lineup-mode specs may use that form too
+        ensure!(
+            portfolio.is_none() || mode == SweepMode::PerStrategy,
+            "mode = \"lineup\" does not support multi-market \
+             [[portfolio]] specs"
+        );
+        if portfolio.is_none() && markets.is_empty() {
+            markets = if market_labels.is_empty() {
+                if !d.has("market.kind") {
+                    bail!(
+                        "missing required [market] table (set market.kind, \
+                         declare a markets = [...] lineup, or add \
+                         [[portfolio]] entries)"
+                    );
+                }
+                let kind = parse_market(d, "market")?;
+                vec![MarketSpec { label: market_label(&kind), kind }]
+            } else {
+                market_labels
+                    .iter()
+                    .map(|label| {
+                        let prefix = format!("market.{label}");
+                        ensure!(
+                            d.has(&format!("{prefix}.kind")),
+                            "market '{label}' needs a [market.{label}] table \
+                             with a kind"
+                        );
+                        Ok(MarketSpec {
+                            label: label.clone(),
+                            kind: parse_market(d, &prefix)?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            };
+        }
 
         // ------------------------------------------------ strategies
         let labels = d.str_array_or_empty("strategies")?;
@@ -416,6 +492,7 @@ impl ScenarioSpec {
             overhead,
             sgd,
             markets,
+            portfolio,
             strategies,
             axes,
             metrics,
@@ -423,6 +500,63 @@ impl ScenarioSpec {
             seed,
         })
     }
+
+    /// Market-axis width of the point space: portfolio specs are ONE
+    /// market dimension (the portfolio itself), classic specs one per
+    /// lineup entry.
+    pub fn market_dim(&self) -> usize {
+        match &self.portfolio {
+            Some(_) => 1,
+            None => self.markets.len(),
+        }
+    }
+}
+
+/// Parse the `[[portfolio]]` array-of-tables: flattened by the TOML
+/// layer to `portfolio.<idx>.*` keys, indices dense from 0.
+fn parse_portfolio(d: &TrackedDoc) -> Result<Vec<PortfolioEntrySpec>> {
+    let mut entries = Vec::new();
+    for i in 0.. {
+        let prefix = format!("portfolio.{i}");
+        if !d.has(&format!("{prefix}.kind")) {
+            // a gap means a malformed entry, not the end of the array
+            ensure!(
+                !d.has(&format!("{prefix}.label"))
+                    && !d.has(&format!("{prefix}.speed"))
+                    && !d.has(&format!("{prefix}.q")),
+                "[[portfolio]] entry {i} has knobs but no kind"
+            );
+            break;
+        }
+        let label =
+            d.str_or(&format!("{prefix}.label"), &format!("m{i}"))?;
+        let kind = parse_market(d, &prefix)
+            .with_context(|| format!("[[portfolio]] entry {i}"))?;
+        let speed = d.f64_or(&format!("{prefix}.speed"), 1.0)?;
+        ensure!(
+            speed.is_finite() && speed > 0.0,
+            "[[portfolio]] entry {i} ('{label}'): speed must be finite \
+             and > 0, got {speed}"
+        );
+        let q = d.f64_or(&format!("{prefix}.q"), 0.0)?;
+        ensure!(
+            q.is_finite() && (0.0..1.0).contains(&q),
+            "[[portfolio]] entry {i} ('{label}'): q must be in [0, 1), \
+             got {q}"
+        );
+        ensure!(
+            entries
+                .iter()
+                .all(|e: &PortfolioEntrySpec| e.label != label),
+            "duplicate portfolio label '{label}'"
+        );
+        entries.push(PortfolioEntrySpec { label, kind, speed, q });
+    }
+    ensure!(
+        !entries.is_empty(),
+        "[[portfolio]] declared but no entry has a kind"
+    );
+    Ok(entries)
 }
 
 /// Unknown-key rejection over a fully-consumed [`TrackedDoc`]: names
@@ -466,6 +600,7 @@ fn market_label(kind: &MarketKind) -> String {
         MarketKind::Gaussian { .. } => "gaussian",
         MarketKind::Fixed { .. } => "fixed",
         MarketKind::TraceFile { .. } | MarketKind::TraceGen { .. } => "trace",
+        MarketKind::TraceStrict { .. } => "tracefile",
     }
     .to_string()
 }
@@ -493,13 +628,40 @@ fn parse_market(d: &TrackedDoc, prefix: &str) -> Result<MarketKind> {
             ensure!(price >= 0.0, "{prefix}: price must be >= 0");
             MarketKind::Fixed { price }
         }
+        "tracefile" => {
+            let path = d.require_str(&key("path"))?;
+            // strict load now: `--check` fails on a malformed trace
+            // before a single replicate runs, and the content hash
+            // becomes the market's cache identity (DESIGN.md §9/§10)
+            let content_fnv = tracefile::content_fnv(&path)
+                .with_context(|| format!("{prefix}: trace file '{path}'"))?;
+            tracefile::load(&path)
+                .with_context(|| format!("{prefix}: trace file '{path}'"))?;
+            let resample_s = d.f64_or(&key("resample_s"), 0.0)?;
+            ensure!(
+                resample_s.is_finite() && resample_s >= 0.0,
+                "{prefix}: resample_s must be finite and >= 0 \
+                 (0 = replay raw timestamps), got {resample_s}"
+            );
+            MarketKind::TraceStrict {
+                path,
+                cdf_resolution: d.f64_or(&key("cdf_resolution"), 60.0)?,
+                resample_s,
+                content_fnv,
+            }
+        }
         "trace" => {
             if let Some(path) = d.str_opt(&key("path"))? {
+                let content_fnv = tracefile::content_fnv(&path)
+                    .with_context(|| {
+                        format!("{prefix}: trace file '{path}'")
+                    })?;
                 MarketKind::TraceFile {
                     path,
                     // loaded traces default to the historical-feed scale
                     // used by `simulate --config` (seconds-resolution)
                     cdf_resolution: d.f64_or(&key("cdf_resolution"), 60.0)?,
+                    content_fnv,
                 }
             } else {
                 let base = super::fig4::default_trace_config();
@@ -534,7 +696,7 @@ fn parse_market(d: &TrackedDoc, prefix: &str) -> Result<MarketKind> {
         }
         other => bail!(
             "unknown market kind '{other}' (uniform | gaussian | trace | \
-             fixed)"
+             tracefile | fixed)"
         ),
     })
 }
@@ -614,6 +776,14 @@ fn parse_strategy(
                     && *escalate_threshold <= 1.0,
                 "strategy '{label}': escalate_threshold must be in (0, 1], \
                  got {escalate_threshold}"
+            );
+        }
+        StrategyKind::PortfolioMigrate { hysteresis } => {
+            *hysteresis = d.f64_or(&key("hysteresis"), *hysteresis)?;
+            ensure!(
+                hysteresis.is_finite() && (0.0..1.0).contains(hysteresis),
+                "strategy '{label}': hysteresis must be in [0, 1), got \
+                 {hysteresis}"
             );
         }
         _ => {}
@@ -814,6 +984,17 @@ pub fn build_plan(
                 threshold: *escalate_threshold,
             }
         }
+        // placement across a [[portfolio]], not a bid plan: nothing to
+        // optimise here — the migration rule is evaluated per slot by
+        // `run_portfolio_engine`
+        StrategyKind::PortfolioMigrate { hysteresis } => {
+            PlannedStrategy::PortfolioMigrate {
+                name: label.to_string(),
+                n: inp.n,
+                j: inp.j,
+                hysteresis: *hysteresis,
+            }
+        }
     })
 }
 
@@ -987,8 +1168,12 @@ struct Resolved {
     sched: SchedKnobs,
     overhead: OverheadModel,
     sgd: SgdHyper,
+    /// for `[[portfolio]]` specs this mirrors entry 0 (`resolve`
+    /// re-syncs it after axes apply) so the single-market plan and
+    /// deadline derivation run unchanged
     market: MarketSpec,
     strategies: Vec<StrategyEntry>,
+    portfolio: Option<Vec<PortfolioEntrySpec>>,
 }
 
 /// Cached per-grid-point state (DESIGN.md §3 prepare phase): planned
@@ -1008,6 +1193,10 @@ pub struct SpecCtx {
     /// the first entry's bid problem (None for fixed-price markets) —
     /// the closed-form surface the planner prunes against
     pb: Option<BidProblem>,
+    /// multi-market state when the spec declares `[[portfolio]]`: the
+    /// validated portfolio plus one price source per entry, indexed
+    /// like the entries (DESIGN.md §10). `None` on single-market specs.
+    portfolio: Option<(MarketPortfolio, Vec<PriceSource>)>,
 }
 
 impl SpecCtx {
@@ -1056,6 +1245,53 @@ impl SpecCtx {
     ) -> Result<EngineResult> {
         let mut p = self.plans[idx].build_policy()?;
         run_policy_engine(p.as_mut(), self.bound, &self.prices, &self.params, rng)
+    }
+
+    /// True when this point runs across a `[[portfolio]]` — the regime
+    /// where no single-market closed form applies, so the planner must
+    /// treat every strategy point as heuristic (DESIGN.md §10).
+    pub fn is_portfolio(&self) -> bool {
+        self.portfolio.is_some()
+    }
+
+    /// Run one replicate of plan `idx` through the multi-market slot
+    /// loop ([`run_portfolio_engine`]) on this point's cached per-entry
+    /// price sources. Panics on single-market points; go through
+    /// [`SpecCtx::execute_point`] unless portfolio-ness is already
+    /// established.
+    pub fn execute_portfolio(
+        &self,
+        idx: usize,
+        rng: &mut Rng,
+    ) -> Result<EngineResult> {
+        let (port, sources) = self
+            .portfolio
+            .as_ref()
+            .expect("execute_portfolio on a single-market point");
+        run_portfolio_engine(
+            &self.plans[idx],
+            &PortfolioRun { port, sources },
+            self.bound,
+            &self.params,
+            rng,
+        )
+    }
+
+    /// The one scalar replicate dispatcher: portfolio points go through
+    /// the multi-market slot loop, everything else through the engine.
+    /// The sweep's per-strategy path and the planner's refinement stage
+    /// both call this, so a planner recommendation is re-verified by
+    /// exactly the simulation the sweep would run.
+    pub fn execute_point(
+        &self,
+        idx: usize,
+        rng: &mut Rng,
+    ) -> Result<EngineResult> {
+        if self.portfolio.is_some() {
+            self.execute_portfolio(idx, rng)
+        } else {
+            self.execute_engine(idx, rng)
+        }
     }
 
     /// Run one replicate *block* of plan `idx` through the batched
@@ -1140,6 +1376,46 @@ impl SpecScenario {
                 }
             }
         }
+        if let Some(entries) = &spec.portfolio {
+            // migrations are billed as checkpoint + restart, which the
+            // ledger cannot disentangle from a periodic-checkpoint or
+            // lost-work schedule running at the same time
+            ensure!(
+                spec.overhead.checkpoint_every_iters == 0
+                    && !spec.overhead.lost_work_on_preempt,
+                "[[portfolio]] specs bill migrations as checkpoint + \
+                 restart; overhead.checkpoint_every_iters and \
+                 overhead.lost_work_on_preempt are not supported"
+            );
+            if metrics.iter().any(|k| k.is_analytic_const()) {
+                bail!(
+                    "metrics bound_err/exp_cost/exp_time are single-market \
+                     closed forms; not available for [[portfolio]] specs"
+                );
+            }
+            // classic strategies are pinned to entry 0, so only its
+            // price process must support bidding
+            if matches!(entries[0].kind, MarketKind::Fixed { .. }) {
+                if let Some(e) =
+                    spec.strategies.iter().find(|e| kind_bids(&e.kind))
+                {
+                    bail!(
+                        "strategy '{}' bids on spot prices, but portfolio \
+                         entry '{}' (the home market) is fixed-price",
+                        e.label,
+                        entries[0].label
+                    );
+                }
+            }
+        } else if let Some(e) = spec.strategies.iter().find(|e| {
+            matches!(e.kind, StrategyKind::PortfolioMigrate { .. })
+        }) {
+            bail!(
+                "strategy '{}' (portfolio_migrate) places workers across \
+                 markets; the spec needs [[portfolio]] entries",
+                e.label
+            );
+        }
         if metrics.iter().any(|k| k.is_analytic_const()) {
             // in per-strategy mode every point's own plan feeds the
             // analytic constants, so every entry must have fixed bids;
@@ -1183,15 +1459,20 @@ impl SpecScenario {
         // that no point actually pairs. Degenerately huge grids (which
         // could never be swept anyway) fall back to per-value path/range
         // checks on a fresh scratch each, so --check stays fast.
-        let total = me.spec.markets.len() * me.grid.num_points();
-        for m in 0..me.spec.markets.len() {
+        let total = me.spec.market_dim() * me.grid.num_points();
+        for m in 0..me.spec.market_dim() {
             if total <= FULL_RESOLVE_LIMIT {
                 for g in 0..me.grid.num_points() {
                     me.resolve(m, g).with_context(|| {
-                        format!(
-                            "market '{}', grid point {g}",
-                            me.spec.markets[m].label
-                        )
+                        let site = if me.spec.portfolio.is_some() {
+                            "portfolio".to_string()
+                        } else {
+                            format!(
+                                "market '{}'",
+                                me.spec.markets[m].label
+                            )
+                        };
+                        format!("{site}, grid point {g}")
                     })?;
                 }
             } else {
@@ -1222,6 +1503,12 @@ impl SpecScenario {
     /// (`notice_rebid` / `elastic_fleet` / `deadline_aware`), neither
     /// of which the reference loop can model.
     pub fn with_reference_runner(mut self) -> Result<Self> {
+        ensure!(
+            self.spec.portfolio.is_none(),
+            "spec '{}' declares [[portfolio]]; the reference lockstep \
+             loop is single-market",
+            self.spec.name
+        );
         ensure!(
             !self.spec.overhead.enabled(),
             "spec '{}' enables [overhead]; the reference lockstep loop \
@@ -1264,14 +1551,25 @@ impl SpecScenario {
     }
 
     fn resolved_base(&self, market: usize) -> Resolved {
+        // a [[portfolio]] spec has no [market] lineup: entry 0 stands
+        // in as the resolved market, so the single-market plan and
+        // deadline derivation in `prepare` run unchanged
+        let market = match &self.spec.portfolio {
+            Some(entries) => MarketSpec {
+                label: entries[0].label.clone(),
+                kind: entries[0].kind.clone(),
+            },
+            None => self.spec.markets[market].clone(),
+        };
         Resolved {
             job: self.spec.job.clone(),
             runtime: self.spec.runtime,
             sched: self.spec.sched,
             overhead: self.spec.overhead,
             sgd: self.spec.sgd,
-            market: self.spec.markets[market].clone(),
+            market,
             strategies: self.spec.strategies.clone(),
+            portfolio: self.spec.portfolio.clone(),
         }
     }
 
@@ -1281,6 +1579,11 @@ impl SpecScenario {
         for (axis, v) in self.spec.axes.iter().zip(vals) {
             set_path(&mut r, &axis.path, v)
                 .with_context(|| format!("axis '{}'", axis.name))?;
+        }
+        // a portfolio.0.* axis may have morphed the home entry; the
+        // stand-in market must keep mirroring it
+        if let Some(entries) = &r.portfolio {
+            r.market.kind = entries[0].kind.clone();
         }
         r.validate()?;
         Ok(r)
@@ -1295,18 +1598,49 @@ impl Resolved {
     fn validate(&self) -> Result<()> {
         self.sgd.validate().map_err(anyhow::Error::msg)?;
         self.overhead.validate()?;
-        match &self.market.kind {
-            MarketKind::Uniform { lo, hi }
-            | MarketKind::Gaussian { lo, hi, .. } => {
+        fn check_kind(label: &str, kind: &MarketKind) -> Result<()> {
+            match kind {
+                MarketKind::Uniform { lo, hi }
+                | MarketKind::Gaussian { lo, hi, .. } => {
+                    ensure!(
+                        lo < hi,
+                        "market '{label}': need lo < hi, got [{lo}, {hi}]"
+                    );
+                }
+                MarketKind::Fixed { .. }
+                | MarketKind::TraceFile { .. }
+                | MarketKind::TraceStrict { .. }
+                | MarketKind::TraceGen { .. } => {}
+            }
+            Ok(())
+        }
+        check_kind(&self.market.label, &self.market.kind)?;
+        if let Some(entries) = &self.portfolio {
+            // axes can morph entries after parse-time validation
+            for e in entries {
+                check_kind(&e.label, &e.kind)?;
                 ensure!(
-                    lo < hi,
-                    "market '{}': need lo < hi, got [{lo}, {hi}]",
-                    self.market.label
+                    e.speed.is_finite() && e.speed > 0.0,
+                    "portfolio entry '{}': speed must be finite and > 0, \
+                     got {}",
+                    e.label,
+                    e.speed
+                );
+                ensure!(
+                    e.q.is_finite() && (0.0..1.0).contains(&e.q),
+                    "portfolio entry '{}': q must be in [0, 1), got {}",
+                    e.label,
+                    e.q
                 );
             }
-            MarketKind::Fixed { .. }
-            | MarketKind::TraceFile { .. }
-            | MarketKind::TraceGen { .. } => {}
+            ensure!(
+                self.overhead.checkpoint_every_iters == 0
+                    && !self.overhead.lost_work_on_preempt,
+                "[[portfolio]] points cannot enable \
+                 overhead.checkpoint_every_iters or \
+                 overhead.lost_work_on_preempt (migration billing would \
+                 double-count)"
+            );
         }
         for e in &self.strategies {
             let n_e = e.n.unwrap_or(self.job.n);
@@ -1355,8 +1689,27 @@ fn build_market(
         MarketKind::Fixed { price } => {
             (None, PriceSource::Fixed(*price), None)
         }
-        MarketKind::TraceFile { path, cdf_resolution } => {
-            let trace = SpotTrace::load(path)?;
+        MarketKind::TraceFile { path, cdf_resolution, .. } => {
+            // same path resolution as the parse-time content hash, so
+            // the bytes fingerprinted are the bytes replayed
+            let trace = SpotTrace::load(tracefile::resolve(path))?;
+            let cdf = trace.empirical_cdf(*cdf_resolution);
+            let horizon = trace.horizon();
+            (
+                Some(PriceModel::Empirical(cdf)),
+                PriceSource::Trace(trace),
+                Some(horizon),
+            )
+        }
+        MarketKind::TraceStrict {
+            path, cdf_resolution, resample_s, ..
+        } => {
+            let loaded = tracefile::load(path)?;
+            let trace = if *resample_s > 0.0 {
+                tracefile::resample(&loaded, *resample_s)?
+            } else {
+                loaded
+            };
             let cdf = trace.empirical_cdf(*cdf_resolution);
             let horizon = trace.horizon();
             (
@@ -1465,7 +1818,7 @@ impl Scenario for SpecScenario {
     type Ctx = SpecCtx;
 
     fn points(&self) -> usize {
-        self.spec.markets.len()
+        self.spec.market_dim()
             * self.grid.num_points()
             * self.strategy_count()
     }
@@ -1498,7 +1851,42 @@ impl Scenario for SpecScenario {
         let (m, g, s) = self.decode(point);
         let r = self.resolve(m, g)?; // validated: resolve() checks points
         let bound = ErrorBound::new(r.sgd);
-        let (price_model, prices, horizon) = build_market(&r.market.kind)?;
+        let (price_model, prices, mut horizon) =
+            build_market(&r.market.kind)?;
+
+        // [[portfolio]]: one price source per entry (entry 0 reuses the
+        // build above — r.market mirrors it), and the replay cap is the
+        // *shortest* recorded path so no entry runs past its trace
+        let portfolio = match &r.portfolio {
+            Some(entries) => {
+                let mut sources = Vec::with_capacity(entries.len());
+                sources.push(prices.clone());
+                for e in &entries[1..] {
+                    let (_, src, h) = build_market(&e.kind)
+                        .with_context(|| {
+                            format!("portfolio entry '{}'", e.label)
+                        })?;
+                    horizon = match (horizon, h) {
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                        (a, None) => a,
+                        (None, b) => b,
+                    };
+                    sources.push(src);
+                }
+                let port = MarketPortfolio::new(
+                    entries
+                        .iter()
+                        .map(|e| PortfolioEntry {
+                            label: e.label.clone(),
+                            speed: e.speed,
+                            q: e.q,
+                        })
+                        .collect(),
+                )?;
+                Some((port, sources))
+            }
+            None => None,
+        };
 
         let theta = match (r.job.theta, &price_model) {
             (Some(t), _) => t,
@@ -1629,6 +2017,7 @@ impl Scenario for SpecScenario {
             analytic_consts,
             needs_sim,
             pb: first_pb,
+            portfolio,
         })
     }
 
@@ -1652,7 +2041,7 @@ impl Scenario for SpecScenario {
         // policy-incapable; ledger fields come back zero)
         let execute = |idx: usize, rng: &mut Rng| -> Result<EngineResult> {
             match self.runner {
-                RunnerKind::Engine => ctx.execute_engine(idx, rng),
+                RunnerKind::Engine => ctx.execute_point(idx, rng),
                 RunnerKind::Reference => {
                     let mut s = ctx.plans[idx].build()?;
                     run_synthetic_reference(
@@ -1694,10 +2083,14 @@ impl Scenario for SpecScenario {
     ) -> Result<Vec<Vec<f64>>> {
         // The reference runner stays on the scalar oracle, and
         // const-only points consume no RNG either way — both take the
-        // default per-replicate loop. Everything else goes through the
-        // batched structure-of-arrays executor; bit-identical digests
-        // are pinned by tests/integration_batch.rs.
-        if !ctx.needs_sim || self.runner == RunnerKind::Reference {
+        // default per-replicate loop; portfolio points do too, because
+        // the SoA executor is single-market. Everything else goes
+        // through the batched structure-of-arrays executor;
+        // bit-identical digests are pinned by tests/integration_batch.rs.
+        if !ctx.needs_sim
+            || self.runner == RunnerKind::Reference
+            || ctx.portfolio.is_some()
+        {
             return rngs
                 .iter_mut()
                 .map(|rng| self.run(point, ctx, rng))
@@ -1775,7 +2168,54 @@ fn set_path(r: &mut Resolved, path: &str, v: f64) -> Result<()> {
             set_overhead(&mut r.overhead, path, *field, v)
         }
         ["sgd", field] => set_sgd(&mut r.sgd, path, *field, v),
-        ["market", field] => set_market(&mut r.market.kind, path, *field, v),
+        ["market", field] => {
+            ensure!(
+                r.portfolio.is_none(),
+                "axis path '{path}': [[portfolio]] specs sweep markets \
+                 via portfolio.<idx>.*"
+            );
+            set_market(&mut r.market.kind, path, *field, v)
+        }
+        ["portfolio", idx, field] => {
+            let entries = r.portfolio.as_mut().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "axis path '{path}' needs [[portfolio]] entries"
+                )
+            })?;
+            let i: usize = idx.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "axis path '{path}': '{idx}' is not a portfolio \
+                     entry index"
+                )
+            })?;
+            ensure!(
+                i < entries.len(),
+                "axis path '{path}': the portfolio has {} entries",
+                entries.len()
+            );
+            let e = &mut entries[i];
+            match *field {
+                "speed" => {
+                    ensure!(
+                        v.is_finite() && v > 0.0,
+                        "'{path}' must be finite and > 0, got {v}"
+                    );
+                    e.speed = v;
+                    Ok(())
+                }
+                "q" => {
+                    ensure!(
+                        (0.0..1.0).contains(&v),
+                        "'{path}' must be in [0, 1), got {v}"
+                    );
+                    e.q = v;
+                    Ok(())
+                }
+                // anything else addresses the entry's market kind,
+                // same grammar as market.*
+                _ => set_market(&mut e.kind, path, field, v),
+            }
+        }
         ["strategy", label, field] => {
             let e = r
                 .strategies
@@ -1790,7 +2230,8 @@ fn set_path(r: &mut Resolved, path: &str, v: f64) -> Result<()> {
         }
         _ => bail!(
             "unsupported axis path '{path}' (expected job.*, runtime.*, \
-             overhead.*, sgd.*, market.*, or strategy.<label>.*)"
+             overhead.*, sgd.*, market.*, portfolio.<idx>.*, or \
+             strategy.<label>.*)"
         ),
     }
 }
@@ -1945,6 +2386,22 @@ fn set_market(
             }
             _ => return Err(mismatch()),
         },
+        MarketKind::TraceStrict { cdf_resolution, resample_s, .. } => {
+            match field {
+                "cdf_resolution" => {
+                    ensure!(v > 0.0, "'{path}' must be > 0, got {v}");
+                    *cdf_resolution = v;
+                }
+                "resample_s" => {
+                    ensure!(
+                        v.is_finite() && v >= 0.0,
+                        "'{path}' must be >= 0, got {v}"
+                    );
+                    *resample_s = v;
+                }
+                _ => return Err(mismatch()),
+            }
+        }
         MarketKind::TraceGen { cfg, seed, cdf_resolution } => match field {
             "trace_seed" => *seed = as_count(path, v, 0)?,
             "cdf_resolution" => {
@@ -2048,6 +2505,13 @@ fn set_strategy(
             );
             *escalate_threshold = v;
         }
+        (StrategyKind::PortfolioMigrate { hysteresis }, "hysteresis") => {
+            ensure!(
+                v.is_finite() && (0.0..1.0).contains(&v),
+                "'{path}' must be in [0, 1), got {v}"
+            );
+            *hysteresis = v;
+        }
         _ => bail!(
             "axis path '{path}' does not match strategy '{}' (kind {})",
             e.label,
@@ -2120,7 +2584,11 @@ fn hash_sgd(h: &mut Fnv, s: &SgdHyper) {
 
 fn hash_market(h: &mut Fnv, m: &MarketSpec) {
     h.str(&m.label);
-    match &m.kind {
+    hash_market_kind(h, &m.kind);
+}
+
+fn hash_market_kind(h: &mut Fnv, kind: &MarketKind) {
+    match kind {
         MarketKind::Uniform { lo, hi } => {
             h.u64(0);
             h.f64(*lo);
@@ -2137,11 +2605,13 @@ fn hash_market(h: &mut Fnv, m: &MarketSpec) {
             h.u64(2);
             h.f64(*price);
         }
-        // the *path* is the identity: a warm cache assumes trace files
-        // do not mutate under a running daemon (DESIGN.md §9)
-        MarketKind::TraceFile { path, cdf_resolution } => {
+        // the file *content* is the identity, never the path string:
+        // two paths to identical bytes share cache entries, and an
+        // edited file is a different market even at the same path
+        // (DESIGN.md §9)
+        MarketKind::TraceFile { cdf_resolution, content_fnv, .. } => {
             h.u64(3);
-            h.str(path);
+            h.u64(*content_fnv);
             h.f64(*cdf_resolution);
         }
         MarketKind::TraceGen { cfg, seed, cdf_resolution } => {
@@ -2159,7 +2629,22 @@ fn hash_market(h: &mut Fnv, m: &MarketSpec) {
             h.u64(*seed);
             h.f64(*cdf_resolution);
         }
+        MarketKind::TraceStrict {
+            cdf_resolution, resample_s, content_fnv, ..
+        } => {
+            h.u64(5);
+            h.u64(*content_fnv);
+            h.f64(*cdf_resolution);
+            h.f64(*resample_s);
+        }
     }
+}
+
+fn hash_portfolio_entry(h: &mut Fnv, e: &PortfolioEntrySpec) {
+    h.str(&e.label);
+    hash_market_kind(h, &e.kind);
+    h.f64(e.speed);
+    h.f64(e.q);
 }
 
 fn hash_strategy_kind(h: &mut Fnv, k: &StrategyKind) {
@@ -2183,6 +2668,9 @@ fn hash_strategy_kind(h: &mut Fnv, k: &StrategyKind) {
         StrategyKind::ElasticFleet { budget_rate } => h.f64(*budget_rate),
         StrategyKind::DeadlineAware { escalate_threshold } => {
             h.f64(*escalate_threshold)
+        }
+        StrategyKind::PortfolioMigrate { hysteresis } => {
+            h.f64(*hysteresis)
         }
     }
 }
@@ -2232,6 +2720,15 @@ impl ScenarioSpec {
         for m in &self.markets {
             hash_market(&mut h, m);
         }
+        // appended only when present, so every pre-portfolio spec keeps
+        // its exact historical fingerprint
+        if let Some(entries) = &self.portfolio {
+            h.bytes(b"portfolio/v1");
+            h.u64(entries.len() as u64);
+            for e in entries {
+                hash_portfolio_entry(&mut h, e);
+            }
+        }
         h.u64(self.strategies.len() as u64);
         for e in &self.strategies {
             hash_entry(&mut h, e);
@@ -2277,6 +2774,15 @@ impl SpecScenario {
         hash_overhead(&mut h, &r.overhead);
         hash_sgd(&mut h, &r.sgd);
         hash_market(&mut h, &r.market);
+        // appended only when present — pre-portfolio artifact keys are
+        // untouched
+        if let Some(entries) = &r.portfolio {
+            h.bytes(b"portfolio/v1");
+            h.u64(entries.len() as u64);
+            for e in entries {
+                hash_portfolio_entry(&mut h, e);
+            }
+        }
         match self.spec.mode {
             SweepMode::PerStrategy => {
                 h.u64(0);

@@ -257,6 +257,12 @@ fn describe_plan(plan: &PlannedStrategy) {
                 bids.b1
             )
         }
+        PlannedStrategy::PortfolioMigrate { name, n, j, hysteresis } => {
+            println!(
+                "plan {name}: n={n}  J={j}  migrate on effective price \
+                 (hysteresis {hysteresis})"
+            )
+        }
     }
 }
 
@@ -616,7 +622,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.bool("check") {
         // the one-line audit trail CI greps for
         let combos =
-            scenario.spec().markets.len() * scenario.grid().num_points();
+            scenario.spec().market_dim() * scenario.grid().num_points();
         println!(
             "check OK: 1 spec validated, {combos} grid points {} \
              ({name}: {} sweep points x {} metrics, {} strategies, \
@@ -625,7 +631,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             scenario.points(),
             scenario.metrics().len(),
             scenario.spec().strategies.len(),
-            scenario.spec().markets.len()
+            scenario.spec().market_dim()
         );
         return Ok(());
     }
@@ -725,7 +731,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         // run_plan; build it here only for the check summary
         let scenario = opt::build_scenario(&plan)?;
         let combos =
-            scenario.spec().markets.len() * scenario.grid().num_points();
+            scenario.spec().market_dim() * scenario.grid().num_points();
         println!(
             "check OK: 1 plan spec validated, {} lattice points {} \
              ({}: {} strategies x {} grid x {} market(s); goal \
@@ -735,7 +741,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             scenario.spec().name,
             scenario.spec().strategies.len(),
             scenario.grid().num_points(),
-            scenario.spec().markets.len(),
+            scenario.spec().market_dim(),
             plan.objective.goal.name(),
             plan.search.ladder
         );

@@ -12,14 +12,22 @@
 //!   `DescribeSpotPriceHistory` output, plus a regime-switching synthetic
 //!   trace generator (the offline stand-in for real c5.xlarge history);
 //! * [`bidding`] — bid vectors, persistent-request semantics and the
-//!   active-worker-count resolution used by the scheduler.
+//!   active-worker-count resolution used by the scheduler;
+//! * [`portfolio`] — multi-market portfolios (per-entry price process,
+//!   preemption rate, speed multiplier) and the effective-price
+//!   migration rule (DESIGN.md §10);
+//! * [`tracefile`] — the strict CSV/JSON spot-history loader behind the
+//!   `tracefile` market kind (content-hashed identity, grid resampling).
 
 pub mod bidding;
 pub mod cdf;
+pub mod portfolio;
 pub mod process;
 pub mod trace;
+pub mod tracefile;
 
 pub use bidding::{BidVector, WorkerBid};
 pub use cdf::EmpiricalCdf;
+pub use portfolio::{MarketPortfolio, MigrationRule, PortfolioEntry};
 pub use process::{PriceDist, PriceModel};
 pub use trace::{SpotTrace, TraceGenConfig};

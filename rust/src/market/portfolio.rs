@@ -1,0 +1,236 @@
+//! Multi-market portfolios: named market entries with their own price
+//! process, preemption rate and per-worker speed (DESIGN.md §10).
+//!
+//! The paper models one spot market with identical workers; the
+//! production regime (Parcae, "Speeding up Deep Learning with
+//! Transient Servers") is a *portfolio* of instance types / zones that
+//! differ in price level, interruption rate and hardware speed. This
+//! module holds the market-layer core of that model — entry metadata,
+//! validation, effective-price comparison and the migration rule — and
+//! stays independent of the simulation layer: price *processes* are
+//! attached per entry by `exp::spec` (which builds a `sim::PriceSource`
+//! per entry), and the slot loop that consumes all of this lives in
+//! `exp::run_portfolio_engine`.
+//!
+//! The unit everything compares on is **effective price**
+//! `price / speed`: dollars per unit of single-market-equivalent work.
+//! A 1.6x-speed instance at $0.12 (effective $0.075) beats a 1.0x
+//! instance at $0.08.
+
+use anyhow::{ensure, Result};
+
+/// One market in a portfolio: a label (unique within the portfolio), a
+/// per-worker speed multiplier applied to the iteration runtime, and a
+/// market-level interruption probability `q` drawn once per slot (the
+/// whole fleet in this market loses the slot when it fires).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PortfolioEntry {
+    pub label: String,
+    /// per-iteration runtime is divided by this (1.0 = paper baseline)
+    pub speed: f64,
+    /// per-slot market-level interruption probability, in [0, 1)
+    pub q: f64,
+}
+
+/// A validated, ordered set of [`PortfolioEntry`]s. Order is
+/// load-bearing: entry 0 is the "home" market classic single-market
+/// strategies are pinned to, and the per-market RNG stream index
+/// (DESIGN.md §10) is the entry's position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MarketPortfolio {
+    pub entries: Vec<PortfolioEntry>,
+}
+
+impl MarketPortfolio {
+    pub fn new(entries: Vec<PortfolioEntry>) -> Result<Self> {
+        let p = MarketPortfolio { entries };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            !self.entries.is_empty(),
+            "a portfolio needs at least one [[portfolio]] entry"
+        );
+        for (i, e) in self.entries.iter().enumerate() {
+            ensure!(
+                !e.label.is_empty(),
+                "portfolio entry {i}: empty label"
+            );
+            ensure!(
+                e.speed.is_finite() && e.speed > 0.0,
+                "portfolio entry '{}': speed must be finite and > 0, \
+                 got {}",
+                e.label,
+                e.speed
+            );
+            ensure!(
+                e.q.is_finite() && (0.0..1.0).contains(&e.q),
+                "portfolio entry '{}': q must be in [0, 1), got {}",
+                e.label,
+                e.q
+            );
+            for other in &self.entries[..i] {
+                ensure!(
+                    other.label != e.label,
+                    "duplicate portfolio label '{}'",
+                    e.label
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Dollars per unit of single-market-equivalent work for entry `m`
+    /// at spot price `price`.
+    pub fn effective_price(&self, m: usize, price: f64) -> f64 {
+        price / self.entries[m].speed
+    }
+
+    /// The cheapest *available* entry by effective price; ties break to
+    /// the lowest index (deterministic, so digests are stable when two
+    /// entries quote the same effective price). `None` when every
+    /// market is interrupting this slot.
+    pub fn best_entry(
+        &self,
+        prices: &[f64],
+        available: &[bool],
+    ) -> Option<usize> {
+        debug_assert_eq!(prices.len(), self.entries.len());
+        debug_assert_eq!(available.len(), self.entries.len());
+        let mut best: Option<(usize, f64)> = None;
+        for m in 0..self.entries.len() {
+            if !available[m] {
+                continue;
+            }
+            let eff = self.effective_price(m, prices[m]);
+            if best.is_none_or(|(_, b)| eff < b) {
+                best = Some((m, eff));
+            }
+        }
+        best.map(|(m, _)| m)
+    }
+}
+
+/// The `portfolio_migrate` placement rule: follow the cheapest
+/// effective price, with hysteresis so the fleet does not thrash
+/// between near-equal markets (each migration is billed as a
+/// checkpoint + restart via `[overhead]`, so thrash is pure loss).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationRule {
+    /// migrate only when the best entry's effective price undercuts
+    /// the current one by more than this fraction, in [0, 1)
+    pub hysteresis: f64,
+}
+
+impl MigrationRule {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.hysteresis.is_finite()
+                && (0.0..1.0).contains(&self.hysteresis),
+            "portfolio_migrate hysteresis must be in [0, 1), got {}",
+            self.hysteresis
+        );
+        Ok(())
+    }
+
+    /// Where the fleet should move this slot, if anywhere. `current`'s
+    /// own availability matters: an interrupting home market forces a
+    /// move to the best available entry regardless of hysteresis.
+    pub fn target(
+        &self,
+        port: &MarketPortfolio,
+        current: usize,
+        prices: &[f64],
+        available: &[bool],
+    ) -> Option<usize> {
+        let best = port.best_entry(prices, available)?;
+        if best == current {
+            return None;
+        }
+        if !available[current] {
+            return Some(best);
+        }
+        let cur_eff = port.effective_price(current, prices[current]);
+        let best_eff = port.effective_price(best, prices[best]);
+        (best_eff < cur_eff * (1.0 - self.hysteresis)).then_some(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn port() -> MarketPortfolio {
+        MarketPortfolio::new(vec![
+            PortfolioEntry { label: "cheap".into(), speed: 1.0, q: 0.1 },
+            PortfolioEntry { label: "fast".into(), speed: 2.0, q: 0.05 },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn validation_rejects_bad_entries() {
+        assert!(MarketPortfolio::new(vec![]).is_err());
+        let dup = MarketPortfolio::new(vec![
+            PortfolioEntry { label: "a".into(), speed: 1.0, q: 0.0 },
+            PortfolioEntry { label: "a".into(), speed: 1.5, q: 0.0 },
+        ]);
+        assert!(dup.unwrap_err().to_string().contains("duplicate"));
+        for (speed, q) in
+            [(0.0, 0.0), (-1.0, 0.0), (f64::NAN, 0.0), (1.0, 1.0), (1.0, -0.1)]
+        {
+            let e = PortfolioEntry { label: "a".into(), speed, q };
+            assert!(
+                MarketPortfolio::new(vec![e]).is_err(),
+                "speed={speed} q={q} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn best_entry_compares_effective_price_with_index_tiebreak() {
+        let p = port();
+        // fast at 0.15 is effectively 0.075 < cheap's 0.08
+        assert_eq!(p.best_entry(&[0.08, 0.15], &[true, true]), Some(1));
+        // exact effective tie (0.08 vs 0.16/2): lowest index wins
+        assert_eq!(p.best_entry(&[0.08, 0.16], &[true, true]), Some(0));
+        // availability masks entries out
+        assert_eq!(p.best_entry(&[0.08, 0.15], &[true, false]), Some(0));
+        assert_eq!(p.best_entry(&[0.08, 0.15], &[false, false]), None);
+    }
+
+    #[test]
+    fn migration_rule_applies_hysteresis() {
+        let p = port();
+        let rule = MigrationRule { hysteresis: 0.1 };
+        rule.validate().unwrap();
+        // best (fast: eff 0.075) does not undercut cheap's 0.08 by 10%
+        assert_eq!(rule.target(&p, 0, &[0.08, 0.15], &[true, true]), None);
+        // eff 0.06 < 0.08 * 0.9: migrate
+        assert_eq!(
+            rule.target(&p, 0, &[0.08, 0.12], &[true, true]),
+            Some(1)
+        );
+        // already on the best entry: stay
+        assert_eq!(rule.target(&p, 1, &[0.08, 0.12], &[true, true]), None);
+        // an interrupting current market forces the move
+        assert_eq!(
+            rule.target(&p, 0, &[0.08, 0.15], &[false, true]),
+            Some(1)
+        );
+        // ... unless nowhere is available
+        assert_eq!(rule.target(&p, 0, &[0.08, 0.15], &[false, false]), None);
+        assert!(MigrationRule { hysteresis: 1.0 }.validate().is_err());
+        assert!(MigrationRule { hysteresis: -0.1 }.validate().is_err());
+    }
+}

@@ -1,0 +1,337 @@
+//! Strict spot-price-history ingestion (`kind = "tracefile"`).
+//!
+//! [`SpotTrace::parse_csv`] is deliberately lenient — it sorts, dedups
+//! and keeps whatever numeric columns it finds, which is right for
+//! ad-hoc `--trace` files but wrong for *shipped* presets: a fixture
+//! that silently reorders or drops rows would change results without
+//! failing `--check`. This module is the strict counterpart used by the
+//! `tracefile` market kind (DESIGN.md §10):
+//!
+//! * CSV (`timestamp,price` header, or headerless two-column) and JSON
+//!   (an array of `{"timestamp": t, "price": p}` objects) are accepted;
+//! * unknown columns/keys are rejected **by name**, never ignored;
+//! * timestamps must be strictly increasing — the loader refuses to
+//!   sort for you;
+//! * prices must be finite and strictly positive (a negative or zero
+//!   spot price is always a data error);
+//! * an empty file (or one with a header and no rows) is an error.
+//!
+//! Times are shifted so the trace starts at 0 (EC2 histories carry
+//! epoch timestamps; the engine clock starts at 0), and an optional
+//! `resample_s` interval re-quantises the loaded path onto the engine's
+//! price-revision grid: revisions at `0, dt, 2dt, ...` with the price
+//! the raw trace showed at each grid time (piecewise-constant,
+//! right-open — the same read rule [`SpotTrace::price_at`] applies).
+//!
+//! Identity is *content*, not path: [`content_fnv`] hashes the raw
+//! bytes, and the spec fingerprints (DESIGN.md §9) absorb that hash, so
+//! editing a fixture on disk invalidates every serve-daemon cache entry
+//! that was computed from the old bytes.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::fnv::Fnv;
+use crate::util::json::JsonValue;
+
+use super::trace::SpotTrace;
+
+/// Resolve a trace path as the spec wrote it: tried verbatim first
+/// (relative to the current directory — the repo root in CI), then
+/// relative to the repository root the crate was built from, so
+/// `cargo test` (whose working directory is `rust/`) finds shipped
+/// fixtures like `examples/traces/*.csv` too.
+pub fn resolve(path: &str) -> PathBuf {
+    let p = Path::new(path);
+    if p.exists() || !p.is_relative() {
+        return p.to_path_buf();
+    }
+    if let Some(root) = Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        let fallback = root.join(p);
+        if fallback.exists() {
+            return fallback;
+        }
+    }
+    p.to_path_buf()
+}
+
+/// FNV-1a over the file's raw bytes — the identity the scenario/point
+/// fingerprints use for `trace`/`tracefile` markets (content, not
+/// path: two paths to identical bytes fingerprint the same, and an
+/// edited file fingerprints differently).
+pub fn content_fnv(path: &str) -> Result<u64> {
+    let resolved = resolve(path);
+    let bytes = fs::read(&resolved).with_context(|| {
+        format!("reading trace file {}", resolved.display())
+    })?;
+    let mut h = Fnv::new();
+    h.bytes(&bytes);
+    Ok(h.finish())
+}
+
+/// Load a strict trace file. Format is sniffed from the content: a
+/// leading `[` means JSON, anything else is CSV.
+pub fn load(path: &str) -> Result<SpotTrace> {
+    let resolved = resolve(path);
+    let text = fs::read_to_string(&resolved).with_context(|| {
+        format!("reading trace file {}", resolved.display())
+    })?;
+    let parsed = if text.trim_start().starts_with('[') {
+        parse_json(&text)
+    } else {
+        parse_csv(&text)
+    };
+    parsed.with_context(|| format!("trace file {}", resolved.display()))
+}
+
+/// Strict CSV: an optional `timestamp,price` header (exactly those
+/// names, in that order), then two-column numeric rows.
+pub fn parse_csv(text: &str) -> Result<SpotTrace> {
+    let mut rows: Vec<(f64, f64)> = Vec::new();
+    let mut saw_header = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let at = lineno + 1;
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        // a header is any line with a non-numeric first field; it must
+        // name exactly the two supported columns
+        if rows.is_empty()
+            && !saw_header
+            && fields.first().is_some_and(|f| f.parse::<f64>().is_err())
+        {
+            ensure!(
+                fields == ["timestamp", "price"],
+                "line {at}: unknown column(s) {:?} (the strict loader \
+                 accepts exactly 'timestamp,price')",
+                fields
+                    .iter()
+                    .filter(|f| !matches!(**f, "timestamp" | "price"))
+                    .collect::<Vec<_>>(),
+            );
+            saw_header = true;
+            continue;
+        }
+        ensure!(
+            fields.len() == 2,
+            "line {at}: expected 2 columns (timestamp,price), got {}",
+            fields.len()
+        );
+        let t: f64 = fields[0].parse().map_err(|_| {
+            anyhow::anyhow!("line {at}: bad timestamp '{}'", fields[0])
+        })?;
+        let p: f64 = fields[1].parse().map_err(|_| {
+            anyhow::anyhow!("line {at}: bad price '{}'", fields[1])
+        })?;
+        check_row(t, p, at)?;
+        if let Some((prev, _)) = rows.last() {
+            ensure!(
+                t > *prev,
+                "line {at}: timestamps not strictly increasing \
+                 ({prev} then {t}); the strict loader does not sort"
+            );
+        }
+        rows.push((t, p));
+    }
+    finish(rows)
+}
+
+/// Strict JSON: a top-level array of objects, each with exactly the
+/// keys `timestamp` and `price` (numbers).
+pub fn parse_json(text: &str) -> Result<SpotTrace> {
+    let v = JsonValue::parse(text)?;
+    let JsonValue::Arr(items) = v else {
+        bail!("expected a top-level JSON array of {{timestamp, price}}");
+    };
+    let mut rows: Vec<(f64, f64)> = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let at = i + 1;
+        let JsonValue::Obj(fields) = item else {
+            bail!("entry {at}: expected an object with timestamp/price");
+        };
+        for (k, _) in fields {
+            ensure!(
+                matches!(k.as_str(), "timestamp" | "price"),
+                "entry {at}: unknown key '{k}' (the strict loader \
+                 accepts exactly 'timestamp' and 'price')"
+            );
+        }
+        let t = item.get("timestamp").and_then(JsonValue::as_f64);
+        let p = item.get("price").and_then(JsonValue::as_f64);
+        let (Some(t), Some(p)) = (t, p) else {
+            bail!("entry {at}: needs numeric 'timestamp' and 'price'");
+        };
+        check_row(t, p, at)?;
+        if let Some((prev, _)) = rows.last() {
+            ensure!(
+                t > *prev,
+                "entry {at}: timestamps not strictly increasing \
+                 ({prev} then {t}); the strict loader does not sort"
+            );
+        }
+        rows.push((t, p));
+    }
+    finish(rows)
+}
+
+fn check_row(t: f64, p: f64, at: usize) -> Result<()> {
+    ensure!(t.is_finite(), "row {at}: non-finite timestamp {t}");
+    ensure!(
+        p.is_finite() && p > 0.0,
+        "row {at}: price must be finite and > 0, got {p} \
+         (negative/zero spot prices are a data error)"
+    );
+    Ok(())
+}
+
+fn finish(rows: Vec<(f64, f64)>) -> Result<SpotTrace> {
+    ensure!(
+        !rows.is_empty(),
+        "empty trace file (no data rows): a tracefile market needs at \
+         least one timestamp,price row"
+    );
+    // shift to the engine clock: the trace starts at t = 0
+    let t0 = rows[0].0;
+    let times = rows.iter().map(|(t, _)| t - t0).collect();
+    let prices = rows.iter().map(|(_, p)| *p).collect();
+    SpotTrace::new(times, prices)
+}
+
+/// Re-quantise a trace onto the engine's price-revision grid: one
+/// revision every `interval_s` seconds from 0 to the last grid point at
+/// or before the raw horizon, each carrying the price the raw trace
+/// showed at that instant. The resampled horizon is that last grid
+/// point (the deadline cap follows it).
+pub fn resample(trace: &SpotTrace, interval_s: f64) -> Result<SpotTrace> {
+    ensure!(
+        interval_s.is_finite() && interval_s > 0.0,
+        "resample_s must be finite and > 0, got {interval_s}"
+    );
+    let steps = (trace.horizon() / interval_s).floor() as u64;
+    let times: Vec<f64> =
+        (0..=steps).map(|k| k as f64 * interval_s).collect();
+    let prices: Vec<f64> =
+        times.iter().map(|&t| trace.price_at(t)).collect();
+    SpotTrace::new(times, prices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV_FIXTURE: &str =
+        include_str!("../../../examples/traces/ec2_c5xlarge_uswest2a.csv");
+    const JSON_FIXTURE: &str =
+        include_str!("../../../examples/traces/ec2_m5large_uswest2c.json");
+
+    #[test]
+    fn shipped_csv_fixture_parses_and_is_zero_based() {
+        let t = parse_csv(CSV_FIXTURE).unwrap();
+        assert_eq!(t.times[0], 0.0);
+        assert!(t.times.len() >= 24, "fixture has a real history");
+        assert!(t.horizon() > 0.0);
+        assert!(t.prices.iter().all(|p| *p > 0.0));
+    }
+
+    #[test]
+    fn shipped_json_fixture_parses_and_is_zero_based() {
+        let t = parse_json(JSON_FIXTURE).unwrap();
+        assert_eq!(t.times[0], 0.0);
+        assert!(t.times.len() >= 24, "fixture has a real history");
+        assert!(t.prices.iter().all(|p| *p > 0.0));
+    }
+
+    #[test]
+    fn headerless_csv_is_accepted() {
+        let t = parse_csv("100,0.5\n200,0.6\n").unwrap();
+        assert_eq!(t.times, vec![0.0, 100.0]);
+        assert_eq!(t.prices, vec![0.5, 0.6]);
+    }
+
+    #[test]
+    fn unsorted_timestamps_are_rejected_not_sorted() {
+        let err = parse_csv("timestamp,price\n200,0.5\n100,0.6\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not strictly increasing"), "{err}");
+        // ... unlike the lenient SpotTrace::parse_csv, which sorts
+        assert!(SpotTrace::parse_csv("t,p\n200,0.5\n100,0.6\n").is_ok());
+        let err = parse_json(
+            "[{\"timestamp\": 2, \"price\": 0.5}, \
+             {\"timestamp\": 1, \"price\": 0.6}]",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("not strictly increasing"), "{err}");
+        // equal timestamps are "not strictly increasing" too
+        assert!(parse_csv("100,0.5\n100,0.6\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_zero_prices_are_rejected() {
+        let err =
+            parse_csv("100,-0.5\n").unwrap_err().to_string();
+        assert!(err.contains("got -0.5"), "{err}");
+        assert!(parse_csv("100,0\n").is_err());
+        assert!(
+            parse_json("[{\"timestamp\": 1, \"price\": -1}]").is_err()
+        );
+    }
+
+    #[test]
+    fn empty_files_are_rejected() {
+        for text in ["", "\n\n", "timestamp,price\n"] {
+            let err = parse_csv(text).unwrap_err().to_string();
+            assert!(err.contains("empty trace file"), "{text:?}: {err}");
+        }
+        assert!(parse_json("[]").unwrap_err().to_string().contains("empty"));
+    }
+
+    #[test]
+    fn unknown_columns_are_rejected_by_name() {
+        let err = parse_csv("timestamp,price,zone\n100,0.5,us\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("zone"), "names the column: {err}");
+        let err = parse_csv("time,price\n100,0.5\n").unwrap_err().to_string();
+        assert!(err.contains("time"), "names the column: {err}");
+        let err = parse_json(
+            "[{\"timestamp\": 1, \"price\": 0.5, \"az\": \"a\"}]",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("az"), "names the key: {err}");
+    }
+
+    #[test]
+    fn resample_quantises_onto_the_revision_grid() {
+        let t = parse_csv("0,0.5\n90,0.9\n250,0.7\n").unwrap();
+        let r = resample(&t, 100.0).unwrap();
+        assert_eq!(r.times, vec![0.0, 100.0, 200.0]);
+        // right-open piecewise-constant reads at grid instants
+        assert_eq!(r.prices, vec![0.5, 0.9, 0.9]);
+        assert!(resample(&t, 0.0).is_err());
+        assert!(resample(&t, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn content_fnv_is_content_not_path() {
+        let dir = std::env::temp_dir();
+        let a = dir.join("vsgd_tracefile_test_a.csv");
+        let b = dir.join("vsgd_tracefile_test_b.csv");
+        std::fs::write(&a, "100,0.5\n200,0.6\n").unwrap();
+        std::fs::write(&b, "100,0.5\n200,0.6\n").unwrap();
+        let ha = content_fnv(a.to_str().unwrap()).unwrap();
+        let hb = content_fnv(b.to_str().unwrap()).unwrap();
+        assert_eq!(ha, hb, "same bytes, different paths: same identity");
+        std::fs::write(&b, "100,0.5\n200,0.7\n").unwrap();
+        let hb2 = content_fnv(b.to_str().unwrap()).unwrap();
+        assert_ne!(ha, hb2, "edited bytes: different identity");
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+}

@@ -327,7 +327,7 @@ impl Scenario for CandidateScenario<'_> {
         ctx: &Arc<SpecCtx>,
         rng: &mut Rng,
     ) -> Result<Vec<f64>> {
-        let r = ctx.execute_engine(0, rng)?;
+        let r = ctx.execute_point(0, rng)?;
         Ok(vec![r.cost, r.elapsed, r.final_error, r.iters as f64])
     }
 }
@@ -438,19 +438,25 @@ pub fn run_plan_cached(
         run_indexed(cfg.threads, uniq.len(), |i| {
             let ctx =
                 cache.get_or_prepare(&scenario, candidates[uniq[i]].point)?;
-            let surface = admissible_surface(
-                &ctx.plans()[0],
-                ctx.bid_problem(),
-                ctx.bound(),
-                ctx.run_params().runtime,
-                ctx.run_params().idle_step,
-                ctx.iid_prices(),
-                // the *resolved* per-point overhead: an `overhead.*`
-                // axis can switch overhead on for some lattice points
-                // even when the base spec's table is absent, and those
-                // points must be heuristic (never pruned)
-                ctx.run_params().overhead.enabled(),
-            );
+            // [[portfolio]] points have no single-market closed form:
+            // every candidate is heuristic, never analytically pruned
+            let surface = if ctx.is_portfolio() {
+                None
+            } else {
+                admissible_surface(
+                    &ctx.plans()[0],
+                    ctx.bid_problem(),
+                    ctx.bound(),
+                    ctx.run_params().runtime,
+                    ctx.run_params().idle_step,
+                    ctx.iid_prices(),
+                    // the *resolved* per-point overhead: an `overhead.*`
+                    // axis can switch overhead on for some lattice points
+                    // even when the base spec's table is absent, and those
+                    // points must be heuristic (never pruned)
+                    ctx.run_params().overhead.enabled(),
+                )
+            };
             Ok((ctx, surface))
         });
     // cache the prepared contexts: the refinement rungs reuse them, so

@@ -278,7 +278,7 @@ mod tests {
     fn check_validates_every_shipped_preset() {
         let line = check("127.0.0.1:2020").unwrap();
         assert!(line.starts_with("check OK:"), "{line}");
-        assert!(line.contains("7 sweep presets"), "{line}");
+        assert!(line.contains("9 sweep presets"), "{line}");
         assert!(line.contains("1 planner preset"), "{line}");
         // an unresolvable listen address fails loudly
         assert!(check("not an address").is_err());

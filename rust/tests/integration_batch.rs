@@ -18,10 +18,14 @@ use volatile_sgd::sweep::{run_sweep, run_sweep_batched, SweepConfig};
 /// identical spec.
 fn reduced(name: &str, j_cap: u64) -> SpecScenario {
     let mut spec = presets::spec(name).unwrap();
-    if spec
-        .markets
-        .iter()
-        .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
+    // `.all()` on an empty lineup is vacuously true, and portfolio
+    // specs keep `markets` empty — spell the guard out so their
+    // bid-coupled entries are never j-capped either
+    if !spec.markets.is_empty()
+        && spec
+            .markets
+            .iter()
+            .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
     {
         spec.job.j = spec.job.j.min(j_cap);
     }

@@ -1,0 +1,446 @@
+//! Portfolio subsystem integration contract (DESIGN.md §10).
+//!
+//! Three guarantees are pinned here:
+//!
+//! * **Degenerate compatibility** — every shipped single-`[market]`
+//!   preset, re-declared as a one-entry `[[portfolio]]`, parses to the
+//!   very same spec (same fingerprint) and sweeps to the bit-identical
+//!   digest at 1 and 8 threads. Adopting the portfolio schema can never
+//!   move an existing result.
+//! * **Thread invariance** — the portfolio executor's per-market RNG
+//!   stream contract holds: `portfolio_grid` and `spot_replay` produce
+//!   equal digests at 1 and 8 threads.
+//! * **Content-addressed trace identity** — spec fingerprints hash
+//!   trace-file *bytes*, never the path string, and the strict loader's
+//!   error paths reject bad fixtures at parse (`--check`) time.
+
+use std::fs;
+use std::path::PathBuf;
+
+use volatile_sgd::exp::{presets, ScenarioSpec, SpecScenario};
+use volatile_sgd::opt::{self, PlannerConfig};
+use volatile_sgd::sweep::{run_sweep, SweepConfig};
+
+/// Shrink a parsed spec for test speed without touching anything that
+/// feeds the portfolio semantics under test: the j cap follows the
+/// `integration_batch` rule (only fixed-price markets, whose plans
+/// have no Theorem-2/3 deadline coupling). Applied identically to
+/// both sides of every comparison.
+fn reduce(spec: &mut ScenarioSpec) {
+    use volatile_sgd::exp::spec::MarketKind;
+    if !spec.markets.is_empty()
+        && spec
+            .markets
+            .iter()
+            .all(|m| matches!(m.kind, MarketKind::Fixed { .. }))
+    {
+        spec.job.j = spec.job.j.min(600);
+    }
+    for ax in &mut spec.axes {
+        if ax.values.len() > 2 {
+            ax.values.truncate(2);
+        }
+    }
+}
+
+fn digest(sc: &SpecScenario, threads: usize) -> u64 {
+    run_sweep(sc, &SweepConfig { replicates: 2, seed: 7, threads })
+        .unwrap()
+        .digest()
+}
+
+/// Every shipped preset with a single `[market]` table, rewritten as a
+/// one-entry `[[portfolio]]`: same fingerprint, same sweep digest at 1
+/// and 8 threads. The rewrite is textual (`[market]` ->
+/// `[[portfolio]]`), so `market.kind` becomes `portfolio.0.kind` and
+/// the parse-time degenerate lowering must reconstruct the classic
+/// lineup — label included — bit for bit.
+#[test]
+fn degenerate_portfolio_matches_every_single_market_preset() {
+    let mut covered = 0;
+    for name in presets::PRESET_NAMES {
+        let toml = presets::preset_toml(name).unwrap();
+        if !toml.contains("\n[market]\n") {
+            continue; // markets lineup or portfolio preset
+        }
+        covered += 1;
+        let ported = toml.replace("\n[market]\n", "\n[[portfolio]]\n");
+        let mut a = ScenarioSpec::from_str(toml).unwrap();
+        let mut b = ScenarioSpec::from_str(&ported)
+            .unwrap_or_else(|e| panic!("{name} as portfolio: {e:#}"));
+        assert!(
+            b.portfolio.is_none(),
+            "{name}: a default one-entry portfolio must lower to the \
+             classic markets lineup"
+        );
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "{name}: degenerate portfolio changes the spec fingerprint"
+        );
+        reduce(&mut a);
+        reduce(&mut b);
+        let a = SpecScenario::new(a).unwrap();
+        let b = SpecScenario::new(b).unwrap();
+        for threads in [1, 8] {
+            assert_eq!(
+                digest(&a, threads),
+                digest(&b, threads),
+                "{name}: degenerate portfolio digest diverges at \
+                 {threads} threads"
+            );
+        }
+    }
+    assert!(covered >= 3, "expected several single-[market] presets");
+}
+
+/// The two shipped portfolio-era presets run end to end and their
+/// digests are thread-invariant (the RNG-stream-per-market contract).
+#[test]
+fn portfolio_presets_are_thread_invariant() {
+    for name in ["portfolio_grid", "spot_replay"] {
+        let mut spec = presets::spec(name).unwrap();
+        reduce(&mut spec);
+        let sc = SpecScenario::new(spec).unwrap();
+        assert_eq!(
+            digest(&sc, 1),
+            digest(&sc, 8),
+            "{name}: digest is thread-dependent"
+        );
+    }
+}
+
+/// The migrate strategy actually migrates on the shipped grid: its
+/// checkpoint ledger is non-zero (each move bills checkpoint_cost_s),
+/// while the pinned one_bid baseline's stays zero.
+#[test]
+fn portfolio_migration_is_billed_through_the_overhead_ledger() {
+    let sc = presets::scenario("portfolio_grid").unwrap();
+    let results = run_sweep(
+        &sc,
+        &SweepConfig { replicates: 2, seed: 7, threads: 2 },
+    )
+    .unwrap();
+    let metrics = sc.spec().metrics.clone();
+    let ck = metrics.iter().position(|m| m == "checkpoint_time").unwrap();
+    let mut migrate_ck = 0.0;
+    let mut one_bid_ck = 0.0;
+    for p in &results.points {
+        let mean = p.stats[ck].mean();
+        if p.label.ends_with("/migrate") {
+            migrate_ck += mean;
+        } else {
+            one_bid_ck += mean;
+        }
+    }
+    assert!(
+        migrate_ck > 0.0,
+        "migrate never moved: checkpoint_time sum is {migrate_ck}"
+    );
+    assert_eq!(
+        one_bid_ck, 0.0,
+        "the single-market baseline must never checkpoint"
+    );
+}
+
+/// `spot_replay` sweeps a committed fixture end to end with zero
+/// scenario Rust: point space, labels and the replay point's series
+/// all come straight from the TOML + CSV pair.
+#[test]
+fn spot_replay_runs_from_the_committed_fixture() {
+    let sc = presets::scenario("spot_replay").unwrap();
+    assert_eq!(sc.points(), 4);
+    let results = run_sweep(
+        &sc,
+        &SweepConfig { replicates: 2, seed: 7, threads: 2 },
+    )
+    .unwrap();
+    let labels: Vec<&str> =
+        results.points.iter().map(|p| p.label.as_str()).collect();
+    assert_eq!(
+        labels,
+        vec![
+            "replay/one_bid",
+            "replay/no_interruption",
+            "synthetic/one_bid",
+            "synthetic/no_interruption",
+        ]
+    );
+    // every point simulated to a positive cost on finite iterations
+    for p in &results.points {
+        let cost = p.stats[0].mean(); // total_cost is the first metric
+        assert!(cost > 0.0, "{}: no cost accrued", p.label);
+    }
+}
+
+// ---------------------------------------------------------------
+// Content-addressed trace identity (DESIGN.md §9 regression)
+// ---------------------------------------------------------------
+
+fn tracefile_spec(path: &str) -> String {
+    format!(
+        r#"
+name = "trace_id"
+strategies = ["one_bid"]
+metrics = ["total_cost"]
+[job]
+n = 2
+j = 200
+[market]
+kind = "tracefile"
+path = "{path}"
+cdf_resolution = 100.0
+"#
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+/// Two paths to identical bytes fingerprint the same; editing the
+/// bytes behind one path changes its fingerprint. This is the serve
+/// daemon's cache-poisoning guard: a stale entry can never be served
+/// for a mutated trace file.
+#[test]
+fn spec_fingerprint_hashes_trace_content_not_path() {
+    let a = tmp("vsgd_port_id_a.csv");
+    let b = tmp("vsgd_port_id_b.csv");
+    fs::write(&a, "100,0.5\n200,0.6\n300,0.4\n").unwrap();
+    fs::write(&b, "100,0.5\n200,0.6\n300,0.4\n").unwrap();
+    let fp = |p: &PathBuf| {
+        ScenarioSpec::from_str(&tracefile_spec(p.to_str().unwrap()))
+            .unwrap()
+            .fingerprint()
+    };
+    assert_eq!(
+        fp(&a),
+        fp(&b),
+        "same bytes at different paths must share a fingerprint"
+    );
+    fs::write(&b, "100,0.5\n200,0.6\n300,0.9\n").unwrap();
+    assert_ne!(
+        fp(&a),
+        fp(&b),
+        "edited bytes at the same path must change the fingerprint"
+    );
+    let _ = fs::remove_file(&a);
+    let _ = fs::remove_file(&b);
+}
+
+/// The legacy `kind = "trace"` + path market gets the same treatment:
+/// its fingerprint follows the file content.
+#[test]
+fn legacy_trace_path_market_is_content_hashed_too() {
+    let a = tmp("vsgd_port_legacy.csv");
+    fs::write(&a, "t,p\n100,0.5\n200,0.6\n").unwrap();
+    let spec_text = format!(
+        r#"
+name = "legacy"
+strategies = ["one_bid"]
+metrics = ["total_cost"]
+[job]
+n = 2
+j = 200
+[market]
+kind = "trace"
+path = "{}"
+cdf_resolution = 100.0
+"#,
+        a.to_str().unwrap()
+    );
+    let fp1 = ScenarioSpec::from_str(&spec_text).unwrap().fingerprint();
+    fs::write(&a, "t,p\n100,0.5\n200,0.9\n").unwrap();
+    let fp2 = ScenarioSpec::from_str(&spec_text).unwrap().fingerprint();
+    assert_ne!(fp1, fp2, "same path, different bytes, same fingerprint");
+    let _ = fs::remove_file(&a);
+}
+
+/// Strict-loader error paths surface at spec parse (`--check`) time
+/// with the offending detail named: unsorted rows, non-positive
+/// prices, empty files, and unknown columns are all data errors.
+#[test]
+fn strict_loader_errors_surface_at_parse_time() {
+    let cases: [(&str, &str, &str); 4] = [
+        (
+            "vsgd_port_unsorted.csv",
+            "timestamp,price\n200,0.5\n100,0.6\n",
+            "not strictly increasing",
+        ),
+        ("vsgd_port_negative.csv", "100,-0.5\n", "got -0.5"),
+        ("vsgd_port_empty.csv", "", "empty trace file"),
+        (
+            "vsgd_port_columns.csv",
+            "timestamp,price,zone\n100,0.5,us\n",
+            "zone",
+        ),
+    ];
+    for (name, content, needle) in cases {
+        let p = tmp(name);
+        fs::write(&p, content).unwrap();
+        let err = ScenarioSpec::from_str(&tracefile_spec(
+            p.to_str().unwrap(),
+        ))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(needle),
+            "{name}: expected '{needle}' in: {msg}"
+        );
+        let _ = fs::remove_file(&p);
+    }
+    // a missing file is a parse error too, not a mid-sweep surprise
+    let err = ScenarioSpec::from_str(&tracefile_spec(
+        "/nonexistent/vsgd_port_missing.csv",
+    ))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("vsgd_port_missing.csv"));
+}
+
+// ---------------------------------------------------------------
+// Spec-level guard rails
+// ---------------------------------------------------------------
+
+#[test]
+fn portfolio_spec_guard_rails() {
+    let base = r#"
+name = "guard"
+strategies = ["migrate"]
+metrics = ["total_cost"]
+[job]
+n = 2
+j = 200
+[strategy.migrate]
+kind = "portfolio_migrate"
+"#;
+    // portfolio_migrate without [[portfolio]] is rejected by name
+    let single = format!(
+        "{base}\n[market]\nkind = \"uniform\"\nlo = 0.2\nhi = 1.0\n"
+    );
+    let err = SpecScenario::new(ScenarioSpec::from_str(&single).unwrap())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("needs [[portfolio]]"));
+
+    // [[portfolio]] + [market] in one spec is ambiguous
+    let both = format!(
+        "{single}\n[[portfolio]]\nkind = \"uniform\"\nlo = 0.2\nhi = 1.0\n"
+    );
+    let err = ScenarioSpec::from_str(&both).unwrap_err();
+    assert!(format!("{err:#}").contains("declare one or the other"));
+
+    // periodic checkpointing cannot combine with migration billing
+    let ckpt = format!(
+        "{base}\n[overhead]\ncheckpoint_every_iters = 5\n\
+         checkpoint_cost_s = 1.0\n\
+         [[portfolio]]\nkind = \"uniform\"\nlo = 0.2\nhi = 1.0\n\
+         [[portfolio]]\nkind = \"uniform\"\nlo = 0.3\nhi = 1.2\nspeed = 1.5\n"
+    );
+    let err = SpecScenario::new(ScenarioSpec::from_str(&ckpt).unwrap())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("checkpoint_every_iters"));
+
+    // market.* axes are reserved for classic specs
+    let axis = r#"
+name = "guard_axis"
+strategies = ["migrate"]
+axes = ["lo"]
+metrics = ["total_cost"]
+[job]
+n = 2
+j = 200
+[strategy.migrate]
+kind = "portfolio_migrate"
+[[portfolio]]
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+[[portfolio]]
+kind = "uniform"
+lo = 0.3
+hi = 1.2
+speed = 1.5
+[axis.lo]
+path = "market.lo"
+values = [0.1, 0.2]
+"#;
+    let err = SpecScenario::new(ScenarioSpec::from_str(axis).unwrap())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("portfolio.<idx>"));
+}
+
+// ---------------------------------------------------------------
+// Planner lattice support
+// ---------------------------------------------------------------
+
+/// A portfolio plan runs through the optimizer end to end, and no
+/// portfolio candidate is ever analytically pruned — every non-folded
+/// lattice point must reach the simulation ladder (heuristic fate),
+/// because no single-market closed form describes a multi-market run.
+#[test]
+fn planner_simulates_portfolio_candidates_without_pruning() {
+    let plan_text = r#"
+name = "portfolio_plan"
+seed = 7
+strategies = ["one_bid", "migrate"]
+axes = ["h"]
+
+[objective]
+goal = "min_cost"
+
+[search]
+ladder = [2]
+
+[job]
+n = 4
+eps = 0.35
+j = 400
+
+[runtime]
+kind = "exp"
+lambda = 0.25
+delta = 0.5
+
+[overhead]
+checkpoint_cost_s = 2.0
+restart_delay_s = 6.0
+
+[[portfolio]]
+label = "cheap"
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+
+[[portfolio]]
+label = "fast"
+kind = "uniform"
+lo = 0.35
+hi = 1.4
+speed = 1.6
+q = 0.05
+
+[strategy.migrate]
+kind = "portfolio_migrate"
+
+[axis.h]
+path = "strategy.migrate.hysteresis"
+values = [0.0, 0.2]
+"#;
+    let plan = opt::PlanSpec::from_str(plan_text).unwrap();
+    let outcome = opt::run_plan(
+        &plan,
+        &PlannerConfig { seed: 7, threads: 2 },
+    )
+    .unwrap();
+    let counts = outcome.counts();
+    assert_eq!(counts.infeasible + counts.dominated, 0,
+        "portfolio candidates must never be analytically pruned");
+    assert!(counts.evaluated >= 2, "lattice must reach simulation");
+    assert!(outcome.incumbent.is_some());
+    for c in &outcome.candidates {
+        assert!(
+            c.surface.is_none(),
+            "{}: portfolio candidates have no closed-form surface",
+            c.label
+        );
+    }
+}
