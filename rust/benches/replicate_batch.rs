@@ -15,7 +15,11 @@
 //! Results land in `BENCH_6.json` (override with `BENCH_OUT=path`);
 //! the portfolio-preset rows plus a `portfolio_grid` timing — which
 //! exercises the scalar fallback inside `run_sweep_batched`, not a
-//! lane kernel — land in `BENCH_8.json` (`BENCH8_OUT=path`).
+//! lane kernel — land in `BENCH_8.json` (`BENCH8_OUT=path`); the
+//! forecast trajectory — `forecast_grid`'s equivalence rows plus a
+//! forecaster-on (`proactive`) vs forecaster-off (`migrate`) timing
+//! pair isolating the estimator's per-replicate overhead — lands in
+//! `BENCH_9.json` (`BENCH9_OUT=path`).
 //! `BENCH_SMOKE=1` shrinks the workload for CI.
 //!
 //! Run: `cargo bench --bench replicate_batch`
@@ -197,6 +201,99 @@ fn timed_json(r: &TimedRun) -> String {
     )
 }
 
+/// `forecast_grid` narrowed to one strategy entry. The forecaster-on
+/// (`proactive`) vs forecaster-off (`migrate`) pair runs the same
+/// portfolio, overhead model and grid; the timing delta is the
+/// estimator fold (and whatever placement it induces) itself.
+fn forecast_variant(label: &str) -> SpecScenario {
+    let mut spec =
+        presets::spec("forecast_grid").expect("shipped preset parses");
+    spec.strategies.retain(|e| e.label == label);
+    for ax in &mut spec.axes {
+        if ax.values.len() > 2 {
+            ax.values.truncate(2);
+        }
+    }
+    SpecScenario::new(spec).expect("narrowed forecast_grid validates")
+}
+
+/// Time the forecaster-on vs forecaster-off variants. Both ride the
+/// portfolio scalar path inside the sweep, and their digests
+/// legitimately differ (different strategies), so unlike `timing`
+/// there is no equality assertion here.
+fn forecaster_timing(replicates: u64) -> (TimedRun, TimedRun) {
+    let threads = default_threads();
+    println!(
+        "--- timing: forecast_grid proactive (forecaster on) vs \
+         migrate (forecaster off), {replicates} replicates, \
+         {threads} threads ---"
+    );
+    let mut run_for = |label: &str| {
+        let scenario = forecast_variant(label);
+        let cfg = SweepConfig { replicates, seed: 2020, threads };
+        run_sweep(&scenario, &cfg).unwrap(); // warm
+        let r = timed(|| run_sweep(&scenario, &cfg).unwrap());
+        println!(
+            "  {label:<10} {:>8.1} jobs/s  {:>12}/replicate  \
+             {} allocs / {} bytes",
+            r.jobs_per_s(),
+            fmt_ns(r.per_replicate_ns()),
+            r.alloc.calls,
+            r.alloc.bytes
+        );
+        r
+    };
+    let on = run_for("proactive");
+    let off = run_for("migrate");
+    println!(
+        "  forecaster overhead {:.2}x per replicate",
+        on.per_replicate_ns() / off.per_replicate_ns().max(1e-12)
+    );
+    (on, off)
+}
+
+/// BENCH_9.json: same `digest_checks` shape as [`write_json`], but
+/// the timing block names the comparison honestly — `forecaster_on`
+/// vs `forecaster_off`, an overhead ratio rather than a speedup.
+fn write_forecast_json(
+    path: &str,
+    smoke: bool,
+    rows: &[DigestRow],
+    on: &TimedRun,
+    off: &TimedRun,
+) {
+    let checks: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"preset\": \"{}\", \"threads\": {}, \
+                 \"scalar\": \"{:016x}\", \"batched\": \"{:016x}\", \
+                 \"match\": {}}}",
+                r.preset,
+                r.threads,
+                r.scalar,
+                r.batched,
+                r.matches()
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"replicate_batch\",\n  \"schema\": 1,\n  \
+         \"recorded\": true,\n  \"smoke\": {smoke},\n  \
+         \"threads\": {},\n  \"digest_checks\": [\n{}\n  ],\n  \
+         \"timing\": {{\n    \"preset\": \"forecast_grid_reduced\",\n    \
+         \"forecaster_on\": {},\n    \"forecaster_off\": {},\n    \
+         \"overhead\": {}\n  }}\n}}\n",
+        default_threads(),
+        checks.join(",\n"),
+        timed_json(on),
+        timed_json(off),
+        num(on.per_replicate_ns() / off.per_replicate_ns().max(1e-12))
+    );
+    std::fs::write(path, json).unwrap();
+    println!("json -> {path}");
+}
+
 fn write_json(
     path: &str,
     smoke: bool,
@@ -271,6 +368,13 @@ fn main() {
         &pscalar,
         &pbatched,
     );
+    // BENCH_9: the forecast trajectory — forecast_grid's equivalence
+    // rows plus the forecaster-on vs forecaster-off timing pair
+    let fc_rows = digest_smoke_rows_for(&rows, &["forecast_grid"]);
+    let (fc_on, fc_off) = forecaster_timing(reps_time.min(16));
+    let out9 = std::env::var("BENCH9_OUT")
+        .unwrap_or_else(|_| "BENCH_9.json".to_string());
+    write_forecast_json(&out9, smoke, &fc_rows, &fc_on, &fc_off);
     let diverged: Vec<&DigestRow> =
         rows.iter().filter(|r| !r.matches()).collect();
     if !diverged.is_empty() {

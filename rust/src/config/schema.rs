@@ -77,6 +77,23 @@ pub enum StrategyKind {
     /// each migration is billed as checkpoint + restart via
     /// `[overhead]`. Only valid in specs with a `[[portfolio]]` array.
     PortfolioMigrate { hysteresis: f64 },
+    /// Portfolio-only, forecast-driven (`sim::forecast`, DESIGN.md
+    /// §11): score every entry by forecast progress-per-dollar
+    /// (sliding-window q̂ over `window` slots with Laplace
+    /// `smoothing`, EWMA price level) and migrate *before* preemption
+    /// when the best entry clears the `hysteresis` band after paying
+    /// the move cost amortized over the `horizon_s` lookahead.
+    ProactiveMigrate {
+        hysteresis: f64,
+        window: usize,
+        horizon_s: f64,
+        smoothing: f64,
+    },
+    /// Event-native, forecast-driven: re-plan the Theorem-2 bid
+    /// against an EWMA price-level forecast (`window` span) whose
+    /// regime detector re-anchors when an innovation exceeds
+    /// `innovation_threshold` standard deviations.
+    LookaheadBid { window: usize, innovation_threshold: f64 },
 }
 
 impl StrategyKind {
@@ -95,6 +112,8 @@ impl StrategyKind {
             StrategyKind::ElasticFleet { .. } => "elastic_fleet",
             StrategyKind::DeadlineAware { .. } => "deadline_aware",
             StrategyKind::PortfolioMigrate { .. } => "portfolio_migrate",
+            StrategyKind::ProactiveMigrate { .. } => "proactive_migrate",
+            StrategyKind::LookaheadBid { .. } => "lookahead_bid",
         }
     }
 
@@ -110,6 +129,8 @@ impl StrategyKind {
                 | StrategyKind::ElasticFleet { .. }
                 | StrategyKind::DeadlineAware { .. }
                 | StrategyKind::PortfolioMigrate { .. }
+                | StrategyKind::ProactiveMigrate { .. }
+                | StrategyKind::LookaheadBid { .. }
         )
     }
 
@@ -142,11 +163,22 @@ impl StrategyKind {
             "portfolio_migrate" => {
                 StrategyKind::PortfolioMigrate { hysteresis: 0.05 }
             }
+            "proactive_migrate" => StrategyKind::ProactiveMigrate {
+                hysteresis: 0.05,
+                window: 64,
+                horizon_s: 600.0,
+                smoothing: 1.0,
+            },
+            "lookahead_bid" => StrategyKind::LookaheadBid {
+                window: 64,
+                innovation_threshold: 3.0,
+            },
             other => bail!(
                 "unknown strategy kind '{other}' (no_interruption | one_bid \
                  | two_bids | bid_fractions | dynamic | static_workers | \
                  dynamic_workers | notice_rebid | elastic_fleet | \
-                 deadline_aware | portfolio_migrate)"
+                 deadline_aware | portfolio_migrate | proactive_migrate | \
+                 lookahead_bid)"
             ),
         })
     }
@@ -317,6 +349,59 @@ impl ExperimentConfig {
                     bail!(
                         "strategy.hysteresis must be in [0, 1), got \
                          {hysteresis}"
+                    );
+                }
+            }
+            StrategyKind::ProactiveMigrate {
+                hysteresis,
+                window,
+                horizon_s,
+                smoothing,
+            } => {
+                *hysteresis = doc.f64_or("strategy.hysteresis", *hysteresis);
+                if !hysteresis.is_finite() || !(0.0..1.0).contains(hysteresis)
+                {
+                    bail!(
+                        "strategy.hysteresis must be in [0, 1), got \
+                         {hysteresis}"
+                    );
+                }
+                let w = doc.i64_or("strategy.window", *window as i64);
+                if w < 1 {
+                    bail!("strategy.window must be >= 1, got {w}");
+                }
+                *window = w as usize;
+                *horizon_s = doc.f64_or("strategy.horizon_s", *horizon_s);
+                if !horizon_s.is_finite() || *horizon_s <= 0.0 {
+                    bail!(
+                        "strategy.horizon_s must be finite and > 0, got \
+                         {horizon_s}"
+                    );
+                }
+                *smoothing = doc.f64_or("strategy.smoothing", *smoothing);
+                if !smoothing.is_finite() || *smoothing < 0.0 {
+                    bail!(
+                        "strategy.smoothing must be finite and >= 0, got \
+                         {smoothing}"
+                    );
+                }
+            }
+            StrategyKind::LookaheadBid { window, innovation_threshold } => {
+                let w = doc.i64_or("strategy.window", *window as i64);
+                if w < 1 {
+                    bail!("strategy.window must be >= 1, got {w}");
+                }
+                *window = w as usize;
+                *innovation_threshold = doc.f64_or(
+                    "strategy.innovation_threshold",
+                    *innovation_threshold,
+                );
+                if !innovation_threshold.is_finite()
+                    || *innovation_threshold <= 0.0
+                {
+                    bail!(
+                        "strategy.innovation_threshold must be finite and \
+                         > 0, got {innovation_threshold}"
                     );
                 }
             }
@@ -507,6 +592,8 @@ n1 = 4
             "elastic_fleet",
             "deadline_aware",
             "portfolio_migrate",
+            "proactive_migrate",
+            "lookahead_bid",
         ] {
             let k = StrategyKind::from_name(name, 8).unwrap();
             assert_eq!(k.canonical_name(), name);
@@ -518,6 +605,8 @@ n1 = 4
                         | "elastic_fleet"
                         | "deadline_aware"
                         | "portfolio_migrate"
+                        | "proactive_migrate"
+                        | "lookahead_bid"
                 ),
                 "{name}"
             );
@@ -558,6 +647,51 @@ n1 = 4
             "[strategy]\nkind = \"deadline_aware\"\nescalate_threshold = 1.5\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn forecaster_kind_params_parse_and_validate() {
+        let c = ExperimentConfig::from_str(
+            "[strategy]\nkind = \"proactive_migrate\"\nwindow = 128\n\
+             horizon_s = 900.0\nsmoothing = 0.5\nhysteresis = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.strategy,
+            StrategyKind::ProactiveMigrate {
+                hysteresis: 0.1,
+                window: 128,
+                horizon_s: 900.0,
+                smoothing: 0.5,
+            }
+        );
+        let c = ExperimentConfig::from_str(
+            "[strategy]\nkind = \"lookahead_bid\"\nwindow = 32\n\
+             innovation_threshold = 4.0\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.strategy,
+            StrategyKind::LookaheadBid {
+                window: 32,
+                innovation_threshold: 4.0,
+            }
+        );
+        // out-of-range forecaster knobs are config errors, not panics
+        for bad in [
+            "[strategy]\nkind = \"proactive_migrate\"\nwindow = -3\n",
+            "[strategy]\nkind = \"proactive_migrate\"\nwindow = 0\n",
+            "[strategy]\nkind = \"proactive_migrate\"\nhorizon_s = 0.0\n",
+            "[strategy]\nkind = \"proactive_migrate\"\nsmoothing = -1.0\n",
+            "[strategy]\nkind = \"lookahead_bid\"\nwindow = 0\n",
+            "[strategy]\nkind = \"lookahead_bid\"\n\
+             innovation_threshold = 0.0\n",
+        ] {
+            assert!(
+                ExperimentConfig::from_str(bad).is_err(),
+                "must reject: {bad}"
+            );
+        }
     }
 
     #[test]

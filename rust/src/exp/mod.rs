@@ -40,8 +40,9 @@ use crate::market::{BidVector, MarketPortfolio, MigrationRule};
 use crate::preempt::{PreemptionModel, RecipTable};
 use crate::sim::{
     CostMeter, DeadlineAware, ElasticFleet, Engine, EngineParams,
-    EngineResult, EngineState, Event, LockstepPolicy, NoticeRebid, Observer,
-    Policy, PriceSource, SeriesRecorder,
+    EngineResult, EngineState, Event, LockstepPolicy, LookaheadBid,
+    NoticeRebid, Observer, Policy, PriceSource, ProactiveMigrator,
+    SeriesRecorder,
 };
 use crate::theory::bids::BidProblem;
 use crate::theory::bounds::ErrorBound;
@@ -204,13 +205,25 @@ impl Policy for FleetPolicy {
 /// digests stay bit-identical at any thread count.
 ///
 /// **Slot order.** Per slot: deadline check; every market's price +
-/// availability draw (index order); migration (`portfolio_migrate`
-/// only — billed as a checkpoint at the old market's price plus a
-/// restart at the new one's, consuming the slot); `PriceRevision` on
-/// the current market; unavailable market -> preemption episode + idle;
-/// otherwise decide / restore / iterate exactly as the single-market
-/// engine, with the iteration runtime divided by the current entry's
-/// `speed`.
+/// availability draw (index order); migration (`portfolio_migrate` and
+/// `proactive_migrate` only — billed as a checkpoint at the old
+/// market's price plus a restart at the new one's, consuming the
+/// slot); `PriceRevision` on the current market; unavailable market ->
+/// preemption episode + idle; otherwise decide / restore / iterate
+/// exactly as the single-market engine, with the iteration runtime
+/// divided by the current entry's `speed`. The `proactive_migrate`
+/// forecasters fold the slot's draws (RNG-free) before the migration
+/// decision, so the forecast always includes the slot being decided.
+///
+/// **Preemption accounting.** `preempt_events` counts *market-level
+/// interruptions suffered by an active fleet* — whether the episode is
+/// recovered by idling in place or by a forced migration to a
+/// still-available entry. (A migration out of an interrupting market
+/// emits `WorkerPreempted` before the checkpoint/restart billing.)
+/// That keeps the metric comparable across reactive and proactive
+/// placement: a policy that moves *before* the interruption genuinely
+/// records fewer events, not just different bookkeeping (DESIGN.md
+/// §11).
 ///
 /// Periodic checkpointing and `lost_work_on_preempt` are rejected: in a
 /// portfolio the `[overhead]` knobs price *migrations* (and restart
@@ -246,7 +259,16 @@ pub fn run_portfolio_engine(
         (0..m).map(|i| Rng::stream(root, i as u64)).collect();
     let mut policy_rng = Rng::stream(root, m as u64);
 
-    let (mut policy, migrate): (Box<dyn Policy>, Option<MigrationRule>) =
+    /// How the fleet is placed across entries: the reactive
+    /// effective-price rule (DESIGN.md §10) or the forecast scorer
+    /// (§11). The forecast variant carries per-market estimator state,
+    /// updated once per slot with zero RNG draws.
+    enum Migrator {
+        Rule(MigrationRule),
+        Forecast(ProactiveMigrator),
+    }
+
+    let (mut policy, mut migrate): (Box<dyn Policy>, Option<Migrator>) =
         match plan {
             PlannedStrategy::PortfolioMigrate { name, n, j, hysteresis } => {
                 let rule = MigrationRule { hysteresis: *hysteresis };
@@ -257,9 +279,29 @@ pub fn run_portfolio_engine(
                         n: *n,
                         j: *j,
                     }),
-                    Some(rule),
+                    Some(Migrator::Rule(rule)),
                 )
             }
+            PlannedStrategy::ProactiveMigrate {
+                name,
+                n,
+                j,
+                hysteresis,
+                window,
+                horizon_s,
+                smoothing,
+            } => (
+                Box::new(FleetPolicy { name: name.clone(), n: *n, j: *j }),
+                Some(Migrator::Forecast(ProactiveMigrator::new(
+                    *n,
+                    m,
+                    *hysteresis,
+                    *window,
+                    *horizon_s,
+                    *smoothing,
+                    ov.checkpoint_cost_s + ov.restart_delay_s,
+                ))),
+            ),
             // classic / event-native plans are pinned to entry 0 (the
             // "home" market) and never migrate
             classic => (classic.build_policy()?, None),
@@ -328,34 +370,54 @@ pub fn run_portfolio_engine(
                 run.sources[i].price_at(meter.elapsed(), &mut market_rngs[i]);
             avail[i] = !market_rngs[i].bool(run.port.entries[i].q);
         }
-        if let Some(rule) = &migrate {
-            if let Some(to) = rule.target(run.port, current, &prices, &avail)
-            {
-                // the move consumes the slot: checkpoint on the market
-                // being left, restart lag on the one being entered
-                let n_move = policy.max_workers();
-                meter.charge(n_move, prices[current], ov.checkpoint_cost_s);
-                checkpoint_time += ov.checkpoint_cost_s;
-                checkpoints += 1;
-                emit(
-                    policy.as_mut(),
-                    &mut recorder,
-                    Event::CheckpointDone,
-                    state!(n_move, prices[current]),
-                )?;
-                meter.charge(n_move, prices[to], ov.restart_delay_s);
-                restart_time += ov.restart_delay_s;
-                restarts += 1;
-                current = to;
-                prev_price = prices[current];
-                emit(
-                    policy.as_mut(),
-                    &mut recorder,
-                    Event::WorkerRestored,
-                    state!(n_move, prices[current]),
-                )?;
-                continue;
+        let move_to = match &mut migrate {
+            Some(Migrator::Rule(rule)) => {
+                rule.target(run.port, current, &prices, &avail)
             }
+            Some(Migrator::Forecast(f)) => {
+                // fold this slot's draws first (RNG-free), then decide
+                f.observe_slot(&prices, &avail);
+                f.target(run.port, current, &prices, &avail)
+            }
+            None => None,
+        };
+        if let Some(to) = move_to {
+            // a migration out of an interrupting market is still an
+            // interruption the active fleet suffered: ledger it
+            // before billing the move (see "Preemption accounting")
+            if !avail[current] && was_active {
+                preemptions += 1;
+                emit(
+                    policy.as_mut(),
+                    &mut recorder,
+                    Event::WorkerPreempted { notice: ov.preempt_notice_s },
+                    state!(0, prices[current]),
+                )?;
+            }
+            // the move consumes the slot: checkpoint on the market
+            // being left, restart lag on the one being entered
+            let n_move = policy.max_workers();
+            meter.charge(n_move, prices[current], ov.checkpoint_cost_s);
+            checkpoint_time += ov.checkpoint_cost_s;
+            checkpoints += 1;
+            emit(
+                policy.as_mut(),
+                &mut recorder,
+                Event::CheckpointDone,
+                state!(n_move, prices[current]),
+            )?;
+            meter.charge(n_move, prices[to], ov.restart_delay_s);
+            restart_time += ov.restart_delay_s;
+            restarts += 1;
+            current = to;
+            prev_price = prices[current];
+            emit(
+                policy.as_mut(),
+                &mut recorder,
+                Event::WorkerRestored,
+                state!(n_move, prices[current]),
+            )?;
+            continue;
         }
         emit(
             policy.as_mut(),
@@ -528,6 +590,33 @@ pub enum PlannedStrategy {
     /// checkpoint + restart via `[overhead]` (DESIGN.md §10). Only
     /// [`run_portfolio_engine`] can execute this plan.
     PortfolioMigrate { name: String, n: usize, j: u64, hysteresis: f64 },
+    /// Portfolio-native, forecast-driven (`sim::forecast`, DESIGN.md
+    /// §11): score every entry by forecast progress-per-dollar
+    /// (sliding-window q̂, EWMA price level) and migrate *before*
+    /// preemption when the best entry clears the hysteresis band after
+    /// paying the move cost amortized over `horizon_s`. Only
+    /// [`run_portfolio_engine`] can execute this plan.
+    ProactiveMigrate {
+        name: String,
+        n: usize,
+        j: u64,
+        hysteresis: f64,
+        window: usize,
+        horizon_s: f64,
+        smoothing: f64,
+    },
+    /// Event-native, forecast-driven: the Theorem-2 one-bid plan
+    /// rescaled online against an EWMA price-level forecast with a
+    /// regime-change detector (`sim::forecast::LookaheadBid`).
+    LookaheadBid {
+        name: String,
+        bids: BidVector,
+        j: u64,
+        window: usize,
+        innovation_threshold: f64,
+        base_level: f64,
+        bid_cap: f64,
+    },
 }
 
 impl PlannedStrategy {
@@ -540,7 +629,9 @@ impl PlannedStrategy {
             | PlannedStrategy::NoticeRebid { name, .. }
             | PlannedStrategy::ElasticFleet { name, .. }
             | PlannedStrategy::DeadlineAware { name, .. }
-            | PlannedStrategy::PortfolioMigrate { name, .. } => name,
+            | PlannedStrategy::PortfolioMigrate { name, .. }
+            | PlannedStrategy::ProactiveMigrate { name, .. }
+            | PlannedStrategy::LookaheadBid { name, .. } => name,
         }
     }
 
@@ -554,7 +645,9 @@ impl PlannedStrategy {
             | PlannedStrategy::NoticeRebid { j, .. }
             | PlannedStrategy::ElasticFleet { j, .. }
             | PlannedStrategy::DeadlineAware { j, .. }
-            | PlannedStrategy::PortfolioMigrate { j, .. } => *j,
+            | PlannedStrategy::PortfolioMigrate { j, .. }
+            | PlannedStrategy::ProactiveMigrate { j, .. }
+            | PlannedStrategy::LookaheadBid { j, .. } => *j,
         }
     }
 
@@ -568,6 +661,8 @@ impl PlannedStrategy {
                 | PlannedStrategy::ElasticFleet { .. }
                 | PlannedStrategy::DeadlineAware { .. }
                 | PlannedStrategy::PortfolioMigrate { .. }
+                | PlannedStrategy::ProactiveMigrate { .. }
+                | PlannedStrategy::LookaheadBid { .. }
         )
     }
 
@@ -619,7 +714,25 @@ impl PlannedStrategy {
                 *slot_time,
                 *threshold,
             )),
-            PlannedStrategy::PortfolioMigrate { name, .. } => bail!(
+            PlannedStrategy::LookaheadBid {
+                name,
+                bids,
+                j,
+                window,
+                innovation_threshold,
+                base_level,
+                bid_cap,
+            } => Box::new(LookaheadBid::new(
+                name.clone(),
+                bids.clone(),
+                *j,
+                *window,
+                *innovation_threshold,
+                *base_level,
+                *bid_cap,
+            )),
+            PlannedStrategy::PortfolioMigrate { name, .. }
+            | PlannedStrategy::ProactiveMigrate { name, .. } => bail!(
                 "plan '{name}' places workers across a portfolio; it has \
                  no single-market Policy form — run it through \
                  run_portfolio_engine"
@@ -679,7 +792,9 @@ impl PlannedStrategy {
             PlannedStrategy::NoticeRebid { .. }
             | PlannedStrategy::ElasticFleet { .. }
             | PlannedStrategy::DeadlineAware { .. }
-            | PlannedStrategy::PortfolioMigrate { .. } => {
+            | PlannedStrategy::PortfolioMigrate { .. }
+            | PlannedStrategy::ProactiveMigrate { .. }
+            | PlannedStrategy::LookaheadBid { .. } => {
                 unreachable!("rejected by the event_native guard above")
             }
         })

@@ -11,8 +11,8 @@ use anyhow::{bail, Result};
 use super::spec::{ScenarioSpec, SpecScenario};
 
 /// Preset names: the figures, then the engine-era scenarios, then the
-/// portfolio demos.
-pub const PRESET_NAMES: [&str; 9] = [
+/// portfolio and forecast demos.
+pub const PRESET_NAMES: [&str; 10] = [
     "fig2",
     "fig3",
     "fig4",
@@ -22,6 +22,7 @@ pub const PRESET_NAMES: [&str; 9] = [
     "notice_grid",
     "portfolio_grid",
     "spot_replay",
+    "forecast_grid",
 ];
 
 /// The embedded TOML text of a preset (accepts `fig3` or bare `3`).
@@ -46,10 +47,13 @@ pub fn preset_toml(name: &str) -> Result<&'static str> {
         "spot_replay" => {
             include_str!("../../../examples/configs/spot_replay.toml")
         }
+        "forecast_grid" => {
+            include_str!("../../../examples/configs/forecast_grid.toml")
+        }
         other => bail!(
             "unknown preset '{other}' (available: fig2, fig3, fig4, fig5, \
              checkpoint_grid, adaptive_grid, notice_grid, portfolio_grid, \
-             spot_replay)"
+             spot_replay, forecast_grid)"
         ),
     })
 }
@@ -213,6 +217,45 @@ mod tests {
                 && resample_s == 7200.0
                 && content_fnv != 0
         ));
+    }
+
+    /// The forecast-era preset (DESIGN.md §11): the regime-switching
+    /// showdown lines up both proactive kinds against their reactive
+    /// counterparts over a 3-entry fixture/synthetic portfolio.
+    #[test]
+    fn forecast_preset_ships_the_proactive_showdown() {
+        let sc = scenario("forecast_grid").unwrap();
+        assert_eq!(sc.points(), 10); // 2 q x 5 strategies
+        assert_eq!(sc.label(0), "q2=0.4/one_bid");
+        assert_eq!(sc.label(9), "q2=0.55/proactive");
+        let spec = sc.spec();
+        let entries = spec.portfolio.as_ref().unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].label, "c5");
+        assert_eq!(entries[1].label, "m5");
+        assert_eq!(entries[2].label, "volatile");
+        assert!(matches!(
+            entries[0].kind,
+            crate::exp::spec::MarketKind::TraceStrict { ref path, .. }
+                if path.ends_with("ec2_c5xlarge_uswest2a.csv")
+        ));
+        assert!(matches!(
+            entries[2].kind,
+            crate::exp::spec::MarketKind::TraceGen { ref cfg, .. }
+                if cfg.horizon == 260000.0 && cfg.revision_interval == 600.0
+        ));
+        // both forecast-driven kinds are in the lineup, as
+        // event-native policies
+        for label in ["proactive", "lookahead"] {
+            let e = spec
+                .strategies
+                .iter()
+                .find(|e| e.label == label)
+                .unwrap_or_else(|| panic!("missing strategy '{label}'"));
+            assert!(e.kind.event_native(), "'{label}' must be event-native");
+        }
+        assert!(spec.overhead.enabled(), "migration must be billed");
+        assert!(spec.metrics.iter().any(|m| m == "preempt_events"));
     }
 
     #[test]

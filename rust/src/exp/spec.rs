@@ -786,6 +786,53 @@ fn parse_strategy(
                  {hysteresis}"
             );
         }
+        StrategyKind::ProactiveMigrate {
+            hysteresis,
+            window,
+            horizon_s,
+            smoothing,
+        } => {
+            *hysteresis = d.f64_or(&key("hysteresis"), *hysteresis)?;
+            ensure!(
+                hysteresis.is_finite() && (0.0..1.0).contains(hysteresis),
+                "strategy '{label}': hysteresis must be in [0, 1), got \
+                 {hysteresis}"
+            );
+            *window = d.usize_or(&key("window"), *window)?;
+            ensure!(
+                *window >= 1,
+                "strategy '{label}': window must be >= 1"
+            );
+            *horizon_s = d.f64_or(&key("horizon_s"), *horizon_s)?;
+            ensure!(
+                horizon_s.is_finite() && *horizon_s > 0.0,
+                "strategy '{label}': horizon_s must be finite and > 0, got \
+                 {horizon_s}"
+            );
+            *smoothing = d.f64_or(&key("smoothing"), *smoothing)?;
+            ensure!(
+                smoothing.is_finite() && *smoothing >= 0.0,
+                "strategy '{label}': smoothing must be finite and >= 0, \
+                 got {smoothing}"
+            );
+        }
+        StrategyKind::LookaheadBid { window, innovation_threshold } => {
+            *window = d.usize_or(&key("window"), *window)?;
+            ensure!(
+                *window >= 1,
+                "strategy '{label}': window must be >= 1"
+            );
+            *innovation_threshold = d.f64_or(
+                &key("innovation_threshold"),
+                *innovation_threshold,
+            )?;
+            ensure!(
+                innovation_threshold.is_finite()
+                    && *innovation_threshold > 0.0,
+                "strategy '{label}': innovation_threshold must be finite \
+                 and > 0, got {innovation_threshold}"
+            );
+        }
         _ => {}
     }
     let n = d.usize_opt(&key("n"))?;
@@ -995,6 +1042,41 @@ pub fn build_plan(
                 hysteresis: *hysteresis,
             }
         }
+        // forecast-driven placement (DESIGN.md §11): like
+        // portfolio_migrate, nothing to optimise ahead of time — the
+        // estimators only exist inside `run_portfolio_engine`
+        StrategyKind::ProactiveMigrate {
+            hysteresis,
+            window,
+            horizon_s,
+            smoothing,
+        } => PlannedStrategy::ProactiveMigrate {
+            name: label.to_string(),
+            n: inp.n,
+            j: inp.j,
+            hysteresis: *hysteresis,
+            window: *window,
+            horizon_s: *horizon_s,
+            smoothing: *smoothing,
+        },
+        StrategyKind::LookaheadBid { window, innovation_threshold } => {
+            let pb = need_pb()?;
+            let plan = pb.optimal_one_bid().with_context(|| {
+                format!("lookahead-bid base plan for '{label}'")
+            })?;
+            // the static distribution's mean anchors the scale-family
+            // re-plan: bids scale by forecast-level / base_level
+            let (_, hi) = pb.price.support();
+            PlannedStrategy::LookaheadBid {
+                name: label.to_string(),
+                bids: BidVector::uniform(pb.n, plan.b),
+                j: plan.j,
+                window: *window,
+                innovation_threshold: *innovation_threshold,
+                base_level: pb.price.price_mass_below(hi),
+                bid_cap: hi,
+            }
+        }
     })
 }
 
@@ -1016,6 +1098,7 @@ fn kind_bids(kind: &StrategyKind) -> bool {
             | StrategyKind::DynamicBids { .. }
             | StrategyKind::NoticeRebid { .. }
             | StrategyKind::DeadlineAware { .. }
+            | StrategyKind::LookaheadBid { .. }
     )
 }
 
@@ -1408,12 +1491,17 @@ impl SpecScenario {
                 }
             }
         } else if let Some(e) = spec.strategies.iter().find(|e| {
-            matches!(e.kind, StrategyKind::PortfolioMigrate { .. })
+            matches!(
+                e.kind,
+                StrategyKind::PortfolioMigrate { .. }
+                    | StrategyKind::ProactiveMigrate { .. }
+            )
         }) {
             bail!(
-                "strategy '{}' (portfolio_migrate) places workers across \
-                 markets; the spec needs [[portfolio]] entries",
-                e.label
+                "strategy '{}' ({}) places workers across markets; the \
+                 spec needs [[portfolio]] entries",
+                e.label,
+                e.kind.canonical_name()
             );
         }
         if metrics.iter().any(|k| k.is_analytic_const()) {
@@ -2505,12 +2593,47 @@ fn set_strategy(
             );
             *escalate_threshold = v;
         }
-        (StrategyKind::PortfolioMigrate { hysteresis }, "hysteresis") => {
+        (
+            StrategyKind::PortfolioMigrate { hysteresis }
+            | StrategyKind::ProactiveMigrate { hysteresis, .. },
+            "hysteresis",
+        ) => {
             ensure!(
                 v.is_finite() && (0.0..1.0).contains(&v),
                 "'{path}' must be in [0, 1), got {v}"
             );
             *hysteresis = v;
+        }
+        (
+            StrategyKind::ProactiveMigrate { window, .. }
+            | StrategyKind::LookaheadBid { window, .. },
+            "window",
+        ) => {
+            *window = as_count(path, v, 1)? as usize;
+        }
+        (StrategyKind::ProactiveMigrate { horizon_s, .. }, "horizon_s") => {
+            ensure!(
+                v.is_finite() && v > 0.0,
+                "'{path}' must be finite and > 0, got {v}"
+            );
+            *horizon_s = v;
+        }
+        (StrategyKind::ProactiveMigrate { smoothing, .. }, "smoothing") => {
+            ensure!(
+                v.is_finite() && v >= 0.0,
+                "'{path}' must be finite and >= 0, got {v}"
+            );
+            *smoothing = v;
+        }
+        (
+            StrategyKind::LookaheadBid { innovation_threshold, .. },
+            "innovation_threshold",
+        ) => {
+            ensure!(
+                v.is_finite() && v > 0.0,
+                "'{path}' must be finite and > 0, got {v}"
+            );
+            *innovation_threshold = v;
         }
         _ => bail!(
             "axis path '{path}' does not match strategy '{}' (kind {})",
@@ -2671,6 +2794,21 @@ fn hash_strategy_kind(h: &mut Fnv, k: &StrategyKind) {
         }
         StrategyKind::PortfolioMigrate { hysteresis } => {
             h.f64(*hysteresis)
+        }
+        StrategyKind::ProactiveMigrate {
+            hysteresis,
+            window,
+            horizon_s,
+            smoothing,
+        } => {
+            h.f64(*hysteresis);
+            h.u64(*window as u64);
+            h.f64(*horizon_s);
+            h.f64(*smoothing);
+        }
+        StrategyKind::LookaheadBid { window, innovation_threshold } => {
+            h.u64(*window as u64);
+            h.f64(*innovation_threshold);
         }
     }
 }
@@ -3528,6 +3666,194 @@ escalate_threshold = 0.6
             .unwrap_err()
             .to_string();
         assert!(err.contains("fixed-price"), "{err}");
+    }
+
+    const FORECAST: &str = r#"
+name = "forecast"
+strategies = ["lookahead", "proactive"]
+metrics = ["total_cost", "iters", "preempt_events"]
+
+[job]
+n = 4
+eps = 0.35
+j = 600
+preempt_q = 0.2
+
+[runtime]
+kind = "deterministic"
+r = 10.0
+
+[overhead]
+checkpoint_cost_s = 2.0
+restart_delay_s = 6.0
+
+[[portfolio]]
+label = "home"
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+q = 0.05
+
+[[portfolio]]
+label = "away"
+kind = "uniform"
+lo = 0.15
+hi = 0.9
+speed = 1.4
+q = 0.2
+
+[strategy.lookahead]
+kind = "lookahead_bid"
+window = 32
+innovation_threshold = 4.0
+
+[strategy.proactive]
+kind = "proactive_migrate"
+hysteresis = 0.08
+window = 48
+horizon_s = 300.0
+smoothing = 0.5
+"#;
+
+    /// Both forecast-driven kinds (DESIGN.md §11) are reachable from a
+    /// TOML lineup, plan through `build_plan` with their keys applied,
+    /// and sweep digest-identically across thread counts.
+    #[test]
+    fn forecast_kinds_parse_plan_and_run_deterministically() {
+        let sc = SpecScenario::new(ScenarioSpec::from_str(FORECAST).unwrap())
+            .unwrap();
+        assert_eq!(sc.points(), 2);
+        let lookahead = sc.prepare(0).unwrap();
+        match &lookahead.plans()[0] {
+            PlannedStrategy::LookaheadBid {
+                window,
+                innovation_threshold,
+                base_level,
+                bid_cap,
+                bids,
+                ..
+            } => {
+                assert_eq!(*window, 32);
+                assert_eq!(*innovation_threshold, 4.0);
+                // closed form for Uniform[0.2, 1]: E[p] = 0.6, cap = hi
+                assert!((base_level - 0.6).abs() < 1e-12, "{base_level}");
+                assert_eq!(*bid_cap, 1.0, "support max of entry 0");
+                assert!(bids.b1 > 0.2 && bids.b1 < 1.0);
+            }
+            other => panic!("expected a lookahead-bid plan, got {other:?}"),
+        }
+        let proactive = sc.prepare(1).unwrap();
+        match &proactive.plans()[0] {
+            PlannedStrategy::ProactiveMigrate {
+                hysteresis,
+                window,
+                horizon_s,
+                smoothing,
+                n,
+                ..
+            } => {
+                assert_eq!(*hysteresis, 0.08);
+                assert_eq!(*window, 48);
+                assert_eq!(*horizon_s, 300.0);
+                assert_eq!(*smoothing, 0.5);
+                assert_eq!(*n, 4);
+            }
+            other => panic!("expected a proactive plan, got {other:?}"),
+        }
+        // neither kind has a lockstep Strategy form...
+        assert!(lookahead.plans()[0].build().is_err());
+        assert!(proactive.plans()[0].build().is_err());
+        // ...lookahead builds as an engine policy; proactive is
+        // portfolio-placement state owned by the engine loop itself
+        assert_eq!(
+            lookahead.plans()[0].build_policy().unwrap().name(),
+            "lookahead"
+        );
+        let err =
+            proactive.plans()[0].build_policy().unwrap_err().to_string();
+        assert!(err.contains("portfolio"), "{err}");
+        // forecaster updates draw no RNG: thread count stays a pure
+        // throughput knob
+        let base = SweepConfig { replicates: 2, seed: 17, threads: 1 };
+        let serial = run_sweep(&sc, &base).unwrap();
+        let par =
+            run_sweep(&sc, &SweepConfig { threads: 8, ..base }).unwrap();
+        assert_eq!(serial.digest(), par.digest());
+        // the reference lockstep loop refuses portfolio specs
+        let err =
+            SpecScenario::new(ScenarioSpec::from_str(FORECAST).unwrap())
+                .unwrap()
+                .with_reference_runner()
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("[[portfolio]]"), "{err}");
+    }
+
+    #[test]
+    fn forecast_kind_params_validated_at_check_time() {
+        for (needle, replacement) in [
+            ("window = 32", "window = 0"),
+            ("window = 48", "window = -3"),
+            ("innovation_threshold = 4.0", "innovation_threshold = 0.0"),
+            ("innovation_threshold = 4.0", "innovation_threshold = -2.0"),
+            ("horizon_s = 300.0", "horizon_s = 0.0"),
+            ("horizon_s = 300.0", "horizon_s = -5.0"),
+            ("smoothing = 0.5", "smoothing = -1.0"),
+            ("hysteresis = 0.08", "hysteresis = 1.0"),
+        ] {
+            let bad = FORECAST.replace(needle, replacement);
+            assert_ne!(bad, FORECAST, "needle '{needle}' not found");
+            assert!(
+                ScenarioSpec::from_str(&bad).is_err(),
+                "{replacement} should be rejected at parse/--check time"
+            );
+        }
+        // axis values over the forecaster knobs are range-checked at
+        // load, under the "market, grid point" context chain
+        let lineup = "strategies = [\"lookahead\", \"proactive\"]";
+        let axis_table = "[axis.win]\n\
+                          path = \"strategy.proactive.window\"\n\
+                          values = [0.0, 64.0]\n\n[strategy.lookahead]";
+        let with_axis = FORECAST
+            .replace(lineup, &format!("{lineup}\naxes = [\"win\"]"))
+            .replace("[strategy.lookahead]", axis_table);
+        let spec = ScenarioSpec::from_str(&with_axis).unwrap();
+        let err = format!("{:#}", SpecScenario::new(spec).unwrap_err());
+        assert!(err.contains(">= 1"), "{err}");
+        // proactive placement without a [[portfolio]] is refused with
+        // the same guidance as the reactive migrate kind
+        let single = POLICIES.replace(
+            "kind = \"notice_rebid\"\nrebid_factor = 2.0",
+            "kind = \"proactive_migrate\"",
+        );
+        let err =
+            SpecScenario::new(ScenarioSpec::from_str(&single).unwrap())
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("needs [[portfolio]]"), "{err}");
+    }
+
+    /// Every forecaster key is a resolved field: changing it must move
+    /// the scenario fingerprint (serve's cache identity).
+    #[test]
+    fn forecast_keys_move_the_fingerprint() {
+        let base = ScenarioSpec::from_str(FORECAST).unwrap().fingerprint();
+        for (needle, replacement) in [
+            ("window = 32", "window = 33"),
+            ("window = 48", "window = 49"),
+            ("innovation_threshold = 4.0", "innovation_threshold = 4.5"),
+            ("hysteresis = 0.08", "hysteresis = 0.09"),
+            ("horizon_s = 300.0", "horizon_s = 301.0"),
+            ("smoothing = 0.5", "smoothing = 0.6"),
+        ] {
+            let mutated = FORECAST.replace(needle, replacement);
+            assert_ne!(mutated, FORECAST, "needle '{needle}' not found");
+            assert_ne!(
+                ScenarioSpec::from_str(&mutated).unwrap().fingerprint(),
+                base,
+                "mutating '{needle}' -> '{replacement}' kept the key"
+            );
+        }
     }
 
     #[test]

@@ -263,6 +263,31 @@ fn describe_plan(plan: &PlannedStrategy) {
                  (hysteresis {hysteresis})"
             )
         }
+        PlannedStrategy::ProactiveMigrate {
+            name,
+            n,
+            j,
+            hysteresis,
+            window,
+            horizon_s,
+            ..
+        } => println!(
+            "plan {name}: n={n}  J={j}  migrate on forecast score \
+             (window {window}, horizon {horizon_s}s, hysteresis \
+             {hysteresis})"
+        ),
+        PlannedStrategy::LookaheadBid {
+            name,
+            bids,
+            j,
+            window,
+            innovation_threshold,
+            ..
+        } => println!(
+            "plan {name}: J={j}  base bid {:.4}  rescaled by EWMA level \
+             (window {window}, regime threshold {innovation_threshold})",
+            bids.b1
+        ),
     }
 }
 

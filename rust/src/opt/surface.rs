@@ -141,14 +141,18 @@ pub fn admissible_surface(
                 err: bound.phi_const(*j, model.expected_recip(*n)),
             })
         }
-        // staged bids, Theorem-5 growth and the event-native policies
-        // adapt mid-run: their closed forms are heuristic at best, so
-        // they are never pruned — simulation is their only judge
+        // staged bids, Theorem-5 growth, the event-native policies and
+        // the portfolio/forecast placement plans adapt mid-run: their
+        // closed forms are heuristic at best, so they are never pruned
+        // — simulation is their only judge
         PlannedStrategy::Dynamic { .. }
         | PlannedStrategy::DynamicWorkers { .. }
         | PlannedStrategy::NoticeRebid { .. }
         | PlannedStrategy::ElasticFleet { .. }
-        | PlannedStrategy::DeadlineAware { .. } => None,
+        | PlannedStrategy::DeadlineAware { .. }
+        | PlannedStrategy::PortfolioMigrate { .. }
+        | PlannedStrategy::ProactiveMigrate { .. }
+        | PlannedStrategy::LookaheadBid { .. } => None,
     }
 }
 

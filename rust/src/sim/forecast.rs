@@ -1,0 +1,899 @@
+//! Forecast-driven proactive policy layer (DESIGN.md §11).
+//!
+//! Everything in PR 4/8 is *reactive*: `NoticeRebid` waits for the
+//! preemption, `portfolio_migrate` waits for the price to already be
+//! cheaper. Parcae (PAPERS.md) shows the better regime is *proactive* —
+//! forecast interruption likelihood and price level from recent
+//! history, then optimize expected progress ("liveput") over a
+//! lookahead horizon and move *before* the market takes the fleet down.
+//! This module supplies that layer in three pieces:
+//!
+//! * [`Forecaster`] — the online estimator contract: fed one scalar per
+//!   observation from Observer-visible state, **never drawing RNG**, so
+//!   a forecasting policy keeps sweep digests bit-identical at any
+//!   thread count (the same determinism contract as `Policy::on_event`,
+//!   DESIGN.md §6).
+//! * [`SlidingWindowRate`] and [`EwmaLevel`] — the two concrete
+//!   estimators: a per-market empirical preemption rate q̂ over a
+//!   sliding window with Laplace smoothing, and an EWMA price level
+//!   with a normalized-innovation regime-change detector.
+//! * [`ProactiveMigrator`] and [`LookaheadBid`] — the policy layer:
+//!   the `proactive_migrate` placement rule (scores every portfolio
+//!   entry by forecast progress-per-dollar using the exact `E[1/y]`
+//!   tables at q̂, consumed by `exp::run_portfolio_engine`) and the
+//!   `lookahead_bid` [`Policy`] (re-plans the Theorem-2 bid against the
+//!   forecast price level instead of the static distribution).
+//!
+//! # Example
+//!
+//! The sliding-window estimator is just arithmetic — no engine needed
+//! to see the Laplace prior wash out:
+//!
+//! ```
+//! use volatile_sgd::sim::forecast::{Forecaster, SlidingWindowRate};
+//!
+//! let mut qhat = SlidingWindowRate::new(8, 1.0);
+//! assert_eq!(qhat.predict(), 0.5); // empty window: pure prior
+//! for _ in 0..8 {
+//!     qhat.observe_preempt(false);
+//! }
+//! assert_eq!(qhat.predict(), 0.1); // (0 + 1) / (8 + 2)
+//! ```
+
+use anyhow::Result;
+
+use crate::coordinator::strategy::ActiveDecision;
+use crate::market::{BidVector, MarketPortfolio};
+use crate::preempt::binomial_expected_recip;
+use crate::util::rng::Rng;
+
+use super::engine::{EngineState, Event, Policy};
+
+/// Observations a detector must accumulate after a (re-)anchor before
+/// it may fire again: keeps the innovation variance estimate from
+/// firing on its own startup transient (see `EwmaLevel`).
+const DETECTOR_WARMUP: u64 = 16;
+
+/// `E[1/y]` is undefined at q = 1; an all-preempted window forecasts
+/// this close to certain interruption instead (the score it produces
+/// is effectively zero, which is the right ranking).
+const Q_FORECAST_CAP: f64 = 0.999_999;
+
+/// Regime threshold used by `ProactiveMigrator`'s internal price
+/// levels (the spec key `innovation_threshold` belongs to
+/// `lookahead_bid`, whose bid plan actually consumes the detector).
+const MIGRATOR_LEVEL_THRESHOLD: f64 = 6.0;
+
+// ===================================================================
+// Forecaster
+// ===================================================================
+
+/// An online, RNG-free estimator fed per-event from Observer-visible
+/// state.
+///
+/// The contract mirrors `Policy::on_event` (DESIGN.md §6): `observe`
+/// must be a *pure fold* over the observation stream — no randomness,
+/// no clocks, no allocation proportional to history — so that feeding
+/// the same stream twice leaves bitwise-identical state, and a policy
+/// built on a forecaster costs the engine no RNG draws. That is the
+/// whole reason forecast-driven sweeps keep bit-identical digests at
+/// any thread count.
+pub trait Forecaster {
+    /// Fold one observation into the estimator state.
+    fn observe(&mut self, x: f64);
+
+    /// The current forecast (meaning depends on the estimator:
+    /// probability for rates, price for levels).
+    fn predict(&self) -> f64;
+
+    /// Total observations folded in so far.
+    fn observations(&self) -> u64;
+}
+
+// ===================================================================
+// SlidingWindowRate
+// ===================================================================
+
+/// Per-market empirical preemption rate q̂ over a sliding window, with
+/// Laplace smoothing.
+///
+/// Keeps the last `window` boolean outcomes in a ring buffer and
+/// forecasts `q̂ = (hits + s) / (len + 2s)` where `s` is the smoothing
+/// pseudo-count: `s = 1` is the classic add-one prior centred on 1/2,
+/// `s = 0` is the raw empirical rate (and an *empty* raw window
+/// forecasts 0 rather than 0/0).
+#[derive(Clone, Debug)]
+pub struct SlidingWindowRate {
+    ring: Vec<bool>,
+    head: usize,
+    len: usize,
+    hits: usize,
+    smoothing: f64,
+    seen: u64,
+}
+
+impl SlidingWindowRate {
+    /// `window >= 1` outcomes are retained; `smoothing >= 0` is the
+    /// Laplace pseudo-count.
+    pub fn new(window: usize, smoothing: f64) -> Self {
+        assert!(window >= 1, "window must be >= 1, got {window}");
+        assert!(
+            smoothing.is_finite() && smoothing >= 0.0,
+            "smoothing must be finite and >= 0, got {smoothing}"
+        );
+        SlidingWindowRate {
+            ring: vec![false; window],
+            head: 0,
+            len: 0,
+            hits: 0,
+            smoothing,
+            seen: 0,
+        }
+    }
+
+    /// Fold one slot outcome: was the market interrupting?
+    pub fn observe_preempt(&mut self, preempted: bool) {
+        if self.len == self.ring.len() {
+            if self.ring[self.head] {
+                self.hits -= 1;
+            }
+        } else {
+            self.len += 1;
+        }
+        self.ring[self.head] = preempted;
+        if preempted {
+            self.hits += 1;
+        }
+        self.head = (self.head + 1) % self.ring.len();
+        self.seen += 1;
+    }
+
+    /// The smoothed in-window rate (see type docs for the formula).
+    pub fn rate(&self) -> f64 {
+        if self.len == 0 && self.smoothing == 0.0 {
+            return 0.0;
+        }
+        (self.hits as f64 + self.smoothing)
+            / (self.len as f64 + 2.0 * self.smoothing)
+    }
+
+    /// The configured window length.
+    pub fn window(&self) -> usize {
+        self.ring.len()
+    }
+}
+
+impl Forecaster for SlidingWindowRate {
+    fn observe(&mut self, x: f64) {
+        self.observe_preempt(x != 0.0);
+    }
+
+    fn predict(&self) -> f64 {
+        self.rate()
+    }
+
+    fn observations(&self) -> u64 {
+        self.seen
+    }
+}
+
+// ===================================================================
+// EwmaLevel
+// ===================================================================
+
+/// EWMA price level with a normalized-innovation regime-change
+/// detector.
+///
+/// The level follows `level += α·(x - level)` with `α = 2/(window+1)`
+/// (the usual span convention), and the innovation variance follows
+/// the same EWMA of squared innovations. When an innovation exceeds
+/// `threshold` estimated standard deviations the observation is
+/// declared a *regime change*: the level re-anchors to the new value,
+/// the variance resets, and [`shifts`](EwmaLevel::shifts) increments —
+/// so after a contended/spot regime flip the level converges in one
+/// step instead of one span.
+///
+/// The detector stays silent until [`DETECTOR_WARMUP`] observations
+/// have accumulated since the last (re-)anchor: a freshly reset
+/// variance estimate underestimates σ, and firing on that transient
+/// would turn ordinary noise into phantom regimes. Consequence: two
+/// true regime flips closer together than the warmup are detected as
+/// one.
+#[derive(Clone, Debug)]
+pub struct EwmaLevel {
+    alpha: f64,
+    threshold: f64,
+    level: f64,
+    var: f64,
+    seeded: bool,
+    since_anchor: u64,
+    seen: u64,
+    shifts: u64,
+}
+
+impl EwmaLevel {
+    /// `window >= 1` is the EWMA span; `threshold > 0` is the detector
+    /// trip point in estimated standard deviations.
+    pub fn new(window: usize, threshold: f64) -> Self {
+        assert!(window >= 1, "window must be >= 1, got {window}");
+        assert!(
+            threshold.is_finite() && threshold > 0.0,
+            "innovation threshold must be finite and > 0, got {threshold}"
+        );
+        EwmaLevel {
+            alpha: 2.0 / (window as f64 + 1.0),
+            threshold,
+            level: 0.0,
+            var: 0.0,
+            seeded: false,
+            since_anchor: 0,
+            seen: 0,
+            shifts: 0,
+        }
+    }
+
+    /// Fold one price observation.
+    pub fn observe_price(&mut self, x: f64) {
+        self.seen += 1;
+        if !self.seeded {
+            self.seeded = true;
+            self.anchor(x);
+            return;
+        }
+        let innov = x - self.level;
+        // tiny floor so a step out of a perfectly constant stream
+        // (var = 0, the piecewise-constant trace case) still fires
+        let sigma =
+            self.var.sqrt().max(1e-12 + 1e-9 * self.level.abs());
+        if self.since_anchor >= DETECTOR_WARMUP
+            && innov.abs() > self.threshold * sigma
+        {
+            self.shifts += 1;
+            self.anchor(x);
+            return;
+        }
+        self.level += self.alpha * innov;
+        self.var =
+            (1.0 - self.alpha) * self.var + self.alpha * innov * innov;
+        self.since_anchor += 1;
+    }
+
+    fn anchor(&mut self, x: f64) {
+        self.level = x;
+        self.var = 0.0;
+        self.since_anchor = 1;
+    }
+
+    /// The current level estimate (0 until the first observation).
+    pub fn level(&self) -> f64 {
+        self.level
+    }
+
+    /// Regime changes detected so far.
+    pub fn shifts(&self) -> u64 {
+        self.shifts
+    }
+}
+
+impl Forecaster for EwmaLevel {
+    fn observe(&mut self, x: f64) {
+        self.observe_price(x);
+    }
+
+    fn predict(&self) -> f64 {
+        self.level()
+    }
+
+    fn observations(&self) -> u64 {
+        self.seen
+    }
+}
+
+// ===================================================================
+// ProactiveMigrator
+// ===================================================================
+
+/// The `proactive_migrate` placement rule: forecast every portfolio
+/// entry and move *before* preemption, not after the price.
+///
+/// Where `MigrationRule` (DESIGN.md §10) chases the cheapest current
+/// effective price, this rule scores each entry by **forecast expected
+/// progress per dollar**:
+///
+/// ```text
+/// score_i = (1 - q̂_i) · speed_i / (E[1/y]|q̂_i · level_i)
+/// ```
+///
+/// `(1 - q̂_i)` is the forecast fraction of productive slots over the
+/// lookahead horizon (the portfolio `q` is market-level: the whole
+/// fleet loses the slot), `E[1/y]` at the *forecast* q̂ is the exact
+/// Theorem-1 convergence driver from [`binomial_expected_recip`], and
+/// `level_i` is the EWMA price forecast — so a market that is cheap
+/// right now but forecast-volatile scores below a slightly pricier
+/// stable one, which is exactly the call the reactive rule gets wrong.
+///
+/// A proactive move must clear two gates: the hysteresis band
+/// (`best > current·(1+hysteresis)`, the §10 anti-thrash dead-band
+/// applied in score space) *and* the amortized move cost — the
+/// checkpoint + restart seconds as a fraction of the lookahead
+/// `horizon_s` discount the challenger's score, so short horizons
+/// rightly refuse moves a long-horizon planner would take. When the
+/// current market is interrupting the move is forced (to the
+/// best-scoring *available* entry), mirroring `MigrationRule`.
+///
+/// All state updates are RNG-free folds of the slot's (prices,
+/// availability) vector, which the portfolio engine already draws for
+/// every market each slot.
+#[derive(Clone, Debug)]
+pub struct ProactiveMigrator {
+    n: usize,
+    hysteresis: f64,
+    /// fraction of the lookahead horizon one move burns, clamped to 1
+    move_penalty: f64,
+    rates: Vec<SlidingWindowRate>,
+    levels: Vec<EwmaLevel>,
+}
+
+impl ProactiveMigrator {
+    /// `n` is the fleet size the `E[1/y]` score is evaluated at;
+    /// `markets` the portfolio width; `move_cost_s` the full
+    /// checkpoint + restart bill one migration pays.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n: usize,
+        markets: usize,
+        hysteresis: f64,
+        window: usize,
+        horizon_s: f64,
+        smoothing: f64,
+        move_cost_s: f64,
+    ) -> Self {
+        assert!(n >= 1, "fleet size must be >= 1");
+        assert!(markets >= 1, "portfolio must have >= 1 markets");
+        assert!(
+            hysteresis.is_finite() && (0.0..1.0).contains(&hysteresis),
+            "hysteresis must be in [0, 1), got {hysteresis}"
+        );
+        assert!(
+            horizon_s.is_finite() && horizon_s > 0.0,
+            "horizon_s must be finite and > 0, got {horizon_s}"
+        );
+        assert!(
+            move_cost_s.is_finite() && move_cost_s >= 0.0,
+            "move cost must be finite and >= 0, got {move_cost_s}"
+        );
+        ProactiveMigrator {
+            n,
+            hysteresis,
+            move_penalty: (move_cost_s / horizon_s).min(1.0),
+            rates: (0..markets)
+                .map(|_| SlidingWindowRate::new(window, smoothing))
+                .collect(),
+            levels: (0..markets)
+                .map(|_| {
+                    EwmaLevel::new(window, MIGRATOR_LEVEL_THRESHOLD)
+                })
+                .collect(),
+        }
+    }
+
+    /// Fold one slot's per-market draws. The engine calls this before
+    /// [`target`](ProactiveMigrator::target) every slot, so forecasts
+    /// always include the slot being decided.
+    pub fn observe_slot(&mut self, prices: &[f64], available: &[bool]) {
+        debug_assert_eq!(prices.len(), self.rates.len());
+        debug_assert_eq!(available.len(), self.rates.len());
+        for m in 0..self.rates.len() {
+            self.rates[m].observe_preempt(!available[m]);
+            self.levels[m].observe_price(prices[m]);
+        }
+    }
+
+    /// Forecast preemption rate for market `m` (capped below 1 so the
+    /// `E[1/y]` score stays defined on an all-preempted window).
+    pub fn rate(&self, m: usize) -> f64 {
+        self.rates[m].rate().min(Q_FORECAST_CAP)
+    }
+
+    /// Forecast price level for market `m`.
+    pub fn level(&self, m: usize) -> f64 {
+        self.levels[m].level()
+    }
+
+    /// Forecast expected progress per dollar for entry `m` (see type
+    /// docs for the formula).
+    pub fn score(&self, port: &MarketPortfolio, m: usize) -> f64 {
+        let q = self.rate(m);
+        let recip = binomial_expected_recip(self.n, q);
+        let level = self.level(m).max(1e-9);
+        (1.0 - q) * port.entries[m].speed / (recip * level)
+    }
+
+    /// Where the fleet should move this slot, if anywhere. Same
+    /// calling convention as `MigrationRule::target`: `None` when
+    /// staying put (or when every market is interrupting), ties break
+    /// to the lowest index so digests are stable.
+    pub fn target(
+        &self,
+        port: &MarketPortfolio,
+        current: usize,
+        prices: &[f64],
+        available: &[bool],
+    ) -> Option<usize> {
+        debug_assert_eq!(prices.len(), port.len());
+        debug_assert_eq!(available.len(), port.len());
+        if !available[current] {
+            // forced move: best-scoring entry still up this slot
+            let mut best: Option<(usize, f64)> = None;
+            for m in 0..port.len() {
+                if !available[m] {
+                    continue;
+                }
+                let s = self.score(port, m);
+                if best.is_none_or(|(_, b)| s > b) {
+                    best = Some((m, s));
+                }
+            }
+            return best.map(|(m, _)| m);
+        }
+        let cur = self.score(port, current);
+        let mut best = (current, cur);
+        for m in 0..port.len() {
+            if m == current || !available[m] {
+                continue;
+            }
+            let s = self.score(port, m);
+            if s > best.1 {
+                best = (m, s);
+            }
+        }
+        if best.0 == current {
+            return None;
+        }
+        // the challenger pays the move before it earns: discount by
+        // the horizon fraction the move burns, then clear the band
+        let challenger = best.1 * (1.0 - self.move_penalty);
+        (challenger > cur * (1.0 + self.hysteresis)).then_some(best.0)
+    }
+}
+
+// ===================================================================
+// LookaheadBid
+// ===================================================================
+
+/// Re-plan the Theorem-2 bid against the forecast price level instead
+/// of the static distribution.
+///
+/// Starts from the statically-planned bid vector (the Theorem-2
+/// optimum against the spec's price CDF). On every
+/// [`Event::PriceRevision`] the policy folds the price into an
+/// [`EwmaLevel`] and rescales the whole vector by
+/// `level / base_level`, where `base_level` is the static
+/// distribution's mean — i.e. it re-plans *within the scale family*
+/// of the original optimum. Under a pure proportional shift of the
+/// price distribution (`p → c·p`, exactly what the regime-switching
+/// trace generator's `contended_mult` does) the Theorem-2 optimal bid
+/// scales by the same `c`, so the scale-family re-plan tracks the
+/// true optimum through regime flips; the innovation detector makes
+/// the level — and hence the bid — re-anchor in one revision when a
+/// flip is detected. Bids saturate at `bid_cap` (the price-support
+/// maximum, the repo's on-demand convention).
+///
+/// The policy is fully deterministic: no RNG in `decide`, none in
+/// `on_event`, so it is digest-safe at any thread count and batches
+/// like any other lane policy.
+pub struct LookaheadBid {
+    label: String,
+    base: BidVector,
+    bids: BidVector,
+    j: u64,
+    level: EwmaLevel,
+    base_level: f64,
+    bid_cap: f64,
+    replans: u64,
+}
+
+impl LookaheadBid {
+    /// `bids` is the static Theorem-2 plan; `base_level > 0` the
+    /// static distribution's mean price; `bid_cap > 0` the saturation
+    /// point; `window`/`innovation_threshold` parameterize the level
+    /// forecaster.
+    pub fn new(
+        label: impl Into<String>,
+        bids: BidVector,
+        j: u64,
+        window: usize,
+        innovation_threshold: f64,
+        base_level: f64,
+        bid_cap: f64,
+    ) -> Self {
+        assert!(
+            base_level.is_finite() && base_level > 0.0,
+            "base price level must be finite and > 0, got {base_level}"
+        );
+        assert!(bid_cap > 0.0, "bid_cap must be > 0");
+        LookaheadBid {
+            label: label.into(),
+            base: bids.clone(),
+            bids,
+            j,
+            level: EwmaLevel::new(window, innovation_threshold),
+            base_level,
+            bid_cap,
+            replans: 0,
+        }
+    }
+
+    /// Current (b1, b2) after any re-planning so far.
+    pub fn current_bids(&self) -> (f64, f64) {
+        (self.bids.b1, self.bids.b2)
+    }
+
+    /// Regime changes the level forecaster has detected.
+    pub fn regime_shifts(&self) -> u64 {
+        self.level.shifts()
+    }
+
+    /// Price revisions that moved the plan.
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    fn replan(&mut self) {
+        let scale = self.level.level() / self.base_level;
+        let b1 = (self.base.b1 * scale).clamp(0.0, self.bid_cap);
+        let b2 = (self.base.b2 * scale).clamp(0.0, self.bid_cap);
+        if (b1, b2) != (self.bids.b1, self.bids.b2) {
+            self.bids =
+                BidVector::two_group(self.base.n(), self.base.n1, b1, b2);
+            self.replans += 1;
+        }
+    }
+}
+
+impl Policy for LookaheadBid {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn target_iters(&self) -> u64 {
+        self.j
+    }
+
+    fn max_workers(&self) -> usize {
+        self.bids.n()
+    }
+
+    fn decide(&mut self, price: f64, _rng: &mut Rng) -> ActiveDecision {
+        ActiveDecision { active: self.bids.active_set(price), price }
+    }
+
+    fn decide_into(
+        &mut self,
+        price: f64,
+        _rng: &mut Rng,
+        active: &mut Vec<usize>,
+    ) -> f64 {
+        self.bids.active_set_into(price, active);
+        price
+    }
+
+    fn on_event(&mut self, ev: &Event, _state: &EngineState) -> Result<()> {
+        if let Event::PriceRevision { price } = ev {
+            self.level.observe_price(*price);
+            self.replan();
+        }
+        Ok(())
+    }
+}
+
+// ===================================================================
+// tests
+// ===================================================================
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::PortfolioEntry;
+    use crate::util::proptest::{close, for_all, Gen};
+
+    fn port3() -> MarketPortfolio {
+        MarketPortfolio::new(vec![
+            PortfolioEntry { label: "stable".into(), speed: 1.0, q: 0.02 },
+            PortfolioEntry { label: "slow".into(), speed: 0.7, q: 0.02 },
+            PortfolioEntry {
+                label: "volatile".into(),
+                speed: 1.3,
+                q: 0.3,
+            },
+        ])
+        .unwrap()
+    }
+
+    // -------------------------------------------------- estimators
+
+    #[test]
+    fn window_rate_converges_to_true_q_on_stationary_streams() {
+        for_all("window q-hat converges", |g: &mut Gen| {
+            let q = g.f64_in(0.05, 0.9);
+            let mut est = SlidingWindowRate::new(1024, 1.0);
+            for _ in 0..4096 {
+                est.observe_preempt(g.rng.bool(q));
+            }
+            // window std <= sqrt(0.25/1024) ~ 0.016; the bound below
+            // is ~9 sigma, far outside any seeded case's reach
+            close(est.rate(), q, 0.08, "sliding-window q-hat")
+        });
+    }
+
+    #[test]
+    fn window_rate_eviction_and_smoothing_are_exact() {
+        let mut est = SlidingWindowRate::new(4, 0.0);
+        for p in [true, true, true, true, false, false, false, false] {
+            est.observe_preempt(p);
+        }
+        // the four trues were evicted by the four falses
+        assert_eq!(est.rate(), 0.0);
+        assert_eq!(est.observations(), 8);
+        assert_eq!(est.window(), 4);
+
+        let mut smoothed = SlidingWindowRate::new(8, 1.0);
+        smoothed.observe_preempt(true);
+        assert!((smoothed.rate() - 2.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn window_rate_edge_cases() {
+        // zero events, no smoothing: 0, not 0/0
+        assert_eq!(SlidingWindowRate::new(8, 0.0).rate(), 0.0);
+        // zero events, smoothed: the pure prior
+        assert_eq!(SlidingWindowRate::new(8, 1.0).rate(), 0.5);
+        // window = 1 tracks exactly the last outcome
+        let mut one = SlidingWindowRate::new(1, 0.0);
+        one.observe_preempt(true);
+        assert_eq!(one.rate(), 1.0);
+        one.observe_preempt(false);
+        assert_eq!(one.rate(), 0.0);
+        // all-preempted raw window forecasts 1.0 ...
+        let mut all = SlidingWindowRate::new(4, 0.0);
+        for _ in 0..6 {
+            all.observe_preempt(true);
+        }
+        assert_eq!(all.rate(), 1.0);
+        // ... and the migrator's capped view keeps E[1/y] defined
+        let mut mig =
+            ProactiveMigrator::new(4, 1, 0.05, 4, 600.0, 0.0, 16.0);
+        for _ in 0..6 {
+            mig.observe_slot(&[0.1], &[false]);
+        }
+        assert!(mig.rate(0) < 1.0);
+        assert!(mig.score(&port3(), 0).is_finite());
+    }
+
+    #[test]
+    fn ewma_detector_fires_on_regime_switch_and_reanchors() {
+        let mut est = EwmaLevel::new(32, 4.0);
+        let mut rng = Rng::new(7);
+        for _ in 0..128 {
+            est.observe_price(0.08 + rng.uniform(-0.004, 0.004));
+        }
+        assert_eq!(est.shifts(), 0, "stationary prefix must be silent");
+        close(est.level(), 0.08, 0.01, "pre-switch level").unwrap();
+        est.observe_price(0.16); // contended regime switches on
+        assert_eq!(est.shifts(), 1, "switch must fire the detector");
+        assert_eq!(est.level(), 0.16, "level re-anchors in one step");
+    }
+
+    #[test]
+    fn ewma_detector_fires_on_step_out_of_constant_stream() {
+        // piecewise-constant traces have zero innovation variance;
+        // the sigma floor keeps the detector live there
+        let mut est = EwmaLevel::new(16, 6.0);
+        for _ in 0..32 {
+            est.observe_price(0.1);
+        }
+        assert_eq!(est.shifts(), 0);
+        est.observe_price(0.11);
+        assert_eq!(est.shifts(), 1);
+    }
+
+    #[test]
+    fn ewma_detector_silent_on_stationary_noise() {
+        for_all("detector silent on noise", |g: &mut Gen| {
+            let base = g.f64_in(0.05, 0.2);
+            let amp = base * 0.1;
+            let mut est = EwmaLevel::new(64, 6.0);
+            for _ in 0..512 {
+                est.observe_price(base + g.f64_in(-amp, amp));
+            }
+            if est.shifts() != 0 {
+                return Err(format!(
+                    "{} phantom regime(s) on bounded stationary noise",
+                    est.shifts()
+                ));
+            }
+            close(est.level(), base, 0.05, "level tracks the mean")
+        });
+    }
+
+    #[test]
+    fn forecaster_updates_are_bitwise_reproducible() {
+        for_all("bitwise replay", |g: &mut Gen| {
+            let xs = g.vec_f64(200, 0.01, 0.5);
+            let mut a = EwmaLevel::new(16, 4.0);
+            let mut b = EwmaLevel::new(16, 4.0);
+            let mut ra = SlidingWindowRate::new(32, 1.0);
+            let mut rb = SlidingWindowRate::new(32, 1.0);
+            for &x in &xs {
+                a.observe(x);
+                ra.observe(if x > 0.25 { 1.0 } else { 0.0 });
+            }
+            for &x in &xs {
+                b.observe(x);
+                rb.observe(if x > 0.25 { 1.0 } else { 0.0 });
+            }
+            if a.predict().to_bits() != b.predict().to_bits()
+                || a.shifts() != b.shifts()
+                || ra.predict().to_bits() != rb.predict().to_bits()
+            {
+                return Err("replayed stream diverged bitwise".into());
+            }
+            Ok(())
+        });
+    }
+
+    // -------------------------------------------------- migrator
+
+    /// Feed `slots` observations where `volatile` (entry 2) is down
+    /// every third slot but quotes the cheapest price.
+    fn fed_migrator(slots: usize) -> ProactiveMigrator {
+        let mut mig =
+            ProactiveMigrator::new(8, 3, 0.05, 64, 600.0, 1.0, 16.0);
+        for t in 0..slots {
+            let down = t % 3 == 0;
+            mig.observe_slot(&[0.085, 0.08, 0.055], &[true, true, !down]);
+        }
+        mig
+    }
+
+    #[test]
+    fn migrator_stays_home_where_reactive_rule_chases_the_price() {
+        let port = port3();
+        let mig = fed_migrator(200);
+        // q-hat for the volatile entry has converged near 1/3
+        close(mig.rate(2), 1.0 / 3.0, 0.05, "volatile q-hat").unwrap();
+        let prices = [0.085, 0.08, 0.055];
+        let avail = [true, true, true];
+        // the reactive rule sees only the cheap price and moves ...
+        let reactive = crate::market::MigrationRule { hysteresis: 0.05 };
+        assert_eq!(reactive.target(&port, 0, &prices, &avail), Some(2));
+        // ... the forecast score knows the entry is a trap and stays
+        assert_eq!(mig.target(&port, 0, &prices, &avail), None);
+        assert!(
+            mig.score(&port, 0) > mig.score(&port, 2),
+            "stable must out-score volatile: {} vs {}",
+            mig.score(&port, 0),
+            mig.score(&port, 2)
+        );
+    }
+
+    #[test]
+    fn migrator_forced_move_picks_best_scoring_available_entry() {
+        let port = port3();
+        let mig = fed_migrator(200);
+        let prices = [0.085, 0.08, 0.055];
+        // home down: move to the best *available* forecast score —
+        // entry 1, not the forecast-volatile entry 2
+        assert_eq!(
+            mig.target(&port, 0, &prices, &[false, true, true]),
+            Some(1)
+        );
+        // everything down: nowhere to go
+        assert_eq!(
+            mig.target(&port, 0, &prices, &[false, false, false]),
+            None
+        );
+    }
+
+    #[test]
+    fn migrator_horizon_gates_proactive_moves() {
+        let port = port3();
+        // entry 1 forecast-scores above entry 0 once entry 0 has seen
+        // interruptions; a horizon shorter than the move cost must
+        // still refuse the move
+        let feed = |mig: &mut ProactiveMigrator| {
+            for t in 0..200 {
+                let down = t % 3 == 0;
+                mig.observe_slot(
+                    &[0.085, 0.08, 0.5],
+                    &[!down, true, true],
+                );
+            }
+        };
+        let mut long =
+            ProactiveMigrator::new(8, 3, 0.05, 64, 600.0, 1.0, 16.0);
+        feed(&mut long);
+        assert_eq!(
+            long.target(&port, 0, &[0.085, 0.08, 0.5], &[true; 3]),
+            Some(1),
+            "long horizon migrates ahead of the next interruption"
+        );
+        let mut short =
+            ProactiveMigrator::new(8, 3, 0.05, 64, 10.0, 1.0, 16.0);
+        feed(&mut short);
+        assert_eq!(
+            short.target(&port, 0, &[0.085, 0.08, 0.5], &[true; 3]),
+            None,
+            "a horizon shorter than the move cost refuses the move"
+        );
+    }
+
+    // -------------------------------------------------- lookahead bid
+
+    fn state() -> EngineState {
+        EngineState {
+            iter: 0,
+            target: 100,
+            clock: 0.0,
+            cost: 0.0,
+            idle_time: 0.0,
+            error: 1.0,
+            accuracy: 0.0,
+            active: 0,
+            price: 0.1,
+        }
+    }
+
+    #[test]
+    fn lookahead_bid_rescales_with_the_forecast_level() {
+        let mut pol = LookaheadBid::new(
+            "look",
+            BidVector::uniform(4, 0.1),
+            100,
+            16,
+            6.0,
+            0.1,
+            0.5,
+        );
+        let st = state();
+        // stationary prefix at the base level: plan unchanged
+        for _ in 0..24 {
+            pol.on_event(&Event::PriceRevision { price: 0.1 }, &st)
+                .unwrap();
+        }
+        assert_eq!(pol.current_bids(), (0.1, 0.1));
+        assert_eq!(pol.regime_shifts(), 0);
+        // regime flip doubles the level: detector re-anchors and the
+        // whole plan rescales by 2x in one revision
+        pol.on_event(&Event::PriceRevision { price: 0.2 }, &st)
+            .unwrap();
+        assert_eq!(pol.regime_shifts(), 1);
+        assert_eq!(pol.current_bids(), (0.2, 0.2));
+        assert!(pol.replans() >= 1);
+        // decide admits everyone below the rescaled bid, RNG-free
+        let mut rng = Rng::new(1);
+        assert_eq!(pol.decide(0.15, &mut rng).active.len(), 4);
+    }
+
+    #[test]
+    fn lookahead_bid_saturates_at_the_cap() {
+        let mut pol = LookaheadBid::new(
+            "look",
+            BidVector::uniform(2, 0.4),
+            100,
+            4,
+            6.0,
+            0.1,
+            0.5,
+        );
+        let st = state();
+        for _ in 0..24 {
+            pol.on_event(&Event::PriceRevision { price: 0.1 }, &st)
+                .unwrap();
+        }
+        pol.on_event(&Event::PriceRevision { price: 0.4 }, &st)
+            .unwrap();
+        // scale 4x would put the bid at 1.6; the cap holds it at 0.5
+        assert_eq!(pol.current_bids(), (0.5, 0.5));
+    }
+}

@@ -1,12 +1,14 @@
 //! Virtual-clock simulation substrate: price sources over time, the
 //! cost meter, the discrete-event engine driving a run as typed events
 //! through policies and observers (DESIGN.md §5), the suite of
-//! event-reactive adaptive policies built on it (DESIGN.md §6), and the
-//! batched structure-of-arrays replicate executor (DESIGN.md §8).
+//! event-reactive adaptive policies built on it (DESIGN.md §6), the
+//! batched structure-of-arrays replicate executor (DESIGN.md §8), and
+//! the forecast-driven proactive policy layer (DESIGN.md §11).
 
 pub mod batch;
 pub mod cost;
 pub mod engine;
+pub mod forecast;
 pub mod policy;
 pub mod price_source;
 
@@ -15,6 +17,10 @@ pub use cost::CostMeter;
 pub use engine::{
     Engine, EngineParams, EngineResult, EngineState, Event, EventLog,
     LockstepPolicy, Observer, OverheadModel, Policy, SeriesRecorder,
+};
+pub use forecast::{
+    EwmaLevel, Forecaster, LookaheadBid, ProactiveMigrator,
+    SlidingWindowRate,
 };
 pub use policy::{DeadlineAware, ElasticFleet, NoticeRebid};
 pub use price_source::PriceSource;

@@ -7,7 +7,7 @@
 //! rebid policy escapes repeated preemptions, and a notice window
 //! covering the checkpoint cost eliminates lost work entirely.
 
-use volatile_sgd::exp::presets;
+use volatile_sgd::exp::{presets, ScenarioSpec, SpecScenario};
 use volatile_sgd::sweep::{run_sweep, SweepConfig};
 
 fn collate(
@@ -111,4 +111,172 @@ fn notice_grid_thread_deterministic_and_notice_eliminates_lost_work() {
         assert!(mean(p, "checkpoint_time") > 0.0, "point {p}");
         assert!(mean(p, "iters") > 0.0, "point {p}");
     }
+}
+
+// ---------------------------------------------------------------
+// Trace-driven behavioral headlines (the shipped policy grids above
+// run on synthetic closed-form markets only; this pins the same
+// event-reactive semantics against a committed EC2 fixture)
+// ---------------------------------------------------------------
+
+/// NoticeRebid + ElasticFleet against the committed c5.xlarge spot
+/// history, under the full overhead model.
+const TRACE_POLICIES: &str = r#"
+name = "policy_replay"
+strategies = ["rebid", "elastic", "one_bid"]
+metrics = ["total_cost", "iters", "preempt_events", "lost_iters", "checkpoint_time"]
+
+[job]
+n = 8
+eps = 0.35
+j = 4000
+preempt_q = 0.4
+
+[runtime]
+kind = "exp"
+lambda = 0.25
+delta = 0.5
+
+[overhead]
+checkpoint_every_iters = 4
+checkpoint_cost_s = 10.0
+restart_delay_s = 30.0
+lost_work_on_preempt = true
+preempt_notice_s = 30.0
+
+[market]
+kind = "tracefile"
+path = "examples/traces/ec2_c5xlarge_uswest2a.csv"
+resample_s = 3600.0
+cdf_resolution = 900.0
+
+[strategy.rebid]
+kind = "notice_rebid"
+rebid_factor = 1.5
+
+[strategy.elastic]
+kind = "elastic_fleet"
+budget_rate = 1.2
+
+[strategy.one_bid]
+kind = "one_bid"
+"#;
+
+/// The notice-window and elastic-fleet headlines survive the move
+/// from closed-form markets to a recorded price history: a notice
+/// covering the checkpoint cost still eliminates lost work *exactly*,
+/// the elastic fleet still completes its full iteration budget, and
+/// the digest stays thread-invariant on the trace-driven run.
+#[test]
+fn trace_replay_policies_hold_their_headlines() {
+    let sc =
+        SpecScenario::new(ScenarioSpec::from_str(TRACE_POLICIES).unwrap())
+            .unwrap();
+    let base = SweepConfig { replicates: 2, seed: 13, threads: 1 };
+    let serial = run_sweep(&sc, &base).unwrap();
+    let par =
+        run_sweep(&sc, &SweepConfig { threads: 8, ..base }).unwrap();
+    assert_eq!(serial.digest(), par.digest(), "threads must be pure");
+
+    let idx = |name: &str| {
+        serial.metric_names.iter().position(|m| m == name).unwrap()
+    };
+    let mean = |p: usize, m: &str| serial.points[p].stats[idx(m)].mean();
+    // point order follows the lineup: rebid, elastic, one_bid
+    for (p, label) in ["rebid", "elastic", "one_bid"].iter().enumerate() {
+        assert_eq!(serial.points[p].label, *label);
+        // q = 0.4 on 8 workers: the fixture run is interruption-heavy
+        assert!(mean(p, "preempt_events") > 0.0, "{label}");
+        // 30 s notice >= 10 s checkpoint: every preemption
+        // emergency-saves, so no iteration is ever recomputed
+        assert_eq!(
+            mean(p, "lost_iters"),
+            0.0,
+            "{label}: a covered notice must save all work"
+        );
+        assert!(mean(p, "total_cost") > 0.0, "{label}");
+    }
+    // the elastic fleet never idles into a stall: it completes its
+    // full iteration budget on the recorded history too
+    assert_eq!(mean(1, "iters"), 4000.0, "elastic must finish the job");
+
+    // with the notice window gone, the checkpoint-only baseline loses
+    // uncheckpointed work on the very same fixture
+    let uncovered =
+        TRACE_POLICIES.replace("preempt_notice_s = 30.0", "");
+    let sc =
+        SpecScenario::new(ScenarioSpec::from_str(&uncovered).unwrap())
+            .unwrap();
+    let bare = run_sweep(&sc, &base).unwrap();
+    assert!(
+        bare.points[2].stats[idx("lost_iters")].mean() > 0.0,
+        "one_bid with no notice must recompute lost work"
+    );
+}
+
+/// Strict `--check` error paths for the forecaster keys (DESIGN.md
+/// §11): bad values are rejected at parse time with the offending
+/// strategy named, and a misspelled key is rejected *by table path*.
+#[test]
+fn forecaster_keys_fail_strict_check_by_name() {
+    let base = r#"
+name = "forecast_check"
+strategies = ["proactive", "lookahead"]
+metrics = ["total_cost"]
+
+[job]
+n = 4
+j = 400
+
+[[portfolio]]
+label = "home"
+kind = "uniform"
+lo = 0.2
+hi = 1.0
+
+[[portfolio]]
+label = "away"
+kind = "uniform"
+lo = 0.1
+hi = 0.6
+q = 0.2
+
+[strategy.proactive]
+kind = "proactive_migrate"
+window = 48
+horizon_s = 300.0
+smoothing = 1.0
+
+[strategy.lookahead]
+kind = "lookahead_bid"
+window = 32
+innovation_threshold = 3.0
+"#;
+    assert!(ScenarioSpec::from_str(base).is_ok());
+    for (needle, replacement, expect) in [
+        ("window = 48", "window = -3", "window"),
+        ("window = 32", "window = 0", "window"),
+        ("horizon_s = 300.0", "horizon_s = 0.0", "horizon_s"),
+        ("horizon_s = 300.0", "horizon_s = -1.0", "horizon_s"),
+        ("smoothing = 1.0", "smoothing = -0.5", "smoothing"),
+        (
+            "innovation_threshold = 3.0",
+            "innovation_threshold = 0.0",
+            "innovation_threshold",
+        ),
+    ] {
+        let bad = base.replace(needle, replacement);
+        assert_ne!(bad, base, "needle '{needle}' not found");
+        let err = format!("{:#}", ScenarioSpec::from_str(&bad).unwrap_err());
+        assert!(
+            err.contains(expect),
+            "'{replacement}' should fail --check naming '{expect}', \
+             got: {err}"
+        );
+    }
+    // a misspelled forecaster key is named by its full table path
+    let bad = base.replace("smoothing = 1.0", "smoothign = 1.0");
+    let err = format!("{:#}", ScenarioSpec::from_str(&bad).unwrap_err());
+    assert!(err.contains("smoothign"), "{err}");
+    assert!(err.contains("in table [strategy.proactive]"), "{err}");
 }
