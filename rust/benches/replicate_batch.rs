@@ -19,7 +19,12 @@
 //! forecast trajectory — `forecast_grid`'s equivalence rows plus a
 //! forecaster-on (`proactive`) vs forecaster-off (`migrate`) timing
 //! pair isolating the estimator's per-replicate overhead — lands in
-//! `BENCH_9.json` (`BENCH9_OUT=path`).
+//! `BENCH_9.json` (`BENCH9_OUT=path`); the telemetry trajectory —
+//! every preset's telemetry-on vs telemetry-off digest rows (the
+//! obs digest-neutrality contract) plus the per-stage
+//! prepare/run/collate/pool timing breakdown read back from a
+//! registry-enabled run — lands in `BENCH_10.json`
+//! (`BENCH10_OUT=path`).
 //! `BENCH_SMOKE=1` shrinks the workload for CI.
 //!
 //! Run: `cargo bench --bench replicate_batch`
@@ -31,8 +36,10 @@ use std::time::Instant;
 use bench_util::{alloc_delta, default_threads, fmt_ns, AllocCounts};
 use volatile_sgd::exp::presets;
 use volatile_sgd::exp::SpecScenario;
+use volatile_sgd::obs::Registry;
 use volatile_sgd::sweep::{
-    run_sweep, run_sweep_batched, SweepConfig, SweepResults,
+    run_sweep, run_sweep_batched, run_sweep_batched_with, SweepConfig,
+    SweepResults, Telemetry,
 };
 use volatile_sgd::util::json::num;
 
@@ -294,6 +301,151 @@ fn write_forecast_json(
     println!("json -> {path}");
 }
 
+/// One telemetry-on vs telemetry-off digest equivalence row (the obs
+/// digest-neutrality contract, bench-sized).
+#[derive(Clone, Copy)]
+struct ObsRow {
+    preset: &'static str,
+    threads: usize,
+    off: u64,
+    on: u64,
+}
+
+impl ObsRow {
+    fn matches(&self) -> bool {
+        self.off == self.on
+    }
+}
+
+fn telemetry_digest_smoke(j_cap: u64, replicates: u64) -> Vec<ObsRow> {
+    println!("--- digest smoke: telemetry on vs off, every preset ---");
+    let mut rows = Vec::new();
+    let thread_counts = {
+        let t = default_threads();
+        if t == 1 {
+            vec![1]
+        } else {
+            vec![1, t]
+        }
+    };
+    for &preset in presets::PRESET_NAMES.iter() {
+        let scenario = reduced_scenario(preset, j_cap);
+        for &threads in &thread_counts {
+            let cfg = SweepConfig { replicates, seed: 2020, threads };
+            let off = run_sweep_batched(&scenario, &cfg).unwrap().digest();
+            let reg = Registry::new();
+            let on = run_sweep_batched_with(
+                &scenario,
+                &cfg,
+                Telemetry { trace: None, registry: Some(&reg) },
+            )
+            .unwrap()
+            .digest();
+            let row = ObsRow { preset, threads, off, on };
+            println!(
+                "  {:<16} threads={threads}  off={off:016x}  \
+                 on={on:016x}  {}",
+                preset,
+                if row.matches() { "ok" } else { "DIVERGED" }
+            );
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+/// Per-stage wall-clock totals read back from a registry-enabled run:
+/// (stage name, records, summed microseconds).
+type StageTotals = Vec<(&'static str, u64, u64)>;
+
+/// Run the reduced preset once with a registry attached and once bare,
+/// returning the stage breakdown plus the telemetry overhead ratio.
+fn stage_timing(name: &str, j: u64, replicates: u64) -> (StageTotals, f64) {
+    let threads = default_threads();
+    println!(
+        "--- stage timing: {name} (reduced), j={j}, {replicates} \
+         replicates, {threads} threads ---"
+    );
+    let scenario = reduced_scenario(name, j);
+    let cfg = SweepConfig { replicates, seed: 2020, threads };
+    run_sweep_batched(&scenario, &cfg).unwrap(); // warm
+    let t0 = Instant::now();
+    run_sweep_batched(&scenario, &cfg).unwrap();
+    let bare_s = t0.elapsed().as_secs_f64();
+    let reg = Registry::new();
+    let t1 = Instant::now();
+    run_sweep_batched_with(
+        &scenario,
+        &cfg,
+        Telemetry { trace: None, registry: Some(&reg) },
+    )
+    .unwrap();
+    let instrumented_s = t1.elapsed().as_secs_f64();
+    let overhead = instrumented_s / bare_s.max(1e-12);
+    let mut stages: StageTotals = Vec::new();
+    for stage in ["prepare", "run", "collate", "pool"] {
+        let h = reg.histogram(&format!("sweep_{stage}_us"));
+        println!(
+            "  {stage:<8} {:>6} records  {:>10} us total",
+            h.count(),
+            h.sum()
+        );
+        stages.push((stage, h.count(), h.sum()));
+    }
+    println!("  telemetry overhead {overhead:.3}x wall-clock");
+    (stages, overhead)
+}
+
+/// BENCH_10.json: the telemetry trajectory — telemetry-on vs
+/// telemetry-off digest rows for every preset plus the per-stage
+/// timing breakdown the registry recorded.
+fn write_obs_json(
+    path: &str,
+    smoke: bool,
+    rows: &[ObsRow],
+    stages: &StageTotals,
+    overhead: f64,
+) {
+    let checks: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"preset\": \"{}\", \"threads\": {}, \
+                 \"telemetry_off\": \"{:016x}\", \
+                 \"telemetry_on\": \"{:016x}\", \"match\": {}}}",
+                r.preset,
+                r.threads,
+                r.off,
+                r.on,
+                r.matches()
+            )
+        })
+        .collect();
+    let stage_json: Vec<String> = stages
+        .iter()
+        .map(|(name, count, sum_us)| {
+            format!(
+                "      \"{name}\": {{\"records\": {count}, \
+                 \"sum_us\": {sum_us}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"replicate_batch\",\n  \"schema\": 1,\n  \
+         \"recorded\": true,\n  \"smoke\": {smoke},\n  \
+         \"threads\": {},\n  \"digest_checks\": [\n{}\n  ],\n  \
+         \"stage_timing\": {{\n    \"preset\": \"fig3_reduced\",\n    \
+         \"stages\": {{\n{}\n    }},\n    \
+         \"telemetry_overhead\": {}\n  }}\n}}\n",
+        default_threads(),
+        checks.join(",\n"),
+        stage_json.join(",\n"),
+        num(overhead)
+    );
+    std::fs::write(path, json).unwrap();
+    println!("json -> {path}");
+}
+
 fn write_json(
     path: &str,
     smoke: bool,
@@ -375,6 +527,13 @@ fn main() {
     let out9 = std::env::var("BENCH9_OUT")
         .unwrap_or_else(|_| "BENCH_9.json".to_string());
     write_forecast_json(&out9, smoke, &fc_rows, &fc_on, &fc_off);
+    // BENCH_10: the telemetry trajectory — the obs digest-neutrality
+    // rows plus the per-stage timing breakdown (DESIGN.md §12)
+    let obs_rows = telemetry_digest_smoke(j_smoke, reps_smoke);
+    let (stages, overhead) = stage_timing("fig3", j_time, reps_time);
+    let out10 = std::env::var("BENCH10_OUT")
+        .unwrap_or_else(|_| "BENCH_10.json".to_string());
+    write_obs_json(&out10, smoke, &obs_rows, &stages, overhead);
     let diverged: Vec<&DigestRow> =
         rows.iter().filter(|r| !r.matches()).collect();
     if !diverged.is_empty() {
@@ -387,5 +546,19 @@ fn main() {
         }
         std::process::exit(1);
     }
-    println!("all presets: batched digest == scalar digest");
+    let obs_diverged: Vec<&ObsRow> =
+        obs_rows.iter().filter(|r| !r.matches()).collect();
+    if !obs_diverged.is_empty() {
+        for r in &obs_diverged {
+            eprintln!(
+                "TELEMETRY DIVERGENCE: preset {} at {} thread(s): \
+                 off {:016x} != on {:016x}",
+                r.preset, r.threads, r.off, r.on
+            );
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "all presets: batched digest == scalar digest, telemetry inert"
+    );
 }

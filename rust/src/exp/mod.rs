@@ -74,9 +74,24 @@ pub fn run_policy_engine(
     params: &RunParams,
     rng: &mut Rng,
 ) -> Result<EngineResult> {
+    run_policy_engine_obs(policy, bound, prices, params, rng, &mut [])
+}
+
+/// [`run_policy_engine`] with extra [`Observer`]s spliced into the
+/// engine's event stream (run tracing, DESIGN.md §12). Observers see
+/// every event the policy sees, draw zero RNG, and cannot perturb the
+/// run — results are bit-identical with or without them.
+pub fn run_policy_engine_obs(
+    policy: &mut dyn Policy,
+    bound: ErrorBound,
+    prices: &PriceSource,
+    params: &RunParams,
+    rng: &mut Rng,
+    extra: &mut [&mut dyn Observer],
+) -> Result<EngineResult> {
     let engine = Engine::new(*params);
     let mut backend = SyntheticBackend::new(bound);
-    engine.run(policy, &mut backend, prices, rng, &mut [])
+    engine.run(policy, &mut backend, prices, rng, extra)
 }
 
 /// Run one strategy on the event engine against the synthetic
@@ -236,6 +251,22 @@ pub fn run_portfolio_engine(
     params: &RunParams,
     rng: &mut Rng,
 ) -> Result<EngineResult> {
+    run_portfolio_engine_obs(plan, run, bound, params, rng, &mut [])
+}
+
+/// [`run_portfolio_engine`] with extra [`Observer`]s spliced into the
+/// event stream (run tracing, DESIGN.md §12). Observers additionally
+/// receive [`Observer::on_market`] once for the home entry before the
+/// first slot and again after every migration; like the single-market
+/// variant they draw zero RNG and cannot perturb the run.
+pub fn run_portfolio_engine_obs(
+    plan: &PlannedStrategy,
+    run: &PortfolioRun<'_>,
+    bound: ErrorBound,
+    params: &RunParams,
+    rng: &mut Rng,
+    extra: &mut [&mut dyn Observer],
+) -> Result<EngineResult> {
     let m = run.port.len();
     ensure!(m > 0, "portfolio run with no entries");
     ensure!(
@@ -323,15 +354,22 @@ pub fn run_portfolio_engine(
     let (mut checkpoint_time, mut restart_time) = (0.0f64, 0.0f64);
     let mut prices = vec![0.0f64; m];
     let mut avail = vec![true; m];
+    for obs in extra.iter_mut() {
+        obs.on_market(current);
+    }
 
     fn emit(
         policy: &mut dyn Policy,
         recorder: &mut SeriesRecorder,
+        extra: &mut [&mut dyn Observer],
         ev: Event,
         st: EngineState,
     ) -> Result<()> {
         policy.on_event(&ev, &st)?;
         recorder.on_event(&ev, &st);
+        for obs in extra.iter_mut() {
+            obs.on_event(&ev, &st);
+        }
         Ok(())
     }
     macro_rules! state {
@@ -357,6 +395,7 @@ pub fn run_portfolio_engine(
             emit(
                 policy.as_mut(),
                 &mut recorder,
+                extra,
                 Event::DeadlineHit,
                 state!(0, prev_price),
             )?;
@@ -390,6 +429,7 @@ pub fn run_portfolio_engine(
                 emit(
                     policy.as_mut(),
                     &mut recorder,
+                    extra,
                     Event::WorkerPreempted { notice: ov.preempt_notice_s },
                     state!(0, prices[current]),
                 )?;
@@ -403,6 +443,7 @@ pub fn run_portfolio_engine(
             emit(
                 policy.as_mut(),
                 &mut recorder,
+                extra,
                 Event::CheckpointDone,
                 state!(n_move, prices[current]),
             )?;
@@ -410,10 +451,14 @@ pub fn run_portfolio_engine(
             restart_time += ov.restart_delay_s;
             restarts += 1;
             current = to;
+            for obs in extra.iter_mut() {
+                obs.on_market(current);
+            }
             prev_price = prices[current];
             emit(
                 policy.as_mut(),
                 &mut recorder,
+                extra,
                 Event::WorkerRestored,
                 state!(n_move, prices[current]),
             )?;
@@ -434,6 +479,7 @@ pub fn run_portfolio_engine(
                 emit(
                     policy.as_mut(),
                     &mut recorder,
+                    extra,
                     Event::WorkerPreempted { notice: ov.preempt_notice_s },
                     state!(0, prices[current]),
                 )?;
@@ -451,6 +497,7 @@ pub fn run_portfolio_engine(
                 emit(
                     policy.as_mut(),
                     &mut recorder,
+                    extra,
                     Event::WorkerPreempted { notice: ov.preempt_notice_s },
                     state!(0, prices[current]),
                 )?;
@@ -468,6 +515,7 @@ pub fn run_portfolio_engine(
             emit(
                 policy.as_mut(),
                 &mut recorder,
+                extra,
                 Event::WorkerRestored,
                 state!(y, decision.price),
             )?;

@@ -79,8 +79,10 @@ use crate::market::{
 };
 use crate::preempt::{jensen_penalty, PreemptionModel, RecipTable};
 use crate::coordinator::backend::SyntheticBackend;
+use crate::obs::TraceObs;
 use crate::sim::{
-    run_batch, BatchLane, EngineResult, OverheadModel, PriceSource,
+    run_batch, run_batch_traced, BatchLane, EngineResult, Observer,
+    OverheadModel, PriceSource,
 };
 use crate::sweep::{Grid, Scenario};
 use crate::theory::bids::BidProblem;
@@ -90,7 +92,8 @@ use crate::util::fnv::Fnv;
 use crate::util::rng::Rng;
 
 use super::{
-    accuracy_for_error, run_policy_engine, run_portfolio_engine,
+    accuracy_for_error, run_policy_engine, run_policy_engine_obs,
+    run_portfolio_engine, run_portfolio_engine_obs,
     run_synthetic_reference, PlannedStrategy, PortfolioRun, RunParams,
 };
 
@@ -1398,6 +1401,57 @@ impl SpecCtx {
             .collect::<Result<Vec<_>>>()?;
         run_batch(&self.params, lanes, &self.prices, rngs)
     }
+
+    /// [`SpecCtx::execute_point`] with a [`TraceObs`] spliced into the
+    /// event stream (DESIGN.md §12) — bit-identical to the untraced
+    /// run; the tracer consumes no RNG.
+    pub fn execute_point_traced(
+        &self,
+        idx: usize,
+        rng: &mut Rng,
+        tracer: &mut TraceObs,
+    ) -> Result<EngineResult> {
+        if let Some((port, sources)) = self.portfolio.as_ref() {
+            run_portfolio_engine_obs(
+                &self.plans[idx],
+                &PortfolioRun { port, sources },
+                self.bound,
+                &self.params,
+                rng,
+                &mut [tracer as &mut dyn Observer],
+            )
+        } else {
+            let mut p = self.plans[idx].build_policy()?;
+            run_policy_engine_obs(
+                p.as_mut(),
+                self.bound,
+                &self.prices,
+                &self.params,
+                rng,
+                &mut [tracer as &mut dyn Observer],
+            )
+        }
+    }
+
+    /// [`SpecCtx::execute_engine_batch`] with one [`TraceObs`] per lane
+    /// — same bit-identical contract as the untraced batch.
+    pub fn execute_engine_batch_traced(
+        &self,
+        idx: usize,
+        rngs: &mut [Rng],
+        tracers: &mut [TraceObs],
+    ) -> Result<Vec<EngineResult>> {
+        let lanes = rngs
+            .iter()
+            .map(|_| {
+                Ok(BatchLane {
+                    policy: self.plans[idx].build_policy()?,
+                    backend: Box::new(SyntheticBackend::new(self.bound)),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        run_batch_traced(&self.params, lanes, &self.prices, rngs, tracers)
+    }
 }
 
 /// Which replicate runner executes the simulations.
@@ -2201,6 +2255,102 @@ impl Scenario for SpecScenario {
                     vec![Vec::with_capacity(ctx.plans.len()); rngs.len()];
                 for idx in 0..ctx.plans.len() {
                     let results = ctx.execute_engine_batch(idx, rngs)?;
+                    for (lane, r) in results.into_iter().enumerate() {
+                        let acc = r
+                            .series
+                            .last()
+                            .map(|p| p.accuracy)
+                            .unwrap_or(0.0);
+                        finals[lane].push((r.cost, acc));
+                    }
+                }
+                Ok(finals
+                    .iter()
+                    .map(|f| self.lineup_metrics(ctx, f))
+                    .collect())
+            }
+        }
+    }
+
+    fn run_traced(
+        &self,
+        point: usize,
+        ctx: &SpecCtx,
+        rng: &mut Rng,
+        tracer: &mut TraceObs,
+    ) -> Result<Vec<f64>> {
+        // const-only points and the reference oracle have no engine
+        // event stream to export; the trace just carries no events
+        if !ctx.needs_sim || self.runner == RunnerKind::Reference {
+            return self.run(point, ctx, rng);
+        }
+        match self.spec.mode {
+            SweepMode::PerStrategy => {
+                let r = ctx.execute_point_traced(0, rng, tracer)?;
+                Ok(self.per_strategy_metrics(ctx, &r))
+            }
+            SweepMode::Lineup => {
+                // entry order matches [`SpecScenario::run`]; each entry
+                // restarts the engine clock, so the tracer is told which
+                // entry it is watching (sim-time is monotone per entry)
+                let mut finals = Vec::with_capacity(ctx.plans.len());
+                for idx in 0..ctx.plans.len() {
+                    tracer.set_entry(idx);
+                    let r = ctx.execute_point_traced(idx, rng, tracer)?;
+                    let acc =
+                        r.series.last().map(|p| p.accuracy).unwrap_or(0.0);
+                    finals.push((r.cost, acc));
+                }
+                Ok(self.lineup_metrics(ctx, &finals))
+            }
+        }
+    }
+
+    fn run_block_traced(
+        &self,
+        point: usize,
+        ctx: &SpecCtx,
+        rngs: &mut [Rng],
+        tracers: &mut [TraceObs],
+    ) -> Result<Vec<Vec<f64>>> {
+        if tracers.len() != rngs.len()
+            || !ctx.needs_sim
+            || self.runner == RunnerKind::Reference
+        {
+            return self.run_block(point, ctx, rngs);
+        }
+        if ctx.portfolio.is_some() {
+            // the SoA executor is single-market; portfolio blocks run
+            // the scalar slot loop per replicate, traced
+            return rngs
+                .iter_mut()
+                .zip(tracers.iter_mut())
+                .map(|(rng, t)| {
+                    t.set_path("scalar");
+                    self.run_traced(point, ctx, rng, t)
+                })
+                .collect();
+        }
+        match self.spec.mode {
+            SweepMode::PerStrategy => {
+                let results =
+                    ctx.execute_engine_batch_traced(0, rngs, tracers)?;
+                Ok(results
+                    .iter()
+                    .map(|r| self.per_strategy_metrics(ctx, r))
+                    .collect())
+            }
+            SweepMode::Lineup => {
+                // entry-major like [`SpecScenario::run_block`], with
+                // every lane's tracer advanced to the current entry
+                let mut finals: Vec<Vec<(f64, f64)>> =
+                    vec![Vec::with_capacity(ctx.plans.len()); rngs.len()];
+                for idx in 0..ctx.plans.len() {
+                    for t in tracers.iter_mut() {
+                        t.set_entry(idx);
+                    }
+                    let results =
+                        ctx.execute_engine_batch_traced(idx, rngs, tracers)?;
                     for (lane, r) in results.into_iter().enumerate() {
                         let acc = r
                             .series
@@ -3050,6 +3200,28 @@ impl Scenario for CachedSpecScenario<'_> {
         rngs: &mut [Rng],
     ) -> Result<Vec<Vec<f64>>> {
         self.inner.run_block(point, ctx, rngs)
+    }
+
+    // tracing forwards too — without these the cache adapter would
+    // silently drop every event from a traced serve-side sweep
+    fn run_traced(
+        &self,
+        point: usize,
+        ctx: &Arc<SpecCtx>,
+        rng: &mut Rng,
+        tracer: &mut TraceObs,
+    ) -> Result<Vec<f64>> {
+        self.inner.run_traced(point, ctx, rng, tracer)
+    }
+
+    fn run_block_traced(
+        &self,
+        point: usize,
+        ctx: &Arc<SpecCtx>,
+        rngs: &mut [Rng],
+        tracers: &mut [TraceObs],
+    ) -> Result<Vec<Vec<f64>>> {
+        self.inner.run_block_traced(point, ctx, rngs, tracers)
     }
 }
 

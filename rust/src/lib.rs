@@ -31,6 +31,11 @@
 //!   a candidate lattice, successive-halving simulation refinement,
 //!   ranked recommendations + Pareto frontier (`volatile-sgd
 //!   optimize`);
+//! * [`obs`] — the unified telemetry layer: metric registry
+//!   (counters/gauges/log2 histograms), structured JSONL run tracing
+//!   (`--trace-out`), per-stage timing spans, and Prometheus text
+//!   exposition (`stats --prom`) — RNG-free and digest-neutral by
+//!   construction;
 //! * [`serve`] — planner-as-a-service: a resident daemon (`volatile-sgd
 //!   serve`) with a newline-delimited JSON protocol, a FIFO admission
 //!   queue onto one shared pool, and a two-tier content-addressed warm
@@ -45,6 +50,7 @@ pub mod exp;
 pub mod manifest;
 pub mod market;
 pub mod metrics;
+pub mod obs;
 pub mod opt;
 pub mod preempt;
 pub mod runtime;

@@ -7,7 +7,7 @@
 //!                          [--checkpoint-every N] [--checkpoint-cost S]
 //!                          [--restart-delay S] [--lost-work]
 //!                          [--rebid-factor X] [--budget-rate X]
-//!                          [--escalate-threshold X]
+//!                          [--escalate-threshold X] [--trace-out FILE]
 //! volatile-sgd optimal-bid [--market uniform|gaussian] [--n 8] [--n1 4]
 //!                          [--eps 0.35] [--theta 120000] [--two-bids]
 //! volatile-sgd plan-workers [--eps 0.1] [--q 0.5] [--chi 1.0] [--theta-iters 40000]
@@ -16,7 +16,8 @@
 //!                           |adaptive_grid|notice_grid | --fig 2|3|4|5]
 //!                          [--threads N] [--replicates R] [--seed S] [--j J]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
-//!                          [--no-batch]
+//!                          [--no-batch] [--trace-out FILE]
+//! volatile-sgd trace-check --file FILE
 //! volatile-sgd optimize    [--spec FILE] [--threads N] [--seed S]
 //!                          [--out DIR|results.csv] [--json [FILE]] [--check]
 //! volatile-sgd serve       [--listen 127.0.0.1:2020] [--threads N] [--check]
@@ -26,7 +27,7 @@
 //!                          [--timeout SECS] [--out FILE]
 //! volatile-sgd status      [--addr HOST:PORT] --job N
 //! volatile-sgd result      [--addr HOST:PORT] --job N [--out FILE]
-//! volatile-sgd stats       [--addr HOST:PORT]
+//! volatile-sgd stats       [--addr HOST:PORT] [--prom]
 //! volatile-sgd shutdown    [--addr HOST:PORT]
 //! ```
 //!
@@ -39,7 +40,12 @@
 //! omitted). `serve` keeps the same machinery resident: a daemon with a
 //! two-tier content-addressed warm cache and one shared pool, driven by
 //! the `submit`/`status`/`result`/`stats`/`shutdown` client subcommands
-//! over newline-delimited JSON (DESIGN.md §9). `--threads`
+//! over newline-delimited JSON (DESIGN.md §9). `--trace-out FILE` (on
+//! `sweep` and `simulate`) exports the engine's observer event stream
+//! plus per-stage timing spans as schema-documented JSONL;
+//! `trace-check` validates such a file; `stats --prom` fetches the
+//! daemon's metrics as Prometheus text exposition (DESIGN.md §12 —
+//! telemetry never perturbs a digest). `--threads`
 //! parallelises the simulation jobs on the
 //! work-stealing sweep pool — `0` (or omitting the flag) uses every
 //! available core; results are bit-identical at any thread count
@@ -59,7 +65,8 @@ use volatile_sgd::exp::{PlanInputs, PlannedStrategy, ScenarioSpec};
 use volatile_sgd::manifest::Manifest;
 use volatile_sgd::market::PriceModel;
 use volatile_sgd::runtime::{ModelRuntime, PjrtEngine};
-use volatile_sgd::sim::PriceSource;
+use volatile_sgd::obs::{meta_line, validate_trace, TraceObs, TraceSink};
+use volatile_sgd::sim::{Observer, PriceSource};
 use volatile_sgd::sweep::Scenario;
 use volatile_sgd::theory::bids::BidProblem;
 use volatile_sgd::theory::bounds::{ErrorBound, SgdHyper};
@@ -100,7 +107,11 @@ fn print_help() {
          --out results.csv / --json for machine-readable output;\n                \
          --check validates without running; deterministic for a\n                \
          fixed --seed at any --threads; --threads 0 or omitted\n                \
-         = all cores)\n  \
+         = all cores; --trace-out FILE exports the run as\n                \
+         structured JSONL without perturbing the digest)\n  \
+         trace-check   validate a --trace-out JSONL file (--file FILE):\n                \
+         strict parse, schema, monotone per-replicate sim\n                \
+         time; prints event/span tallies\n  \
          optimize      strategy planner: analytic Theorem-2/3 pruning\n                \
          over a candidate lattice + successive-halving\n                \
          simulation refinement; ranked recommendations and\n                \
@@ -120,7 +131,8 @@ fn print_help() {
          status|result poll a submitted job / fetch its report\n                \
          (--job N)\n  \
          stats         service counters: cache hit rates per tier,\n                \
-         queue depth, jobs/sec\n  \
+         queue depth, jobs/sec (--prom: Prometheus text\n                \
+         exposition with per-job latency histograms)\n  \
          shutdown      ask the daemon to drain and exit\n"
     );
 }
@@ -138,6 +150,7 @@ fn run(argv: &[String]) -> Result<()> {
         "fig4" => cmd_fig4(&args),
         "fig5" => cmd_fig5(&args),
         "sweep" => cmd_sweep(&args),
+        "trace-check" => cmd_trace_check(&args),
         "optimize" => cmd_optimize(&args),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
@@ -413,13 +426,39 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut params = exp::RunParams::lockstep(cfg.runtime, cap);
     params.overhead = overhead;
     let mut rng = Rng::new(cfg.seed);
-    let result = exp::run_policy_engine(
-        policy.as_mut(),
-        cfg.bound,
-        &prices,
-        &params,
-        &mut rng,
-    )?;
+    // --trace-out: attach a structured-trace observer; the observer
+    // draws no RNG, so the traced run is bit-identical to the plain one
+    let trace_sink = match args.get("trace-out") {
+        Some(path) => Some((path.to_string(), TraceSink::create(path)?)),
+        None => None,
+    };
+    let result = match &trace_sink {
+        Some((_, sink)) => {
+            sink.write_line(&meta_line("simulate", name, cfg.seed, 1));
+            let mut tracer = TraceObs::new(sink, 0, 0, "scalar");
+            let r = exp::run_policy_engine_obs(
+                policy.as_mut(),
+                cfg.bound,
+                &prices,
+                &params,
+                &mut rng,
+                &mut [&mut tracer as &mut dyn Observer],
+            )?;
+            tracer.finish();
+            r
+        }
+        None => exp::run_policy_engine(
+            policy.as_mut(),
+            cfg.bound,
+            &prices,
+            &params,
+            &mut rng,
+        )?,
+    };
+    if let Some((path, sink)) = &trace_sink {
+        sink.flush()?;
+        println!("trace -> {path}");
+    }
     if overhead.enabled() {
         println!(
             "overhead: {} preemptions, {} restarts ({:.1}s lag), \
@@ -614,7 +653,9 @@ fn cmd_fig5(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use volatile_sgd::sweep::{run_sweep, run_sweep_batched, SweepConfig};
+    use volatile_sgd::sweep::{
+        run_sweep_batched_with, run_sweep_with, SweepConfig, Telemetry,
+    };
 
     // resolve the spec: --spec FILE > --preset NAME > --fig N (legacy
     // alias; default fig3). Every path yields the same ScenarioSpec
@@ -661,14 +702,34 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // --trace-out: stream the engine's observer events + per-stage
+    // timing spans to a JSONL file. The trace hooks draw no RNG and
+    // wall-clock never reaches the digest, so traced and untraced runs
+    // print the same digest line (pinned by the obs test suite).
+    let trace_sink = match args.get("trace-out") {
+        Some(path) => Some((path.to_string(), TraceSink::create(path)?)),
+        None => None,
+    };
+    if let Some((_, sink)) = &trace_sink {
+        sink.write_line(&meta_line("sweep", &name, cfg.seed, cfg.threads));
+    }
+    let tel = Telemetry {
+        trace: trace_sink.as_ref().map(|(_, sink)| sink),
+        registry: None,
+    };
+
     // the batched SoA replicate executor is the default; --no-batch
     // drops to the scalar per-replicate path (digests are identical by
     // contract, so this is a triage knob, not a results knob)
     let results = if args.bool("no-batch") {
-        run_sweep(&scenario, &cfg)?
+        run_sweep_with(&scenario, &cfg, tel)?
     } else {
-        run_sweep_batched(&scenario, &cfg)?
+        run_sweep_batched_with(&scenario, &cfg, tel)?
     };
+    if let Some((path, sink)) = &trace_sink {
+        sink.flush()?;
+        println!("trace -> {path}");
+    }
     println!(
         "== sweep {name}  ({} points x {} replicates, seed {})",
         results.points.len(),
@@ -913,9 +974,36 @@ fn cmd_stats(args: &Args) -> Result<()> {
     use volatile_sgd::serve::{client, protocol};
 
     let addr = args.str("addr", DEFAULT_ADDR);
+    if args.bool("prom") {
+        // the exposition already ends in a newline
+        print!("{}", client::fetch_prom(&addr)?);
+        return Ok(());
+    }
     let (_, raw) =
         client::roundtrip_raw(&addr, &protocol::bare_request_json("stats"))?;
     println!("{raw}");
+    Ok(())
+}
+
+/// `trace-check --file FILE`: strict validation of a `--trace-out`
+/// JSONL file — every line parses, the meta line leads, event kinds
+/// are known, sim-time is monotone per replicate. Prints the tally
+/// line CI greps for.
+fn cmd_trace_check(args: &Args) -> Result<()> {
+    let path = args
+        .get("file")
+        .context("--file FILE is required (a --trace-out JSONL file)")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let sum = validate_trace(&text)
+        .with_context(|| format!("validating {path}"))?;
+    println!(
+        "trace OK: {} lines ({} events, {} spans)",
+        sum.lines, sum.events, sum.spans
+    );
+    for (kind, n) in &sum.kinds {
+        println!("  {kind}: {n}");
+    }
     Ok(())
 }
 

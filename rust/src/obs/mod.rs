@@ -1,0 +1,33 @@
+//! `obs` — the unified telemetry layer (DESIGN.md §12).
+//!
+//! Three std-only pieces, shared by every layer of the crate:
+//!
+//! * [`registry`] — named [`Registry`] of [`Counter`]s, [`Gauge`]s and
+//!   fixed-bucket log2 latency [`Histogram`]s, with thread-local
+//!   [`HistShard`]s merged at collation;
+//! * [`trace`] — structured run tracing: a shared JSONL [`TraceSink`],
+//!   the per-job [`TraceObs`] engine observer, wall-clock
+//!   [`span_line`] records, and the strict [`validate_trace`] checker
+//!   behind the `trace-check` subcommand and CI smoke;
+//! * [`prom`] — Prometheus text exposition over a registry snapshot
+//!   (the serve daemon's `stats --prom`).
+//!
+//! The whole subsystem is **digest-neutral by construction**: it never
+//! consumes RNG, and wall-clock values only ever flow *out* (span
+//! lines, histograms, the prom surface) — never into an FNV result
+//! digest. The sweep digest-neutrality suite pins this contract for
+//! every shipped preset.
+
+pub mod prom;
+pub mod registry;
+pub mod trace;
+
+pub use prom::{looks_well_formed, render_prometheus};
+pub use registry::{
+    bucket_index, bucket_upper, Counter, Gauge, HistShard, Histogram,
+    Registry, HIST_BUCKETS,
+};
+pub use trace::{
+    meta_line, span_line, validate_trace, TraceObs, TraceSink,
+    TraceSummary, EVENT_KINDS, TRACE_SCHEMA,
+};

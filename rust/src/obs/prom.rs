@@ -1,0 +1,145 @@
+//! Prometheus text exposition (version 0.0.4) over a [`Registry`]
+//! snapshot.
+//!
+//! Grammar subset we emit (DESIGN.md §12): for each metric a
+//! `# TYPE <name> <kind>` header followed by sample lines. Counters
+//! get the conventional `_total` suffix; histograms expand to
+//! cumulative `_bucket{le="..."}` samples (one per log2 bucket that
+//! the registry tracks, `+Inf` last) plus `_sum` and `_count`. Every
+//! name is prefixed `volatile_sgd_` and sanitised to
+//! `[a-zA-Z_][a-zA-Z0-9_]*`. Values are plain integers — nothing here
+//! is a float, so the exposition is locale- and precision-proof.
+
+use super::registry::{bucket_upper, Registry, HIST_BUCKETS};
+
+/// Exposition name prefix for every metric this crate emits.
+pub const PROM_PREFIX: &str = "volatile_sgd_";
+
+/// Map a registry name onto a legal Prometheus metric name.
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(PROM_PREFIX.len() + name.len());
+    s.push_str(PROM_PREFIX);
+    for (i, c) in name.chars().enumerate() {
+        let ok = c == '_'
+            || c.is_ascii_alphabetic()
+            || (i > 0 && c.is_ascii_digit());
+        s.push(if ok { c } else { '_' });
+    }
+    s
+}
+
+/// Render the whole registry as Prometheus text exposition. Metric
+/// order is stable (sorted by name within each kind: counters, then
+/// gauges, then histograms).
+pub fn render_prometheus(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, v) in reg.counter_values() {
+        let n = prom_name(&name);
+        out.push_str(&format!("# TYPE {n}_total counter\n"));
+        out.push_str(&format!("{n}_total {v}\n"));
+    }
+    for (name, v) in reg.gauge_values() {
+        let n = prom_name(&name);
+        out.push_str(&format!("# TYPE {n} gauge\n"));
+        out.push_str(&format!("{n} {v}\n"));
+    }
+    for (name, h) in reg.histogram_handles() {
+        let n = prom_name(&name);
+        out.push_str(&format!("# TYPE {n} histogram\n"));
+        let counts = h.bucket_counts();
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate().take(HIST_BUCKETS - 1) {
+            cum += c;
+            let le = bucket_upper(i).expect("non-final bucket has a bound");
+            out.push_str(&format!("{n}_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!(
+            "{n}_bucket{{le=\"+Inf\"}} {}\n",
+            h.count()
+        ));
+        out.push_str(&format!("{n}_sum {}\n", h.sum()));
+        out.push_str(&format!("{n}_count {}\n", h.count()));
+    }
+    out
+}
+
+/// Structural well-formedness check used by tests and the serve smoke:
+/// every line is either a `# TYPE` header or a `name[{le=...}] value`
+/// sample with an integer value, and every sample's metric carries the
+/// [`PROM_PREFIX`].
+pub fn looks_well_formed(text: &str) -> bool {
+    if text.is_empty() {
+        return false;
+    }
+    text.lines().all(|line| {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            name.starts_with(PROM_PREFIX)
+                && matches!(kind, "counter" | "gauge" | "histogram")
+                && it.next().is_none()
+        } else {
+            let Some((name, value)) = line.rsplit_once(' ') else {
+                return false;
+            };
+            let bare = name.split('{').next().unwrap_or("");
+            bare.starts_with(PROM_PREFIX) && value.parse::<u64>().is_ok()
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_gauges_and_histograms() {
+        let reg = Registry::new();
+        reg.counter("jobs_done").add(3);
+        reg.gauge("queue_depth").set(2);
+        let h = reg.histogram("job_execute_us");
+        h.record(0);
+        h.record(1);
+        h.record(5);
+        let text = render_prometheus(&reg);
+        assert!(text.contains(
+            "# TYPE volatile_sgd_jobs_done_total counter\n\
+             volatile_sgd_jobs_done_total 3\n"
+        ));
+        assert!(text.contains(
+            "# TYPE volatile_sgd_queue_depth gauge\n\
+             volatile_sgd_queue_depth 2\n"
+        ));
+        // cumulative buckets: le="0" sees the zero, le="1" adds the 1,
+        // le="7" has everything, +Inf equals count
+        assert!(text
+            .contains("volatile_sgd_job_execute_us_bucket{le=\"0\"} 1\n"));
+        assert!(text
+            .contains("volatile_sgd_job_execute_us_bucket{le=\"1\"} 2\n"));
+        assert!(text
+            .contains("volatile_sgd_job_execute_us_bucket{le=\"7\"} 3\n"));
+        assert!(text
+            .contains("volatile_sgd_job_execute_us_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("volatile_sgd_job_execute_us_sum 6\n"));
+        assert!(text.contains("volatile_sgd_job_execute_us_count 3\n"));
+        assert!(looks_well_formed(&text));
+    }
+
+    #[test]
+    fn sanitises_hostile_names() {
+        let reg = Registry::new();
+        reg.counter("weird name-1").inc();
+        let text = render_prometheus(&reg);
+        assert!(text.contains("volatile_sgd_weird_name_1_total 1\n"));
+        assert!(looks_well_formed(&text));
+    }
+
+    #[test]
+    fn well_formed_rejects_junk() {
+        assert!(!looks_well_formed(""));
+        assert!(!looks_well_formed("hello world metrics"));
+        assert!(!looks_well_formed("other_prefix_total 1"));
+        assert!(!looks_well_formed("volatile_sgd_x_total not_a_number"));
+    }
+}

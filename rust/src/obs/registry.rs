@@ -1,0 +1,294 @@
+//! The metric registry: named counters, gauges, and fixed-bucket
+//! log2 latency histograms.
+//!
+//! Everything here is std-only and lock-light: metric handles are
+//! `Arc`s onto atomics, so the hot path (a counter bump, a histogram
+//! record) is a single relaxed atomic op with no allocation and no
+//! lock. The registry's maps are only locked at handle creation and at
+//! exposition time.
+//!
+//! **Digest neutrality.** Nothing in this module reads an RNG or feeds
+//! a result digest: values recorded here are wall-clock durations and
+//! occurrence counts, exported only through the `stats --prom` surface
+//! and trace span lines. The `tracing-on vs tracing-off → identical
+//! digest` contract is pinned by `tests` in `obs::mod` and the sweep
+//! digest-neutrality suite (DESIGN.md §12).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Log2 histogram resolution: bucket 0 holds exact zeros, bucket `i`
+/// (1 ≤ i ≤ 30) holds `[2^(i-1), 2^i - 1]`, bucket 31 saturates
+/// (≥ 2^30 — about 18 minutes when recording microseconds).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Bucket index for a recorded value: 0 for 0, else
+/// `min(floor(log2(v)) + 1, 31)`.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (((63 - v.leading_zeros()) as usize) + 1).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i`; `None` for the saturating last
+/// bucket (`+Inf` in Prometheus exposition).
+pub fn bucket_upper(i: usize) -> Option<u64> {
+    match i {
+        0 => Some(0),
+        _ if i < HIST_BUCKETS - 1 => Some((1u64 << i) - 1),
+        _ => None,
+    }
+}
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, cache entries).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared log2 histogram: 32 atomic buckets plus count and sum.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// Thread-local histogram shard: plain (non-atomic) accumulation on a
+/// worker's own stack, merged into the shared [`Histogram`] once at
+/// collation — the per-record cost inside a hot loop is a plain array
+/// increment, not an atomic RMW.
+#[derive(Clone, Debug)]
+pub struct HistShard {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for HistShard {
+    fn default() -> Self {
+        HistShard { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistShard {
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Fold this shard into the shared histogram (one atomic add per
+    /// touched bucket) and reset it for reuse.
+    pub fn merge_into(&mut self, h: &Histogram) {
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                h.buckets[i].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        h.count.fetch_add(self.count, Ordering::Relaxed);
+        h.sum.fetch_add(self.sum, Ordering::Relaxed);
+        *self = HistShard::default();
+    }
+}
+
+/// Named-metric registry. Handle creation is get-or-create on name, so
+/// two subsystems asking for the same counter share one atomic; names
+/// are sorted (BTreeMap) so every exposition renders in a stable
+/// order.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Sorted (name, value) snapshot of every counter.
+    pub fn counter_values(&self) -> Vec<(String, u64)> {
+        let map = self.counters.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Sorted (name, value) snapshot of every gauge.
+    pub fn gauge_values(&self) -> Vec<(String, u64)> {
+        let map = self.gauges.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Sorted (name, handle) snapshot of every histogram.
+    pub fn histogram_handles(&self) -> Vec<(String, Arc<Histogram>)> {
+        let map = self.histograms.lock().unwrap();
+        map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        // zero is its own bucket
+        assert_eq!(bucket_index(0), 0);
+        // powers of two open a new bucket ...
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(4), 3);
+        // ... and the value just below stays in the previous one
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index((1 << 29) + 1), 30);
+        // saturation: everything from 2^30 up lands in the last bucket
+        assert_eq!(bucket_index(1 << 30), HIST_BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_uppers_match_indices() {
+        assert_eq!(bucket_upper(0), Some(0));
+        assert_eq!(bucket_upper(1), Some(1));
+        assert_eq!(bucket_upper(2), Some(3));
+        assert_eq!(bucket_upper(30), Some((1 << 30) - 1));
+        assert_eq!(bucket_upper(31), None);
+        // every representable value ≤ its bucket's upper bound
+        for v in [0u64, 1, 2, 3, 4, 1023, 1024, (1 << 30) - 1] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_upper(i).unwrap(), "v={v} bucket={i}");
+        }
+    }
+
+    #[test]
+    fn histogram_records_and_sums() {
+        let h = Histogram::default();
+        for v in [0u64, 1, 3, 4, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), u64::MAX.wrapping_add(8));
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 1); // 0
+        assert_eq!(b[1], 1); // 1
+        assert_eq!(b[2], 1); // 3
+        assert_eq!(b[3], 1); // 4
+        assert_eq!(b[HIST_BUCKETS - 1], 1); // u64::MAX saturates
+    }
+
+    #[test]
+    fn shard_merges_and_resets() {
+        let h = Histogram::default();
+        let mut s = HistShard::default();
+        s.record(0);
+        s.record(5);
+        s.record(5);
+        assert_eq!(s.count(), 3);
+        s.merge_into(&h);
+        assert_eq!(s.count(), 0, "merge resets the shard");
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 10);
+        assert_eq!(h.bucket_counts()[3], 2);
+        // merging again is a no-op on an empty shard
+        s.merge_into(&h);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn registry_handles_are_shared_by_name() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.counter("a").add(2);
+        r.counter("b").inc();
+        assert_eq!(
+            r.counter_values(),
+            vec![("a".to_string(), 3), ("b".to_string(), 1)]
+        );
+        r.gauge("depth").set(7);
+        r.gauge("depth").set(4);
+        assert_eq!(r.gauge_values(), vec![("depth".to_string(), 4)]);
+        r.histogram("lat").record(9);
+        assert_eq!(r.histogram_handles()[0].1.count(), 1);
+    }
+}

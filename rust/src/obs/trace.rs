@@ -1,0 +1,453 @@
+//! Structured run tracing: the engine's [`Observer`] event stream as
+//! schema-documented JSONL, plus per-stage timing spans.
+//!
+//! One trace file is a sequence of JSON lines (DESIGN.md §12):
+//!
+//! * `{"type":"meta","schema":1,"command":...,"scenario":...,
+//!   "seed":N,"threads":N}` — exactly once, first line;
+//! * `{"type":"event","point":P,"replicate":R,"lane":L,"entry":E,
+//!   "seq":S,"kind":K,"t":...,"iter":...,"active":...,"price":...,
+//!   "cost":...,"market":M,"path":"batched"|"scalar"}` — one engine
+//!   event, `t` the *simulated* clock (monotone per
+//!   (point, replicate, entry); a lineup entry restarts the clock);
+//! * `{"type":"span","name":...,"wall_us":N,...}` — one wall-clock
+//!   timing span (prepare/run per grid point, collate, pool, planner
+//!   stages). Span lines carry wall-clock and therefore never feed a
+//!   digest.
+//!
+//! Every line parses under the repo's own strict [`crate::util::json`]
+//! reader; [`validate_trace`] is the one shared checker behind the
+//! `trace-check` subcommand, the CI smoke, and the unit suite.
+//!
+//! Writers buffer whole lines locally and flush multi-line chunks
+//! under the sink's mutex, so concurrent workers interleave at line
+//! granularity only.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::engine::{EngineState, Event, Observer};
+use crate::util::json::{esc, num, JsonValue};
+
+/// Trace schema version, bumped on any breaking line-format change.
+pub const TRACE_SCHEMA: u64 = 1;
+
+/// The closed set of event kinds a trace may carry (the engine's
+/// [`Event`] variants; see [`Event::kind`]).
+pub const EVENT_KINDS: [&str; 6] = [
+    "price_revision",
+    "worker_preempted",
+    "worker_restored",
+    "iteration_done",
+    "checkpoint_done",
+    "deadline_hit",
+];
+
+/// Shared line-oriented JSONL sink: a buffered file behind a mutex.
+/// Writers hand in whole lines (or whole-line chunks), so output stays
+/// valid JSONL under any interleaving.
+pub struct TraceSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl TraceSink {
+    pub fn create(path: &str) -> Result<TraceSink> {
+        let f = File::create(path)
+            .with_context(|| format!("creating trace file {path}"))?;
+        Ok(TraceSink { w: Mutex::new(BufWriter::new(f)) })
+    }
+
+    /// Append one line (the newline is added here).
+    pub fn write_line(&self, line: &str) {
+        let mut w = self.w.lock().unwrap();
+        let _ = w.write_all(line.as_bytes());
+        let _ = w.write_all(b"\n");
+    }
+
+    /// Append a chunk of already newline-terminated lines.
+    pub fn write_chunk(&self, chunk: &str) {
+        if chunk.is_empty() {
+            return;
+        }
+        let mut w = self.w.lock().unwrap();
+        let _ = w.write_all(chunk.as_bytes());
+    }
+
+    pub fn flush(&self) -> Result<()> {
+        self.w.lock().unwrap().flush().context("flushing trace file")
+    }
+}
+
+/// The mandatory first line of every trace file.
+pub fn meta_line(
+    command: &str,
+    scenario: &str,
+    seed: u64,
+    threads: usize,
+) -> String {
+    format!(
+        "{{\"type\":\"meta\",\"schema\":{TRACE_SCHEMA},\
+         \"command\":\"{}\",\"scenario\":\"{}\",\"seed\":{seed},\
+         \"threads\":{threads}}}",
+        esc(command),
+        esc(scenario)
+    )
+}
+
+/// One wall-clock timing span. `point` is present for per-grid-point
+/// spans (prepare/run) and absent for whole-sweep spans (collate,
+/// pool); `extra` carries span-specific integer fields (steal counts,
+/// job tallies).
+pub fn span_line(
+    name: &str,
+    point: Option<usize>,
+    wall_us: u64,
+    extra: &[(&str, u64)],
+) -> String {
+    let mut s = format!("{{\"type\":\"span\",\"name\":\"{}\"", esc(name));
+    if let Some(p) = point {
+        s.push_str(&format!(",\"point\":{p}"));
+    }
+    s.push_str(&format!(",\"wall_us\":{wall_us}"));
+    for (k, v) in extra {
+        s.push_str(&format!(",\"{}\":{v}", esc(k)));
+    }
+    s.push('}');
+    s
+}
+
+/// Byte threshold at which a [`TraceObs`] flushes its local buffer to
+/// the shared sink.
+const FLUSH_BYTES: usize = 32 * 1024;
+
+/// An [`Observer`] that serialises every engine event as one JSONL
+/// line tagged with its job identity. Strictly read-only on the
+/// engine: it consumes no RNG and never touches results, so a traced
+/// run is bit-identical to an untraced one (the digest-neutrality
+/// contract, DESIGN.md §12).
+pub struct TraceObs<'a> {
+    sink: &'a TraceSink,
+    point: usize,
+    replicate: u64,
+    lane: usize,
+    entry: usize,
+    market: usize,
+    path: &'static str,
+    seq: u64,
+    buf: String,
+}
+
+impl<'a> TraceObs<'a> {
+    /// `path` attributes the executor: `"batched"` (SoA lockstep) or
+    /// `"scalar"` (per-replicate engine runs).
+    pub fn new(
+        sink: &'a TraceSink,
+        point: usize,
+        replicate: u64,
+        path: &'static str,
+    ) -> TraceObs<'a> {
+        TraceObs {
+            sink,
+            point,
+            replicate,
+            lane: replicate as usize,
+            entry: 0,
+            market: 0,
+            path,
+            seq: 0,
+            buf: String::new(),
+        }
+    }
+
+    /// Lineup entry index (each entry restarts the engine clock, so
+    /// sim-time is monotone per (point, replicate, entry)).
+    pub fn set_entry(&mut self, entry: usize) {
+        self.entry = entry;
+    }
+
+    pub fn set_lane(&mut self, lane: usize) {
+        self.lane = lane;
+    }
+
+    /// Re-attribute the executor path — the batched executor calls this
+    /// when it falls back to per-lane scalar runs (overhead modelling
+    /// on), so path attribution reflects where the run actually went.
+    pub fn set_path(&mut self, path: &'static str) {
+        self.path = path;
+    }
+
+    /// Flush buffered lines to the shared sink. Called explicitly at
+    /// job end; `Drop` is the backstop.
+    pub fn finish(&mut self) {
+        self.sink.write_chunk(&self.buf);
+        self.buf.clear();
+    }
+}
+
+impl Drop for TraceObs<'_> {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+impl Observer for TraceObs<'_> {
+    fn on_event(&mut self, ev: &Event, st: &EngineState) {
+        self.buf.push_str(&format!(
+            "{{\"type\":\"event\",\"point\":{},\"replicate\":{},\
+             \"lane\":{},\"entry\":{},\"seq\":{},\"kind\":\"{}\",\
+             \"t\":{},\"iter\":{},\"active\":{},\"price\":{},\
+             \"cost\":{},\"market\":{},\"path\":\"{}\"}}\n",
+            self.point,
+            self.replicate,
+            self.lane,
+            self.entry,
+            self.seq,
+            ev.kind(),
+            num(st.clock),
+            st.iter,
+            st.active,
+            num(st.price),
+            num(st.cost),
+            self.market,
+            self.path,
+        ));
+        self.seq += 1;
+        if self.buf.len() >= FLUSH_BYTES {
+            self.finish();
+        }
+    }
+
+    fn on_market(&mut self, m: usize) {
+        self.market = m;
+    }
+}
+
+/// What [`validate_trace`] counted on a well-formed trace.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub lines: u64,
+    pub events: u64,
+    pub spans: u64,
+    /// event tallies per kind, sorted by kind name
+    pub kinds: BTreeMap<String, u64>,
+}
+
+/// Validate a whole trace file body: every line parses under the
+/// strict [`crate::util::json`] reader, the first line is a
+/// schema-compatible `meta` record, every event kind comes from
+/// [`EVENT_KINDS`], and per-event sim-time is monotone
+/// (non-decreasing) within each (point, replicate, entry).
+pub fn validate_trace(text: &str) -> Result<TraceSummary> {
+    let mut sum = TraceSummary::default();
+    // last-seen sim-time per (point, replicate, entry)
+    let mut clocks: HashMap<(u64, u64, u64), f64> = HashMap::new();
+    let values = JsonValue::parse_jsonl(text)
+        .context("trace body is not strict JSONL")?;
+    for (i, v) in values.iter().enumerate() {
+        let n = i + 1;
+        let ty = v
+            .get("type")
+            .and_then(JsonValue::as_str)
+            .with_context(|| format!("trace line {n}: no \"type\""))?;
+        if i == 0 {
+            if ty != "meta" {
+                bail!("trace line 1 must be the meta record, got {ty:?}");
+            }
+            let schema = v
+                .get("schema")
+                .and_then(JsonValue::as_u64)
+                .context("meta record carries no schema")?;
+            if schema != TRACE_SCHEMA {
+                bail!("trace schema {schema} (reader expects {TRACE_SCHEMA})");
+            }
+        } else {
+            match ty {
+                "event" => {
+                    let kind = v
+                        .get("kind")
+                        .and_then(JsonValue::as_str)
+                        .with_context(|| format!("line {n}: no kind"))?;
+                    if !EVENT_KINDS.contains(&kind) {
+                        bail!("line {n}: unknown event kind {kind:?}");
+                    }
+                    let field = |k: &str| -> Result<u64> {
+                        v.get(k).and_then(JsonValue::as_u64).with_context(
+                            || format!("line {n}: missing/invalid {k:?}"),
+                        )
+                    };
+                    let key = (
+                        field("point")?,
+                        field("replicate")?,
+                        field("entry")?,
+                    );
+                    let t = v
+                        .get("t")
+                        .and_then(JsonValue::as_f64)
+                        .with_context(|| format!("line {n}: no sim-time"))?;
+                    if let Some(&prev) = clocks.get(&key) {
+                        if t < prev {
+                            bail!(
+                                "line {n}: sim-time regressed ({t} < {prev}) \
+                                 within point/replicate/entry {key:?}"
+                            );
+                        }
+                    }
+                    clocks.insert(key, t);
+                    sum.events += 1;
+                    *sum.kinds.entry(kind.to_string()).or_insert(0) += 1;
+                }
+                "span" => {
+                    v.get("name").and_then(JsonValue::as_str).with_context(
+                        || format!("line {n}: span without a name"),
+                    )?;
+                    v.get("wall_us")
+                        .and_then(JsonValue::as_u64)
+                        .with_context(|| {
+                            format!("line {n}: span without wall_us")
+                        })?;
+                    sum.spans += 1;
+                }
+                "meta" => bail!("line {n}: duplicate meta record"),
+                other => bail!("line {n}: unknown line type {other:?}"),
+            }
+        }
+        sum.lines += 1;
+    }
+    if sum.lines == 0 {
+        bail!("empty trace (no meta record)");
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> String {
+        meta_line("sweep", "fig3", 2020, 4)
+    }
+
+    fn event(point: u64, rep: u64, entry: u64, t: f64, kind: &str) -> String {
+        format!(
+            "{{\"type\":\"event\",\"point\":{point},\"replicate\":{rep},\
+             \"lane\":{rep},\"entry\":{entry},\"seq\":0,\
+             \"kind\":\"{kind}\",\"t\":{t},\"iter\":1,\"active\":2,\
+             \"price\":0.5,\"cost\":1.0,\"market\":0,\"path\":\"scalar\"}}"
+        )
+    }
+
+    #[test]
+    fn meta_and_span_lines_parse_strictly() {
+        let m = meta();
+        let v = JsonValue::parse(&m).unwrap();
+        assert_eq!(v.get("type").and_then(JsonValue::as_str), Some("meta"));
+        assert_eq!(v.get("schema").and_then(JsonValue::as_u64), Some(1));
+        let s = span_line("prepare", Some(3), 120, &[("jobs", 8)]);
+        let v = JsonValue::parse(&s).unwrap();
+        assert_eq!(v.get("point").and_then(JsonValue::as_u64), Some(3));
+        assert_eq!(v.get("wall_us").and_then(JsonValue::as_u64), Some(120));
+        assert_eq!(v.get("jobs").and_then(JsonValue::as_u64), Some(8));
+        let bare = span_line("collate", None, 7, &[]);
+        assert!(JsonValue::parse(&bare).unwrap().get("point").is_none());
+    }
+
+    #[test]
+    fn validate_accepts_a_well_formed_trace() {
+        let text = [
+            meta(),
+            event(0, 0, 0, 0.0, "price_revision"),
+            event(0, 0, 0, 1.5, "iteration_done"),
+            event(0, 1, 0, 0.5, "worker_preempted"),
+            span_line("prepare", Some(0), 42, &[]),
+            // a lineup entry restarts the clock: same replicate, new
+            // entry, earlier sim-time — still monotone per entry
+            event(0, 0, 1, 0.25, "iteration_done"),
+        ]
+        .join("\n");
+        let sum = validate_trace(&text).unwrap();
+        assert_eq!(sum.lines, 6);
+        assert_eq!(sum.events, 4);
+        assert_eq!(sum.spans, 1);
+        assert_eq!(sum.kinds["iteration_done"], 2);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_traces() {
+        // no meta first
+        let e = validate_trace(&event(0, 0, 0, 0.0, "iteration_done"))
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("meta"), "{e:#}");
+        // unknown kind
+        let text = [meta(), event(0, 0, 0, 0.0, "mystery")].join("\n");
+        let e = validate_trace(&text).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown event kind"), "{e:#}");
+        // sim-time regression within one (point, replicate, entry)
+        let text = [
+            meta(),
+            event(0, 0, 0, 2.0, "iteration_done"),
+            event(0, 0, 0, 1.0, "iteration_done"),
+        ]
+        .join("\n");
+        let e = validate_trace(&text).unwrap_err();
+        assert!(format!("{e:#}").contains("regressed"), "{e:#}");
+        // invalid JSON line
+        let text = [meta(), "{not json".to_string()].join("\n");
+        assert!(validate_trace(&text).is_err());
+        // empty file
+        assert!(validate_trace("").is_err());
+        // wrong schema version
+        let bad = meta().replace("\"schema\":1", "\"schema\":99");
+        let e = validate_trace(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("schema 99"), "{e:#}");
+    }
+
+    #[test]
+    fn trace_obs_writes_one_line_per_event() {
+        let dir = std::env::temp_dir().join(format!(
+            "vsgd_trace_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("obs.jsonl");
+        let sink = TraceSink::create(path.to_str().unwrap()).unwrap();
+        sink.write_line(&meta());
+        {
+            let mut obs = TraceObs::new(&sink, 2, 5, "scalar");
+            let st = EngineState {
+                iter: 3,
+                target: 10,
+                clock: 1.25,
+                cost: 0.75,
+                idle_time: 0.0,
+                error: 0.5,
+                accuracy: 0.5,
+                active: 4,
+                price: 0.3,
+            };
+            obs.on_market(1);
+            obs.on_event(&Event::IterationDone, &st);
+            obs.on_event(&Event::WorkerRestored, &st);
+            // dropped here: Drop flushes the buffered lines
+        }
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let sum = validate_trace(&text).unwrap();
+        assert_eq!(sum.events, 2);
+        let line2 = text.lines().nth(1).unwrap();
+        let v = JsonValue::parse(line2).unwrap();
+        assert_eq!(v.get("point").and_then(JsonValue::as_u64), Some(2));
+        assert_eq!(v.get("replicate").and_then(JsonValue::as_u64), Some(5));
+        assert_eq!(v.get("market").and_then(JsonValue::as_u64), Some(1));
+        assert_eq!(v.get("seq").and_then(JsonValue::as_u64), Some(0));
+        assert_eq!(
+            v.get("kind").and_then(JsonValue::as_str),
+            Some("iteration_done")
+        );
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
+    }
+}

@@ -74,9 +74,9 @@ pub mod spec;
 pub mod surface;
 
 pub use planner::{
-    build_scenario, evaluate_rung, run_plan, run_plan_cached, rung_seed,
-    Candidate, Fate, FateCounts, PlanOutcome, PlannerConfig, RungRecord,
-    SimStats, SIM_METRICS,
+    build_scenario, evaluate_rung, run_plan, run_plan_cached,
+    run_plan_instrumented, rung_seed, Candidate, Fate, FateCounts,
+    PlanOutcome, PlannerConfig, RungRecord, SimStats, SIM_METRICS,
 };
 pub use spec::{Goal, Objective, PlanSpec, SearchSpec};
 pub use surface::{admissible_surface, beats, Surface};

@@ -38,11 +38,13 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use crate::exp::spec::{PrepareCache, SpecCtx};
 use crate::exp::SpecScenario;
+use crate::obs::Registry;
 use crate::sweep::{
     run_indexed, run_sweep, Scenario, SweepConfig, SweepResults,
 };
@@ -396,11 +398,33 @@ pub fn run_plan_cached(
     cfg: &PlannerConfig,
     cache: &PrepareCache,
 ) -> Result<PlanOutcome> {
+    run_plan_instrumented(plan, cfg, cache, None)
+}
+
+/// [`run_plan_cached`] with per-stage wall-clock accounting into an
+/// [`obs::Registry`](crate::obs::Registry): counters
+/// `planner_stage0_us` (lattice folding), `planner_stage1_us` (plan
+/// solves + analytic pruning) and `planner_stage2_us` (the refinement
+/// ladder) accumulate microseconds across calls (DESIGN.md §12). Pure
+/// telemetry: wall-clock never reaches the outcome or its digest, so
+/// the instrumented and plain paths are bit-identical.
+pub fn run_plan_instrumented(
+    plan: &PlanSpec,
+    cfg: &PlannerConfig,
+    cache: &PrepareCache,
+    registry: Option<&Registry>,
+) -> Result<PlanOutcome> {
+    let stage_us = |name: &str, t0: Instant| {
+        if let Some(reg) = registry {
+            reg.counter(name).add(t0.elapsed().as_micros() as u64);
+        }
+    };
     let scenario = build_scenario(plan)?;
     let npts = scenario.points();
     ensure!(npts > 0, "the candidate lattice is empty");
 
     // ---- stage 0: fold exact-duplicate lattice points
+    let t0 = Instant::now();
     let mut candidates: Vec<Candidate> = Vec::with_capacity(npts);
     let mut seen: BTreeMap<String, usize> = BTreeMap::new();
     for p in 0..npts {
@@ -427,7 +451,10 @@ pub fn run_plan_cached(
         });
     }
 
+    stage_us("planner_stage0_us", t0);
+
     // ---- stage 1a: plan every unique candidate, extract surfaces
+    let t1 = Instant::now();
     let uniq: Vec<usize> = candidates
         .iter()
         .enumerate()
@@ -542,7 +569,10 @@ pub fn run_plan_cached(
         }
     }
 
+    stage_us("planner_stage1_us", t1);
+
     // ---- stage 2: successive-halving refinement on the sweep pool
+    let t2 = Instant::now();
     let mut alive: Vec<usize> = candidates
         .iter()
         .enumerate()
@@ -609,6 +639,8 @@ pub fn run_plan_cached(
             alive = ranked;
         }
     }
+
+    stage_us("planner_stage2_us", t2);
 
     // ---- final ranking, incumbent, frontier
     let evaluated: Vec<usize> = candidates

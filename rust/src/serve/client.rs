@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::JsonValue;
 
-use super::protocol::job_request_json;
+use super::protocol::{job_request_json, prom_stats_request_json};
 
 /// Send one request line, read the single response line, enforce the
 /// `ok` flag (a server-side error becomes an `Err` carrying the
@@ -48,6 +48,17 @@ pub fn roundtrip_raw(addr: &str, line: &str) -> Result<(JsonValue, String)> {
 /// [`roundtrip_raw`] when only the parsed body matters.
 pub fn roundtrip(addr: &str, line: &str) -> Result<JsonValue> {
     roundtrip_raw(addr, line).map(|(v, _)| v)
+}
+
+/// `stats --prom`: fetch the Prometheus text exposition. The wire
+/// reply carries it JSON-escaped in one line; this unwraps it back to
+/// the multi-line text a scraper (or a human) expects.
+pub fn fetch_prom(addr: &str) -> Result<String> {
+    let v = roundtrip(addr, &prom_stats_request_json())?;
+    match v.get("prom").and_then(JsonValue::as_str) {
+        Some(text) => Ok(text.to_string()),
+        None => bail!("malformed prom stats reply (no 'prom' field)"),
+    }
 }
 
 /// Poll `status` until the job settles, then fetch `result`. A failed

@@ -43,9 +43,10 @@ use crate::exp::{ScenarioSpec, SpecScenario};
 use crate::opt::{self, PlanSpec};
 use crate::sweep::Scenario;
 
+use crate::obs::render_prometheus;
 use protocol::{
-    err_response, parse_request, result_response, stats_response,
-    status_response, submit_response, Request,
+    err_response, parse_request, prom_stats_response, result_response,
+    stats_response, status_response, submit_response, Request,
 };
 use state::{executor_loop, preset_text, ServerState, WorkItem};
 
@@ -205,7 +206,7 @@ fn serve_one(state: &Arc<ServerState>, stream: TcpStream) -> io::Result<()> {
 /// including a parse or validation error — is a single `ok`-flagged
 /// response line.
 pub fn dispatch(state: &Arc<ServerState>, line: &str) -> String {
-    state.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    state.metrics.requests.inc();
     let req = match parse_request(line) {
         Ok(req) => req,
         Err(e) => return err_response(&format!("{e:#}")),
@@ -223,7 +224,16 @@ pub fn dispatch(state: &Arc<ServerState>, line: &str) -> String {
             Ok(view) => result_response(&view),
             Err(e) => err_response(&format!("{e:#}")),
         },
-        Request::Stats => stats_response(&state.stats_view()),
+        Request::Stats { prom: false } => {
+            stats_response(&state.stats_view())
+        }
+        Request::Stats { prom: true } => {
+            // Gauges (queue depth, cache sizes, uptime) are sampled at
+            // exposition time; counters and histograms are already live
+            // in the registry.
+            state.sync_gauges();
+            prom_stats_response(&render_prometheus(&state.registry))
+        }
         Request::Shutdown => {
             state.shutdown.store(true, Ordering::SeqCst);
             "{\"ok\": true, \"draining\": true}".to_string()
@@ -278,7 +288,7 @@ mod tests {
     fn check_validates_every_shipped_preset() {
         let line = check("127.0.0.1:2020").unwrap();
         assert!(line.starts_with("check OK:"), "{line}");
-        assert!(line.contains("9 sweep presets"), "{line}");
+        assert!(line.contains("10 sweep presets"), "{line}");
         assert!(line.contains("1 planner preset"), "{line}");
         // an unresolvable listen address fails loudly
         assert!(check("not an address").is_err());
@@ -299,6 +309,31 @@ mod tests {
             assert!(!resp.contains('\n'));
         }
         assert_eq!(state.stats_view().requests, 4);
+    }
+
+    #[test]
+    fn prom_stats_reply_is_a_well_formed_exposition() {
+        use crate::obs::looks_well_formed;
+        use crate::util::json::JsonValue;
+        let (state, _rx) = ServerState::new(1);
+        // burn two requests so the counter is provably nonzero
+        let _ = dispatch(&state, "{\"cmd\": \"stats\"}");
+        let resp = dispatch(&state, "{\"cmd\": \"stats\", \"format\": \"prom\"}");
+        let v = JsonValue::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        let text = v.get("prom").unwrap().as_str().unwrap().to_string();
+        assert!(looks_well_formed(&text), "{text}");
+        assert!(
+            text.contains("volatile_sgd_serve_requests_total 2"),
+            "{text}"
+        );
+        // gauges were synced at exposition time
+        assert!(text.contains("volatile_sgd_serve_queue_depth 0"), "{text}");
+        // histogram families render with cumulative buckets
+        assert!(
+            text.contains("volatile_sgd_serve_job_execute_us_bucket"),
+            "{text}"
+        );
     }
 
     #[test]

@@ -9,10 +9,16 @@
 //!              "seed"?, "replicates"?, "j"?}
 //! status   := {"cmd": "status", "job": N}
 //! result   := {"cmd": "result", "job": N}
-//! stats    := {"cmd": "stats"}
+//! stats    := {"cmd": "stats", "format"?}   format: "json" | "prom"
 //! shutdown := {"cmd": "shutdown"}
 //! response := {"ok": true, ...} | {"ok": false, "error": "..."}
 //! ```
+//!
+//! `format: "prom"` asks for the Prometheus text exposition instead of
+//! the JSON counter block; the reply is still one JSON line, with the
+//! exposition carried (escaped) in a `"prom"` string field
+//! (DESIGN.md §12). The default JSON `stats` reply is byte-compatible
+//! with the pre-registry daemon — pinned by a regression test below.
 //!
 //! Requests are parsed with the strict [`crate::util::json`] reader and
 //! audited like the spec loader: unknown keys are rejected *by name*
@@ -34,7 +40,9 @@ pub enum Request {
     Submit(SubmitReq),
     Status { job: u64 },
     Result { job: u64 },
-    Stats,
+    /// `prom` selects the Prometheus text exposition; the default is
+    /// the JSON counter block.
+    Stats { prom: bool },
     Shutdown,
 }
 
@@ -96,7 +104,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
             "j",
         ],
         "status" | "result" => &["cmd", "job"],
-        "stats" | "shutdown" => &["cmd"],
+        "stats" => &["cmd", "format"],
+        "shutdown" => &["cmd"],
         other => bail!(
             "unknown cmd '{other}' (expected submit, status, result, \
              stats or shutdown)"
@@ -122,7 +131,16 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }),
         "status" => Request::Status { job: job(&v)? },
         "result" => Request::Result { job: job(&v)? },
-        "stats" => Request::Stats,
+        "stats" => {
+            let prom = match str_field(&v, "format")?.as_deref() {
+                None | Some("json") => false,
+                Some("prom") => true,
+                Some(other) => bail!(
+                    "format must be \"json\" or \"prom\", got '{other}'"
+                ),
+            };
+            Request::Stats { prom }
+        }
         _ => Request::Shutdown,
     })
 }
@@ -160,6 +178,11 @@ pub fn job_request_json(cmd: &str, job: u64) -> String {
 /// Render a `stats` / `shutdown` request line.
 pub fn bare_request_json(cmd: &str) -> String {
     format!("{{\"cmd\": \"{cmd}\"}}")
+}
+
+/// Render a `stats` request asking for the Prometheus exposition.
+pub fn prom_stats_request_json() -> String {
+    "{\"cmd\": \"stats\", \"format\": \"prom\"}".to_string()
 }
 
 // --------------------------------------------------- response builders
@@ -295,6 +318,14 @@ pub fn stats_response(s: &StatsView) -> String {
     )
 }
 
+/// Wrap a Prometheus text exposition in the one-line JSON envelope:
+/// the exposition's newlines are escaped into the `"prom"` string, so
+/// the wire stays one line per reply. Clients unescape by parsing the
+/// line and reading the field.
+pub fn prom_stats_response(exposition: &str) -> String {
+    format!("{{\"ok\": true, \"prom\": \"{}\"}}", esc(exposition))
+}
+
 /// Flatten a multi-line JSON document to one wire line: newlines (and
 /// the indentation that follows them) are dropped *outside* strings.
 /// Safe for every payload this crate emits — `esc` never leaves a raw
@@ -366,8 +397,21 @@ mod tests {
         );
         assert_eq!(
             parse_request(&bare_request_json("stats")).unwrap(),
-            Request::Stats
+            Request::Stats { prom: false }
         );
+        assert_eq!(
+            parse_request(&prom_stats_request_json()).unwrap(),
+            Request::Stats { prom: true }
+        );
+        assert_eq!(
+            parse_request("{\"cmd\": \"stats\", \"format\": \"json\"}")
+                .unwrap(),
+            Request::Stats { prom: false }
+        );
+        let e = parse_request("{\"cmd\": \"stats\", \"format\": \"xml\"}")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"json\" or \"prom\""), "{e}");
         assert_eq!(
             parse_request(&bare_request_json("shutdown")).unwrap(),
             Request::Shutdown
@@ -455,5 +499,54 @@ mod tests {
         };
         let v = JsonValue::parse(&result_response(&queued)).unwrap();
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    /// The registry unification must not move a byte of the JSON
+    /// `stats` reply: this pins the exact wire line for a fixed view.
+    #[test]
+    fn stats_response_bytes_are_pinned() {
+        let s = StatsView {
+            uptime_s: 1.5,
+            requests: 10,
+            submits: 4,
+            tier_a_hits: 1,
+            tier_a_misses: 3,
+            tier_a_entries: 2,
+            tier_b_hits: 5,
+            tier_b_misses: 6,
+            tier_b_entries: 7,
+            coalesced: 1,
+            queue_depth: 0,
+            jobs_done: 2,
+            jobs_failed: 0,
+            pool_jobs: 24,
+            exec_seconds: 2.0,
+        };
+        assert_eq!(
+            stats_response(&s),
+            "{\"ok\": true, \"uptime_s\": 1.5, \"requests\": 10, \
+             \"submits\": 4, \"tier_a_hits\": 1, \"tier_a_misses\": 3, \
+             \"tier_a_entries\": 2, \"tier_b_hits\": 5, \
+             \"tier_b_misses\": 6, \"tier_b_entries\": 7, \
+             \"coalesced\": 1, \"queue_depth\": 0, \"jobs_done\": 2, \
+             \"jobs_failed\": 0, \"pool_jobs\": 24, \"exec_seconds\": 2, \
+             \"jobs_per_sec\": 12, \"avg_exec_s\": 1}"
+        );
+    }
+
+    #[test]
+    fn prom_response_round_trips_the_exposition() {
+        let exposition =
+            "# TYPE volatile_sgd_serve_requests_total counter\n\
+             volatile_sgd_serve_requests_total 3\n";
+        let line = prom_stats_response(exposition);
+        assert!(!line.contains('\n'), "{line}");
+        let v = JsonValue::parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            v.get("prom").unwrap().as_str(),
+            Some(exposition),
+            "escaping must round-trip the exposition exactly"
+        );
     }
 }

@@ -11,7 +11,7 @@
 //! [`PrepareCache`] shared by every sweep and planner execution.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -21,8 +21,9 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::config::toml::Doc;
 use crate::exp::spec::{CachedSpecScenario, PrepareCache};
 use crate::exp::{presets, ScenarioSpec, SpecScenario};
+use crate::obs::{Counter, Histogram, Registry};
 use crate::opt::{self, PlanSpec, PlannerConfig};
-use crate::sweep::{run_sweep_batched, SweepConfig};
+use crate::sweep::{run_sweep_batched_with, SweepConfig, Telemetry};
 use crate::util::fnv::Fnv;
 
 use super::protocol::{compact_json, JobView, StatsView, SubmitReq};
@@ -90,8 +91,18 @@ struct TierAEntry {
 /// served in arrival order, and every execution runs on the one shared
 /// sweep pool at the daemon's `--threads`).
 pub enum WorkItem {
-    Sweep { id: u64, spec: ScenarioSpec, cfg: SweepConfig },
-    Optimize { id: u64, plan: Box<PlanSpec>, seed: u64 },
+    Sweep {
+        id: u64,
+        spec: ScenarioSpec,
+        cfg: SweepConfig,
+        enqueued: Instant,
+    },
+    Optimize {
+        id: u64,
+        plan: Box<PlanSpec>,
+        seed: u64,
+        enqueued: Instant,
+    },
 }
 
 impl WorkItem {
@@ -100,24 +111,59 @@ impl WorkItem {
             WorkItem::Sweep { id, .. } | WorkItem::Optimize { id, .. } => *id,
         }
     }
+
+    fn enqueued(&self) -> Instant {
+        match self {
+            WorkItem::Sweep { enqueued, .. }
+            | WorkItem::Optimize { enqueued, .. } => *enqueued,
+        }
+    }
 }
 
-/// First-class service metrics, all monotonic counters (wall-clock
-/// only ever feeds *metrics*, never results — digests stay pure).
-#[derive(Debug)]
+/// First-class service metrics: named handles into the daemon's one
+/// [`Registry`] (wall-clock only ever feeds *metrics*, never results —
+/// digests stay pure). The counters back both the JSON `stats` reply
+/// (via [`ServerState::stats_view`], byte-compatible with the
+/// pre-registry format) and the Prometheus exposition; the histograms
+/// are per-job latencies in microseconds (DESIGN.md §12).
 pub struct Metrics {
-    pub requests: AtomicU64,
-    pub submits: AtomicU64,
-    pub tier_a_hits: AtomicU64,
-    pub tier_a_misses: AtomicU64,
-    pub coalesced: AtomicU64,
-    pub jobs_done: AtomicU64,
-    pub jobs_failed: AtomicU64,
+    pub requests: Arc<Counter>,
+    pub submits: Arc<Counter>,
+    pub tier_a_hits: Arc<Counter>,
+    pub tier_a_misses: Arc<Counter>,
+    pub coalesced: Arc<Counter>,
+    pub jobs_done: Arc<Counter>,
+    pub jobs_failed: Arc<Counter>,
     /// replicate jobs executed on the shared pool (sweep replicates +
     /// planner rung simulations) — frozen across a tier-A hit, which is
     /// what the CI warm-hit smoke asserts
-    pub pool_jobs: AtomicU64,
-    pub exec_micros: AtomicU64,
+    pub pool_jobs: Arc<Counter>,
+    pub exec_micros: Arc<Counter>,
+    /// admission -> execution-start wait per job
+    pub job_queue_wait_us: Arc<Histogram>,
+    /// submit-side validate/fingerprint (build_work) per submission
+    pub job_prepare_us: Arc<Histogram>,
+    /// executor wall-clock per job
+    pub job_execute_us: Arc<Histogram>,
+}
+
+impl Metrics {
+    fn new(reg: &Registry) -> Metrics {
+        Metrics {
+            requests: reg.counter("serve_requests"),
+            submits: reg.counter("serve_submits"),
+            tier_a_hits: reg.counter("serve_tier_a_hits"),
+            tier_a_misses: reg.counter("serve_tier_a_misses"),
+            coalesced: reg.counter("serve_coalesced"),
+            jobs_done: reg.counter("serve_jobs_done"),
+            jobs_failed: reg.counter("serve_jobs_failed"),
+            pool_jobs: reg.counter("serve_pool_jobs"),
+            exec_micros: reg.counter("serve_exec_us"),
+            job_queue_wait_us: reg.histogram("serve_job_queue_wait_us"),
+            job_prepare_us: reg.histogram("serve_job_prepare_us"),
+            job_execute_us: reg.histogram("serve_job_execute_us"),
+        }
+    }
 }
 
 /// The state shared by the accept loop, every connection handler and
@@ -128,6 +174,10 @@ pub struct ServerState {
     pub jobs: Mutex<Vec<JobRecord>>,
     tier_a: Mutex<HashMap<u64, TierAEntry>>,
     pub prepare_cache: PrepareCache,
+    /// the daemon's one telemetry registry: service counters, per-job
+    /// latency histograms, sweep per-stage histograms and planner stage
+    /// counters all land here and surface through `stats --prom`
+    pub registry: Arc<Registry>,
     pub metrics: Metrics,
     /// sending half of the admission queue; `None` once draining —
     /// dropping it is what lets the executor finish the queue and exit
@@ -144,23 +194,16 @@ pub struct SubmitAck {
 impl ServerState {
     pub fn new(threads: usize) -> (Arc<ServerState>, Receiver<WorkItem>) {
         let (tx, rx) = mpsc::channel();
+        let registry = Arc::new(Registry::new());
+        let metrics = Metrics::new(&registry);
         let state = Arc::new(ServerState {
             threads,
             started: Instant::now(),
             jobs: Mutex::new(Vec::new()),
             tier_a: Mutex::new(HashMap::new()),
             prepare_cache: PrepareCache::new(),
-            metrics: Metrics {
-                requests: AtomicU64::new(0),
-                submits: AtomicU64::new(0),
-                tier_a_hits: AtomicU64::new(0),
-                tier_a_misses: AtomicU64::new(0),
-                coalesced: AtomicU64::new(0),
-                jobs_done: AtomicU64::new(0),
-                jobs_failed: AtomicU64::new(0),
-                pool_jobs: AtomicU64::new(0),
-                exec_micros: AtomicU64::new(0),
-            },
+            registry,
+            metrics,
             tx: Mutex::new(Some(tx)),
             shutdown: AtomicBool::new(false),
         });
@@ -195,21 +238,47 @@ impl ServerState {
             .count() as u64;
         StatsView {
             uptime_s: self.started.elapsed().as_secs_f64(),
-            requests: m.requests.load(Ordering::Relaxed),
-            submits: m.submits.load(Ordering::Relaxed),
-            tier_a_hits: m.tier_a_hits.load(Ordering::Relaxed),
-            tier_a_misses: m.tier_a_misses.load(Ordering::Relaxed),
+            requests: m.requests.get(),
+            submits: m.submits.get(),
+            tier_a_hits: m.tier_a_hits.get(),
+            tier_a_misses: m.tier_a_misses.get(),
             tier_a_entries: self.tier_a.lock().unwrap().len() as u64,
             tier_b_hits: self.prepare_cache.hits(),
             tier_b_misses: self.prepare_cache.misses(),
             tier_b_entries: self.prepare_cache.len() as u64,
-            coalesced: m.coalesced.load(Ordering::Relaxed),
+            coalesced: m.coalesced.get(),
             queue_depth,
-            jobs_done: m.jobs_done.load(Ordering::Relaxed),
-            jobs_failed: m.jobs_failed.load(Ordering::Relaxed),
-            pool_jobs: m.pool_jobs.load(Ordering::Relaxed),
-            exec_seconds: m.exec_micros.load(Ordering::Relaxed) as f64 / 1e6,
+            jobs_done: m.jobs_done.get(),
+            jobs_failed: m.jobs_failed.get(),
+            pool_jobs: m.pool_jobs.get(),
+            exec_seconds: m.exec_micros.get() as f64 / 1e6,
         }
+    }
+
+    /// Refresh the registry gauges that mirror sampled state (queue
+    /// depth, cache occupancy, tier-B counters living in
+    /// [`PrepareCache`]'s own atomics) so a Prometheus scrape sees
+    /// them. Called by the `stats --prom` handler just before
+    /// rendering.
+    pub fn sync_gauges(&self) {
+        let queued = self
+            .jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|j| j.state == JobState::Queued)
+            .count() as u64;
+        let reg = &self.registry;
+        reg.gauge("serve_queue_depth").set(queued);
+        reg.gauge("serve_tier_a_entries")
+            .set(self.tier_a.lock().unwrap().len() as u64);
+        reg.gauge("serve_tier_b_hits").set(self.prepare_cache.hits());
+        reg.gauge("serve_tier_b_misses")
+            .set(self.prepare_cache.misses());
+        reg.gauge("serve_tier_b_entries")
+            .set(self.prepare_cache.len() as u64);
+        reg.gauge("serve_uptime_s")
+            .set(self.started.elapsed().as_secs());
     }
 
     /// Validate, fingerprint and admit one submission. Tier-A hits are
@@ -218,13 +287,18 @@ impl ServerState {
     /// coalesced (the twin's job id comes back); everything else is
     /// queued.
     pub fn submit(&self, req: SubmitReq) -> Result<SubmitAck> {
-        self.metrics.submits.fetch_add(1, Ordering::Relaxed);
-        let (name, fingerprint, item_for) = build_work(self.threads, req)?;
+        self.metrics.submits.inc();
+        let prep = Instant::now();
+        let built = build_work(self.threads, req);
+        self.metrics
+            .job_prepare_us
+            .record(prep.elapsed().as_micros() as u64);
+        let (name, fingerprint, item_for) = built?;
 
         let mut jobs = self.jobs.lock().unwrap();
         // tier A: the finished report is already content-addressed
         if let Some(entry) = self.tier_a.lock().unwrap().get(&fingerprint) {
-            self.metrics.tier_a_hits.fetch_add(1, Ordering::Relaxed);
+            self.metrics.tier_a_hits.inc();
             let id = jobs.len() as u64;
             let rec = JobRecord {
                 id,
@@ -240,7 +314,7 @@ impl ServerState {
             jobs.push(rec);
             return Ok(SubmitAck { view });
         }
-        self.metrics.tier_a_misses.fetch_add(1, Ordering::Relaxed);
+        self.metrics.tier_a_misses.inc();
 
         // coalesce onto an identical queued/running submission instead
         // of admitting duplicate work
@@ -248,7 +322,7 @@ impl ServerState {
             j.fingerprint == fingerprint
                 && matches!(j.state, JobState::Queued | JobState::Running)
         }) {
-            self.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+            self.metrics.coalesced.inc();
             return Ok(SubmitAck { view: twin.view(true) });
         }
 
@@ -276,7 +350,7 @@ impl ServerState {
             jobs[id as usize].state = JobState::Failed;
             jobs[id as usize].error =
                 Some("server is draining; submission rejected".into());
-            self.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.jobs_failed.inc();
             bail!("server is draining; submission rejected");
         }
         Ok(SubmitAck { view })
@@ -382,7 +456,12 @@ fn build_work(
         Ok((
             name,
             fingerprint,
-            Box::new(move |id| WorkItem::Optimize { id, plan, seed }),
+            Box::new(move |id| WorkItem::Optimize {
+                id,
+                plan,
+                seed,
+                enqueued: Instant::now(),
+            }),
         ))
     } else {
         let mut spec = ScenarioSpec::from_str(&text)?;
@@ -401,7 +480,12 @@ fn build_work(
         Ok((
             name,
             fingerprint,
-            Box::new(move |id| WorkItem::Sweep { id, spec, cfg }),
+            Box::new(move |id| WorkItem::Sweep {
+                id,
+                spec,
+                cfg,
+                enqueued: Instant::now(),
+            }),
         ))
     }
 }
@@ -412,6 +496,10 @@ fn build_work(
 pub fn executor_loop(state: &Arc<ServerState>, rx: Receiver<WorkItem>) {
     while let Ok(item) = rx.recv() {
         let id = item.id();
+        state
+            .metrics
+            .job_queue_wait_us
+            .record(item.enqueued().elapsed().as_micros() as u64);
         state.jobs.lock().unwrap()[id as usize].state = JobState::Running;
         let t0 = Instant::now();
         let outcome = match item {
@@ -420,10 +508,9 @@ pub fn executor_loop(state: &Arc<ServerState>, rx: Receiver<WorkItem>) {
                 exec_optimize(state, &plan, seed)
             }
         };
-        state
-            .metrics
-            .exec_micros
-            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        let exec_us = t0.elapsed().as_micros() as u64;
+        state.metrics.exec_micros.add(exec_us);
+        state.metrics.job_execute_us.record(exec_us);
         match outcome {
             Ok((payload, digest)) => {
                 let (fp, name) = {
@@ -434,7 +521,7 @@ pub fn executor_loop(state: &Arc<ServerState>, rx: Receiver<WorkItem>) {
                     rec.payload = Some(Arc::clone(&payload));
                     (rec.fingerprint, rec.name.clone())
                 };
-                state.metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                state.metrics.jobs_done.inc();
                 state
                     .tier_a
                     .lock()
@@ -446,7 +533,7 @@ pub fn executor_loop(state: &Arc<ServerState>, rx: Receiver<WorkItem>) {
                 let rec = &mut jobs[id as usize];
                 rec.state = JobState::Failed;
                 rec.error = Some(format!("{e:#}"));
-                state.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                state.metrics.jobs_failed.inc();
             }
         }
     }
@@ -460,11 +547,12 @@ fn exec_sweep(
     let scenario = SpecScenario::new(spec)?;
     let name = scenario.spec().name.clone();
     let warm = CachedSpecScenario::new(&scenario, &state.prepare_cache);
-    let results = run_sweep_batched(&warm, cfg)?;
-    state
-        .metrics
-        .pool_jobs
-        .fetch_add(results.throughput.jobs, Ordering::Relaxed);
+    // registry-only telemetry: per-stage histograms and pool counters
+    // accumulate across jobs; no trace sink (results stay untouched
+    // either way — the digest-neutrality contract, DESIGN.md §12)
+    let tel = Telemetry { trace: None, registry: Some(&state.registry) };
+    let results = run_sweep_batched_with(&warm, cfg, tel)?;
+    state.metrics.pool_jobs.add(results.throughput.jobs);
     let digest = results.digest();
     let payload = Arc::new(compact_json(&results.to_json(&name, cfg)));
     Ok((payload, digest))
@@ -476,13 +564,18 @@ fn exec_optimize(
     seed: u64,
 ) -> Result<(Arc<String>, u64)> {
     let cfg = PlannerConfig { seed, threads: state.threads };
-    let outcome = opt::run_plan_cached(plan, &cfg, &state.prepare_cache)?;
+    let outcome = opt::run_plan_instrumented(
+        plan,
+        &cfg,
+        &state.prepare_cache,
+        Some(&state.registry),
+    )?;
     let sims: u64 = outcome
         .rungs
         .iter()
         .map(|r| r.replicates * r.members.len() as u64)
         .sum();
-    state.metrics.pool_jobs.fetch_add(sims, Ordering::Relaxed);
+    state.metrics.pool_jobs.add(sims);
     let digest = outcome.digest();
     let payload =
         Arc::new(compact_json(&opt::report::to_json(&outcome, state.threads)));
@@ -543,6 +636,21 @@ kind = "fixed"
         assert_eq!(s.tier_a_hits, 1);
         assert_eq!(s.pool_jobs, pool_before);
         assert_eq!(s.jobs_done, 1);
+
+        // the registry saw the same traffic the JSON view reports, plus
+        // the per-job and per-stage latency histograms
+        let m = &state.metrics;
+        assert_eq!(m.job_queue_wait_us.count(), 1);
+        assert_eq!(m.job_execute_us.count(), 1);
+        assert_eq!(m.job_prepare_us.count(), 2); // cold + warm submit
+        assert_eq!(
+            state.registry.counter("serve_jobs_done").get(),
+            s.jobs_done
+        );
+        assert_eq!(
+            state.registry.histogram("sweep_run_us").count(),
+            3 // one point x 3 replicates
+        );
     }
 
     #[test]

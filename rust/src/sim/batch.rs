@@ -38,10 +38,11 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::backend::TrainingBackend;
 use crate::metrics::{Point, Series};
+use crate::obs::TraceObs;
 use crate::util::rng::Rng;
 
 use super::engine::{
-    Engine, EngineParams, EngineResult, EngineState, Event, Policy,
+    Engine, EngineParams, EngineResult, EngineState, Event, Observer, Policy,
 };
 use super::{CostMeter, PriceSource};
 
@@ -138,11 +139,34 @@ pub fn run_batch(
     prices: &PriceSource,
     rngs: &mut [Rng],
 ) -> Result<Vec<EngineResult>> {
+    run_batch_traced(params, lanes, prices, rngs, &mut [])
+}
+
+/// [`run_batch`] with one optional [`TraceObs`] per lane (DESIGN.md
+/// §12): `tracers` is either empty (no tracing) or index-aligned with
+/// `lanes`. Tracers are strictly read-only on the kernel — no RNG, no
+/// accounting — so a traced batch is bit-identical to an untraced one.
+/// The overhead-enabled scalar fallback re-attributes each tracer's
+/// `path` to `"scalar"` before running it, so trace lines report the
+/// executor that actually ran the lane.
+pub fn run_batch_traced(
+    params: &EngineParams,
+    lanes: Vec<BatchLane>,
+    prices: &PriceSource,
+    rngs: &mut [Rng],
+    tracers: &mut [TraceObs<'_>],
+) -> Result<Vec<EngineResult>> {
     ensure!(
         lanes.len() == rngs.len(),
         "run_batch: {} lanes but {} rng streams",
         lanes.len(),
         rngs.len()
+    );
+    ensure!(
+        tracers.is_empty() || tracers.len() == lanes.len(),
+        "run_batch: {} lanes but {} tracers",
+        lanes.len(),
+        tracers.len()
     );
     if lanes.is_empty() {
         return Ok(Vec::new());
@@ -159,21 +183,32 @@ pub fn run_batch(
         return lanes
             .into_iter()
             .zip(rngs.iter_mut())
-            .map(|(mut lane, rng)| {
-                engine.run(
+            .enumerate()
+            .map(|(i, (mut lane, rng))| match tracers.get_mut(i) {
+                Some(t) => {
+                    t.set_path("scalar");
+                    engine.run(
+                        lane.policy.as_mut(),
+                        lane.backend.as_mut(),
+                        prices,
+                        rng,
+                        &mut [t as &mut dyn Observer],
+                    )
+                }
+                None => engine.run(
                     lane.policy.as_mut(),
                     lane.backend.as_mut(),
                     prices,
                     rng,
                     &mut [],
-                )
+                ),
             })
             .collect();
     }
 
     ARENA.with(|cell| {
         let arena = &mut *cell.borrow_mut();
-        run_lockstep(params, lanes, prices, rngs, arena)
+        run_lockstep(params, lanes, prices, rngs, arena, tracers)
     })
 }
 
@@ -187,6 +222,7 @@ fn run_lockstep(
     prices: &PriceSource,
     rngs: &mut [Rng],
     arena: &mut BatchArena,
+    tracers: &mut [TraceObs<'_>],
 ) -> Result<Vec<EngineResult>> {
     let n = lanes.len();
     let targets: Vec<u64> =
@@ -213,6 +249,7 @@ fn run_lockstep(
                 st,
                 i,
                 scratch,
+                tracers.get_mut(i),
             )?;
             if st.done[i] {
                 live -= 1;
@@ -251,6 +288,7 @@ fn advance_slot(
     st: &mut LaneSoa,
     i: usize,
     scratch: &mut Vec<usize>,
+    mut tracer: Option<&mut TraceObs<'_>>,
 ) -> Result<()> {
     // one emit point, mirroring the engine's policy-then-recorder order
     macro_rules! emit {
@@ -268,6 +306,9 @@ fn advance_slot(
                 price: $price,
             };
             lane.policy.on_event(&ev, &state)?;
+            if let Some(t) = tracer.as_deref_mut() {
+                t.on_event(&ev, &state);
+            }
             if matches!(ev, Event::IterationDone)
                 && (state.iter % params.stride == 0
                     || state.iter == state.target)

@@ -111,6 +111,21 @@ pub enum Event {
     DeadlineHit,
 }
 
+impl Event {
+    /// Stable machine-readable tag, payload dropped — the `kind` field
+    /// of trace JSONL lines (`obs::trace`) and of [`EventLog::kinds`].
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::PriceRevision { .. } => "price_revision",
+            Event::WorkerPreempted { .. } => "worker_preempted",
+            Event::WorkerRestored => "worker_restored",
+            Event::IterationDone => "iteration_done",
+            Event::CheckpointDone => "checkpoint_done",
+            Event::DeadlineHit => "deadline_hit",
+        }
+    }
+}
+
 /// Read-only run state handed to policies and observers with every
 /// event. Values are as of the moment the event fires (e.g. at
 /// [`Event::IterationDone`] the iteration's cost is already charged).
@@ -240,6 +255,13 @@ impl<S: Strategy> Policy for LockstepPolicy<S> {
 /// never consume RNG and never influence the run.
 pub trait Observer {
     fn on_event(&mut self, ev: &Event, state: &EngineState);
+
+    /// The portfolio runner announces the market index subsequent
+    /// events belong to (single-market runs never call this). A no-op
+    /// for observers that don't attribute events to markets.
+    fn on_market(&mut self, m: usize) {
+        let _ = m;
+    }
 }
 
 /// Records a stride-sampled [`Series`] of the run trajectory — the
@@ -293,17 +315,7 @@ impl EventLog {
     /// The sequence of events, payloads dropped — convenient for
     /// ordering assertions.
     pub fn kinds(&self) -> Vec<&'static str> {
-        self.events
-            .iter()
-            .map(|(e, _)| match e {
-                Event::PriceRevision { .. } => "price_revision",
-                Event::WorkerPreempted { .. } => "worker_preempted",
-                Event::WorkerRestored => "worker_restored",
-                Event::IterationDone => "iteration_done",
-                Event::CheckpointDone => "checkpoint_done",
-                Event::DeadlineHit => "deadline_hit",
-            })
-            .collect()
+        self.events.iter().map(|(e, _)| e.kind()).collect()
     }
 }
 

@@ -12,7 +12,7 @@ pub mod forecast;
 pub mod policy;
 pub mod price_source;
 
-pub use batch::{run_batch, BatchLane};
+pub use batch::{run_batch, run_batch_traced, BatchLane};
 pub use cost::CostMeter;
 pub use engine::{
     Engine, EngineParams, EngineResult, EngineState, Event, EventLog,

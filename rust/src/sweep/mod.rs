@@ -53,13 +53,54 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::metrics::Throughput;
+use crate::obs::{span_line, HistShard, Registry, TraceObs, TraceSink};
 use crate::util::fnv::Fnv;
 use crate::util::rng::Rng;
 use crate::util::stats::OnlineStats;
 
 pub use grid::Grid;
 pub use planner::{Job, JobPlan};
-pub use pool::run_indexed;
+pub use pool::{run_indexed, run_indexed_stats, PoolStats};
+
+/// Optional telemetry for a sweep (DESIGN.md §12): a JSONL trace sink
+/// for engine events + timing spans, and/or a metric registry for
+/// per-stage latency histograms. `Telemetry::default()` is fully off —
+/// and by the digest-neutrality contract (pinned per shipped preset in
+/// `tests/integration_obs.rs`) switching either on never changes a
+/// result bit: telemetry consumes no RNG, and wall-clock flows only
+/// *out* of the sweep, never into a digest.
+#[derive(Clone, Copy, Default)]
+pub struct Telemetry<'a> {
+    pub trace: Option<&'a TraceSink>,
+    pub registry: Option<&'a Registry>,
+}
+
+impl<'a> Telemetry<'a> {
+    pub fn off() -> Self {
+        Telemetry::default()
+    }
+
+    fn enabled(&self) -> bool {
+        self.trace.is_some() || self.registry.is_some()
+    }
+
+    /// Record one wall-clock span to both backends (histogram named
+    /// `sweep_<name>_us`, span line named `name`).
+    fn span(
+        &self,
+        name: &str,
+        point: Option<usize>,
+        wall_us: u64,
+        extra: &[(&str, u64)],
+    ) {
+        if let Some(reg) = self.registry {
+            reg.histogram(&format!("sweep_{name}_us")).record(wall_us);
+        }
+        if let Some(sink) = self.trace {
+            sink.write_line(&span_line(name, point, wall_us, extra));
+        }
+    }
+}
 
 /// How a sweep runs: replicates per grid point, master seed, workers.
 #[derive(Clone, Copy, Debug)]
@@ -125,6 +166,38 @@ pub trait Scenario: Sync {
             .map(|rng| self.run(point, ctx, rng))
             .collect()
     }
+
+    /// [`Scenario::run`] with a trace observer attached. The default
+    /// ignores the tracer (scenarios with no engine inside have no
+    /// event stream to export); engine-backed scenarios override this
+    /// to pass `tracer` into the run as an extra [`crate::sim::Observer`].
+    /// Overrides must keep the run bit-identical to [`Scenario::run`] —
+    /// the tracer is read-only and RNG-free by construction.
+    fn run_traced(
+        &self,
+        point: usize,
+        ctx: &Self::Ctx,
+        rng: &mut Rng,
+        tracer: &mut TraceObs,
+    ) -> Result<Vec<f64>> {
+        let _ = tracer;
+        self.run(point, ctx, rng)
+    }
+
+    /// [`Scenario::run_block`] with one trace observer per replicate
+    /// (`tracers[r]` observes stream `r`). Same contract as
+    /// [`Scenario::run_traced`]: default ignores the tracers, overrides
+    /// must stay bit-identical to the untraced block.
+    fn run_block_traced(
+        &self,
+        point: usize,
+        ctx: &Self::Ctx,
+        rngs: &mut [Rng],
+        tracers: &mut [TraceObs],
+    ) -> Result<Vec<Vec<f64>>> {
+        let _ = tracers;
+        self.run_block(point, ctx, rngs)
+    }
 }
 
 /// Collated statistics for one grid point.
@@ -152,6 +225,19 @@ pub fn run_sweep<S: Scenario>(
     scenario: &S,
     cfg: &SweepConfig,
 ) -> Result<SweepResults> {
+    run_sweep_with(scenario, cfg, Telemetry::off())
+}
+
+/// [`run_sweep`] with telemetry attached: per-point prepare and
+/// per-replicate run latency histograms, prepare/run/collate/pool
+/// timing spans, and (when a trace sink is given) the engine event
+/// stream of every replicate. Bit-identical results to [`run_sweep`]
+/// at any telemetry setting — the digest-neutrality contract.
+pub fn run_sweep_with<S: Scenario>(
+    scenario: &S,
+    cfg: &SweepConfig,
+    tel: Telemetry<'_>,
+) -> Result<SweepResults> {
     let t0 = Instant::now();
     let npts = scenario.points();
     let metric_names = scenario.metrics();
@@ -159,19 +245,77 @@ pub fn run_sweep<S: Scenario>(
 
     // phase 1: per-point contexts, once per sweep
     let ctxs: Vec<S::Ctx> =
-        run_indexed(cfg.threads, npts, |p| scenario.prepare(p))
-            .into_iter()
-            .collect::<Result<_>>()?;
+        run_indexed(cfg.threads, npts, |p| {
+            let tp = Instant::now();
+            let ctx = scenario.prepare(p);
+            if tel.enabled() {
+                tel.span(
+                    "prepare",
+                    Some(p),
+                    tp.elapsed().as_micros() as u64,
+                    &[],
+                );
+            }
+            ctx
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
 
     // phase 2: replicate jobs
     let plan = JobPlan::new(npts, cfg.replicates);
-    let outputs = run_indexed(cfg.threads, plan.len(), |i| {
-        let job = plan.jobs[i];
-        let mut rng = Rng::stream(cfg.seed, job.stream);
-        scenario.run(job.point, &ctxs[job.point], &mut rng)
-    });
+    let (outputs, pool) =
+        run_indexed_stats(cfg.threads, plan.len(), |i| {
+            let job = plan.jobs[i];
+            let mut rng = Rng::stream(cfg.seed, job.stream);
+            let tr = Instant::now();
+            let out = match tel.trace {
+                Some(sink) => {
+                    let mut tracer = TraceObs::new(
+                        sink,
+                        job.point,
+                        job.replicate,
+                        "scalar",
+                    );
+                    let out = scenario.run_traced(
+                        job.point,
+                        &ctxs[job.point],
+                        &mut rng,
+                        &mut tracer,
+                    );
+                    tracer.finish();
+                    out
+                }
+                None => scenario.run(job.point, &ctxs[job.point], &mut rng),
+            };
+            if tel.enabled() {
+                tel.span(
+                    "run",
+                    Some(job.point),
+                    tr.elapsed().as_micros() as u64,
+                    &[("replicate", job.replicate)],
+                );
+            }
+            out
+        });
+    if tel.enabled() {
+        tel.span(
+            "pool",
+            None,
+            t0.elapsed().as_micros() as u64,
+            &[
+                ("workers", pool.workers as u64),
+                ("own", pool.own),
+                ("stolen", pool.stolen),
+            ],
+        );
+        if let Some(reg) = tel.registry {
+            reg.counter("sweep_pool_own_jobs").add(pool.own);
+            reg.counter("sweep_pool_stolen_jobs").add(pool.stolen);
+        }
+    }
 
     // phase 3: deterministic collation in job order
+    let tc = Instant::now();
     let mut points: Vec<PointSummary> = (0..npts)
         .map(|p| PointSummary {
             label: scenario.label(p),
@@ -195,6 +339,9 @@ pub fn run_sweep<S: Scenario>(
                 summary.missing[m] += 1;
             }
         }
+    }
+    if tel.enabled() {
+        tel.span("collate", None, tc.elapsed().as_micros() as u64, &[]);
     }
 
     Ok(SweepResults {
@@ -223,6 +370,19 @@ pub fn run_sweep_batched<S: Scenario>(
     scenario: &S,
     cfg: &SweepConfig,
 ) -> Result<SweepResults> {
+    run_sweep_batched_with(scenario, cfg, Telemetry::off())
+}
+
+/// [`run_sweep_batched`] with telemetry attached — the batched
+/// counterpart of [`run_sweep_with`], with the same digest-neutrality
+/// contract. Per-replicate run latencies are accumulated in a
+/// thread-local [`HistShard`] per point job and merged into the shared
+/// registry histogram when the block completes.
+pub fn run_sweep_batched_with<S: Scenario>(
+    scenario: &S,
+    cfg: &SweepConfig,
+    tel: Telemetry<'_>,
+) -> Result<SweepResults> {
     let t0 = Instant::now();
     let npts = scenario.points();
     let metric_names = scenario.metrics();
@@ -230,23 +390,95 @@ pub fn run_sweep_batched<S: Scenario>(
 
     // phase 1: per-point contexts, once per sweep (same as run_sweep)
     let ctxs: Vec<S::Ctx> =
-        run_indexed(cfg.threads, npts, |p| scenario.prepare(p))
-            .into_iter()
-            .collect::<Result<_>>()?;
+        run_indexed(cfg.threads, npts, |p| {
+            let tp = Instant::now();
+            let ctx = scenario.prepare(p);
+            if tel.enabled() {
+                tel.span(
+                    "prepare",
+                    Some(p),
+                    tp.elapsed().as_micros() as u64,
+                    &[],
+                );
+            }
+            ctx
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
 
     // phase 2: one job per grid point, owning the point's whole
     // replicate block
-    let blocks = run_indexed(cfg.threads, npts, |p| {
+    let (blocks, pool) = run_indexed_stats(cfg.threads, npts, |p| {
         let mut rngs: Vec<Rng> = (0..cfg.replicates)
             .map(|r| {
                 Rng::stream(cfg.seed, p as u64 * cfg.replicates + r)
             })
             .collect();
-        scenario.run_block(p, &ctxs[p], &mut rngs)
+        let tr = Instant::now();
+        let out = match tel.trace {
+            Some(sink) => {
+                let mut tracers: Vec<TraceObs> = (0..cfg.replicates)
+                    .map(|r| TraceObs::new(sink, p, r, "batched"))
+                    .collect();
+                let out = scenario.run_block_traced(
+                    p,
+                    &ctxs[p],
+                    &mut rngs,
+                    &mut tracers,
+                );
+                for t in &mut tracers {
+                    t.finish();
+                }
+                out
+            }
+            None => scenario.run_block(p, &ctxs[p], &mut rngs),
+        };
+        if tel.enabled() {
+            let wall = tr.elapsed().as_micros() as u64;
+            if let Some(sink) = tel.trace {
+                sink.write_line(&span_line(
+                    "run",
+                    Some(p),
+                    wall,
+                    &[("replicates", cfg.replicates)],
+                ));
+            }
+            // `sweep_run_us` means *per-replicate* run latency on both
+            // executors. The lockstep kernel interleaves its lanes, so
+            // per-lane wall-clock is fiction here: spread the block
+            // wall evenly across its replicates via a thread-local
+            // shard, merged into the shared histogram at block end.
+            if let (Some(reg), true) = (tel.registry, cfg.replicates > 0)
+            {
+                let mut shard = HistShard::default();
+                for _ in 0..cfg.replicates {
+                    shard.record(wall / cfg.replicates);
+                }
+                shard.merge_into(&reg.histogram("sweep_run_us"));
+            }
+        }
+        out
     });
+    if tel.enabled() {
+        tel.span(
+            "pool",
+            None,
+            t0.elapsed().as_micros() as u64,
+            &[
+                ("workers", pool.workers as u64),
+                ("own", pool.own),
+                ("stolen", pool.stolen),
+            ],
+        );
+        if let Some(reg) = tel.registry {
+            reg.counter("sweep_pool_own_jobs").add(pool.own);
+            reg.counter("sweep_pool_stolen_jobs").add(pool.stolen);
+        }
+    }
 
     // phase 3: deterministic collation — point-major, replicate order
     // within each point: exactly run_sweep's job order
+    let tc = Instant::now();
     let mut points: Vec<PointSummary> = (0..npts)
         .map(|p| PointSummary {
             label: scenario.label(p),
@@ -277,6 +509,9 @@ pub fn run_sweep_batched<S: Scenario>(
                 }
             }
         }
+    }
+    if tel.enabled() {
+        tel.span("collate", None, tc.elapsed().as_micros() as u64, &[]);
     }
 
     Ok(SweepResults {
@@ -544,6 +779,46 @@ mod tests {
                 b.to_labeled_table().to_csv()
             );
         }
+    }
+
+    #[test]
+    fn telemetry_is_digest_neutral_and_emits_spans() {
+        let toy = Toy { offsets: vec![1.0, 2.0] };
+        let cfg = SweepConfig { replicates: 3, seed: 5, threads: 2 };
+        let off = run_sweep(&toy, &cfg).unwrap();
+
+        let dir = std::env::temp_dir()
+            .join(format!("vsgd_sweep_tel_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.jsonl");
+        let sink = TraceSink::create(path.to_str().unwrap()).unwrap();
+        sink.write_line(&crate::obs::meta_line("sweep", "toy", 5, 2));
+        let reg = Registry::new();
+        let tel = Telemetry { trace: Some(&sink), registry: Some(&reg) };
+        let on = run_sweep_with(&toy, &cfg, tel).unwrap();
+        let on_batched = run_sweep_batched_with(&toy, &cfg, tel).unwrap();
+        sink.flush().unwrap();
+
+        assert_eq!(off.digest(), on.digest());
+        assert_eq!(off.digest(), on_batched.digest());
+        // the trace validates and carries the expected span structure
+        let text = std::fs::read_to_string(&path).unwrap();
+        let sum = crate::obs::validate_trace(&text).unwrap();
+        assert_eq!(sum.events, 0, "Toy has no engine inside");
+        // each sweep: 2 prepare + run spans (2 per-replicate jobs x 3 /
+        // 2 points) + pool + collate
+        assert_eq!(sum.spans, (2 + 6 + 1 + 1) + (2 + 2 + 1 + 1));
+        // histograms saw every stage
+        let hists = reg.histogram_handles();
+        let get = |name: &str| {
+            hists.iter().find(|(n, _)| n == name).unwrap().1.count()
+        };
+        assert_eq!(get("sweep_prepare_us"), 4);
+        assert_eq!(get("sweep_run_us"), 12); // 6 scalar + 6 shard-merged
+        assert_eq!(get("sweep_collate_us"), 2);
+        assert_eq!(get("sweep_pool_us"), 2);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir(&dir).ok();
     }
 
     #[test]

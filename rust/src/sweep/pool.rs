@@ -15,9 +15,23 @@
 //! order.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::thread;
+
+/// How the pool scheduled one [`run_indexed_stats`] call: telemetry
+/// only (trace span lines, DESIGN.md §12) — scheduling shape never
+/// affects results, so none of this feeds a digest.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// workers actually spawned (1 = inline, no pool)
+    pub workers: usize,
+    /// jobs a worker popped from its own deque
+    pub own: u64,
+    /// jobs taken from another worker's deque
+    pub stolen: u64,
+}
 
 /// Run `f` over `0..n` on up to `threads` workers; `out[i] == f(i)`.
 ///
@@ -29,12 +43,29 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    run_indexed_stats(threads, n, f).0
+}
+
+/// [`run_indexed`] plus the scheduling tally. Same outputs, same
+/// determinism contract — [`PoolStats`] only reports where each job
+/// happened to run.
+pub fn run_indexed_stats<T, F>(
+    threads: usize,
+    n: usize,
+    f: F,
+) -> (Vec<T>, PoolStats)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     if n == 0 {
-        return Vec::new();
+        return (Vec::new(), PoolStats::default());
     }
     let workers = threads.max(1).min(n);
     if workers == 1 {
-        return (0..n).map(f).collect();
+        let out = (0..n).map(f).collect();
+        let stats = PoolStats { workers: 1, own: n as u64, stolen: 0 };
+        return (out, stats);
     }
 
     // deal jobs round-robin so every worker starts with local work
@@ -43,14 +74,21 @@ where
         .collect();
     let (tx, rx) = mpsc::channel::<(usize, T)>();
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let (own, stolen) = (AtomicU64::new(0), AtomicU64::new(0));
 
     thread::scope(|scope| {
         for w in 0..workers {
             let tx = tx.clone();
             let queues = &queues;
             let f = &f;
+            let (own, stolen) = (&own, &stolen);
             scope.spawn(move || {
-                while let Some(i) = next_job(queues, w) {
+                while let Some((i, was_steal)) = next_job(queues, w) {
+                    if was_steal {
+                        stolen.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        own.fetch_add(1, Ordering::Relaxed);
+                    }
                     // receiver gone means the collector bailed; just stop
                     if tx.send((i, f(i))).is_err() {
                         return;
@@ -64,22 +102,32 @@ where
         }
     });
 
-    slots
+    let out = slots
         .into_iter()
         .enumerate()
         .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} was never delivered")))
-        .collect()
+        .collect();
+    let stats = PoolStats {
+        workers,
+        own: own.into_inner(),
+        stolen: stolen.into_inner(),
+    };
+    (out, stats)
 }
 
-/// Pop own queue front, else steal the back of the fullest other queue.
-/// Returns `None` only once a full scan observes every queue empty — a
-/// lost steal race (the victim drained between the scan and the lock)
-/// rescans instead of retiring the worker, so no worker exits while
-/// another queue still holds jobs. Terminates because jobs are only ever
-/// removed: each rescan sees a strictly shrinking backlog.
-fn next_job(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+/// Pop own queue front, else steal the back of the fullest other queue
+/// (the bool in the return marks a steal). Returns `None` only once a
+/// full scan observes every queue empty — a lost steal race (the victim
+/// drained between the scan and the lock) rescans instead of retiring
+/// the worker, so no worker exits while another queue still holds jobs.
+/// Terminates because jobs are only ever removed: each rescan sees a
+/// strictly shrinking backlog.
+fn next_job(
+    queues: &[Mutex<VecDeque<usize>>],
+    me: usize,
+) -> Option<(usize, bool)> {
     if let Some(i) = queues[me].lock().unwrap().pop_front() {
-        return Some(i);
+        return Some((i, false));
     }
     loop {
         // victim selection: fullest queue first, so steals spread the
@@ -97,7 +145,7 @@ fn next_job(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
         }
         let (_, victim) = best?;
         if let Some(i) = queues[victim].lock().unwrap().pop_back() {
-            return Some(i);
+            return Some((i, true));
         }
     }
 }
@@ -149,6 +197,24 @@ mod tests {
     #[test]
     fn more_threads_than_jobs() {
         assert_eq!(run_indexed(64, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn stats_account_for_every_job() {
+        // inline path: everything is "own", one worker
+        let (out, s) = run_indexed_stats(1, 5, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(s, PoolStats { workers: 1, own: 5, stolen: 0 });
+        // pooled path: own + stolen covers every job exactly once
+        let (out, s) = run_indexed_stats(4, 64, |i| {
+            if i % 4 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.own + s.stolen, 64);
     }
 
     #[test]

@@ -122,6 +122,22 @@ impl JsonValue {
     pub fn is_null(&self) -> bool {
         matches!(self, JsonValue::Null)
     }
+
+    /// Parse a JSONL body: one strict JSON value per line, every line
+    /// mandatory (a blank line is malformed output, not formatting —
+    /// the trace writers never emit one). Errors carry the 1-based
+    /// line number. Backs the `obs::trace` validator and the CI trace
+    /// smoke.
+    pub fn parse_jsonl(text: &str) -> Result<Vec<JsonValue>> {
+        text.lines()
+            .enumerate()
+            .map(|(i, line)| {
+                JsonValue::parse(line).map_err(|e| {
+                    anyhow::anyhow!("jsonl line {}: {e}", i + 1)
+                })
+            })
+            .collect()
+    }
 }
 
 /// Nesting depth cap: the wire protocol never nests past ~3 levels, so
@@ -546,6 +562,24 @@ mod tests {
         assert!(parse_err("{} x").contains("trailing data"));
         let deep = "[".repeat(80) + &"]".repeat(80);
         assert!(parse_err(&deep).contains("nesting deeper"));
+    }
+
+    #[test]
+    fn parse_jsonl_is_per_line_strict() {
+        let vs =
+            JsonValue::parse_jsonl("{\"a\": 1}\n[2]\n\"three\"").unwrap();
+        assert_eq!(vs.len(), 3);
+        assert_eq!(vs[0].get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(vs[2].as_str(), Some("three"));
+        // empty body is zero lines, not an error (callers decide)
+        assert!(JsonValue::parse_jsonl("").unwrap().is_empty());
+        // errors carry the offending line number
+        let e = JsonValue::parse_jsonl("{\"a\": 1}\n{broken")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("jsonl line 2"), "{e}");
+        // a blank line is malformed, not ignorable
+        assert!(JsonValue::parse_jsonl("1\n\n2").is_err());
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Telemetry integration: the digest-neutrality contract end to end
+//! (DESIGN.md §12).
+//!
+//! The tentpole guarantee is that observability is *provably inert*:
+//! attaching a trace sink and a metrics registry to a sweep never
+//! changes a result bit, because the observers draw no RNG and
+//! wall-clock values only flow out of the run (span lines, latency
+//! histograms) — never into the FNV digest. Pinned here for every
+//! shipped preset, on both executors, at 1 and 8 threads.
+
+use volatile_sgd::exp::presets::{self, PRESET_NAMES};
+use volatile_sgd::exp::SpecScenario;
+use volatile_sgd::obs::{
+    meta_line, validate_trace, Registry, TraceSink,
+};
+use volatile_sgd::sweep::{
+    run_sweep, run_sweep_batched, run_sweep_batched_with, run_sweep_with,
+    SweepConfig, Telemetry,
+};
+
+/// A per-test temp path that parallel test binaries cannot collide on.
+fn tmp_trace(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "volatile_sgd_obs_{}_{tag}.jsonl",
+        std::process::id()
+    ))
+}
+
+/// A small Fig. 3 grid (one market x four strategies) for the tests
+/// that probe structure rather than coverage.
+fn small_fig3() -> SpecScenario {
+    let mut spec = presets::spec("fig3").unwrap();
+    spec.markets.truncate(1);
+    SpecScenario::new(spec).unwrap()
+}
+
+#[test]
+fn telemetry_is_digest_neutral_for_every_preset() {
+    for name in PRESET_NAMES {
+        let scenario =
+            SpecScenario::new(presets::spec(name).unwrap()).unwrap();
+        for threads in [1usize, 8] {
+            let cfg = SweepConfig { replicates: 2, seed: 2020, threads };
+            let off = run_sweep_batched(&scenario, &cfg).unwrap();
+
+            let path = tmp_trace(&format!("{name}_{threads}"));
+            let reg = Registry::new();
+            let sink = TraceSink::create(path.to_str().unwrap()).unwrap();
+            sink.write_line(&meta_line("sweep", name, cfg.seed, threads));
+            let tel =
+                Telemetry { trace: Some(&sink), registry: Some(&reg) };
+            let on = run_sweep_batched_with(&scenario, &cfg, tel).unwrap();
+            sink.flush().unwrap();
+
+            // the digest pins every count, mean, variance, min, max bit
+            assert_eq!(
+                off.digest(),
+                on.digest(),
+                "{name} threads={threads}: telemetry changed the digest"
+            );
+            assert_eq!(
+                off.to_table().to_csv(),
+                on.to_table().to_csv(),
+                "{name} threads={threads}"
+            );
+            // and the trace it produced is a valid schema-1 file
+            let text = std::fs::read_to_string(&path).unwrap();
+            let sum = validate_trace(&text)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(sum.spans > 0, "{name}: no timing spans recorded");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+#[test]
+fn scalar_path_tracing_is_digest_neutral_too() {
+    let scenario = small_fig3();
+    let cfg = SweepConfig { replicates: 2, seed: 7, threads: 4 };
+    let off = run_sweep(&scenario, &cfg).unwrap();
+
+    let path = tmp_trace("scalar_fig3");
+    let reg = Registry::new();
+    let sink = TraceSink::create(path.to_str().unwrap()).unwrap();
+    sink.write_line(&meta_line("sweep", "fig3", cfg.seed, cfg.threads));
+    let on = run_sweep_with(
+        &scenario,
+        &cfg,
+        Telemetry { trace: Some(&sink), registry: Some(&reg) },
+    )
+    .unwrap();
+    sink.flush().unwrap();
+
+    assert_eq!(off.digest(), on.digest());
+    // the scalar executor attributes every traced run to its path
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"path\":\"scalar\""), "no path attribution");
+    validate_trace(&text).unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+/// The fig3 acceptance check: a traced run exports the engine's event
+/// stream as strict JSONL — every line parses under `util::json`, the
+/// kinds come from the known set, and per-event sim-time is monotone
+/// within each replicate (all enforced by `validate_trace`).
+#[test]
+fn fig3_trace_exports_engine_events_and_spans() {
+    let scenario = small_fig3();
+    let cfg = SweepConfig { replicates: 2, seed: 2020, threads: 2 };
+    let path = tmp_trace("events_fig3");
+    let sink = TraceSink::create(path.to_str().unwrap()).unwrap();
+    sink.write_line(&meta_line("sweep", "fig3", cfg.seed, cfg.threads));
+    run_sweep_batched_with(
+        &scenario,
+        &cfg,
+        Telemetry { trace: Some(&sink), registry: None },
+    )
+    .unwrap();
+    sink.flush().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let sum = validate_trace(&text).unwrap();
+    assert!(sum.events > 0, "engine events were not exported");
+    assert!(
+        sum.kinds.get("iteration_done").copied().unwrap_or(0) > 0,
+        "kinds: {:?}",
+        sum.kinds
+    );
+    // spans: prepare per point + run per point + pool + collate
+    let npts = 4u64;
+    assert!(sum.spans >= 2 * npts + 2, "spans: {}", sum.spans);
+    assert_eq!(sum.lines, 1 + sum.events + sum.spans);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn registry_accounts_for_every_stage_and_pool_job() {
+    let scenario = small_fig3();
+    let cfg = SweepConfig { replicates: 3, seed: 5, threads: 4 };
+    let npts = 4u64;
+
+    // batched: one pool job per point, run latency spread per replicate
+    let reg = Registry::new();
+    let tel = Telemetry { trace: None, registry: Some(&reg) };
+    run_sweep_batched_with(&scenario, &cfg, tel).unwrap();
+    assert_eq!(reg.histogram("sweep_prepare_us").count(), npts);
+    assert_eq!(
+        reg.histogram("sweep_run_us").count(),
+        npts * cfg.replicates
+    );
+    assert_eq!(reg.histogram("sweep_pool_us").count(), 1);
+    assert_eq!(reg.histogram("sweep_collate_us").count(), 1);
+    assert_eq!(
+        reg.counter("sweep_pool_own_jobs").get()
+            + reg.counter("sweep_pool_stolen_jobs").get(),
+        npts,
+        "batched pool jobs = grid points"
+    );
+
+    // scalar: one pool job per (point, replicate)
+    let reg = Registry::new();
+    let tel = Telemetry { trace: None, registry: Some(&reg) };
+    run_sweep_with(&scenario, &cfg, tel).unwrap();
+    assert_eq!(
+        reg.histogram("sweep_run_us").count(),
+        npts * cfg.replicates
+    );
+    assert_eq!(
+        reg.counter("sweep_pool_own_jobs").get()
+            + reg.counter("sweep_pool_stolen_jobs").get(),
+        npts * cfg.replicates,
+        "scalar pool jobs = points x replicates"
+    );
+}
